@@ -1,0 +1,41 @@
+"""Paper Fig. 16 — expert-parallel AllToAll dispatch/combine: the one-shot
+decomposed a2a (low-latency structure) vs. XLA's monolithic all_to_all."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import moe_overlap as mo
+
+from .common import row, time_fn
+
+
+def rows():
+    w = min(8, jax.device_count())
+    mesh = jax.make_mesh((w,), ("ep",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    out = []
+    for e_glob, cap, d in [(16, 32, 128), (32, 64, 256), (64, 32, 512)]:
+        if e_glob % w:
+            continue
+        x = jnp.asarray(rng.randn(w * e_glob, cap, d), jnp.float32)
+        for mode in ("xla", "one_shot"):
+            f = jax.jit(jax.shard_map(
+                functools.partial(mo.a2a_ep, axis="ep", mode=mode),
+                mesh=mesh, in_specs=P("ep", None, None),
+                out_specs=P("ep", None, None), check_vma=False))
+            us = time_fn(f, x)
+            bytes_dev = e_glob * cap * d * 4 * (w - 1) / w
+            out.append(row(f"a2a_dispatch/E{e_glob}c{cap}d{d}/{mode}", us,
+                           f"bytes_per_dev={bytes_dev:.0f}"))
+            g = jax.jit(jax.shard_map(
+                lambda y: mo.a2a_ep_inverse(
+                    mo.a2a_ep(y, "ep", mode=mode), "ep", mode=mode),
+                mesh=mesh, in_specs=P("ep", None, None),
+                out_specs=P("ep", None, None), check_vma=False))
+            us2 = time_fn(g, x)
+            out.append(row(f"a2a_combine/E{e_glob}c{cap}d{d}/{mode}", us2 - us,
+                           f"roundtrip_us={us2:.1f}"))
+    return out

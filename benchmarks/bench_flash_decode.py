@@ -1,0 +1,62 @@
+"""Paper Fig. 15 — distributed flash decoding: weak & strong scaling over
+sequence-parallel KV shards; derived = per-device HBM-bytes fraction on
+v5e (the paper's achieved-bandwidth metric, computed analytically)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import hw
+from repro.core import flash_decode as fdm
+
+from .common import row, time_fn
+
+
+def rows():
+    wmax = min(8, jax.device_count())
+    rng = np.random.RandomState(0)
+    b, hq, hkv, d = 1, 8, 2, 64
+    out = []
+
+    def step(q, ks, vs):
+        ll = jnp.full((q.shape[0],), ks.shape[2], jnp.int32)
+        return fdm.distributed_flash_decode(q, ks, vs, ll, "sp", mode="one_shot")
+
+    # weak scaling: KV per shard fixed
+    per_shard = 2048
+    for w in (1, 2, 4, 8):
+        if w > wmax:
+            break
+        mesh = jax.make_mesh((w,), ("sp",), axis_types=(jax.sharding.AxisType.Auto,))
+        s = per_shard * w
+        q = jnp.asarray(rng.randn(b, hq, d), jnp.float32)
+        k = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+        v = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+        f = jax.jit(jax.shard_map(step, mesh=mesh,
+            in_specs=(P(None,), P(None, None, "sp", None), P(None, None, "sp", None)),
+            out_specs=P(None,), check_vma=False))
+        us = time_fn(f, q, k, v)
+        kv_bytes_dev = 2 * b * hkv * per_shard * d * 4
+        t_hbm = kv_bytes_dev / hw.TPU_V5E.hbm_bandwidth
+        out.append(row(f"flash_decode/weak/kv{per_shard}x{w}", us,
+                       f"v5e_hbm_bound_us={t_hbm*1e6:.2f}"))
+    # strong scaling: global KV fixed
+    total = 2048 * wmax
+    for w in (1, 2, 4, 8):
+        if w > wmax:
+            break
+        mesh = jax.make_mesh((w,), ("sp",), axis_types=(jax.sharding.AxisType.Auto,))
+        q = jnp.asarray(rng.randn(b, hq, d), jnp.float32)
+        k = jnp.asarray(rng.randn(b, hkv, total, d), jnp.float32)
+        v = jnp.asarray(rng.randn(b, hkv, total, d), jnp.float32)
+        f = jax.jit(jax.shard_map(step, mesh=mesh,
+            in_specs=(P(None,), P(None, None, "sp", None), P(None, None, "sp", None)),
+            out_specs=P(None,), check_vma=False))
+        us = time_fn(f, q, k, v)
+        kv_bytes_dev = 2 * b * hkv * (total // w) * d * 4
+        t_hbm = kv_bytes_dev / hw.TPU_V5E.hbm_bandwidth
+        out.append(row(f"flash_decode/strong/kv{total}w{w}", us,
+                       f"v5e_hbm_bound_us={t_hbm*1e6:.2f}"))
+    return out

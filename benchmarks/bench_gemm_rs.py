@@ -1,0 +1,37 @@
+"""Paper Fig. 12/14 — GEMM-ReduceScatter: overlapped ring vs. baseline."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collective_matmul as cm
+from repro.core import tuner
+
+from .common import row, time_fn
+
+
+def rows():
+    w = min(8, jax.device_count())
+    mesh = jax.make_mesh((w,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    out = []
+    for m, k, n in [(512, 256, 256), (1024, 512, 512), (2048, 1024, 512)]:
+        a = jnp.asarray(rng.randn(m, k), jnp.float32)
+        b = jnp.asarray(rng.randn(k, n), jnp.float32)
+        base_us = None
+        for mode in ("none", "ring"):
+            f = cm.make_sharded(
+                functools.partial(cm.matmul_rs, axis="tp", mode=mode,
+                                  out_dtype=jnp.float32),
+                mesh, (P(None, "tp"), P("tp", None)), P("tp", None))
+            us = time_fn(f, a, b)
+            if mode == "none":
+                base_us = us
+            choice = tuner.analytic_matmul_rs(4096, 12288 // 16, 3072, 16)
+            serial = choice.t_compute + choice.t_comm
+            derived = (f"v5e_speedup={serial / choice.t_total:.2f}x"
+                       f";cpu_speedup={base_us / us:.2f}x")
+            out.append(row(f"gemm_rs/{m}x{k}x{n}/{mode}", us, derived))
+    return out

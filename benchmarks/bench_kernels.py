@@ -1,0 +1,57 @@
+"""Single-device kernel throughput (XLA path on CPU; the Pallas TPU path
+is validated separately in interpret mode). Derived column: the v5e
+roofline time for the same shape (what the Pallas kernel targets)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import hw
+from repro.kernels import ops
+
+from .common import row, time_fn
+
+
+def rows():
+    rng = np.random.RandomState(0)
+    out = []
+    spec = hw.TPU_V5E
+
+    m, k, n = 1024, 1024, 1024
+    a = jnp.asarray(rng.randn(m, k), jnp.bfloat16)
+    b = jnp.asarray(rng.randn(k, n), jnp.bfloat16)
+    f = jax.jit(lambda x, y: ops.matmul(x, y))
+    us = time_fn(f, a, b)
+    v5e = 2 * m * k * n / spec.peak_flops_bf16 * 1e6
+    out.append(row(f"kernel_matmul/{m}x{k}x{n}", us, f"v5e_mxu_us={v5e:.1f}"))
+
+    bsz, hq, hkv, s, d = 2, 8, 2, 1024, 64
+    q = jnp.asarray(rng.randn(bsz, hq, s, d), jnp.bfloat16)
+    kk = jnp.asarray(rng.randn(bsz, hkv, s, d), jnp.bfloat16)
+    v = jnp.asarray(rng.randn(bsz, hkv, s, d), jnp.bfloat16)
+    f = jax.jit(lambda q_, k_, v_: ops.flash_attention(q_, k_, v_))
+    us = time_fn(f, q, kk, v)
+    flops = 4 * bsz * hq * s * s * d / 2  # causal
+    out.append(row(f"kernel_flash/{bsz}x{hq}x{s}x{d}", us,
+                   f"v5e_mxu_us={flops / spec.peak_flops_bf16 * 1e6:.1f}"))
+
+    b2, l, h, p, g, ss = 2, 512, 8, 64, 1, 64
+    x = jnp.asarray(rng.randn(b2, l, h, p) * 0.3, jnp.float32)
+    dt = jnp.asarray(rng.rand(b2, l, h) * 0.3 + 0.01, jnp.float32)
+    aa = jnp.asarray(-np.abs(rng.rand(h)) - 0.1, jnp.float32)
+    bm = jnp.asarray(rng.randn(b2, l, g, ss) * 0.3, jnp.float32)
+    cm_ = jnp.asarray(rng.randn(b2, l, g, ss) * 0.3, jnp.float32)
+    f = jax.jit(lambda *args: ops.ssd_scan(*args)[0])
+    us = time_fn(f, x, dt, aa, bm, cm_)
+    flops = 2 * b2 * l * 128 * h * (ss + p)  # chunked intra matmuls approx
+    out.append(row(f"kernel_ssd/{b2}x{l}x{h}x{p}", us,
+                   f"v5e_mxu_us={flops / spec.peak_flops_bf16 * 1e6:.2f}"))
+
+    e, cap, kd, nd = 8, 128, 256, 256
+    xg = jnp.asarray(rng.randn(e, cap, kd), jnp.bfloat16)
+    wg = jnp.asarray(rng.randn(e, kd, nd), jnp.bfloat16)
+    f = jax.jit(lambda x_, w_: ops.grouped_matmul(x_, w_))
+    us = time_fn(f, xg, wg)
+    flops = 2 * e * cap * kd * nd
+    out.append(row(f"kernel_grouped/{e}x{cap}x{kd}x{nd}", us,
+                   f"v5e_mxu_us={flops / spec.peak_flops_bf16 * 1e6:.2f}"))
+    return out

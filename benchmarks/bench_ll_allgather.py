@@ -1,0 +1,39 @@
+"""Paper Fig. 19 — low-latency AllGather on small messages: one-shot
+(Alg. 4 structure) vs. serial ring vs. XLA's built-in all_gather."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collective_matmul as cm
+
+from .common import row, time_fn
+
+
+def rows():
+    w = min(8, jax.device_count())
+    mesh = jax.make_mesh((w,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    out = []
+    for rows_, cols in [(8, 32), (64, 128), (512, 256)]:
+        x = jnp.asarray(rng.randn(rows_ * w, cols), jnp.float32)
+        msg_bytes = rows_ * cols * 4
+        variants = {
+            "xla": lambda xl: lax.all_gather(xl, "x", tiled=True),
+            "ring": functools.partial(cm.all_gather_chunked, axis="x", mode="ring"),
+            "one_shot": functools.partial(cm.all_gather_chunked, axis="x",
+                                          mode="one_shot"),
+        }
+        for name, fn in variants.items():
+            f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x", None),
+                                      out_specs=P(None, None), check_vma=False))
+            us = time_fn(f, x)
+            # derived: v5e latency floor — ring pays (W-1) hops, one-shot 1
+            hop_us = 1.0  # ~1us ICI hop latency
+            hops = 1 if name == "one_shot" else (w - 1)
+            out.append(row(f"ll_allgather/{msg_bytes}B/{name}", us,
+                           f"v5e_latency_floor_us={hops * hop_us:.0f}"))
+    return out

@@ -1,0 +1,45 @@
+"""The paper's FlashDecode+AG: KV cache sequence-sharded across devices,
+per-shard flash decode, low-latency AllGather combine.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python examples/distributed_flash_decode.py
+"""
+import functools
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import flash_decode as fdm  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+
+W = jax.device_count()
+mesh = jax.make_mesh((W,), ("sp",), axis_types=(jax.sharding.AxisType.Auto,))
+B, HQ, HKV, S, D = 2, 8, 2, 1024 * W, 64
+rng = np.random.RandomState(0)
+q = jnp.asarray(rng.randn(B, HQ, D), jnp.float32)
+k = jnp.asarray(rng.randn(B, HKV, S, D), jnp.float32)
+v = jnp.asarray(rng.randn(B, HKV, S, D), jnp.float32)
+
+
+def step(q, ks, vs, mode):
+    lens = jnp.full((q.shape[0],), ks.shape[2], jnp.int32)
+    return fdm.distributed_flash_decode(q, ks, vs, lens, "sp", mode=mode)
+
+
+want, _ = ref.flash_decode(q, k, v)
+print(f"distributed flash decode: KV {S} tokens sharded {W}-way "
+      f"({S // W}/device)")
+for mode in ("xla", "one_shot"):
+    f = jax.jit(jax.shard_map(
+        functools.partial(step, mode=mode), mesh=mesh,
+        in_specs=(P(None,), P(None, None, "sp", None), P(None, None, "sp", None)),
+        out_specs=P(None,), check_vma=False))
+    got = f(q, k, v)
+    err = np.abs(np.asarray(got) - np.asarray(want)).max()
+    print(f"  combine={mode:9s} max|err| vs single-device oracle = {err:.2e}")
+print("ok")

@@ -1,0 +1,62 @@
+"""Expert-parallel MoE layer with the paper's AllToAll dispatch/combine:
+8 experts sharded over 4 devices, one-shot (low-latency) a2a.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python examples/moe_expert_parallel.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import moe_overlap as mo  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+W = jax.device_count()
+E, CAP, D, DFF, K = 2 * W, 16, 64, 128, 2
+mesh = jax.make_mesh((W,), ("ep",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.RandomState(0)
+
+T = 64  # tokens per rank
+x = jnp.asarray(rng.randn(W * T, D), jnp.float32)
+router = jnp.asarray(rng.randn(D, E) * 0.1, jnp.float32)
+wi = jnp.asarray(rng.randn(W * (E // W), D, DFF) / np.sqrt(D), jnp.float32)
+wo = jnp.asarray(rng.randn(W * (E // W), DFF, D) / np.sqrt(DFF), jnp.float32)
+
+
+def moe_layer(x_loc, wi_loc, wo_loc):
+    logits = x_loc @ router
+    disp, info = mo.topk_dispatch(x_loc, logits, K, CAP)  # local dispatch
+    x_ep = mo.a2a_ep(disp, "ep", mode="one_shot")  # tokens -> their experts
+    y = ops.grouped_matmul(x_ep, wi_loc, out_dtype=x_loc.dtype)
+    y = jax.nn.silu(y)
+    y = ops.grouped_matmul(y, wo_loc, out_dtype=x_loc.dtype)
+    back = mo.a2a_ep_inverse(y, "ep", mode="one_shot")  # results come home
+    return mo.topk_combine(back, info)
+
+
+f = jax.jit(jax.shard_map(
+    moe_layer, mesh=mesh,
+    in_specs=(P("ep", None), P("ep", None, None), P("ep", None, None)),
+    out_specs=P("ep", None), check_vma=False))
+y = f(x, wi, wo)
+print(f"EP MoE on {W} devices: {E} experts ({E//W}/device), top-{K}, "
+      f"capacity {CAP}")
+print(f"in {x.shape} -> out {y.shape}; finite={bool(jnp.all(jnp.isfinite(y)))}")
+
+# oracle: same math on one device (experts unsharded)
+logits = x @ router
+disp, info = mo.topk_dispatch(x, logits, K, CAP * W)
+yy = ops.grouped_matmul(disp, wi, out_dtype=x.dtype)
+yy = jax.nn.silu(yy)
+yy = ops.grouped_matmul(yy, wo, out_dtype=x.dtype)
+print("note: EP capacity per (rank, expert) differs from the single-device "
+      "oracle's — outputs agree for tokens kept by both (spot check):")
+want = mo.topk_combine(yy, info)
+err = np.abs(np.asarray(y[:8]) - np.asarray(want[:8])).max()
+print(f"first-8-token max|diff| = {err:.2e}")
+print("ok")

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's overlapped kernels in 60 lines.
+
+Run (8 virtual CPU devices):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collective_matmul as cm
+from repro.core import tuner
+
+W = jax.device_count()
+mesh = jax.make_mesh((W,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
+
+rng = np.random.RandomState(0)
+M, K, N = 512, 256, 256
+A = jnp.asarray(rng.randn(M, K), jnp.float32)  # sharded on M (SP tokens)
+B = jnp.asarray(rng.randn(K, N), jnp.float32)  # sharded on N (TP weight)
+
+print(f"AllGather-GEMM on {W} devices: C[{M},{N}] = AG(A) @ B\n")
+want = np.asarray(A @ B)
+for mode in ("none", "ring", "bidir", "one_shot"):
+    f = cm.make_sharded(
+        functools.partial(cm.ag_matmul, axis="tp", mode=mode, out_dtype=jnp.float32),
+        mesh, (P("tp", None), P(None, "tp")), P(None, "tp"))
+    got = np.asarray(f(A, B))
+    err = np.abs(got - want).max()
+    print(f"  mode={mode:9s} max|err| vs oracle = {err:.2e}")
+
+print("\nAnalytic tuner (paper §3.8, TPU v5e): which overlap for this op?")
+for m_loc, k, n_loc in [(256, 12288, 3072), (8, 512, 64)]:
+    c = tuner.analytic_ag_matmul(m_loc, k, n_loc, world=16)
+    print(f"  m_loc={m_loc:5d} k={k:6d} n_loc={n_loc:5d} -> {c.mode:9s} "
+          f"(compute {c.t_compute*1e6:7.1f}us, comm {c.t_comm*1e6:7.1f}us, "
+          f"total {c.t_total*1e6:7.1f}us)")
+
+print("\nGEMM-ReduceScatter (ring accumulator):")
+A2 = jnp.asarray(rng.randn(M, 2 * K), jnp.float32)
+B2 = jnp.asarray(rng.randn(2 * K, N), jnp.float32)
+f = cm.make_sharded(
+    functools.partial(cm.matmul_rs, axis="tp", mode="ring", out_dtype=jnp.float32),
+    mesh, (P(None, "tp"), P("tp", None)), P("tp", None))
+err = np.abs(np.asarray(f(A2, B2)) - np.asarray(A2 @ B2)).max()
+print(f"  ring GEMM+RS max|err| = {err:.2e}")
+print("\nok")

@@ -1,0 +1,28 @@
+"""Serve a small LM with batched requests through the decode engine.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod  # noqa: E402
+
+
+def main():
+    import jax
+
+    ndev = jax.device_count()
+    ns = argparse.Namespace(
+        arch="granite-3-2b", reduced=True,
+        dp=2 if ndev >= 4 else 1, tp=2 if ndev >= 4 else 1,
+        batch=4, max_len=64, requests=8, new_tokens=8, temperature=0.7,
+        dtype="float32", no_fsdp=False)
+    eng = serve_mod.run(ns)
+    print(f"\nKV cache fill after run: {eng.cache_len}/{ns.max_len}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro — Triton-distributed (overlapping distributed kernels) on TPU in JAX."""

@@ -1,0 +1,53 @@
+"""Architecture registry: ``get_config("<arch-id>")`` and ``ARCHS``."""
+from __future__ import annotations
+
+from .base import ModelConfig, ParallelConfig, ShapeConfig, TrainConfig, reduced
+from .shapes import SHAPES, shape_applicable
+
+from . import (
+    granite_moe_3b_a800m,
+    kimi_k2_1t_a32b,
+    command_r_plus_104b,
+    granite_3_2b,
+    qwen15_4b,
+    nemotron_4_15b,
+    llama_32_vision_90b,
+    mamba2_1_3b,
+    whisper_medium,
+    zamba2_2_7b,
+)
+
+_MODULES = (
+    granite_moe_3b_a800m,
+    kimi_k2_1t_a32b,
+    command_r_plus_104b,
+    granite_3_2b,
+    qwen15_4b,
+    nemotron_4_15b,
+    llama_32_vision_90b,
+    mamba2_1_3b,
+    whisper_medium,
+    zamba2_2_7b,
+)
+
+ARCHS: dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}") from None
+
+
+__all__ = [
+    "ModelConfig",
+    "ParallelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "ARCHS",
+    "SHAPES",
+    "get_config",
+    "reduced",
+    "shape_applicable",
+]

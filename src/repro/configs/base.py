@@ -1,0 +1,262 @@
+"""Configuration dataclasses for the repro framework.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG: ModelConfig``. Shapes (seq_len x global_batch cells) live in
+``shapes.py``. Parallelism / training / serving knobs are orthogonal and
+combined by the launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description (one per assigned arch).
+
+    ``family`` selects the block structure:
+      dense   — pre-norm decoder-only transformer (GQA + gated/ungated MLP)
+      moe     — dense attention + top-k routed expert MLP
+      ssm     — Mamba2 (SSD) attention-free stack
+      hybrid  — Mamba2 blocks with a shared attention block every K layers
+      whisper — encoder-decoder (conv frontend stubbed as frame embeddings)
+      vlm     — decoder with cross-attention image layers (patch stub)
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    # capacity factor for expert dispatch (tokens per expert buffer)
+    capacity_factor: float = 1.25
+
+    # --- options ---
+    qkv_bias: bool = False
+    activation: str = "silu"  # "silu" | "gelu" | "relu2"
+    gated_mlp: bool = True  # False -> 2-matrix MLP (e.g. nemotron relu2)
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    use_rope: bool = True  # False -> sinusoidal absolute positions (whisper)
+
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128  # SSD chunk length
+    ssm_conv_width: int = 4
+    ssm_num_groups: int = 1
+
+    # --- hybrid (zamba2): shared attention block every K mamba blocks ---
+    shared_attn_every: int = 0
+
+    # --- whisper ---
+    encoder_layers: int = 0
+    encoder_frames: int = 1500  # stub: precomputed conv-frontend output length
+
+    # --- vlm ---
+    cross_attn_every: int = 0  # every K-th layer is a cross-attention layer
+    vision_tokens: int = 1601  # stub: precomputed patch embeddings per image
+    vision_dim: int = 1280
+
+    # provenance
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # ------------------------------------------------------------------
+    # Derived quantities (used by the roofline analysis and the tuner)
+    # ------------------------------------------------------------------
+    @property
+    def q_heads_per_kv(self) -> int:
+        return max(1, self.num_heads // max(1, self.num_kv_heads))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        q = d * self.num_heads * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        bias = (self.num_heads + 2 * self.num_kv_heads) * hd if self.qkv_bias else 0
+        return q + kv + o + bias
+
+    def _mlp_params(self, d_ff: Optional[int] = None) -> int:
+        d_ff = self.d_ff if d_ff is None else d_ff
+        n_mat = 3 if self.gated_mlp else 2
+        return n_mat * self.d_model * d_ff
+
+    def _ssm_params(self) -> int:
+        d, di = self.d_model, self.d_inner
+        g, s, nh = self.ssm_num_groups, self.ssm_state, self.ssm_num_heads
+        in_proj = d * (2 * di + 2 * g * s + nh)
+        conv = self.ssm_conv_width * (di + 2 * g * s)
+        out_proj = di * d
+        extra = 2 * nh  # A_log, dt_bias (D is nh more)
+        return in_proj + conv + out_proj + extra + nh
+
+    def param_count(self) -> int:
+        """Total parameters (embedding included once if tied)."""
+        emb = self.vocab_size * self.d_model
+        total = emb if self.tie_embeddings else 2 * emb
+        per_layer = 0
+        if self.family in ("dense", "vlm"):
+            per_layer = self._attn_params() + self._mlp_params() + 2 * self.d_model
+            total += self.num_layers * per_layer
+            if self.family == "vlm" and self.cross_attn_every:
+                # cross-attn layers replace self-attn; extra cost: none beyond
+                # the vision projection below (kv come from image tokens).
+                total += self.vision_dim * self.d_model  # patch projection
+        elif self.family == "moe":
+            attn = self._attn_params() + 2 * self.d_model
+            experts = self.num_experts * self._mlp_params()
+            router = self.d_model * self.num_experts
+            total += self.num_layers * (attn + experts + router)
+        elif self.family == "ssm":
+            total += self.num_layers * (self._ssm_params() + self.d_model)
+        elif self.family == "hybrid":
+            total += self.num_layers * (self._ssm_params() + self.d_model)
+            # one shared attention+MLP block (weights reused at each site)
+            total += self._attn_params() + self._mlp_params() + 2 * self.d_model
+        elif self.family == "whisper":
+            blk = self._attn_params() + self._mlp_params() + 2 * self.d_model
+            dec_blk = blk + self._attn_params() + self.d_model  # + cross attn
+            total += self.encoder_layers * blk + self.num_layers * dec_blk
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        emb = self.vocab_size * self.d_model
+        total = emb if self.tie_embeddings else 2 * emb
+        attn = self._attn_params() + 2 * self.d_model
+        experts = self.experts_per_token * self._mlp_params()
+        router = self.d_model * self.num_experts
+        return total + self.num_layers * (attn + experts + router)
+
+    def flops_per_token(self, training: bool = True) -> float:
+        """MODEL_FLOPS/token: 6*N_active (train) or 2*N_active (inference)."""
+        mult = 6.0 if training else 2.0
+        return mult * float(self.active_param_count())
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell (assigned per architecture)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How the model maps onto the mesh."""
+
+    dp: int = 1  # size of the "data" axis
+    tp: int = 1  # size of the "model" axis
+    pods: int = 1  # size of the "pod" axis (1 = single-pod mesh)
+
+    fsdp: bool = True  # shard params + optimizer state along data axis
+    fsdp_pods: bool = False  # extend the FSDP shard over the pod axis too
+    sequence_parallel: bool = True  # SP between TP regions
+    expert_parallel: bool = True  # shard experts along model axis
+    # EP MoE activation chunking: process tokens in N sequential chunks to
+    # bound the (E, capacity, d) dispatch buffers (trades a little latency
+    # for peak memory; also the natural grain for overlapped a2a).
+    moe_chunks: int = 1
+
+    # Overlap strategy for the paper's technique:
+    #   none     — plain XLA all_gather/psum_scatter (the NCCL-baseline analogue)
+    #   ring     — unidirectional ring collective-matmul (paper Fig. 7 swizzle)
+    #   bidir    — bidirectional ring (2 links, halves the steps)
+    #   one_shot — low-latency one-shot AG (paper Alg. 4 analogue, decode)
+    overlap_mode: str = "ring"
+    ag_chunks: int = 0  # 0 = one chunk per TP rank (paper default)
+    rs_chunks: int = 0
+
+    remat: str = "block"  # "none" | "dots" | "block"
+    grad_compression: str = "none"  # "none" | "int8"
+    # decode-time KV cache placement: "heads" (TP-local flash decode) or
+    # "sequence" (shard KV over the data axis -> the paper's distributed
+    # flash decode with low-latency combine; required for long_500k)
+    kv_shard: str = "heads"
+
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    moment_dtype: str = "float32"  # bf16 for the 1T config
+
+    @property
+    def world(self) -> int:
+        return self.dp * self.tp * self.pods
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    # "adamw" | "momentum" — momentum (Muon-style single buffer) is the
+    # production choice for 1T-class models whose AdamW states cannot fit
+    # (Kimi K2 itself trained with Muon).
+    optimizer: str = "adamw"
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    seed: int = 0
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A small same-family config for CPU smoke tests."""
+    small = dict(
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=max(1, min(cfg.num_kv_heads, 2)) if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+    )
+    if cfg.family == "moe":
+        small.update(num_experts=4, experts_per_token=2)
+    if cfg.family in ("ssm", "hybrid"):
+        small.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+    if cfg.family == "hybrid":
+        small.update(shared_attn_every=2)
+    if cfg.family == "whisper":
+        small.update(encoder_layers=2, encoder_frames=8)
+    if cfg.family == "vlm":
+        small.update(cross_attn_every=2, vision_tokens=8, vision_dim=32)
+    small.update(overrides)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **small)

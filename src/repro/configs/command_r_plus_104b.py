@@ -1,0 +1,22 @@
+"""command-r-plus-104b [dense] — GQA, no-bias.
+
+[hf:CohereForAI/c4ai-command-r-plus family; unverified]
+64 * (attn 327M + mlp 1.245B) + tied embed 3.1B ~= 104B.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    num_layers=64,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab_size=256000,
+    activation="silu",
+    gated_mlp=True,
+    tie_embeddings=True,
+    source="hf:CohereForAI/c4ai-command-r-v01",
+)

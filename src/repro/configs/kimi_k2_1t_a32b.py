@@ -1,0 +1,30 @@
+"""kimi-k2-1t-a32b [moe] — Kimi K2, trillion-param MoE (paper-table).
+
+[arXiv:2501.kimi2; unverified] — per the assignment spec: 61L d_model=7168
+64H (GQA kv=8) per-expert d_ff=2048, 384 experts top-8, vocab 163840.
+
+Check: 61 * 384 * 3*7168*2048 = 1.03e12 routed params — matches "1T".
+Active: 61 * (8 experts + attn) + embeddings ~= 32B — matches "a32b".
+
+Production note: with 1T params the optimizer moments must be bf16
+(``ParallelConfig.moment_dtype="bfloat16"``) to fit 512 x 16 GB HBM —
+the launcher applies this automatically for this config.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=112,  # 7168 / 64
+    d_ff=2048,  # per-expert hidden size
+    vocab_size=163840,
+    num_experts=384,
+    experts_per_token=8,
+    activation="silu",
+    gated_mlp=True,
+    source="arXiv:2501.kimi2",
+)

@@ -1,0 +1,28 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers.
+
+[hf:meta-llama/Llama-3.2-90B-Vision family; unverified]
+
+100 layers total: every 5th layer is a cross-attention layer attending to
+precomputed patch embeddings (the vision frontend is a STUB per the
+assignment — ``input_specs()`` provides the patch embeddings).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    activation="silu",
+    gated_mlp=True,
+    cross_attn_every=5,
+    vision_tokens=1601,
+    vision_dim=1280,
+    rope_theta=500000.0,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

@@ -1,0 +1,26 @@
+"""mamba2-1.3b [ssm] — SSD (state-space duality), attention-free.
+
+[arXiv:2405.21060; unverified]
+d_inner = 2*d_model = 4096, 64 SSD heads of dim 64, state 128.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=0,  # attention-free
+    num_kv_heads=0,
+    head_dim=1,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=128,
+    ssm_conv_width=4,
+    ssm_num_groups=1,
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,27 @@
+"""The four assigned LM input-shape cells.
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token with a KV cache
+of ``seq_len``), NOT ``train_step``. ``long_500k`` requires sub-quadratic
+sequence mixing and therefore only runs for SSM/hybrid architectures (the
+skip is recorded in DESIGN.md §Arch-applicability and EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from .base import ShapeConfig
+
+TRAIN_4K = ShapeConfig(name="train_4k", seq_len=4096, global_batch=256, kind="train")
+PREFILL_32K = ShapeConfig(name="prefill_32k", seq_len=32768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeConfig(name="decode_32k", seq_len=32768, global_batch=128, kind="decode")
+LONG_500K = ShapeConfig(name="long_500k", seq_len=524288, global_batch=1, kind="decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+# Families for which the long-context decode cell is runnable
+# (sub-quadratic sequence mixing).
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(family: str, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k":
+        return family in LONG_CONTEXT_FAMILIES
+    return True

@@ -1,0 +1,29 @@
+"""whisper-medium [audio] — enc-dec, conv frontend STUB.
+
+[arXiv:2212.04356; unverified]
+
+The conv1d frontend is stubbed per the assignment: ``input_specs()``
+provides precomputed frame embeddings (batch, 1500, d_model). Positional
+encodings are sinusoidal (computed on the fly) so the assigned 32k decode
+shape does not require a 32k learned table.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="whisper",
+    num_layers=24,  # decoder layers
+    encoder_layers=24,
+    encoder_frames=1500,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    activation="gelu",
+    gated_mlp=False,
+    use_rope=False,
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+)

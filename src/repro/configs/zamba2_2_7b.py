@@ -1,0 +1,29 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared attention blocks.
+
+[arXiv:2411.15242; hf]
+
+54 Mamba2 layers; every 6th position additionally applies a SHARED
+(weight-tied) attention+MLP block — the Zamba2 design point.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=128,
+    ssm_conv_width=4,
+    ssm_num_groups=1,
+    shared_attn_every=6,
+    tie_embeddings=True,
+    source="arXiv:2411.15242",
+)

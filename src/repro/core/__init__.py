@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution: overlapping distributed kernels.
+
+- primitives: OpenSHMEM-style signal/symmetric-memory API on TPU
+- schedules: tile-swizzle orders (Fig. 7/8/10)
+- collective_matmul: overlapped AG+GEMM / GEMM+RS (1- and 2-level)
+- moe_overlap: AG+MoE, MoE+RS, EP AllToAll dispatch/combine
+- flash_decode: distributed flash decoding with low-latency combine
+- tuner: analytic + distributed-empirical autotuning (§3.8)
+"""
+from . import (
+    collective_matmul,
+    flash_decode,
+    moe_overlap,
+    primitives,
+    ring_attention,
+    schedules,
+    tuner,
+)
+
+__all__ = [
+    "collective_matmul",
+    "flash_decode",
+    "moe_overlap",
+    "primitives",
+    "ring_attention",
+    "schedules",
+    "tuner",
+]

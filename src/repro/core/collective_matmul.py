@@ -1,0 +1,490 @@
+"""Overlapped collective matmuls — the paper's flagship kernels at graph level.
+
+These functions run INSIDE ``shard_map`` (they take local shards and use
+``lax`` collectives). They decompose XLA's monolithic
+``all_gather -> dot`` / ``dot -> psum_scatter`` into per-chunk one-sided
+transfers (``lax.ppermute`` = async collective-permute on TPU) interleaved
+with per-chunk matmuls in the swizzled order from ``core.schedules``:
+
+  AG+GEMM  (Fig. 4/7):  rank r computes chunk (r - s) % W at step s while
+                        the next chunk rides the ring.
+  GEMM+RS  (Alg. 3/5):  rank r computes output block (r - s - 1) % W and
+                        forwards a running accumulator.
+  2-level  (Fig. 10):   inner ring per pod region, peer-pod regions first,
+                        inter-pod transfer overlapping the next region.
+
+XLA's latency-hiding scheduler turns each ppermute into a
+collective-permute-start/done pair that runs on the ICI DMA engines
+concurrently with the MXU dots — the TPU analogue of the paper's
+copy-engine / SM-partition async tasks.
+
+The non-overlapped baselines (`*_baseline`) are the "PyTorch+NCCL"
+equivalents used by benchmarks and tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from jax.ad_checkpoint import checkpoint_name
+
+from .primitives import offset_permute, ring_permute
+
+Array = jax.Array
+
+
+def _owner_update(out: Array, partial: Array, owner, m_chunk: int, row_off: int = 0) -> Array:
+    start = (owner * m_chunk + row_off,) + (0,) * (out.ndim - 1)
+    return lax.dynamic_update_slice(out, partial, start)
+
+
+# ---------------------------------------------------------------------------
+# Baselines (the NCCL-analogue: monolithic collective, no overlap)
+# ---------------------------------------------------------------------------
+
+
+def ag_matmul_baseline(a_blk: Array, b_loc: Array, axis: str, *, out_dtype=None) -> Array:
+    """all_gather(A) @ B with XLA's built-in collective."""
+    out_dtype = out_dtype or a_blk.dtype
+    a_full = lax.all_gather(a_blk, axis, tiled=True)
+    return jnp.dot(a_full, b_loc, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def matmul_rs_baseline(a_loc: Array, b_loc: Array, axis: str, *, out_dtype=None) -> Array:
+    """psum_scatter(A @ B) with XLA's built-in collective."""
+    out_dtype = out_dtype or a_loc.dtype
+    partial = jnp.dot(a_loc, b_loc, preferred_element_type=jnp.float32)
+    return lax.psum_scatter(partial, axis, scatter_dimension=0, tiled=True).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# AG + GEMM (overlapped)
+# ---------------------------------------------------------------------------
+
+
+def _ag_matmul_impl(
+    a_blk: Array,
+    b_loc: Array,
+    axis: str,
+    mode: str = "ring",
+    chunks_per_rank: int = 1,
+    out_dtype=None,
+) -> Array:
+    """Overlapped AllGather-GEMM (implementation; see ag_matmul).
+
+    a_blk: (m_loc, k) — A sharded along M on ``axis`` (SP activations).
+    b_loc: (k, n_loc) — B sharded along N (TP weights).
+    Returns (m_loc * W, n_loc): the full-M strip of C this rank owns.
+
+    mode:
+      ring     unidirectional ring, Fig. 7 swizzle (paper default)
+      bidir    bidirectional ring — both link directions, half bytes each
+      one_shot all transfers issued up-front (low-latency, small messages)
+      none     baseline (monolithic all_gather)
+    """
+    out_dtype = out_dtype or a_blk.dtype
+    if mode == "bidir":
+        return _ag_matmul_bidir(a_blk, b_loc, axis, out_dtype=out_dtype)
+    if mode == "one_shot":
+        return _ag_matmul_one_shot(a_blk, b_loc, axis, out_dtype=out_dtype)
+    if mode != "ring":
+        raise ValueError(f"unknown ag mode {mode!r}")
+
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    m_loc = a_blk.shape[0]
+    n_loc = b_loc.shape[1]
+    out = jnp.zeros((m_loc * w, n_loc), out_dtype)
+
+    s_sub = max(1, chunks_per_rank)
+    if m_loc % s_sub != 0:
+        s_sub = 1
+    m_sub = m_loc // s_sub
+    # Sub-chunk ring: finer pipelining shrinks the first-chunk fill bubble
+    # (the communication-tile-size knob of §3.6, exposed to the tuner).
+    bufs = [
+        lax.dynamic_slice(a_blk, (j * m_sub, 0), (m_sub, a_blk.shape[1]))
+        for j in range(s_sub)
+    ]
+    for s in range(w):
+        owner = lax.rem(me - s + w, w)
+        for j in range(s_sub):
+            partial = jnp.dot(bufs[j], b_loc, preferred_element_type=jnp.float32)
+            out = _owner_update(out, partial.astype(out_dtype), owner, m_loc, j * m_sub)
+            if s != w - 1:
+                # next chunk rides the ring while later dots execute
+                bufs[j] = ring_permute(bufs[j], axis)
+    return out
+
+
+def _ag_matmul_bidir(a_blk: Array, b_loc: Array, axis: str, *, out_dtype) -> Array:
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    m_loc = a_blk.shape[0]
+    if m_loc % 2 != 0 or w < 3:
+        return _ag_matmul_impl(a_blk, b_loc, axis, mode="ring", out_dtype=out_dtype)
+    h = m_loc // 2
+    n_loc = b_loc.shape[1]
+    out = jnp.zeros((m_loc * w, n_loc), out_dtype)
+    fwd = a_blk[:h]
+    bwd = a_blk[h:]
+    for s in range(w):
+        owner_f = lax.rem(me - s + w, w)
+        owner_b = lax.rem(me + s, w)
+        pf = jnp.dot(fwd, b_loc, preferred_element_type=jnp.float32)
+        out = _owner_update(out, pf.astype(out_dtype), owner_f, m_loc, 0)
+        pb = jnp.dot(bwd, b_loc, preferred_element_type=jnp.float32)
+        out = _owner_update(out, pb.astype(out_dtype), owner_b, m_loc, h)
+        if s != w - 1:
+            fwd = ring_permute(fwd, axis)
+            bwd = ring_permute(bwd, axis, reverse=True)
+    return out
+
+
+def _ag_matmul_one_shot(a_blk: Array, b_loc: Array, axis: str, *, out_dtype) -> Array:
+    """Low-latency variant: issue every transfer before any dot (Alg. 4
+    structure). First dot runs on the local chunk with zero comm latency."""
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    m_loc = a_blk.shape[0]
+    n_loc = b_loc.shape[1]
+    shards = [a_blk] + [offset_permute(a_blk, axis, off) for off in range(1, w)]
+    out = jnp.zeros((m_loc * w, n_loc), out_dtype)
+    for off, shard in enumerate(shards):
+        owner = lax.rem(me - off + w, w)
+        partial = jnp.dot(shard, b_loc, preferred_element_type=jnp.float32)
+        out = _owner_update(out, partial.astype(out_dtype), owner, m_loc)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GEMM + ReduceScatter (overlapped)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_rs_impl(
+    a_loc: Array,
+    b_loc: Array,
+    axis: str,
+    mode: str = "ring",
+    out_dtype=None,
+) -> Array:
+    """Overlapped GEMM-ReduceScatter (implementation; see matmul_rs).
+
+    a_loc: (m, k_loc) — activations with K sharded on ``axis`` (TP).
+    b_loc: (k_loc, n) — weights sharded on K.
+    Returns (m / W, n): this rank's reduced output block (SP activations).
+
+    Ring schedule (Alg. 3): at step s rank r computes the partial product
+    for output block (r - s - 1) % W, adds the accumulator arriving from
+    rank r-1, and forwards it — the accumulator remains one block in
+    flight while the next block's dot executes.
+    """
+    out_dtype = out_dtype or a_loc.dtype
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    m = a_loc.shape[0]
+    assert m % w == 0, (m, w)
+    m_blk = m // w
+    if mode == "bidir" and b_loc.shape[1] % 2 == 0 and w >= 3:
+        # split the output columns across BOTH ring directions: two
+        # accumulators, half the bytes per link per step (2 ICI links).
+        # Reverse-ring handoff check: p(i-1, s+1) == p(i, s) for
+        # p(i, s) = (i + s + 1) % W.
+        bl, br = jnp.split(b_loc, 2, axis=1)
+        acc_f = acc_r = None
+        for s in range(w):
+            blk_f = lax.rem(me - s - 1 + 2 * w, w)
+            blk_r = lax.rem(me + s + 1, w)
+            a_f = lax.dynamic_slice(a_loc, (blk_f * m_blk, 0), (m_blk, a_loc.shape[1]))
+            a_r = lax.dynamic_slice(a_loc, (blk_r * m_blk, 0), (m_blk, a_loc.shape[1]))
+            pf = jnp.dot(a_f, bl, preferred_element_type=jnp.float32)
+            pr = jnp.dot(a_r, br, preferred_element_type=jnp.float32)
+            acc_f = pf if acc_f is None else pf + ring_permute(acc_f, axis)
+            acc_r = pr if acc_r is None else pr + ring_permute(acc_r, axis, reverse=True)
+        return jnp.concatenate([acc_f, acc_r], axis=1).astype(out_dtype)
+    if mode not in ("ring", "bidir"):
+        raise ValueError(f"unknown rs mode {mode!r}")
+    acc = None
+    for s in range(w):
+        blk = lax.rem(me - s - 1 + 2 * w, w)
+        a_b = lax.dynamic_slice(a_loc, (blk * m_blk, 0), (m_blk, a_loc.shape[1]))
+        partial = jnp.dot(a_b, b_loc, preferred_element_type=jnp.float32)
+        if acc is None:
+            acc = partial
+        else:
+            # the permute of the previous accumulator overlaps this dot
+            acc = partial + ring_permute(acc, axis)
+    return acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# 2-level (multi-pod) GEMM + ReduceScatter — Fig. 10 / Alg. 5
+# ---------------------------------------------------------------------------
+
+
+def matmul_rs_2level(
+    a_loc: Array,
+    b_loc: Array,
+    inner_axis: str,
+    outer_axis: str,
+    *,
+    out_dtype=None,
+) -> Array:
+    """GEMM+RS over a compound (outer=pod, inner=ring-in-pod) axis.
+
+    a_loc: (m, k_loc) with K sharded over outer*inner; returns
+    (m / (Wo*Wi), n). Outer step s reduces — over the inner ring — the
+    partial sums for pod region (pod - s - 1) % Wo (peer pods first, own
+    pod last, Fig. 10's shifted start), then forwards the inter-pod
+    accumulator, overlapping the slow-link transfer with the next region's
+    Wi matmuls.
+    """
+    out_dtype = out_dtype or a_loc.dtype
+    wo = lax.axis_size(outer_axis)
+    wi = lax.axis_size(inner_axis)
+    oid = lax.axis_index(outer_axis)
+    iid = lax.axis_index(inner_axis)
+    m = a_loc.shape[0]
+    total = wo * wi
+    assert m % total == 0, (m, total)
+    m_blk = m // total
+
+    outer_acc = None
+    for s in range(wo):
+        region = lax.rem(oid - s - 1 + 2 * wo, wo)
+        # --- inner ring RS for this pod region (Alg. 5 "intra-node scatter
+        # + local reduction", expressed as a compute/permute ring) ---
+        inner_acc = None
+        for t in range(wi):
+            blk_inner = lax.rem(iid - t - 1 + 2 * wi, wi)
+            blk = region * wi + blk_inner
+            a_b = lax.dynamic_slice(a_loc, (blk * m_blk, 0), (m_blk, a_loc.shape[1]))
+            partial = jnp.dot(a_b, b_loc, preferred_element_type=jnp.float32)
+            if inner_acc is None:
+                inner_acc = partial
+            else:
+                inner_acc = partial + ring_permute(inner_acc, inner_axis)
+        # --- inter-pod P2P: forward the outer accumulator; this slow-link
+        # permute overlaps the next region's inner ring of dots ---
+        if outer_acc is None:
+            outer_acc = inner_acc
+        else:
+            outer_acc = inner_acc + ring_permute(outer_acc, outer_axis)
+    return outer_acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Custom VJPs: each op's backward IS its dual overlapped op.
+#
+# Autodiff of an unrolled W-step ring holds all W permute buffers live
+# during the backward (O(W) memory — 20 GiB/layer-group at W=16 for 90B
+# models, measured). The mathematical transpose is another ring with O(1)
+# buffers:   d(AG+GEMM)/dA = GEMM+RS(g, B^T)      (ring)
+#            d(AG+GEMM)/dB = ring-accumulated A_s^T g_s
+#            d(GEMM+RS)/dA = AG+GEMM(g, B^T)      (ring)
+#            d(AG)/dx      = ring reduce-scatter
+# ---------------------------------------------------------------------------
+
+
+def _weight_grad_ring(a_blk: Array, g: Array, axis: str) -> Array:
+    """dB = A_full^T @ G without materializing A_full: ring A chunks past
+    the static G strips. a_blk: (m_loc, k); g: (W*m_loc, n). -> (k, n)."""
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    m_loc = a_blk.shape[0]
+    db = jnp.zeros((a_blk.shape[1], g.shape[1]), jnp.float32)
+    buf = a_blk
+    for s in range(w):
+        owner = lax.rem(me - s + w, w)
+        g_s = lax.dynamic_slice(g, (owner * m_loc, 0), (m_loc, g.shape[1]))
+        db = db + jax.lax.dot_general(
+            buf, g_s, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        if s != w - 1:
+            buf = ring_permute(buf, axis)
+    return db
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _ag_matmul_cv(a_blk, b_loc, axis, mode, chunks_per_rank):
+    return _ag_matmul_impl(a_blk, b_loc, axis, mode=mode,
+                           chunks_per_rank=chunks_per_rank,
+                           out_dtype=a_blk.dtype)
+
+
+def _ag_matmul_cv_fwd(a_blk, b_loc, axis, mode, chunks_per_rank):
+    out = _ag_matmul_cv(a_blk, b_loc, axis, mode, chunks_per_rank)
+    return out, (a_blk, b_loc)
+
+
+def _ag_matmul_cv_bwd(axis, mode, chunks_per_rank, res, g):
+    a_blk, b_loc = res
+    da = matmul_rs(g, b_loc.T, axis, mode="ring", out_dtype=a_blk.dtype)
+    db = _weight_grad_ring(a_blk, g, axis).astype(b_loc.dtype)  # (k, n_loc)
+    return da, db
+
+
+_ag_matmul_cv.defvjp(_ag_matmul_cv_fwd, _ag_matmul_cv_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _matmul_rs_cv(a_loc, b_loc, axis, mode):
+    return _matmul_rs_impl(a_loc, b_loc, axis, mode=mode, out_dtype=a_loc.dtype)
+
+
+def _matmul_rs_cv_fwd(a_loc, b_loc, axis, mode):
+    return _matmul_rs_cv(a_loc, b_loc, axis, mode), (a_loc, b_loc)
+
+
+def _matmul_rs_cv_bwd(axis, mode, res, g):
+    a_loc, b_loc = res
+    # g: (m/W, n) block; dA = AG(g) @ B^T -> overlapped AG+GEMM ring
+    da = ag_matmul(g, b_loc.T, axis, mode="ring", out_dtype=a_loc.dtype)
+    # dB = A^T @ AG(g): ring the g blocks past the static A strips
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    m_blk = g.shape[0]
+    db = jnp.zeros((a_loc.shape[1], g.shape[1]), jnp.float32)
+    buf = g
+    for s in range(w):
+        owner = lax.rem(me - s + w, w)
+        a_s = lax.dynamic_slice(
+            a_loc, (owner * m_blk, 0), (m_blk, a_loc.shape[1])
+        )
+        db = db + jax.lax.dot_general(
+            a_s, buf, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        if s != w - 1:
+            buf = ring_permute(buf, axis)
+    return da, db.astype(b_loc.dtype)
+
+
+_matmul_rs_cv.defvjp(_matmul_rs_cv_fwd, _matmul_rs_cv_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _all_gather_cv(x, axis, mode):
+    return _all_gather_impl(x, axis, mode=mode)
+
+
+def _all_gather_cv_fwd(x, axis, mode):
+    return _all_gather_cv(x, axis, mode), None
+
+
+def _all_gather_cv_bwd(axis, mode, _, g):
+    return (reduce_scatter_chunked(g, axis).astype(g.dtype),)
+
+
+_all_gather_cv.defvjp(_all_gather_cv_fwd, _all_gather_cv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public overlapped ops (route through the custom-VJP wrappers)
+# ---------------------------------------------------------------------------
+
+
+def ag_matmul(a_blk, b_loc, axis, *, mode="ring", chunks_per_rank=1,
+              out_dtype=None):
+    """Overlapped AllGather-GEMM (see _ag_matmul_impl for modes). The
+    backward pass is the dual overlapped GEMM+RS ring (O(1) buffers).
+
+    The output is tagged with checkpoint_name("ag_out") so the
+    "block_save_ag" remat policy can keep gathered activations across the
+    backward instead of re-running the gather ring (-1/3 collective
+    volume for +per-layer-output memory)."""
+    out_dtype = out_dtype or a_blk.dtype
+    if mode == "none":
+        out = ag_matmul_baseline(a_blk, b_loc, axis, out_dtype=out_dtype)
+    else:
+        out = _ag_matmul_cv(a_blk, b_loc, axis, mode, chunks_per_rank).astype(out_dtype)
+    return checkpoint_name(out, "ag_out")
+
+
+def matmul_rs(a_loc, b_loc, axis, *, mode="ring", out_dtype=None):
+    """Overlapped GEMM-ReduceScatter; backward = dual AG+GEMM ring."""
+    out_dtype = out_dtype or a_loc.dtype
+    if mode == "none":
+        return matmul_rs_baseline(a_loc, b_loc, axis, out_dtype=out_dtype)
+    return _matmul_rs_cv(a_loc, b_loc, axis, mode).astype(out_dtype)
+
+
+def all_gather_chunked(x: Array, axis: str, *, mode: str = "ring") -> Array:
+    """Decomposed AllGather; backward = ring reduce-scatter (O(1))."""
+    return _all_gather_cv(x, axis, mode)
+
+
+# ---------------------------------------------------------------------------
+# Chunked stand-alone collectives (used by grad sync & decode paths)
+# ---------------------------------------------------------------------------
+
+
+def _all_gather_impl(x: Array, axis: str, mode: str = "ring") -> Array:
+    """One-sided decomposed AllGather (Alg. 1/2 push-ring, Alg. 4 one-shot)."""
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    chunk = x.shape[0]
+    out = jnp.zeros((chunk * w,) + x.shape[1:], x.dtype)
+    out = _owner_update(out, x, me, chunk)
+    if mode == "one_shot":
+        for off in range(1, w):
+            shard = offset_permute(x, axis, off)
+            out = _owner_update(out, shard, lax.rem(me - off + w, w), chunk)
+        return out
+    buf = x
+    for s in range(1, w):
+        buf = ring_permute(buf, axis)
+        out = _owner_update(out, buf, lax.rem(me - s + w, w), chunk)
+    return out
+
+
+def reduce_scatter_chunked(x: Array, axis: str) -> Array:
+    """Ring reduce-scatter along dim 0 (accumulator in f32)."""
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    m = x.shape[0]
+    assert m % w == 0
+    m_blk = m // w
+    acc = None
+    for s in range(w):
+        blk = lax.rem(me - s - 1 + 2 * w, w)
+        piece = lax.dynamic_slice(x, (blk * m_blk,) + (0,) * (x.ndim - 1), (m_blk,) + x.shape[1:])
+        if acc is None:
+            acc = piece.astype(jnp.float32)
+        else:
+            acc = piece.astype(jnp.float32) + ring_permute(acc, axis)
+    return acc.astype(x.dtype)
+
+
+def hierarchical_reduce_scatter(x: Array, inner_axis: str, outer_axis: str) -> Array:
+    """RS along inner (fast links), then ring all-reduce along outer (slow
+    links) on the already 1/Wi-sized shard — the gradient-sync pattern."""
+    shard = reduce_scatter_chunked(x, inner_axis)
+    wo = lax.axis_size(outer_axis)
+    acc = shard.astype(jnp.float32)
+    buf = acc
+    for _ in range(wo - 1):
+        buf = ring_permute(buf, outer_axis)
+        acc = acc + buf
+    return acc.astype(x.dtype)
+
+
+def hierarchical_all_gather(x: Array, inner_axis: str, outer_axis: str) -> Array:
+    """Inverse of hierarchical RS: gather along inner axis only (params are
+    replicated across pods, sharded within)."""
+    return all_gather_chunked(x, inner_axis)
+
+
+# ---------------------------------------------------------------------------
+# shard_map wrappers (for tests / standalone use)
+# ---------------------------------------------------------------------------
+
+
+def make_sharded(fn, mesh, in_specs, out_specs):
+    return jax.jit(
+        jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    )

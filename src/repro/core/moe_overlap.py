@@ -1,0 +1,201 @@
+"""Overlapped MoE communication (paper: AG+MoE, MoE+RS, low-latency AllToAll).
+
+Two parallelism modes, matching the paper's coverage:
+
+  TP MoE (FLUX-style, the paper's AG+MoE / MoE+RS kernels): every rank
+  holds a d_ff-shard of EVERY expert. Tokens are sequence-sharded; the
+  layer AllGathers token chunks around the ring and runs the grouped GEMM
+  per chunk as it arrives (Fig. 7 swizzle), then combines and
+  Reduce-Scatters the outputs chunk-by-chunk (Alg. 3).
+
+  EP MoE (DeepEP-style, the paper's AllToAll dispatch/combine): experts
+  are sharded across ranks; tokens travel to their experts via a
+  decomposed one-shot AllToAll (all transfers issued up-front — the
+  low-latency structure of the paper's inference AllToAll), compute runs
+  per-arrival, and a second AllToAll brings results home.
+
+Dispatch is capacity-based (dense (E, cap, d) buffers) so the expert GEMM
+is a regular grouped matmul — the TPU-native substitute for ragged grouping.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .primitives import offset_permute, ring_permute
+
+Array = jax.Array
+
+
+class DispatchInfo(NamedTuple):
+    expert: Array  # (T, k) expert id per token-slot
+    position: Array  # (T, k) position within the expert's capacity buffer
+    weight: Array  # (T, k) combine weight (renormalized top-k prob, 0 if dropped)
+
+
+def topk_dispatch(x: Array, logits: Array, k: int, capacity: int):
+    """Capacity-based top-k dispatch.
+
+    x: (T, d), logits: (T, E) -> (dispatched (E, cap, d), DispatchInfo).
+    Tokens beyond an expert's capacity are dropped (weight 0) — standard
+    capacity-factor routing.
+    """
+    t, d = x.shape
+    e = logits.shape[-1]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(t * k, e)  # slot-major: token 0 slot 0, token 0 slot 1, ...
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat  # (T*k, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(t, k)  # (T, k)
+    keep = pos < capacity
+    weight = jnp.where(keep, top_p, 0.0)
+    pos_c = jnp.where(keep, pos, capacity - 1)
+
+    disp = jnp.zeros((e, capacity, d), x.dtype)
+    xk = jnp.broadcast_to(x[:, None, :], (t, k, d))
+    mask = keep[..., None].astype(x.dtype)
+    disp = disp.at[top_e.reshape(-1), pos_c.reshape(-1)].add(
+        (xk * mask).reshape(t * k, d), mode="drop"
+    )
+    return disp, DispatchInfo(top_e, pos_c, weight)
+
+
+def topk_combine(out: Array, info: DispatchInfo, out_dtype=None) -> Array:
+    """Inverse of dispatch: (E, cap, d), info -> (T, d)."""
+    t, k = info.expert.shape
+    gathered = out[info.expert.reshape(-1), info.position.reshape(-1)]  # (T*k, d)
+    gathered = gathered.reshape(t, k, -1).astype(jnp.float32)
+    y = jnp.sum(gathered * info.weight[..., None], axis=1)
+    return y.astype(out_dtype or out.dtype)
+
+
+# ---------------------------------------------------------------------------
+# EP AllToAll — decomposed one-shot (low-latency) and XLA baseline
+# ---------------------------------------------------------------------------
+
+
+def a2a_ep(x: Array, axis: str, *, mode: str = "one_shot") -> Array:
+    """Expert-parallel AllToAll.
+
+    x: (E_global, cap, d) where E_global = W * E_local; rank r keeps the
+    slab for the experts it owns: returns (E_local, W * cap, d) — every
+    rank's tokens for my local experts.
+    """
+    w = lax.axis_size(axis)
+    e_global, cap, d = x.shape
+    e_local = e_global // w
+    xs = x.reshape(w, e_local, cap, d)
+    if mode == "xla":
+        y = lax.all_to_all(xs, axis, split_axis=0, concat_axis=0, tiled=False)
+        # y: (W, e_local, cap, d) — block i is rank i's tokens for my experts
+        return jnp.moveaxis(y, 0, 1).reshape(e_local, w * cap, d)
+    # one-shot decomposition (paper's low-latency AllToAll structure):
+    # all W-1 sends issued up-front with distinct ring offsets.
+    me = lax.axis_index(axis)
+    out = jnp.zeros((e_local, w, cap, d), x.dtype)
+    my_blk = lax.dynamic_slice(xs, (me, 0, 0, 0), (1, e_local, cap, d))[0]
+    out = lax.dynamic_update_slice(out, my_blk[:, None], (0, me, 0, 0))
+    for off in range(1, w):
+        # send my slab for the experts of rank (me+off) to that rank
+        tgt = lax.rem(me + off, w)
+        send_blk = lax.dynamic_slice(xs, (tgt, 0, 0, 0), (1, e_local, cap, d))[0]
+        recv_blk = offset_permute(send_blk, axis, off)  # arrives from me-off
+        src = lax.rem(me - off + w, w)
+        out = lax.dynamic_update_slice(out, recv_blk[:, None], (0, src, 0, 0))
+    return out.reshape(e_local, w * cap, d)
+
+
+def a2a_ep_inverse(y: Array, axis: str, *, mode: str = "one_shot") -> Array:
+    """Inverse AllToAll: (E_local, W*cap, d) -> (E_global, cap, d)."""
+    w = lax.axis_size(axis)
+    e_local, wc, d = y.shape
+    cap = wc // w
+    ys = jnp.moveaxis(y.reshape(e_local, w, cap, d), 1, 0)  # (W, e_local, cap, d)
+    if mode == "xla":
+        x = lax.all_to_all(ys, axis, split_axis=0, concat_axis=0, tiled=False)
+        return x.reshape(w * e_local, cap, d)
+    me = lax.axis_index(axis)
+    out = jnp.zeros((w, e_local, cap, d), y.dtype)
+    mine = lax.dynamic_slice(ys, (me, 0, 0, 0), (1, e_local, cap, d))
+    out = lax.dynamic_update_slice(out, mine, (me, 0, 0, 0))
+    for off in range(1, w):
+        tgt = lax.rem(me + off, w)
+        send_blk = lax.dynamic_slice(ys, (tgt, 0, 0, 0), (1, e_local, cap, d))
+        recv_blk = offset_permute(send_blk, axis, off)
+        src = lax.rem(me - off + w, w)
+        out = lax.dynamic_update_slice(out, recv_blk, (src, 0, 0, 0))
+    return out.reshape(w * e_local, cap, d)
+
+
+# ---------------------------------------------------------------------------
+# TP MoE: AG + GroupGEMM and GroupGEMM + RS (the paper's fused MoE ops)
+# ---------------------------------------------------------------------------
+
+
+def ag_moe(
+    x_blk: Array,  # (T_loc, d) sequence-sharded tokens
+    logits_blk: Array,  # (T_loc, E) their router logits
+    expert_fn,  # (tokens (T_loc,d), logits (T_loc,E)) -> (T_loc, d_out)
+    axis: str,
+    *,
+    mode: str = "ring",
+) -> Array:
+    """AllGather-MoE overlap: ring token chunks; run the (d_ff-sharded)
+    expert computation on each chunk as it arrives; every rank produces
+    the full sequence's partial outputs (to be reduced by rs afterwards
+    or combined directly when expert_fn output is complete)."""
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    t_loc = x_blk.shape[0]
+    ys = []
+    buf_x, buf_l = x_blk, logits_blk
+    for s in range(w):
+        ys.append(expert_fn(buf_x, buf_l))  # chunk of owner (me - s) % w
+        if s != w - 1:
+            if mode == "one_shot":
+                buf_x = offset_permute(x_blk, axis, s + 1)
+                buf_l = offset_permute(logits_blk, axis, s + 1)
+            else:
+                buf_x = ring_permute(buf_x, axis)
+                buf_l = ring_permute(buf_l, axis)
+    # Assemble owner-ascending WITHOUT a dynamic_update_slice chain (whose
+    # autodiff keeps all W buffer versions live in the backward): reversed
+    # computation order is owners ascending cyclically from (me+1), so one
+    # static concat + one cyclic roll (O(1)-buffer transpose) suffices.
+    rev = jnp.concatenate(ys[::-1], axis=0)
+    return jnp.roll(rev, shift=(me + 1) * t_loc, axis=0)
+
+
+def moe_rs(
+    x_full: Array,  # (T, d) full gathered tokens
+    logits_full: Array,  # (T, E)
+    expert_fn,  # partial-output expert computation (d_ff-sharded)
+    axis: str,
+) -> Array:
+    """GroupGEMM-ReduceScatter overlap (paper MoE+RS): compute the expert
+    output block destined for rank (me - s - 1) at step s and ring-reduce
+    the accumulator (Alg. 3 schedule)."""
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    t = x_full.shape[0]
+    t_blk = t // w
+    acc = None
+    for s in range(w):
+        blk = lax.rem(me - s - 1 + 2 * w, w)
+        xb = lax.dynamic_slice(x_full, (blk * t_blk, 0), (t_blk, x_full.shape[1]))
+        lb = lax.dynamic_slice(
+            logits_full, (blk * t_blk, 0), (t_blk, logits_full.shape[1])
+        )
+        partial = expert_fn(xb, lb).astype(jnp.float32)
+        if acc is None:
+            acc = partial
+        else:
+            acc = partial + ring_permute(acc, axis)
+    return acc.astype(x_full.dtype)

@@ -1,0 +1,217 @@
+"""The paper's communication primitives (Table 1), mapped to TPU.
+
+Two levels:
+
+1. **Kernel level** (inside a Pallas TPU kernel) — the faithful port of the
+   OpenSHMEM / non-OpenSHMEM primitive set. Symmetric memory is `pl.ANY`
+   refs under SPMD shard_map; signals are DMA/REGULAR semaphores; data
+   transfer is the chip's async remote-DMA engine. The recv semaphore *is*
+   the paper's signal: TPU DMAs signal data arrival in hardware, which is
+   why the LL flag-in-word protocol does not need porting.
+
+2. **Graph level** (inside shard_map, outside kernels) — decomposed
+   collectives built from `lax.ppermute`, which XLA lowers to async
+   collective-permute (start/done) pairs; the "signal" is the data
+   dependency on the permute result.
+
+Validation: all kernel-level primitives run under
+``pltpu.InterpretParams()`` on CPU with multiple virtual devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# ---------------------------------------------------------------------------
+# Rank identity (OpenSHMEM: my_pe / n_pes)
+# ---------------------------------------------------------------------------
+
+
+def my_pe(axis: str | Sequence[str]) -> jax.Array:
+    """Linearized rank along one or more mesh axes (row-major)."""
+    if isinstance(axis, str):
+        return lax.axis_index(axis)
+    idx = lax.axis_index(axis[0])
+    for a in axis[1:]:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def n_pes(axis: str | Sequence[str]) -> int:
+    if isinstance(axis, str):
+        return lax.axis_size(axis)
+    n = 1
+    for a in axis:
+        n *= lax.axis_size(a)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level primitives (Pallas TPU)
+# ---------------------------------------------------------------------------
+
+
+def putmem_signal_nbi(
+    src_ref,
+    dst_ref,
+    send_sem,
+    recv_sem,
+    peer,
+    *,
+    axis: Optional[str] = None,
+):
+    """Non-blocking one-sided put + arrival signal (paper: putmem_signal_nbi).
+
+    Starts an async remote DMA copying ``src_ref`` (local) into ``dst_ref``
+    *on device* ``peer`` along mesh axis ``axis``. The remote ``recv_sem``
+    is incremented by the hardware when the data lands — the signal write
+    and the data transfer are one operation, as in NVSHMEM's putmem_signal.
+    Returns the copy descriptor; call ``.wait()`` (or ``quiet``) later.
+    """
+    device_id = (peer,)
+    copy = pltpu.make_async_remote_copy(
+        src_ref=src_ref,
+        dst_ref=dst_ref,
+        send_sem=send_sem,
+        recv_sem=recv_sem,
+        device_id=device_id,
+        device_id_type=pltpu.DeviceIdType.MESH,
+    )
+    copy.start()
+    return copy
+
+
+def putmem_signal(src_ref, dst_ref, send_sem, recv_sem, peer, *, axis=None):
+    """Blocking variant: returns after the local send side has completed."""
+    copy = putmem_signal_nbi(src_ref, dst_ref, send_sem, recv_sem, peer, axis=axis)
+    copy.wait_send()
+    return copy
+
+
+def local_copy_nbi(src_ref, dst_ref, sem):
+    """Async local (HBM<->HBM/VMEM) DMA — the 'copy engine' analogue."""
+    copy = pltpu.make_async_copy(src_ref, dst_ref, sem)
+    copy.start()
+    return copy
+
+
+def signal_op(sem, peer, *, inc: int = 1, axis: Optional[str] = None):
+    """Increment a remote signal (paper: signal_op / notify)."""
+    pltpu.semaphore_signal(
+        sem,
+        inc=inc,
+        device_id=(peer,),
+        device_id_type=pltpu.DeviceIdType.MESH,
+    )
+
+
+notify = signal_op
+
+
+def signal_wait_until(sem, value: int):
+    """Spin-wait until the local signal reaches ``value``, then consume it
+    (paper: signal_wait_until / wait)."""
+    pltpu.semaphore_wait(sem, value)
+
+
+wait = signal_wait_until
+
+
+def consume_token(x, token=None):
+    """Paper: consume_token — creates a data dependency between a wait and
+    a following load. Pallas refs are effect-ordered, so loads issued after
+    a ``semaphore_wait`` are already ordered; kept for source fidelity."""
+    del token
+    return x
+
+
+def quiet(*copies):
+    """Ensure completion of outstanding one-sided ops (paper: quiet)."""
+    for c in copies:
+        c.wait()
+
+
+def barrier_all(axis: str, world: int):
+    """Barrier across all ranks on ``axis`` (paper: barrier_all).
+
+    Uses the kernel's collective barrier semaphore: signal every peer, then
+    wait for ``world - 1`` arrivals. Requires
+    ``compiler_params=pltpu.CompilerParams(collective_id=...)``.
+    """
+    barrier = pltpu.get_barrier_semaphore()
+    me = lax.axis_index(axis)
+    for off in range(1, world):
+        peer = lax.rem(me + off, world)
+        pltpu.semaphore_signal(
+            barrier, inc=1, device_id=(peer,), device_id_type=pltpu.DeviceIdType.MESH
+        )
+    pltpu.semaphore_wait(barrier, world - 1)
+
+
+def broadcast_put(src_ref, dst_ref, send_sem, recv_sem, axis: str, world: int):
+    """multimem_st analogue: store the same data to all peers.
+
+    ICI exposes no multicast primitive, so this is a peer loop of one-sided
+    puts (documented hardware-adaptation change). All DMAs are started
+    before any wait — they proceed in parallel on the DMA engines.
+    """
+    me = lax.axis_index(axis)
+    copies = []
+    for off in range(1, world):
+        peer = lax.rem(me + off, world)
+        copies.append(
+            putmem_signal_nbi(src_ref, dst_ref, send_sem, recv_sem, peer, axis=axis)
+        )
+    for c in copies:
+        c.wait_send()
+
+
+# ---------------------------------------------------------------------------
+# Graph-level primitives (shard_map)
+# ---------------------------------------------------------------------------
+
+
+def ring_permute(x: jax.Array, axis: str, *, reverse: bool = False) -> jax.Array:
+    """One ring hop (rank -> rank+1, or rank-1 when reversed)."""
+    w = lax.axis_size(axis)
+    if reverse:
+        perm = [(i, (i - 1) % w) for i in range(w)]
+    else:
+        perm = [(i, (i + 1) % w) for i in range(w)]
+    return lax.ppermute(x, axis, perm)
+
+
+def offset_permute(x: jax.Array, axis: str, offset: int) -> jax.Array:
+    """Send to rank + offset (used by the one-shot / low-latency paths)."""
+    w = lax.axis_size(axis)
+    perm = [(i, (i + offset) % w) for i in range(w)]
+    return lax.ppermute(x, axis, perm)
+
+
+def one_shot_all_gather(x: jax.Array, axis: str, *, tiled_axis: int = 0) -> jax.Array:
+    """Low-latency AllGather (paper Alg. 4 analogue at graph level).
+
+    All ``W-1`` transfers are issued up-front with distinct ring offsets
+    (no serial dependency chain), mirroring the LL AllGather's
+    all-transfers-at-once structure; on a torus, different offsets travel
+    different links concurrently.
+    """
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    shards = [x] + [offset_permute(x, axis, off) for off in range(1, w)]
+    # shards[off] came from rank (me - off). Scatter into position.
+    chunk = x.shape[tiled_axis]
+    out_shape = list(x.shape)
+    out_shape[tiled_axis] = chunk * w
+    out = jnp.zeros(out_shape, x.dtype)
+    for off, s in enumerate(shards):
+        owner = lax.rem(me - off + w, w)
+        start = [0] * x.ndim
+        start[tiled_axis] = owner * chunk
+        out = lax.dynamic_update_slice(out, s, tuple(start))
+    return out

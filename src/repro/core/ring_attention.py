@@ -1,0 +1,73 @@
+"""Ring attention (context parallelism) — the paper's overlap structure
+applied to attention itself.
+
+Sequence is sharded along ``axis`` (heads REPLICATED on that axis —
+compose with TP on a different axis). Each rank keeps its Q block
+resident; K/V blocks ride the ring, one hop per step, exactly like the
+AG+GEMM data chunks of Fig. 7 — the ppermute of block s+1 overlaps the
+blockwise-softmax compute of block s. Per-rank memory is O(S_loc) instead
+of O(S): this is the enabler for long-context (500k+) TRAINING, which
+the paper's decode-side FlashDecode+AG does not cover.
+
+Blockwise online softmax carries (m, l, acc) in f32; causal masking uses
+global offsets, and fully-future blocks contribute nothing (compute is
+spent for SPMD uniformity — on TPU the skipped-block optimization would
+be a per-step `lax.cond`, noted in EXPERIMENTS).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .primitives import ring_permute
+
+Array = jax.Array
+
+
+def ring_attention(
+    q: Array,  # (B, H, S_loc, D) — sequence-sharded on ``axis``
+    k: Array,  # (B, Hkv, S_loc, D)
+    v: Array,  # (B, Hkv, S_loc, D)
+    axis: str,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> Array:
+    """Returns (B, H, S_loc, D): attention over the GLOBAL sequence."""
+    b, h, s_loc, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+
+    qf = q.astype(jnp.float32) * scale
+    rows = me * s_loc + jnp.arange(s_loc)  # global q positions
+
+    m = jnp.full((b, h, s_loc), -1e30, jnp.float32)
+    l = jnp.zeros((b, h, s_loc), jnp.float32)
+    acc = jnp.zeros((b, h, s_loc, d), jnp.float32)
+
+    buf_k, buf_v = k, v
+    for s in range(w):
+        owner = lax.rem(me - s + w, w)  # whose KV block we hold (Fig. 7)
+        kk = jnp.repeat(buf_k.astype(jnp.float32), group, axis=1)
+        vv = jnp.repeat(buf_v.astype(jnp.float32), group, axis=1)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kk)
+        if causal:
+            cols = owner * s_loc + jnp.arange(s_loc)  # global kv positions
+            mask = rows[:, None] >= cols[None, :]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+        m = m_new
+        if s != w - 1:
+            # next KV block rides the ring while this block's FLOPs retire
+            buf_k = ring_permute(buf_k, axis)
+            buf_v = ring_permute(buf_v, axis)
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)

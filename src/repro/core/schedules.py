@@ -1,0 +1,165 @@
+"""Tile-swizzle schedule generators (paper §3.7, Figures 7/8/10).
+
+A *schedule* answers: "at step s, which data chunk does rank r compute
+with, and which chunk is in flight?" These pure-Python generators are the
+single source of truth: the shard_map collective matmuls, the Pallas
+ag_gemm kernel grid order, and the property tests all derive from them.
+
+Conventions
+-----------
+- ``world`` ranks on a ring; communication direction is rank -> rank+1.
+- AG (all-gather) schedules: chunk *c* means "the block of A owned by rank
+  c". Rank r computes chunk ``(r - s) % world`` at step s — each rank
+  starts on its own data (Fig. 7's per-rank shifted start).
+- RS (reduce-scatter) schedules: chunk *c* means "the output block that
+  rank c will keep". Rank r computes chunk ``(r - s - 1) % world`` at step
+  s so that the accumulator it forwards to rank r+1 lines up:
+  p(r+1, s+1) == p(r, s).
+- Hierarchical (2-level, Fig. 10): outer axis = pods, inner axis = ring
+  within a pod; outer regions are visited peer-pods-first so inter-pod
+  transfers start as early as possible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# 1-level schedules
+# ---------------------------------------------------------------------------
+
+def ring_ag_order(world: int, rank: int) -> List[int]:
+    """Chunk computed by ``rank`` at each step of a ring AllGather-GEMM."""
+    return [(rank - s) % world for s in range(world)]
+
+
+def ring_rs_order(world: int, rank: int) -> List[int]:
+    """Output block computed by ``rank`` at each step of a ring GEMM-RS."""
+    return [(rank - s - 1) % world for s in range(world)]
+
+
+def one_shot_ag_order(world: int, rank: int) -> List[int]:
+    """Low-latency order: local chunk first, then by arrival offset.
+
+    All transfers are issued up-front (paper Alg. 4 — no serial ring
+    dependency); compute consumes chunks in ring-distance order.
+    """
+    return [(rank - off) % world for off in range(world)]
+
+
+def bidir_ag_order(world: int, rank: int) -> List[Tuple[int, int]]:
+    """Bidirectional ring: (forward_chunk, backward_chunk) pairs per step.
+
+    Each rank's block is split in half; the top half travels rank->rank+1,
+    the bottom half rank->rank-1. Step s computes the *top* half of chunk
+    (rank - s) and the *bottom* half of chunk (rank + s). Over ``world``
+    steps every (chunk, half) pair is visited exactly once while each link
+    direction carries only half the bytes — 2x effective link bandwidth.
+    """
+    return [((rank - s) % world, (rank + s) % world) for s in range(world)]
+
+
+# ---------------------------------------------------------------------------
+# 2-level (multi-pod / inter-node) schedules — Fig. 10
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TwoLevelStep:
+    outer_step: int
+    region: int  # outer region (pod) whose blocks are being reduced/gathered
+    inner_order: Tuple[int, ...]  # inner-ring chunk order within the region
+
+
+def hierarchical_rs_schedule(
+    n_outer: int, n_inner: int, outer_rank: int, inner_rank: int
+) -> List[TwoLevelStep]:
+    """Fig. 10 GEMM+ReduceScatter swizzle.
+
+    Outer step s reduces (over the inner ring) the partial sums for region
+    ``(outer_rank - s - 1) % n_outer`` — peer pods first, own pod last — so
+    that each region's inter-pod transfer overlaps the next region's inner
+    ring of matmuls.
+    """
+    steps = []
+    for s in range(n_outer):
+        region = (outer_rank - s - 1) % n_outer
+        inner = tuple(ring_rs_order(n_inner, inner_rank))
+        steps.append(TwoLevelStep(outer_step=s, region=region, inner_order=inner))
+    return steps
+
+
+def hierarchical_ag_schedule(
+    n_outer: int, n_inner: int, outer_rank: int, inner_rank: int
+) -> List[TwoLevelStep]:
+    """2-level AllGather: own pod's ring first while peer-pod blocks are in
+    flight over the slow links, then peer-pod regions in arrival order."""
+    steps = []
+    for s in range(n_outer):
+        region = (outer_rank - s) % n_outer
+        inner = tuple(ring_ag_order(n_inner, inner_rank))
+        steps.append(TwoLevelStep(outer_step=s, region=region, inner_order=inner))
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# Grid swizzles for compute kernels (used by kernels/matmul.py)
+# ---------------------------------------------------------------------------
+
+def swizzled_grid_order(m_tiles: int, n_tiles: int, rank: int, world: int) -> List[Tuple[int, int]]:
+    """Tile visit order for a GEMM whose M dimension arrives chunk-by-chunk.
+
+    M tiles are grouped into ``world`` chunks; the group owned by ``rank``
+    is visited first, then groups in ring-arrival order — the Fig. 7 swizzle
+    expressed as a flat (m_tile, n_tile) traversal.
+    """
+    assert m_tiles % world == 0, (m_tiles, world)
+    per = m_tiles // world
+    order: List[Tuple[int, int]] = []
+    for chunk in ring_ag_order(world, rank):
+        for mt in range(chunk * per, (chunk + 1) * per):
+            for nt in range(n_tiles):
+                order.append((mt, nt))
+    return order
+
+
+# ---------------------------------------------------------------------------
+# Schedule validation helpers (used by tests AND the tuner's sanity pass)
+# ---------------------------------------------------------------------------
+
+def is_permutation(order: Sequence[int], world: int) -> bool:
+    return sorted(order) == list(range(world))
+
+
+def ag_arrival_step(world: int, rank: int, chunk: int) -> int:
+    """Earliest step at which ``chunk`` is present on ``rank`` under the
+    unidirectional ring transport (chunk moves one hop per step)."""
+    return (rank - chunk) % world
+
+
+def validate_ring_ag(world: int) -> bool:
+    """Every rank computes each chunk no earlier than its arrival."""
+    for r in range(world):
+        order = ring_ag_order(world, r)
+        if not is_permutation(order, world):
+            return False
+        for s, c in enumerate(order):
+            if s < ag_arrival_step(world, r, c):
+                return False
+    return True
+
+
+def validate_ring_rs(world: int) -> bool:
+    """Accumulator hand-off lines up: p(r+1, s+1) == p(r, s), and the final
+    block each rank computes is its own."""
+    for r in range(world):
+        order = ring_rs_order(world, r)
+        if not is_permutation(order, world):
+            return False
+        nxt = ring_rs_order(world, (r + 1) % world)
+        for s in range(world - 1):
+            if nxt[s + 1] != order[s]:
+                return False
+        if order[-1] != r:
+            return False
+    return True

@@ -1,0 +1,177 @@
+"""Distributed autotuner (paper §3.8): analytic model + whole-step profiler.
+
+Analytic mode — the TPU analogue of the paper's resource-partition
+arithmetic (§3.5: "if local reduction exceeds 470 GB/s, perfect overlap").
+On TPU the partition knob is temporal (chunk count/size), so the model
+answers: for a given overlapped op, which (mode, chunks_per_rank) makes
+per-step DMA time <= per-step MXU time, minimizing the critical path
+
+    T = fill_bubble + sum_steps max(t_compute_step, t_comm_step).
+
+Empirical mode — the paper's distributed-tuning protocol: overlapped
+kernels synchronize through signals, so a naive repeat-the-kernel
+profiler would deadlock or skew (signals must be reset between runs).
+The tuner therefore times a USER-WRAPPED step function as a whole, one
+candidate config per iteration, with an explicit reset callback, then
+selects the globally best config (all ranks see the same argmin since
+timing happens on the host driving the SPMD program).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional, Sequence
+
+import jax
+
+from .. import hw
+
+
+@dataclass(frozen=True)
+class OverlapChoice:
+    mode: str  # "ring" | "bidir" | "one_shot" | "none"
+    chunks_per_rank: int
+    # analytic estimates (seconds) for the roofline log
+    t_compute: float
+    t_comm: float
+    t_total: float
+
+
+def _dot_time(m: float, k: float, n: float, spec: hw.HardwareSpec, eff: float = 0.6) -> float:
+    return 2.0 * m * k * n / (spec.peak_flops_bf16 * eff)
+
+
+def analytic_ag_matmul(
+    m_loc: int,
+    k: int,
+    n_loc: int,
+    world: int,
+    *,
+    dtype_bytes: int = 2,
+    spec: hw.HardwareSpec = hw.DEFAULT,
+    candidates: Sequence[str] = ("none", "ring", "bidir", "one_shot"),
+    max_sub: int = 4,
+) -> OverlapChoice:
+    """Pick the overlap strategy for AllGather-GEMM.
+
+    Per ring step: compute = dot(m_loc, k, n_loc); comm = ship one chunk
+    (m_loc * k * bytes) over one link (ring) or both directions (bidir).
+    one_shot: all (W-1) chunks in flight at once across the torus links —
+    bandwidth-limited by links/chip, latency-optimal for small messages.
+    """
+    chunk_bytes = m_loc * k * dtype_bytes
+    t_dot = _dot_time(m_loc, k, n_loc, spec)
+    best: Optional[OverlapChoice] = None
+    for mode in candidates:
+        if mode == "none":
+            t_comm = (world - 1) * chunk_bytes / spec.ici_link_bandwidth
+            t_comp = world * t_dot
+            t_total = t_comm + t_comp  # serialized: collective then GEMM
+            subs = (1,)
+        elif mode == "ring":
+            subs = tuple(s for s in range(1, max_sub + 1) if m_loc % s == 0)
+        elif mode == "bidir":
+            subs = (1,) if m_loc % 2 == 0 and world >= 3 else ()
+        elif mode == "one_shot":
+            subs = (1,)
+        else:
+            continue
+        for sub in subs:
+            if mode == "none":
+                pass
+            elif mode == "ring":
+                t_step_comm = (chunk_bytes / sub) / spec.ici_link_bandwidth
+                t_step_comp = t_dot / sub
+                fill = t_step_comm  # first remote chunk latency
+                t_comm = (world - 1) * chunk_bytes / spec.ici_link_bandwidth
+                t_comp = world * t_dot
+                t_total = fill + world * sub * max(t_step_comm, t_step_comp)
+            elif mode == "bidir":
+                t_step_comm = (chunk_bytes / 2) / spec.ici_link_bandwidth
+                t_step_comp = t_dot
+                t_comm = (world - 1) * chunk_bytes / (2 * spec.ici_link_bandwidth)
+                t_comp = world * t_dot
+                t_total = t_step_comm + world * max(t_step_comm, t_step_comp)
+            else:  # one_shot
+                total_bytes = (world - 1) * chunk_bytes
+                t_comm = total_bytes / (spec.ici_link_bandwidth * spec.ici_links)
+                t_comp = world * t_dot
+                # local chunk computes during the flight of everything else
+                t_total = max(t_comm, t_dot) + (world - 1) * t_dot
+            cand = OverlapChoice(mode, sub if mode == "ring" else 1,
+                                 t_comp, t_comm, t_total)
+            if best is None or cand.t_total < best.t_total:
+                best = cand
+    assert best is not None
+    return best
+
+
+def analytic_matmul_rs(
+    m: int,
+    k_loc: int,
+    n: int,
+    world: int,
+    *,
+    dtype_bytes: int = 2,
+    spec: hw.HardwareSpec = hw.DEFAULT,
+) -> OverlapChoice:
+    m_blk = m // world
+    t_dot = _dot_time(m_blk, k_loc, n, spec)
+    acc_bytes = m_blk * n * 4  # f32 accumulator rides the ring
+    t_step_comm = acc_bytes / spec.ici_link_bandwidth
+    t_ring = t_step_comm + world * max(t_dot, t_step_comm)
+    t_none = world * t_dot + (world - 1) * acc_bytes / spec.ici_link_bandwidth
+    if t_ring <= t_none:
+        return OverlapChoice("ring", 1, world * t_dot, (world - 1) * t_step_comm, t_ring)
+    return OverlapChoice("none", 1, world * t_dot, (world - 1) * t_step_comm, t_none)
+
+
+# ---------------------------------------------------------------------------
+# Empirical whole-step tuner (paper's protocol)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TuneResult:
+    config: object
+    seconds: float
+    all_timings: dict
+
+
+def tune(
+    make_step: Callable[[object], Callable[[], object]],
+    configs: Iterable[object],
+    *,
+    reset: Optional[Callable[[], None]] = None,
+    warmup: int = 1,
+    iters: int = 3,
+) -> TuneResult:
+    """Time whole wrapped step functions, one config at a time.
+
+    ``make_step(config)`` returns a zero-arg callable executing the full
+    overlapped step (comm + compute + host logic). Between candidate
+    configs ``reset()`` restores signal state — the paper's requirement
+    that overlapped kernels cannot be replayed without resetting signals.
+    """
+    timings: dict = {}
+    best_cfg, best_t = None, float("inf")
+    for cfg in configs:
+        step = make_step(cfg)
+        for _ in range(warmup):
+            out = step()
+            jax.block_until_ready(out)
+            if reset is not None:
+                reset()
+        acc = 0.0
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = step()
+            jax.block_until_ready(out)
+            acc += time.perf_counter() - t0
+            if reset is not None:
+                reset()
+        t = acc / iters
+        timings[repr(cfg)] = t
+        if t < best_t:
+            best_cfg, best_t = cfg, t
+    return TuneResult(best_cfg, best_t, timings)

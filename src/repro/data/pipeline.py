@@ -1,0 +1,80 @@
+"""Deterministic synthetic token pipeline, host-sharded, double-buffered.
+
+Production shape: every (step, global_row) cell is a pure function of the
+seed — restart-reproducible (a restarted job regenerates the exact stream
+from the checkpointed step) and host-shardable (each host materializes
+only its addressable rows via ``jax.make_array_from_callback``).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _row_tokens(seed: int, step: int, row: int, seq_len: int, vocab: int) -> np.ndarray:
+    """Deterministic pseudo-text: a per-row LCG over a skewed vocab (zipf-ish
+    via squaring) — cheap, reproducible, non-degenerate for loss curves."""
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(seed),
+                                               counter=[0, 0, step, row]))
+    u = rng.random(seq_len + 1)
+    toks = ((u * u) * (vocab - 1)).astype(np.int32)
+    return toks
+
+
+class SyntheticTokens:
+    def __init__(self, *, vocab_size: int, seq_len: int, global_batch: int,
+                 seed: int = 0, mesh=None, batch_sharding: Optional[P] = None):
+        self.vocab = int(vocab_size)
+        self.seq = int(seq_len)
+        self.gb = int(global_batch)
+        self.seed = seed
+        self.mesh = mesh
+        self.spec = batch_sharding if batch_sharding is not None else P()
+
+    def global_batch_np(self, step: int) -> Tuple[np.ndarray, np.ndarray]:
+        toks = np.stack(
+            [_row_tokens(self.seed, step, r, self.seq, self.vocab) for r in range(self.gb)]
+        )
+        return toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)
+
+    def batch_at(self, step: int):
+        """Device arrays for one step (sharded when a mesh is given)."""
+        tokens, labels = self.global_batch_np(step)
+        if self.mesh is None:
+            return jnp.asarray(tokens), jnp.asarray(labels)
+        sh = NamedSharding(self.mesh, self.spec)
+
+        def put(arr):
+            return jax.make_array_from_callback(
+                arr.shape, sh, lambda idx: arr[idx]
+            )
+
+        return put(tokens), put(labels)
+
+    def iterate(self, start_step: int = 0, prefetch: int = 2) -> Iterator:
+        """Background-thread prefetching iterator (double buffering)."""
+        q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not stop.is_set():
+                try:
+                    q.put((step, self.batch_at(step)), timeout=1.0)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

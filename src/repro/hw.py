@@ -1,0 +1,31 @@
+"""Target hardware constants (TPU v5e) used by the roofline analysis and
+the analytic autotuner. This container runs on CPU; v5e is the TARGET."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float  # FLOP/s per chip
+    hbm_bandwidth: float  # bytes/s per chip
+    ici_link_bandwidth: float  # bytes/s per link per direction
+    ici_links: int  # links per chip (2D torus)
+    hbm_bytes: int  # capacity per chip
+    vmem_bytes: int
+    # inter-pod (DCN-ish) effective per-chip bandwidth for the pod axis
+    pod_link_bandwidth: float = 6.25e9
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+)
+
+DEFAULT = TPU_V5E

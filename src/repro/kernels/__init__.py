@@ -1,0 +1,20 @@
+"""Pallas TPU kernels (TARGET: pl.pallas_call + BlockSpec VMEM tiling;
+validated in interpret mode on CPU against the pure-jnp oracles in ref.py;
+ops.py holds the jit'd dispatch wrappers)."""
+from . import (
+    ag_gemm,
+    flash_attention,
+    flash_decode,
+    grouped_matmul,
+    ll_allgather,
+    matmul,
+    ops,
+    ref,
+    rs_gemm,
+    ssd_scan,
+)
+
+__all__ = [
+    "ag_gemm", "flash_attention", "flash_decode", "grouped_matmul",
+    "ll_allgather", "matmul", "ops", "ref", "rs_gemm", "ssd_scan",
+]

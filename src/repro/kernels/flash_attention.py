@@ -1,0 +1,139 @@
+"""Causal GQA flash attention (prefill) — Pallas TPU kernel.
+
+Online-softmax over KV tiles: grid (B, Hq, q_tiles, kv_tiles) with the KV
+dimension sequential ("arbitrary"); running max / denominator / f32
+accumulator live in VMEM scratch and persist across the KV grid steps.
+Causal upper-triangle tiles are skipped entirely (compute AND the pipeline
+still fetch — the skip saves MXU work; full block-sparsity would need a
+custom index_map, noted in EXPERIMENTS.md §Perf).
+
+GQA: the KV head index_map folds the query-head -> kv-head mapping
+(h // group), so no repeat/materialization of K/V ever happens.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    scale: float,
+    bq: int,
+    bkv: int,
+    kv_tiles: int,
+    causal: bool,
+    out_dtype,
+):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # last KV tile that intersects the causal band of this q tile
+    if causal:
+        last_tile = ((iq + 1) * bq - 1) // bkv
+        run = ikv <= last_tile
+    else:
+        last_tile = kv_tiles - 1
+        run = ikv == ikv  # True
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bkv)
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            cols = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]  # (bq, 128) broadcast lanes
+        m_cur = jnp.max(s, axis=-1, keepdims=True)  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])  # (bq, 1)
+        p = jnp.exp(s - m_new[:, :1])  # (bq, bkv)
+        l_ref[...] = l_ref[...] * alpha + jnp.broadcast_to(
+            jnp.sum(p, axis=-1, keepdims=True), l_ref.shape
+        )
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ikv == (last_tile if causal else kv_tiles - 1))
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(out_dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Lq, D)
+    k: jax.Array,  # (B, Hkv, Lk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    bq: int = 256,
+    bkv: int = 256,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    bq = min(bq, lq)
+    bkv = min(bkv, lk)
+    assert lq % bq == 0 and lk % bkv == 0, (lq, lk, bq, bkv)
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    out_dtype = out_dtype or q.dtype
+    grid = (b, hq, lq // bq, lk // bkv)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        bq=bq,
+        bkv=bkv,
+        kv_tiles=lk // bkv,
+        causal=causal,
+        out_dtype=out_dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, iq, ikv: (bb, h, iq, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda bb, h, iq, ikv: (bb, h // group, ikv, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda bb, h, iq, ikv: (bb, h // group, ikv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, h, iq, ikv: (bb, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),  # running max (lane-broadcast)
+            pltpu.VMEM((bq, 128), jnp.float32),  # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),  # f32 accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,124 @@
+"""Flash-decode Pallas kernel: one new token vs. a long KV cache shard.
+
+Bandwidth-bound (the paper's Fig. 15 workload): the kernel's job is to
+stream K/V tiles from HBM once at full bandwidth while maintaining the
+online softmax. Emits BOTH the un-normalized-combinable output ``o`` and
+the log-sum-exp ``lse`` so the *distributed* flash decode
+(core/flash_decode.py) can merge partials from sequence-parallel KV shards
+with the low-latency AllGather — exactly the paper's FlashDecode+AG.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    lse_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    scale: float,
+    bkv: int,
+    kv_tiles: int,
+):
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (1, d) — one token
+    k = k_ref[0, 0].astype(jnp.float32)  # (bkv, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (1, bkv)
+    valid = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1) < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+    p = jnp.exp(s - m_new[:, :1])
+    l_ref[...] = l_ref[...] * alpha + jnp.broadcast_to(
+        jnp.sum(p, axis=-1, keepdims=True), l_ref.shape
+    )
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ikv == kv_tiles - 1)
+    def _done():
+        l_fin = l_ref[:, :1]
+        o_ref[0, 0] = acc_ref[...] / l_fin
+        lse_ref[0, 0, 0] = m_ref[0, 0] + jnp.log(l_fin[0, 0])
+
+
+def flash_decode(
+    q: jax.Array,  # (B, Hq, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,
+    length: jax.Array,  # (B,) int32 valid KV length
+    *,
+    scale: float | None = None,
+    bkv: int = 512,
+    interpret: bool = False,
+):
+    """Returns (o, lse): o (B, Hq, D) f32, lse (B, Hq) f32."""
+    b, hq, d = q.shape
+    _, hkv, s_len, _ = k.shape
+    group = hq // hkv
+    bkv = min(bkv, s_len)
+    assert s_len % bkv == 0, (s_len, bkv)
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    kv_tiles = s_len // bkv
+    grid = (b, hq, kv_tiles)
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, bkv=bkv, kv_tiles=kv_tiles
+    )
+    q4 = q[:, :, None, :]  # (B, Hq, 1, D)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, h, ikv: (bb,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, d), lambda bb, h, ikv: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda bb, h, ikv: (bb, h // group, ikv, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda bb, h, ikv: (bb, h // group, ikv, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bb, h, ikv: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bb, h, ikv: (bb, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, 1, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 128), jnp.float32),
+            pltpu.VMEM((1, 128), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(length, q4, k, v)
+    return o[:, :, 0, :], lse[:, :, 0]

@@ -1,0 +1,67 @@
+"""Grouped (per-expert) GEMM Pallas kernel for MoE layers.
+
+Capacity-based layout: x is (E, cap, d_in) — tokens already dispatched to
+expert buffers — and w is (E, d_in, d_out). One MXU pipeline computes all
+experts: grid (E, cap_tiles, n_tiles, k_tiles); the expert index selects
+both the x slab and the weight slab. VMEM working set is one (bm, bk) x
+(bk, bn) pair plus the f32 accumulator, independent of E.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_tiles: int, out_dtype):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0],
+        w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(3) == k_tiles - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(out_dtype)
+
+
+def grouped_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 256,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """(E, cap, d_in) x (E, d_in, d_out) -> (E, cap, d_out)."""
+    e, cap, k = x.shape
+    e2, k2, n = w.shape
+    assert e == e2 and k == k2, (x.shape, w.shape)
+    bm, bk, bn = min(bm, cap), min(bk, k), min(bn, n)
+    assert cap % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, w.shape, (bm, bk, bn))
+    grid = (e, cap // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_gmm_kernel, k_tiles=k // bk, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda ee, i, j, kk: (ee, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda ee, i, j, kk: (ee, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda ee, i, j, kk: (ee, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, cap, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,90 @@
+"""Tiled GEMM Pallas kernel with swizzled grid order (paper §3.7).
+
+TPU mapping: BlockSpec tiles staged HBM->VMEM by the Pallas pipeline; the
+MXU consumes (bm, bk) x (bk, bn) blocks; accumulation in an f32 VMEM
+scratch across the sequential K grid dimension.
+
+The swizzle: when this GEMM consumes an in-flight AllGather (rank/world
+set), the M-tile traversal starts at this rank's own chunk and proceeds in
+ring-arrival order — ``schedules.ring_ag_order`` — so no tile ever waits on
+data that has not arrived (Fig. 7). The swizzle is an index_map transform:
+grid position i maps to physical tile ((i + rank * tiles_per_chunk) %
+m_tiles).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_tiles: int, out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_tiles - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 256,
+    bk: int = 512,
+    bn: int = 256,
+    out_dtype=jnp.float32,
+    rank: int = 0,
+    world: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A @ B. A: (M, K), B: (K, N). Shapes must divide the block sizes
+    (ops.py pads). ``rank``/``world`` activate the AG-arrival swizzle."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, b.shape, (bm, bk, bn))
+    m_tiles, k_tiles, n_tiles = m // bm, k // bk, n // bn
+
+    if world > 1:
+        assert m_tiles % world == 0, (m_tiles, world)
+        per_chunk = m_tiles // world
+        offset = rank * per_chunk
+
+        def m_index(i):
+            # ring-arrival swizzle: start at own chunk, walk backwards
+            # through arrival order (owner r-s has tiles at (r-s)*per_chunk)
+            return jax.lax.rem(i + offset, m_tiles)
+
+    else:
+
+        def m_index(i):
+            return i
+
+    grid = (m_tiles, n_tiles, k_tiles)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_tiles=k_tiles, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (m_index(i), kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (m_index(i), j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,129 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+State-space duality: within a chunk of length C the output is a masked
+(C, C) matmul (MXU work); across chunks a (P, S) state is carried in VMEM
+scratch through the sequential chunk grid dimension. This is the
+TPU-native blocking of SSD: chunk = MXU tile, state = VMEM-resident,
+HBM traffic = one pass over x/dt/B/C.
+
+Recurrence (per head):
+  S_t = exp(dt_t * a) * S_{t-1} + dt_t * x_t (x) B_t
+  y_t = S_t . C_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, C, 1, P)
+    dt_ref,  # (1, C, 1)
+    a_ref,  # (1,) SMEM
+    b_ref,  # (1, C, 1, S)
+    c_ref,  # (1, C, 1, S)
+    y_ref,  # (1, C, 1, P)
+    state_out_ref,  # (1, 1, P, S)
+    state_ref,  # VMEM (P, S) f32
+    *,
+    n_chunks: int,
+    chunk: int,
+    out_dtype,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x_c = x_ref[0, :, 0, :].astype(jnp.float32)  # (C, P)
+    dt_c = dt_ref[0, :, 0].astype(jnp.float32)  # (C,)
+    a_h = a_ref[0]
+    b_c = b_ref[0, :, 0, :].astype(jnp.float32)  # (C, S)
+    c_c = c_ref[0, :, 0, :].astype(jnp.float32)  # (C, S)
+
+    log_decay = dt_c * a_h  # (C,) negative
+    cum = jnp.cumsum(log_decay)  # inclusive L_t
+
+    # ---- intra-chunk: y[t] += sum_{u<=t} exp(L_t - L_u) (C_t.B_u) dt_u x_u
+    cb = jax.lax.dot_general(
+        c_c, b_c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, C)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    gate = jnp.where(rows >= cols, cb * decay, 0.0) * dt_c[None, :]
+    y = jax.lax.dot_general(
+        gate, x_c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, P)
+
+    # ---- inter-chunk: y[t] += exp(L_t) * C_t . S_prev
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c_c, state_ref[...], (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, S) . (P, S)^T -> (C, P)
+
+    # ---- state update: S <- exp(L_C) S + sum_u exp(L_C - L_u) dt_u x_u (x) B_u
+    w = jnp.exp(cum[-1] - cum) * dt_c  # (C,)
+    state_ref[...] = jnp.exp(cum[-1]) * state_ref[...] + jax.lax.dot_general(
+        x_c, b_c * w[:, None], (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (P, S)
+
+    y_ref[0, :, 0, :] = y.astype(out_dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _done():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H)
+    a: jax.Array,  # (H,)
+    b_mat: jax.Array,  # (B, L, G, S)
+    c_mat: jax.Array,  # (B, L, G, S)
+    *,
+    chunk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+):
+    """Returns (y, final_state): y (B, L, H, P), state (B, H, P, S) f32."""
+    bsz, seqlen, h, p = x.shape
+    g, s = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    chunk = min(chunk, seqlen)
+    assert seqlen % chunk == 0, (seqlen, chunk)
+    n_chunks = seqlen // chunk
+    out_dtype = out_dtype or x.dtype
+    grid = (bsz, h, n_chunks)
+    kernel = functools.partial(
+        _ssd_kernel, n_chunks=n_chunks, chunk=chunk, out_dtype=out_dtype
+    )
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bb, hh, ic: (bb, ic, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bb, hh, ic: (bb, ic, hh)),
+            pl.BlockSpec((1,), lambda bb, hh, ic: (hh,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, chunk, 1, s), lambda bb, hh, ic: (bb, ic, hh // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, s), lambda bb, hh, ic: (bb, ic, hh // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bb, hh, ic: (bb, ic, hh, 0)),
+            pl.BlockSpec((1, 1, p, s), lambda bb, hh, ic: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, seqlen, h, p), out_dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, s), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, dt, a, b_mat, c_mat)
+    return y, state

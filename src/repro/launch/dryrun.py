@@ -1,0 +1,152 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init). 512 virtual CPU devices back both production
+meshes: (16, 16) single-pod and (2, 16, 16) multi-pod.
+
+Per cell this prints/records:
+  - compiled.memory_analysis()  (bytes per device -> fits 16 GB?)
+  - compiled.cost_analysis()    (FLOPs / bytes for the roofline)
+  - parsed collective wire bytes + the three roofline terms
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod] [--out reports/dryrun]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, SHAPES, get_config, shape_applicable
+from . import roofline
+from .mesh import make_production_mesh
+from .steps import build_step, default_pcfg
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             overlap_mode: str = "ring", force: bool = False, tag: str = ""):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_desc = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch}__{shape_name}__{mesh_desc}" + (f"__{tag}" if tag else "")
+    out_path = os.path.join(out_dir, cell + ".json")
+    if os.path.exists(out_path) and not force:
+        print(f"[skip-cached] {cell}")
+        with open(out_path) as f:
+            return json.load(f)
+    if not shape_applicable(cfg.family, shape):
+        report = {"arch": arch, "shape": shape_name, "mesh": mesh_desc,
+                  "skipped": True,
+                  "reason": "long_500k requires sub-quadratic sequence mixing "
+                            "(see DESIGN.md §Arch-applicability)"}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"[skip-inapplicable] {cell}")
+        return report
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.flatten())
+    pcfg = default_pcfg(cfg, shape, multi_pod=multi_pod, overlap_mode=overlap_mode)
+    built = build_step(cfg, pcfg, shape, mesh)
+    lowered = built.fn.lower(*built.in_shapes)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    trips = built.model.plan.n_super
+    training = shape.kind == "train"
+    if shape.kind == "decode":
+        tokens = shape.global_batch  # one new token per sequence
+    else:
+        tokens = shape.tokens
+    model_flops = cfg.flops_per_token(training=training) * tokens
+    rep = roofline.analyze(
+        arch=arch,
+        shape_name=shape_name,
+        mesh_desc=mesh_desc,
+        chips=chips,
+        cost=cost,
+        memory_stats=mem,
+        hlo_text=hlo,
+        loop_trips=trips,
+        model_flops_total=model_flops,
+        links_used={"ring": 1, "bidir": 2, "one_shot": 4, "none": 2}[overlap_mode],
+        backward=training,
+    )
+    out = json.loads(rep.to_json())
+    out.update(
+        skipped=False,
+        seconds_to_compile=round(time.time() - t0, 1),
+        overlap_mode=overlap_mode,
+        memory_analysis=dict(
+            argument_size_in_bytes=mem.argument_size_in_bytes,
+            output_size_in_bytes=mem.output_size_in_bytes,
+            temp_size_in_bytes=mem.temp_size_in_bytes,
+            alias_size_in_bytes=mem.alias_size_in_bytes,
+            generated_code_size_in_bytes=mem.generated_code_size_in_bytes,
+        ),
+        collective_counts=roofline.parse_collectives(hlo, loop_trips=trips).op_counts,
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(
+        f"[ok] {cell}: compute={rep.t_compute*1e3:.2f}ms "
+        f"memory={rep.t_memory*1e3:.2f}ms collective={rep.t_collective*1e3:.2f}ms "
+        f"dominant={rep.dominant} dev_bytes={rep.device_bytes/2**30:.2f}GiB "
+        f"fits={rep.fits_hbm} useful={rep.useful_flops_ratio:.2f} "
+        f"(compile {out['seconds_to_compile']}s)"
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--overlap", default="ring",
+                    choices=["ring", "bidir", "one_shot", "none"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.all or args.arch is None else [args.arch]
+    shapes = sorted(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multipod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                             overlap_mode=args.overlap, force=args.force,
+                             tag=args.tag)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append((arch, shape, mp, repr(e)))
+                    traceback.print_exc()
+                    print(f"[FAIL] {arch} {shape} multipod={mp}: {e}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("\nall requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

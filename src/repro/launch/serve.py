@@ -1,0 +1,73 @@
+"""Serving driver: batched requests through the decode engine.
+
+CPU smoke:
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  python -m repro.launch.serve --arch granite-3-2b --reduced --dp 2 --tp 2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, get_config, reduced
+from ..configs.base import ParallelConfig, ShapeConfig
+from ..serve.engine import Engine, Request
+from .mesh import make_mesh
+from .steps import build_decode_step, local_batch
+
+
+def run(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    pcfg = ParallelConfig(
+        dp=args.dp, tp=args.tp, fsdp=not args.no_fsdp,
+        param_dtype=args.dtype, compute_dtype=args.dtype,
+    )
+    shape = ShapeConfig("serve", seq_len=args.max_len,
+                        global_batch=args.batch, kind="decode")
+    mesh = make_mesh(args.dp, args.tp)
+    built = build_decode_step(cfg, pcfg, shape, mesh,
+                              cache_dtype=jnp.dtype(args.dtype))
+    model = built.model
+    params, _ = model.init(jax.random.PRNGKey(0), jnp.dtype(pcfg.param_dtype))
+    _, cache_shapes, _, _ = built.in_shapes
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_shapes)
+
+    eng = Engine(built.fn, params, caches, batch=args.batch,
+                 max_len=args.max_len, seed=0)
+    rng = np.random.RandomState(0)
+    for i in range(args.requests):
+        prompt = rng.randint(1, cfg.vocab_size, size=rng.randint(3, 8)).tolist()
+        eng.add(Request(prompt=prompt, max_new_tokens=args.new_tokens,
+                        temperature=args.temperature))
+    t0 = time.time()
+    leftover = eng.run(max_steps=args.max_len - 2)
+    dt = time.time() - t0
+    print(f"served {args.requests - len(leftover)}/{args.requests} requests "
+          f"in {dt:.1f}s ({eng.cache_len} decode steps)")
+    return eng
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--no-fsdp", action="store_true")
+    run(ap.parse_args())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,488 @@
+"""Model blocks (attention / MLP / MoE / Mamba2-SSD), shard_map-local.
+
+Every SP->TP boundary is an overlapped AllGather-GEMM and every TP->SP
+boundary an overlapped GEMM-ReduceScatter (the paper's technique as the
+model's default projection path). Decode-time blocks use replicated
+single-token activations with local projections + one small psum — the
+small-message regime the paper serves with low-latency kernels.
+
+Blocks take LOGICAL (already unpacked, see common.get_params) parameter
+dicts; packing/FSDP-gather happens in the caller so stacked sub-layer
+leaves can be indexed per sub-layer.
+
+Row-order convention: a sequence-parallel tensor (B, S_loc, D) flattens to
+(B*S_loc, D); the gathered full-sequence layout is rank-major
+(tp, B, S_loc, ...). `_sp_gathered_to_bsd` / `_bsd_to_sp_rows` convert.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig, ParallelConfig
+from ..core import collective_matmul as cm
+from ..core import moe_overlap as mo
+from ..kernels import ops
+from .common import (
+    DATA_AXIS,
+    MODEL_AXIS,
+    activation,
+    ag_linear,
+    local_linear,
+    psum_tp,
+    rmsnorm,
+    rope,
+    rs_linear,
+)
+from .params import LeafSpec, TPInfo
+
+Array = jax.Array
+
+
+def _sp_gathered_to_bsd(y: Array, tp: int, b: int, s_loc: int) -> Array:
+    """(tp*B*S_loc, C) rank-major -> (B, S, C)."""
+    c = y.shape[-1]
+    return (
+        y.reshape(tp, b, s_loc, c).transpose(1, 0, 2, 3).reshape(b, tp * s_loc, c)
+    )
+
+
+def _bsd_to_sp_rows(x: Array, tp: int) -> Array:
+    """(B, S, C) -> (tp*B*S_loc, C) rank-major rows for GEMM+RS."""
+    b, s, c = x.shape
+    s_loc = s // tp
+    return x.reshape(b, tp, s_loc, c).transpose(1, 0, 2, 3).reshape(tp * b * s_loc, c)
+
+
+# ===========================================================================
+# Attention
+# ===========================================================================
+
+
+def attention_specs(
+    cfg: ModelConfig, info: TPInfo, *, cross: bool = False, kv_dim: Optional[int] = None
+) -> Dict[str, LeafSpec]:
+    d, hd = cfg.d_model, cfg.head_dim
+    kv_dim = kv_dim or d
+    specs = {
+        "ln": LeafSpec((d,), tp_sharded=False, init="ones"),
+        "wq": LeafSpec((d, info.hq_loc * hd), fan_in=d),
+        "wkv": LeafSpec(
+            (kv_dim, 2 * info.hkv_loc * hd), fan_in=kv_dim,
+            replica_groups=info.kv_rep,
+        ),
+        "wo": LeafSpec((info.hq_loc * hd, d), fan_in=info.hq_loc * hd * info.tp),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = LeafSpec((info.hq_loc * hd,), init="zeros")
+        specs["bkv"] = LeafSpec(
+            (2 * info.hkv_loc * hd,), init="zeros", replica_groups=info.kv_rep
+        )
+    return specs
+
+
+class AttnParams(NamedTuple):
+    ln: Array
+    wq: Array
+    wkv: Array
+    wo: Array
+    bq: Optional[Array]
+    bkv: Optional[Array]
+
+
+def _get_attn(p: dict, dtype) -> AttnParams:
+    c = lambda n: p[n].astype(dtype) if n in p else None
+    return AttnParams(
+        ln=c("ln"), wq=c("wq"), wkv=c("wkv"), wo=c("wo"), bq=c("bq"), bkv=c("bkv")
+    )
+
+
+def attention_train(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    info: TPInfo,
+    p: dict,  # logical tensors
+    x_sp: Array,  # (B, S_loc, D)
+    *,
+    causal: bool = True,
+    cross_src: Optional[Array] = None,  # (B, T_src, D) replicated over tp
+    return_kv: bool = False,  # also return (k, v) as (B, Hkv_loc, S, hd)
+):
+    b, s_loc, d = x_sp.shape
+    tp = pcfg.tp
+    s = s_loc * tp
+    hd = cfg.head_dim
+    pp = _get_attn(p, x_sp.dtype)
+
+    h = rmsnorm(x_sp, pp.ln, cfg.norm_eps).reshape(b * s_loc, d)
+    # SP -> TP: one fused AG+GEMM for q and kv (single gather of the tokens)
+    if cross_src is None:
+        wqkv = jnp.concatenate([pp.wq, pp.wkv], axis=1)
+        bqkv = jnp.concatenate([pp.bq, pp.bkv]) if pp.bq is not None else None
+        y = ag_linear(h, wqkv, pcfg, bqkv)  # (tp*B*S_loc, cols)
+        y = _sp_gathered_to_bsd(y, tp, b, s_loc)  # (B, S, cols)
+        q, kv = jnp.split(y, [info.hq_loc * hd], axis=-1)
+        k, v = jnp.split(kv, 2, axis=-1)
+        src_len = s
+    else:
+        q = ag_linear(h, pp.wq, pcfg, pp.bq)
+        q = _sp_gathered_to_bsd(q, tp, b, s_loc)
+        kv = local_linear(cross_src.reshape(-1, cross_src.shape[-1]), pp.wkv, pp.bkv)
+        kv = kv.reshape(b, cross_src.shape[1], -1)
+        k, v = jnp.split(kv, 2, axis=-1)
+        src_len = cross_src.shape[1]
+
+    q = q.reshape(b, s, info.hq_loc, hd)
+    k = k.reshape(b, src_len, info.hkv_loc, hd)
+    v = v.reshape(b, src_len, info.hkv_loc, hd)
+    if cfg.use_rope and cross_src is None:
+        pos = jnp.arange(s)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+    o = ops.flash_attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal and cross_src is None,
+    )  # (B, Hq_loc, S, hd)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, info.hq_loc * hd)
+    # TP -> SP: GEMM + ReduceScatter
+    out = rs_linear(_bsd_to_sp_rows(o, tp), pp.wo, pcfg)
+    y = x_sp + out.reshape(b, s_loc, d)
+    if return_kv:
+        return y, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    return y
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    info: TPInfo,
+    p: dict,
+    x: Array,  # (B, 1, D) replicated over tp
+    cache_k: Array,  # (B, Hkv_loc, S_max, hd)
+    cache_v: Array,
+    cache_len: Array,  # scalar int32
+    *,
+    cross_kv: Optional[Tuple[Array, Array]] = None,  # precomputed (k, v)
+) -> Tuple[Array, Array, Array]:
+    b, _, d = x.shape
+    hd = cfg.head_dim
+    pp = _get_attn(p, x.dtype)
+    h = rmsnorm(x, pp.ln, cfg.norm_eps).reshape(b, d)
+    q = local_linear(h, pp.wq, pp.bq).reshape(b, info.hq_loc, hd)
+
+    if cross_kv is None:
+        kv = local_linear(h, pp.wkv, pp.bkv).reshape(b, 2, info.hkv_loc, hd)
+        k_new, v_new = kv[:, 0], kv[:, 1]
+        if cfg.use_rope:
+            posq = jnp.full((b, 1), cache_len, jnp.int32)
+            q = rope(q[:, None], posq, cfg.rope_theta)[:, 0]
+            k_new = rope(k_new[:, None], posq, cfg.rope_theta)[:, 0]
+        cache_k = lax.dynamic_update_slice(
+            cache_k, k_new[:, :, None, :].astype(cache_k.dtype), (0, 0, cache_len, 0)
+        )
+        cache_v = lax.dynamic_update_slice(
+            cache_v, v_new[:, :, None, :].astype(cache_v.dtype), (0, 0, cache_len, 0)
+        )
+        lengths = jnp.full((b,), cache_len + 1, jnp.int32)
+        o, _ = ops.flash_decode(q, cache_k, cache_v, lengths)
+    else:
+        ck, cv = cross_kv
+        lengths = jnp.full((b,), ck.shape[2], jnp.int32)
+        o, _ = ops.flash_decode(q, ck, cv, lengths)
+
+    o = o.astype(x.dtype).reshape(b, info.hq_loc * hd)
+    out = psum_tp(local_linear(o, pp.wo), pcfg)  # small AR (low-latency regime)
+    return x + out.reshape(b, 1, d), cache_k, cache_v
+
+
+# ===========================================================================
+# MLP
+# ===========================================================================
+
+
+def mlp_specs(cfg: ModelConfig, info: TPInfo) -> Dict[str, LeafSpec]:
+    d = cfg.d_model
+    n_up = 2 if cfg.gated_mlp else 1
+    return {
+        "ln": LeafSpec((d,), tp_sharded=False, init="ones"),
+        "wi": LeafSpec((d, n_up * info.dff_loc), fan_in=d),
+        "wo": LeafSpec((info.dff_loc, d), fan_in=info.dff_loc * info.tp),
+    }
+
+
+def _mlp_act(cfg, y: Array) -> Array:
+    act = activation(cfg.activation)
+    if cfg.gated_mlp:
+        gate, up = jnp.split(y, 2, axis=-1)
+        return act(gate.astype(jnp.float32)).astype(y.dtype) * up
+    return act(y.astype(jnp.float32)).astype(y.dtype)
+
+
+def mlp_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
+    b, s_loc, d = x_sp.shape
+    dt = x_sp.dtype
+    h = rmsnorm(x_sp, p["ln"].astype(dt), cfg.norm_eps).reshape(b * s_loc, d)
+    y = ag_linear(h, p["wi"].astype(dt), pcfg)  # (tp*B*S_loc, n_up*dff_loc)
+    y = _mlp_act(cfg, y)
+    out = rs_linear(y, p["wo"].astype(dt), pcfg)  # rows already rank-major
+    return x_sp + out.reshape(b, s_loc, d)
+
+
+def mlp_decode(cfg, pcfg, info, p: dict, x: Array) -> Array:
+    b, t, d = x.shape
+    dt = x.dtype
+    h = rmsnorm(x, p["ln"].astype(dt), cfg.norm_eps).reshape(b * t, d)
+    y = _mlp_act(cfg, local_linear(h, p["wi"].astype(dt)))
+    out = psum_tp(local_linear(y, p["wo"].astype(dt)), pcfg)
+    return x + out.reshape(b, t, d)
+
+
+# ===========================================================================
+# MoE (TP mode: paper's AG+MoE / MoE+RS; EP mode: AllToAll dispatch/combine)
+# ===========================================================================
+
+
+def moe_specs(cfg: ModelConfig, info: TPInfo) -> Dict[str, LeafSpec]:
+    d = cfg.d_model
+    e = cfg.num_experts
+    if info.moe_mode == "ep":
+        e_loc, dff = info.e_loc, cfg.d_ff
+    else:
+        e_loc, dff = e, info.dff_loc
+    n_up = 2 if cfg.gated_mlp else 1
+    return {
+        "ln": LeafSpec((d,), tp_sharded=False, init="ones"),
+        "router": LeafSpec((d, e), tp_sharded=False, fan_in=d),
+        "wi": LeafSpec((e_loc, d, n_up * dff), fan_in=d),
+        "wo": LeafSpec(
+            (e_loc, dff, d), fan_in=dff * (1 if info.moe_mode == "ep" else info.tp)
+        ),
+    }
+
+
+def _expert_ffn(cfg, x_disp: Array, wi: Array, wo: Array) -> Array:
+    """(E, cap, D) -> (E, cap, D) through the expert MLPs (grouped GEMMs)."""
+    y = ops.grouped_matmul(x_disp, wi, out_dtype=x_disp.dtype)
+    y = _mlp_act(cfg, y)
+    return ops.grouped_matmul(y, wo, out_dtype=x_disp.dtype)
+
+
+def _capacity(t: int, k: int, e: int, factor: float) -> int:
+    cap = int(math.ceil(t * k / e * factor))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def moe_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
+    b, s_loc, d = x_sp.shape
+    tp = pcfg.tp
+    dt = x_sp.dtype
+    ln, router = p["ln"].astype(dt), p["router"].astype(dt)
+    wi, wo = p["wi"].astype(dt), p["wo"].astype(dt)
+    h = rmsnorm(x_sp, ln, cfg.norm_eps).reshape(b * s_loc, d)
+    logits = local_linear(h, router)  # (T_loc, E)
+    k = cfg.experts_per_token
+
+    if info.moe_mode == "ep" and tp > 1:
+        # token chunking bounds the (E, cap, d) dispatch buffers AND is the
+        # natural grain for overlapping a2a(chunk i+1) with experts(chunk i)
+        t_loc = h.shape[0]
+        n_chunks = max(1, min(pcfg.moe_chunks, t_loc))
+        while t_loc % n_chunks != 0:
+            n_chunks -= 1
+        t_c = t_loc // n_chunks
+        cap = _capacity(t_c, k, cfg.num_experts, cfg.capacity_factor)
+
+        def ep_chunk(hc, lc):
+            disp, dinfo = mo.topk_dispatch(hc, lc, k, cap)  # (E, cap, D)
+            x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode="one_shot")
+            y_ep = _expert_ffn(cfg, x_ep, wi, wo)  # (E_loc, tp*cap, D)
+            back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode="one_shot")
+            return mo.topk_combine(back, dinfo, out_dtype=dt)
+
+        if pcfg.remat != "none":
+            ep_chunk = jax.checkpoint(ep_chunk)
+        outs = []
+        for ci in range(n_chunks):
+            hc = lax.dynamic_slice(h, (ci * t_c, 0), (t_c, d))
+            lc = lax.dynamic_slice(logits, (ci * t_c, 0), (t_c, logits.shape[1]))
+            outs.append(ep_chunk(hc, lc))
+        out = jnp.concatenate(outs, axis=0) if n_chunks > 1 else outs[0]
+        return x_sp + out.reshape(b, s_loc, d)
+
+    # TP mode: AllGather token chunks around the ring, run the d_ff-sharded
+    # experts per chunk (AG+MoE), then ring-ReduceScatter the partial
+    # outputs (MoE+RS). (EP configs on tp=1 meshes also land here.)
+    cap = _capacity(h.shape[0], k, cfg.num_experts, cfg.capacity_factor)
+
+    def expert_fn(tokens, tok_logits):
+        dsp, dinfo = mo.topk_dispatch(tokens, tok_logits, k, cap)
+        y = _expert_ffn(cfg, dsp, wi, wo)
+        return mo.topk_combine(y, dinfo, out_dtype=tokens.dtype)
+
+    if pcfg.remat != "none":
+        # per-ring-chunk checkpoint: the backward live-set is one chunk's
+        # dispatch buffers, not all W chunks' (the ring makes W of them)
+        expert_fn = jax.checkpoint(expert_fn)
+
+    if tp > 1:
+        full = mo.ag_moe(h, logits, expert_fn, MODEL_AXIS, mode=pcfg.overlap_mode)
+        out = cm.reduce_scatter_chunked(full, MODEL_AXIS)
+    else:
+        out = expert_fn(h, logits)
+    return x_sp + out.reshape(b, s_loc, d)
+
+
+def moe_decode(cfg, pcfg, info, p: dict, x: Array) -> Array:
+    b, t, d = x.shape
+    dt = x.dtype
+    ln, router = p["ln"].astype(dt), p["router"].astype(dt)
+    wi, wo = p["wi"].astype(dt), p["wo"].astype(dt)
+    h = rmsnorm(x, ln, cfg.norm_eps).reshape(b * t, d)
+    logits = local_linear(h, router)
+    k = cfg.experts_per_token
+    cap = _capacity(h.shape[0], k, cfg.num_experts, cfg.capacity_factor)
+    disp, dinfo = mo.topk_dispatch(h, logits, k, cap)
+    if info.moe_mode == "ep" and pcfg.tp > 1:
+        x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode="one_shot")
+        y_ep = _expert_ffn(cfg, x_ep, wi, wo)
+        back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode="one_shot")
+        out = mo.topk_combine(back, dinfo, out_dtype=dt)
+    else:
+        y = _expert_ffn(cfg, disp, wi, wo)
+        out = mo.topk_combine(y, dinfo, out_dtype=dt)
+        out = psum_tp(out, pcfg) if info.moe_mode == "tp" else out
+    return x + out.reshape(b, t, d)
+
+
+# ===========================================================================
+# Mamba2 (SSD) block
+# ===========================================================================
+
+
+def ssm_specs(cfg: ModelConfig, info: TPInfo) -> Dict[str, LeafSpec]:
+    d = cfg.d_model
+    gs = cfg.ssm_num_groups * cfg.ssm_state
+    cols = 2 * info.di_loc + 2 * gs + info.nh_loc  # z | x | B | C | dt
+    conv_ch = info.di_loc + 2 * gs
+    return {
+        "ln": LeafSpec((d,), tp_sharded=False, init="ones"),
+        "w_in": LeafSpec((d, cols), fan_in=d),
+        "conv": LeafSpec(
+            (cfg.ssm_conv_width, conv_ch), init="normal", fan_in=cfg.ssm_conv_width
+        ),
+        "a_log": LeafSpec((info.nh_loc,), init="ssm_a"),
+        "dt_bias": LeafSpec((info.nh_loc,), init="ssm_dt"),
+        "d_skip": LeafSpec((info.nh_loc,), init="ones"),
+        "w_out": LeafSpec((info.di_loc, d), fan_in=info.di_loc * info.tp),
+    }
+
+
+def _causal_depthwise_conv(x: Array, w: Array) -> Array:
+    """x: (B, S, C), w: (width, C) — causal depthwise conv + silu."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )[None, None, :]
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def _split_ssm_proj(y: Array, cfg, info):
+    gs = cfg.ssm_num_groups * cfg.ssm_state
+    di = info.di_loc
+    z, xs, bmat, cmat, dt = jnp.split(
+        y, [di, 2 * di, 2 * di + gs, 2 * di + 2 * gs], axis=-1
+    )
+    return z, xs, bmat, cmat, dt
+
+
+def ssm_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
+    b, s_loc, d = x_sp.shape
+    tp = pcfg.tp
+    s = s_loc * tp
+    dt_ = x_sp.dtype
+    a_log = p["a_log"].astype(jnp.float32)
+    dt_bias = p["dt_bias"].astype(jnp.float32)
+    d_skip = p["d_skip"].astype(jnp.float32)
+
+    h = rmsnorm(x_sp, p["ln"].astype(dt_), cfg.norm_eps).reshape(b * s_loc, d)
+    y = ag_linear(h, p["w_in"].astype(dt_), pcfg)  # SP->TP overlapped projection
+    y = _sp_gathered_to_bsd(y, tp, b, s_loc)  # (B, S, cols)
+    z, xs, bmat, cmat, dtp = _split_ssm_proj(y, cfg, info)
+
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out = _causal_depthwise_conv(conv_in, p["conv"])
+    xs, bmat, cmat = jnp.split(
+        conv_out,
+        [info.di_loc, info.di_loc + cfg.ssm_num_groups * cfg.ssm_state],
+        axis=-1,
+    )
+
+    nh, hp = info.nh_loc, cfg.ssm_head_dim
+    xh = xs.reshape(b, s, nh, hp)
+    dtv = jax.nn.softplus(dtp.astype(jnp.float32) + dt_bias)  # (B, S, nh)
+    a = -jnp.exp(a_log)  # (nh,)
+    bm = bmat.reshape(b, s, cfg.ssm_num_groups, cfg.ssm_state)
+    cmx = cmat.reshape(b, s, cfg.ssm_num_groups, cfg.ssm_state)
+    yh, _ = ops.ssd_scan(xh, dtv, a, bm, cmx)
+    yh = yh.astype(jnp.float32) + d_skip[None, None, :, None] * xh.astype(jnp.float32)
+    y = (yh.reshape(b, s, nh * hp) * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    out = rs_linear(_bsd_to_sp_rows(y, tp), p["w_out"].astype(dt_), pcfg)  # TP->SP
+    return x_sp + out.reshape(b, s_loc, d)
+
+
+def ssm_decode(
+    cfg, pcfg, info, p: dict, x: Array, conv_state: Array, ssd_state: Array
+) -> Tuple[Array, Array, Array]:
+    """x: (B, 1, D); conv_state: (B, width-1, conv_ch);
+    ssd_state: (B, nh_loc, P, S) f32."""
+    b, _, d = x.shape
+    dt_ = x.dtype
+    a_log = p["a_log"].astype(jnp.float32)
+    dt_bias = p["dt_bias"].astype(jnp.float32)
+    d_skip = p["d_skip"].astype(jnp.float32)
+
+    h = rmsnorm(x, p["ln"].astype(dt_), cfg.norm_eps).reshape(b, d)
+    y = local_linear(h, p["w_in"].astype(dt_))
+    z, xs, bmat, cmat, dtp = _split_ssm_proj(y, cfg, info)
+
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)  # (B, conv_ch)
+    window = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)  # (B, w, C)
+    conv_out = jax.nn.silu(
+        jnp.sum(window.astype(jnp.float32) * p["conv"].astype(jnp.float32)[None], axis=1)
+    ).astype(dt_)
+    new_conv_state = window[:, 1:, :]
+    xs, bmat, cmat = jnp.split(
+        conv_out,
+        [info.di_loc, info.di_loc + cfg.ssm_num_groups * cfg.ssm_state],
+        axis=-1,
+    )
+
+    nh, hp = info.nh_loc, cfg.ssm_head_dim
+    xh = xs.reshape(b, nh, hp).astype(jnp.float32)
+    dtv = jax.nn.softplus(dtp.astype(jnp.float32) + dt_bias)  # (B, nh)
+    a = -jnp.exp(a_log)
+    rep = nh // cfg.ssm_num_groups if nh >= cfg.ssm_num_groups else 1
+    bm = jnp.repeat(
+        bmat.reshape(b, cfg.ssm_num_groups, cfg.ssm_state), rep, axis=1
+    ).astype(jnp.float32)
+    cmx = jnp.repeat(
+        cmat.reshape(b, cfg.ssm_num_groups, cfg.ssm_state), rep, axis=1
+    ).astype(jnp.float32)
+    decay = jnp.exp(dtv * a[None, :])  # (B, nh)
+    new_state = ssd_state * decay[..., None, None] + (
+        xh[..., :, None] * bm[..., None, :]
+    ) * dtv[..., None, None]
+    yh = jnp.einsum("bhps,bhs->bhp", new_state, cmx) + d_skip[None, :, None] * xh
+    yv = (yh.reshape(b, nh * hp) * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    out = psum_tp(local_linear(yv, p["w_out"].astype(dt_)), pcfg)
+    return x + out.reshape(b, 1, d), new_conv_state, new_state

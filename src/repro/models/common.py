@@ -1,0 +1,214 @@
+"""Shared model math (runs INSIDE shard_map; all tensors are per-device).
+
+Conventions:
+  mesh axes: ("pod",) "data", "model"
+  hidden between blocks (train/prefill): (B_loc, S_loc, D) — sequence-
+    parallel along "model" (S_loc = S / tp); B_loc = B / (dp * pods)
+  hidden in decode: (B_loc, 1, D) replicated along "model"
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig, ParallelConfig
+from ..core import collective_matmul as cm
+from .params import LeafSpec, TPInfo, unpack
+
+Array = jax.Array
+
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+
+
+# ---------------------------------------------------------------------------
+# FSDP param access
+# ---------------------------------------------------------------------------
+
+
+def fsdp_get(packed_local: Array, spec: LeafSpec, pcfg: ParallelConfig, dtype=None) -> Array:
+    """Packed per-device slice -> logical TP-local tensor.
+
+    With FSDP the packed dim is additionally sharded along "data"; gather
+    it with the overlapped ring collective (its autodiff transpose is the
+    ring reduce-scatter of the gradient — ZeRO-3 with overlap)."""
+    if pcfg.fsdp:
+        if pcfg.fsdp_pods and pcfg.pods > 1:
+            # 2-level gather: pod axis first (minor), then data (major);
+            # the transpose is the matching hierarchical reduce-scatter.
+            packed_local = cm.all_gather_chunked(packed_local, POD_AXIS)
+        if pcfg.dp > 1:
+            packed_local = cm.all_gather_chunked(packed_local, DATA_AXIS)
+    return unpack(packed_local, spec, dtype)
+
+
+def get_params(p: dict, specs: dict, pcfg: ParallelConfig) -> dict:
+    """Unpack a whole block's packed leaves into logical tensors (FSDP
+    gather + reshape). Stacked sub-layer leaves come out as
+    (n_sub, ...) tensors, indexable per sub-layer."""
+    return {k: fsdp_get(p[k], specs[k], pcfg) for k in specs}
+
+
+# ---------------------------------------------------------------------------
+# Elementwise / norm / rope
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: Array, scale: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, Dh); positions: (..., S) or (S,)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # (..., S, 1, half)
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(positions: Array, d: int) -> Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Overlapped projections (the paper's AG+GEMM / GEMM+RS in the model)
+# ---------------------------------------------------------------------------
+
+
+def ag_linear(
+    x_sp: Array,  # (T_loc, D) sequence-parallel tokens
+    w: Array,  # (D, cols_loc) TP-local weight
+    pcfg: ParallelConfig,
+    b: Optional[Array] = None,
+) -> Array:
+    """SP -> TP boundary: AllGather-GEMM. Returns (T, cols_loc)."""
+    mode = pcfg.overlap_mode if pcfg.tp > 1 else "none"
+    y = cm.ag_matmul(
+        x_sp,
+        w,
+        MODEL_AXIS,
+        mode=mode,
+        chunks_per_rank=max(1, pcfg.ag_chunks),
+        out_dtype=x_sp.dtype,
+    )
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def rs_linear(
+    y_tp: Array,  # (T, cols_loc) TP activations
+    w: Array,  # (cols_loc, D) TP-local weight
+    pcfg: ParallelConfig,
+) -> Array:
+    """TP -> SP boundary: GEMM-ReduceScatter. Returns (T_loc, D)."""
+    mode = pcfg.overlap_mode if pcfg.tp > 1 else "none"
+    if mode == "one_shot":
+        mode = "ring"  # RS has ring / bidir / baseline variants
+    return cm.matmul_rs(y_tp, w, MODEL_AXIS, mode=mode, out_dtype=y_tp.dtype)
+
+
+def local_linear(x: Array, w: Array, b: Optional[Array] = None) -> Array:
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def psum_tp(x: Array, pcfg: ParallelConfig) -> Array:
+    return lax.psum(x, MODEL_AXIS) if pcfg.tp > 1 else x
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel embedding & loss (Megatron-style)
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(
+    ids: Array,  # (B_loc, S_any) int32
+    table: Array,  # (V_loc, D) TP-local vocab slice
+    info: TPInfo,
+) -> Array:
+    """Vocab-parallel lookup: mask + psum over the model axis."""
+    v_loc = table.shape[0]
+    me = lax.axis_index(MODEL_AXIS)
+    off = me * v_loc
+    local = ids - off
+    in_range = (local >= 0) & (local < v_loc)
+    local = jnp.clip(local, 0, v_loc - 1)
+    emb = table[local]  # (B, S, D)
+    emb = jnp.where(in_range[..., None], emb, 0)
+    return lax.psum(emb, MODEL_AXIS)
+
+
+def vocab_parallel_loss(
+    x: Array,  # (T_loc, D) sequence-parallel final hidden
+    w_out: Array,  # (D, V_loc)
+    labels: Array,  # (T_loc,) int32, -1 = ignore
+    info: TPInfo,
+    vocab_size: int,
+) -> tuple[Array, Array]:
+    """Cross entropy over the TP-sharded vocab. Returns (sum_loss, count)
+    local to this rank's sequence shard (caller psums over model+data)."""
+    logits = jnp.dot(x, w_out, preferred_element_type=jnp.float32)  # (T, V_loc)
+    v_loc = w_out.shape[1]
+    me = lax.axis_index(MODEL_AXIS)
+    off = me * v_loc
+    # padded vocab tail must not win the max
+    col = off + jnp.arange(v_loc)
+    logits = jnp.where(col[None, :] < vocab_size, logits, -1e30)
+
+    # max subtraction is gradient-invariant for the LSE -> stop_gradient is
+    # exact; it must wrap the pmax INPUT (pmax has no JVP rule, so its
+    # tangent must be a symbolic zero)
+    m = lax.pmax(lax.stop_gradient(jnp.max(logits, axis=-1)), MODEL_AXIS)  # (T,)
+    sumexp = lax.psum(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1), MODEL_AXIS)
+    lse = m + jnp.log(sumexp)
+
+    local_label = labels - off
+    in_range = (local_label >= 0) & (local_label < v_loc)
+    safe = jnp.clip(local_label, 0, v_loc - 1)
+    tgt_logit = jnp.take_along_axis(logits, safe[:, None], axis=1)[:, 0]
+    tgt_logit = lax.psum(jnp.where(in_range, tgt_logit, 0.0), MODEL_AXIS)
+
+    valid = labels >= 0
+    loss = jnp.where(valid, lse - tgt_logit, 0.0)
+    return jnp.sum(loss), jnp.sum(valid.astype(jnp.float32))
+
+
+def vocab_parallel_logits(
+    x: Array, w_out: Array, info: TPInfo, vocab_size: int
+) -> Array:
+    """Full logits (gathered over TP) — decode-time only (T is tiny)."""
+    logits = jnp.dot(x, w_out, preferred_element_type=jnp.float32)  # (T, V_loc)
+    full = lax.all_gather(logits, MODEL_AXIS, axis=1, tiled=True)
+    return full[:, :vocab_size]

@@ -1,0 +1,12 @@
+"""Model factory: one constructor for all 10 assigned architectures."""
+from __future__ import annotations
+
+from ..configs.base import ModelConfig, ParallelConfig
+from .lm import LM
+from .whisper import Whisper
+
+
+def build_model(cfg: ModelConfig, pcfg: ParallelConfig):
+    if cfg.family == "whisper":
+        return Whisper(cfg, pcfg)
+    return LM(cfg, pcfg)

@@ -1,0 +1,259 @@
+"""Whisper-style encoder-decoder (conv frontend stubbed as frame embeddings).
+
+Encoder: non-causal self-attention blocks over (B, F, D) frame embeddings
+(the assignment stubs the conv frontend — ``input_specs()`` provides the
+frames). Decoder: causal self-attention + cross-attention to the encoder
+output + MLP. Sinusoidal positions (no learned tables, so the mechanical
+32k decode shape needs no 32k embedding matrix).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig, ParallelConfig
+from . import blocks
+from .common import (
+    DATA_AXIS,
+    MODEL_AXIS,
+    embed_lookup,
+    fsdp_get,
+    get_params,
+    local_linear,
+    rmsnorm,
+    sinusoidal_positions,
+    vocab_parallel_logits,
+    vocab_parallel_loss,
+)
+from ..core import collective_matmul as cm
+from .params import LeafSpec, build_params, spec_tree_shapes, tp_info
+
+Array = jax.Array
+
+
+def _ceil_to(x, m):
+    return ((x + m - 1) // m) * m
+
+
+class Whisper:
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig):
+        self.cfg = cfg
+        self.pcfg = pcfg
+        self.info = tp_info(cfg, pcfg)
+        self.frames_padded = _ceil_to(cfg.encoder_frames, max(pcfg.tp, 1))
+        self.plan_n_enc = cfg.encoder_layers
+        self.plan_n_dec = cfg.num_layers
+        self._build_specs()
+
+    @property
+    def plan(self):
+        class _P:
+            n_super = self.plan_n_dec
+        return _P()
+
+    def _build_specs(self):
+        cfg, info = self.cfg, self.info
+        self.enc_specs = {
+            "attn": blocks.attention_specs(cfg, info),
+            "ffn": blocks.mlp_specs(cfg, info),
+        }
+        self.dec_specs = {
+            "attn": blocks.attention_specs(cfg, info),
+            "cross": blocks.attention_specs(cfg, info),
+            "ffn": blocks.mlp_specs(cfg, info),
+        }
+        self.top_specs: Dict[str, LeafSpec] = {
+            "embed": LeafSpec((info.vocab_loc, cfg.d_model), fan_in=cfg.d_model),
+            "ln_enc": LeafSpec((cfg.d_model,), tp_sharded=False, init="ones"),
+            "ln_f": LeafSpec((cfg.d_model,), tp_sharded=False, init="ones"),
+        }
+
+    def init(self, key, dtype=jnp.bfloat16):
+        k1, k2, k3 = jax.random.split(key, 3)
+        top, top_sp = build_params(self.top_specs, k1, self.pcfg, dtype=dtype)
+        enc, enc_sp = build_params(self.enc_specs, k2, self.pcfg,
+                                   layers=self.plan_n_enc, dtype=dtype)
+        dec, dec_sp = build_params(self.dec_specs, k3, self.pcfg,
+                                   layers=self.plan_n_dec, dtype=dtype)
+        return (
+            {"top": top, "encoder": enc, "layers": dec},
+            {"top": top_sp, "encoder": enc_sp, "layers": dec_sp},
+        )
+
+    def param_shapes(self, dtype=jnp.bfloat16):
+        top, top_sp = spec_tree_shapes(self.top_specs, self.pcfg, dtype=dtype)
+        enc, enc_sp = spec_tree_shapes(self.enc_specs, self.pcfg,
+                                       layers=self.plan_n_enc, dtype=dtype)
+        dec, dec_sp = spec_tree_shapes(self.dec_specs, self.pcfg,
+                                       layers=self.plan_n_dec, dtype=dtype)
+        return (
+            {"top": top, "encoder": enc, "layers": dec},
+            {"top": top_sp, "encoder": enc_sp, "layers": dec_sp},
+        )
+
+    def _remat(self, fn):
+        if self.pcfg.remat == "none":
+            return fn
+        if self.pcfg.remat == "dots":
+            return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+        return jax.checkpoint(fn)
+
+    # ------------------------------------------------------------------
+    def encode(self, params: dict, frames: Array) -> Array:
+        """frames: (B, F_pad, D) replicated over tp -> (B, F_pad, D) replicated."""
+        cfg, pcfg, info = self.cfg, self.pcfg, self.info
+        b, f, d = frames.shape
+        tp = pcfg.tp
+        f_loc = f // tp
+        me = lax.axis_index(MODEL_AXIS)
+        h = lax.dynamic_slice(frames, (0, me * f_loc, 0), (b, f_loc, d))
+        pos = me * f_loc + jnp.arange(f_loc)
+        h = h + sinusoidal_positions(pos, d)[None].astype(h.dtype)
+
+        def body(carry, xs):
+            pa = get_params(xs["attn"], self.enc_specs["attn"], pcfg)
+            pf = get_params(xs["ffn"], self.enc_specs["ffn"], pcfg)
+            hh = blocks.attention_train(cfg, pcfg, info, pa, carry, causal=False)
+            hh = blocks.mlp_train(cfg, pcfg, info, pf, hh)
+            return hh, None
+
+        h, _ = lax.scan(self._remat(body), h, params["encoder"])
+        ln = fsdp_get(params["top"]["ln_enc"], self.top_specs["ln_enc"], pcfg, h.dtype)
+        h = rmsnorm(h, ln, cfg.norm_eps)
+        # decoder cross-attention needs the full encoder output on each rank
+        full = cm.all_gather_chunked(
+            h.transpose(1, 0, 2).reshape(f_loc, b * d), MODEL_AXIS
+        )
+        return full.reshape(f, b, d).transpose(1, 0, 2)
+
+    def loss_local(
+        self,
+        params: dict,
+        tokens: Array,  # (B_loc, S)
+        labels: Array,
+        extra: Optional[dict] = None,  # {"frames": (B_loc, F_pad, D)}
+    ) -> Array:
+        cfg, pcfg, info = self.cfg, self.pcfg, self.info
+        enc_out = self.encode(params, extra["frames"])  # (B, F, D)
+        b, s = tokens.shape
+        tp = pcfg.tp
+        s_loc = s // tp
+        me = lax.axis_index(MODEL_AXIS)
+        ids_sp = lax.dynamic_slice(tokens, (0, me * s_loc), (b, s_loc))
+        lbl_sp = lax.dynamic_slice(labels, (0, me * s_loc), (b, s_loc))
+        embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg,
+                         jnp.dtype(pcfg.compute_dtype))
+        h = embed_lookup(ids_sp, embed, info)
+        pos = me * s_loc + jnp.arange(s_loc)
+        h = h + sinusoidal_positions(pos, cfg.d_model)[None].astype(h.dtype)
+
+        def body(carry, xs):
+            pa = get_params(xs["attn"], self.dec_specs["attn"], pcfg)
+            px = get_params(xs["cross"], self.dec_specs["cross"], pcfg)
+            pf = get_params(xs["ffn"], self.dec_specs["ffn"], pcfg)
+            hh = blocks.attention_train(cfg, pcfg, info, pa, carry)
+            hh = blocks.attention_train(cfg, pcfg, info, px, hh, cross_src=enc_out)
+            hh = blocks.mlp_train(cfg, pcfg, info, pf, hh)
+            return hh, None
+
+        h, _ = lax.scan(self._remat(body), h, params["layers"])
+        ln_f = fsdp_get(params["top"]["ln_f"], self.top_specs["ln_f"], pcfg, h.dtype)
+        h = rmsnorm(h, ln_f, cfg.norm_eps).reshape(b * s_loc, cfg.d_model)
+        w_out = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg, h.dtype).T
+        loss_sum, count = vocab_parallel_loss(
+            h, w_out, lbl_sp.reshape(-1), info, cfg.vocab_size
+        )
+        axes = (MODEL_AXIS, DATA_AXIS) if pcfg.pods == 1 else (MODEL_AXIS, DATA_AXIS, "pod")
+        return lax.psum(loss_sum, axes) / jnp.maximum(lax.psum(count, axes), 1.0)
+
+    def prefill_logits_local(self, params, tokens, extra=None):
+        """Forward-only prefill: last-token logits (B, vocab)."""
+        cfg, pcfg, info = self.cfg, self.pcfg, self.info
+        enc_out = self.encode(params, extra["frames"])
+        b, s = tokens.shape
+        tp = pcfg.tp
+        s_loc = s // tp
+        me = lax.axis_index(MODEL_AXIS)
+        ids_sp = lax.dynamic_slice(tokens, (0, me * s_loc), (b, s_loc))
+        embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg,
+                         jnp.dtype(pcfg.compute_dtype))
+        h = embed_lookup(ids_sp, embed, info)
+        pos = me * s_loc + jnp.arange(s_loc)
+        h = h + sinusoidal_positions(pos, cfg.d_model)[None].astype(h.dtype)
+
+        def body(carry, xs):
+            pa = get_params(xs["attn"], self.dec_specs["attn"], pcfg)
+            px = get_params(xs["cross"], self.dec_specs["cross"], pcfg)
+            pf = get_params(xs["ffn"], self.dec_specs["ffn"], pcfg)
+            hh = blocks.attention_train(cfg, pcfg, info, pa, carry)
+            hh = blocks.attention_train(cfg, pcfg, info, px, hh, cross_src=enc_out)
+            hh = blocks.mlp_train(cfg, pcfg, info, pf, hh)
+            return hh, None
+
+        h, _ = lax.scan(self._remat(body), h, params["layers"])
+        ln_f = fsdp_get(params["top"]["ln_f"], self.top_specs["ln_f"], pcfg, h.dtype)
+        h_last = rmsnorm(h[:, -1, :], ln_f, cfg.norm_eps)
+        w_out = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg,
+                         h.dtype).T
+        logits = vocab_parallel_logits(h_last, w_out, info, cfg.vocab_size)
+        keep = (me == tp - 1).astype(logits.dtype)
+        return lax.psum(logits * keep, MODEL_AXIS)
+
+    # ------------------------------------------------------------------
+    def cache_shapes(self, batch_local: int, s_max: int, dtype=jnp.bfloat16):
+        cfg, info = self.cfg, self.info
+        n, hd = self.plan_n_dec, cfg.head_dim
+        fp = self.frames_padded
+        return {
+            "attn": {
+                "k": jax.ShapeDtypeStruct((n, batch_local, info.hkv_loc, s_max, hd), dtype),
+                "v": jax.ShapeDtypeStruct((n, batch_local, info.hkv_loc, s_max, hd), dtype),
+            },
+            "cross_k": jax.ShapeDtypeStruct((n, batch_local, info.hkv_loc, fp, hd), dtype),
+            "cross_v": jax.ShapeDtypeStruct((n, batch_local, info.hkv_loc, fp, hd), dtype),
+        }
+
+    def _kv_seq_sharded(self):
+        return False
+
+    def decode_step_local(self, params, caches, cache_len, token):
+        cfg, pcfg, info = self.cfg, self.pcfg, self.info
+        b = token.shape[0]
+        embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg,
+                         jnp.dtype(pcfg.compute_dtype))
+        h = embed_lookup(token, embed, info)
+        pos = cache_len + jnp.arange(1)
+        h = h + sinusoidal_positions(pos, cfg.d_model)[None].astype(h.dtype)
+
+        def body(carry, xs):
+            hh = carry
+            p_layer, cache = xs
+            pa = get_params(p_layer["attn"], self.dec_specs["attn"], pcfg)
+            px = get_params(p_layer["cross"], self.dec_specs["cross"], pcfg)
+            pf = get_params(p_layer["ffn"], self.dec_specs["ffn"], pcfg)
+            hh, ck, cv = blocks.attention_decode(
+                cfg, pcfg, info, pa, hh,
+                cache["attn"]["k"], cache["attn"]["v"], cache_len,
+            )
+            hh, _, _ = blocks.attention_decode(
+                cfg, pcfg, info, px, hh,
+                cache["cross_k"], cache["cross_v"], cache_len,
+                cross_kv=(cache["cross_k"], cache["cross_v"]),
+            )
+            hh = blocks.mlp_decode(cfg, pcfg, info, pf, hh)
+            new_cache = {
+                "attn": {"k": ck, "v": cv},
+                "cross_k": cache["cross_k"],
+                "cross_v": cache["cross_v"],
+            }
+            return hh, new_cache
+
+        h, new_caches = lax.scan(body, h, (params["layers"], caches))
+        ln_f = fsdp_get(params["top"]["ln_f"], self.top_specs["ln_f"], pcfg, h.dtype)
+        h = rmsnorm(h, ln_f, cfg.norm_eps).reshape(b, cfg.d_model)
+        w_out = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg, h.dtype).T
+        logits = vocab_parallel_logits(h, w_out, info, cfg.vocab_size)
+        return logits, new_caches

@@ -1,0 +1,121 @@
+"""Batched serving engine: slot-based continuous batching over the
+shard_map'd decode step.
+
+Production notes: the decode step is ONE compiled SPMD program for the
+whole batch (slot occupancy handled by masking); prompt ingestion reuses
+the decode program token-by-token (a dedicated chunked-prefill program is
+the documented fast path — the dry-run's prefill_32k cell lowers it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """step_fn(params, caches, cache_len, token) -> (logits, new_caches)
+    — the jit(shard_map(decode_step_local)) closure built by the launcher."""
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        params,
+        init_caches,
+        batch: int,
+        max_len: int,
+        eos_id: int = -1,
+        seed: int = 0,
+    ):
+        self.step_fn = step_fn
+        self.params = params
+        self.caches = init_caches
+        self.batch = batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.requests: List[Optional[Request]] = [None] * batch
+        self.pending: List[Request] = []
+        self.cache_len = 0
+        self.rng = np.random.RandomState(seed)
+        self._prompt_cursor = [0] * batch
+
+    # ------------------------------------------------------------------
+    def add(self, req: Request):
+        self.pending.append(req)
+
+    def _admit(self):
+        for i in range(self.batch):
+            if self.requests[i] is None and self.pending:
+                self.requests[i] = self.pending.pop(0)
+                self._prompt_cursor[i] = 0
+
+    def _next_tokens(self, last_sampled: np.ndarray) -> np.ndarray:
+        toks = np.zeros((self.batch, 1), np.int32)
+        for i, req in enumerate(self.requests):
+            if req is None:
+                continue
+            cur = self._prompt_cursor[i]
+            if cur < len(req.prompt):
+                toks[i, 0] = req.prompt[cur]
+                self._prompt_cursor[i] = cur + 1
+            else:
+                toks[i, 0] = last_sampled[i]
+        return toks
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        out = np.zeros((self.batch,), np.int32)
+        for i, req in enumerate(self.requests):
+            if req is None:
+                continue
+            row = logits[i]
+            if req.temperature <= 0:
+                out[i] = int(np.argmax(row))
+            else:
+                p = np.exp((row - row.max()) / req.temperature)
+                p /= p.sum()
+                out[i] = int(self.rng.choice(len(row), p=p))
+        return out
+
+    # ------------------------------------------------------------------
+    def run(self, max_steps: int = 256):
+        """Drive all requests to completion (or max_steps)."""
+        self._admit()
+        last = np.zeros((self.batch,), np.int32)
+        for _ in range(max_steps):
+            if all(r is None for r in self.requests) and not self.pending:
+                break
+            toks = self._next_tokens(last)
+            logits, self.caches = self.step_fn(
+                self.params, self.caches, jnp.int32(self.cache_len),
+                jnp.asarray(toks),
+            )
+            self.cache_len += 1
+            logits = np.asarray(logits)
+            last = self._sample(logits)
+            for i, req in enumerate(self.requests):
+                if req is None:
+                    continue
+                if self._prompt_cursor[i] >= len(req.prompt):
+                    req.out_tokens.append(int(last[i]))
+                    if (
+                        len(req.out_tokens) >= req.max_new_tokens
+                        or last[i] == self.eos_id
+                    ):
+                        req.done = True
+                        self.requests[i] = None
+            if self.cache_len >= self.max_len - 1:
+                break
+            self._admit()
+        return [r for r in self.pending] + [r for r in self.requests if r]

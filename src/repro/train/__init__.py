@@ -1,0 +1,1 @@
+from . import checkpoint, optimizer, train_step

@@ -1,0 +1,158 @@
+"""AdamW on packed parameter leaves (shard_map-local, elementwise).
+
+Moments live in the same packed/sharded layout as the parameters (FSDP
+shards optimizer state for free — ZeRO). ``moment_dtype`` is configurable:
+the 1T-param config uses bf16 moments to fit 512 x 16 GB HBM (recorded in
+DESIGN.md). A master fp32 copy is intentionally NOT kept: bf16 params +
+fp32 (or bf16) moments with fp32 update arithmetic.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # scalar int32
+    mu: Any  # pytree like params
+    nu: Any
+
+
+def init_opt_state(params, moment_dtype=jnp.float32, kind: str = "adamw") -> OptState:
+    z = lambda p: jnp.zeros(p.shape, moment_dtype)
+    zn = (lambda p: jnp.zeros((1,), moment_dtype)) if kind == "momentum" else z
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(z, params),
+        nu=jax.tree.map(zn, params),
+    )
+
+
+def opt_state_shapes(param_shapes, moment_dtype=jnp.float32, kind: str = "adamw") -> OptState:
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, moment_dtype)
+    zn = (
+        (lambda p: jax.ShapeDtypeStruct((1,), moment_dtype))
+        if kind == "momentum"
+        else z
+    )
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(z, param_shapes),
+        nu=jax.tree.map(zn, param_shapes),
+    )
+
+
+def lr_schedule(tcfg: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step.astype(jnp.float32) - tcfg.warmup_steps)
+        / max(tcfg.total_steps - tcfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_grad_norm(grads, psum_axes, *, local=False) -> jax.Array:
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    if not local:
+        sq = jax.lax.psum(sq, psum_axes)
+    return jnp.sqrt(sq)
+
+
+def adamw_update(
+    params,
+    grads,
+    state: OptState,
+    tcfg: TrainConfig,
+    *,
+    grad_norm: jax.Array,
+    ok: jax.Array | None = None,
+):
+    """One AdamW step (elementwise on local shards).
+
+    ``ok`` (scalar bool): when False the whole update is a no-op — the
+    donation-safe in-graph form of "skip this step" used by the NaN /
+    fault guard (buffers are donated, so a host-side rollback after the
+    fact is impossible)."""
+    ok_b = jnp.bool_(True) if ok is None else ok
+    step = state.step + ok_b.astype(jnp.int32)
+    lr = lr_schedule(tcfg, step)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / (grad_norm + 1e-6))
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    kind = getattr(tcfg, "optimizer", "adamw")
+
+    def _sel(new, old):
+        # donation-safe skip: freeze params AND moments when !ok
+        return new if ok is None else jnp.where(ok_b, new, old)
+
+    def upd_row(p, g, m, v):
+        gf = g.astype(jnp.float32) * clip
+        if kind == "momentum":
+            # Muon-style single-buffer momentum + decoupled weight decay
+            m_new = b1 * m.astype(jnp.float32) + gf
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (m_new + wd * pf)
+            return (_sel(pf.astype(p.dtype), p), _sel(m_new.astype(m.dtype), m), v)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mh = m_new / c1
+        vh = v_new / c2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + eps) + wd * pf)
+        return (
+            _sel(pf.astype(p.dtype), p),
+            _sel(m_new.astype(m.dtype), m),
+            _sel(v_new.astype(v.dtype), v),
+        )
+
+    def upd_mom(p, g, m, v):
+        # v is a (1,) placeholder in momentum mode — not scanned
+        if p.ndim == 2 and p.shape[0] > 1:
+            def body(_, xs):
+                pp, gg, mm = xs
+                np_, nm, _ = upd_row(pp, gg, mm, v)
+                return None, (np_, nm)
+
+            _, (np_, nm) = jax.lax.scan(body, None, (p, g, m))
+            return np_, nm, v
+        return upd_row(p, g, m, v)
+
+    def upd(p, g, m, v):
+        if kind == "momentum":
+            return upd_mom(p, g, m, v)
+        # stacked (L, packed) leaves update via scan over L so the f32
+        # update temporaries stay one-layer-sized (not whole-stack-sized)
+        if p.ndim == 2 and p.shape[0] > 1:
+            def body(_, xs):
+                return None, upd_row(*xs)
+
+            _, out = jax.lax.scan(body, None, (p, g, m, v))
+            return out
+        return upd_row(p, g, m, v)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out_p, out_m, out_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        np_, nm, nv = upd(p, g, m, v)
+        out_p.append(np_)
+        out_m.append(nm)
+        out_v.append(nv)
+    return (
+        jax.tree.unflatten(tdef, out_p),
+        OptState(step, jax.tree.unflatten(tdef, out_m), jax.tree.unflatten(tdef, out_v)),
+        lr,
+    )

@@ -1,0 +1,65 @@
+"""Minimal property-based testing shim.
+
+``hypothesis`` is not installable in this offline container (recorded in
+DESIGN.md); this module provides the subset we need: seeded random
+strategies + a @given decorator that runs the property across N sampled
+inputs and reports the failing example.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Callable
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, sample: Callable[[np.random.RandomState], object], name=""):
+        self.sample = sample
+        self.name = name
+
+
+def integers(lo: int, hi: int) -> Strategy:
+    return Strategy(lambda r: int(r.randint(lo, hi + 1)), f"int[{lo},{hi}]")
+
+
+def sampled_from(options) -> Strategy:
+    opts = list(options)
+    return Strategy(lambda r: opts[r.randint(len(opts))], f"from{opts}")
+
+
+def floats(lo: float, hi: float) -> Strategy:
+    return Strategy(lambda r: float(r.uniform(lo, hi)), f"float[{lo},{hi}]")
+
+
+def arrays(shape_strategy, scale: float = 1.0, dtype=np.float32) -> Strategy:
+    def sample(r):
+        shape = shape_strategy.sample(r) if isinstance(shape_strategy, Strategy) else shape_strategy
+        return (r.randn(*shape) * scale).astype(dtype)
+
+    return Strategy(sample, "array")
+
+
+def given(examples: int = 25, seed: int = 0, **strategies):
+    """Run the test with ``examples`` sampled inputs."""
+
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must not see the strategy
+        # parameter names as fixture requests.
+        def wrapper():
+            rng = np.random.RandomState(seed)
+            for i in range(examples):
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:  # noqa: BLE001
+                    raise AssertionError(
+                        f"property failed on example {i}: {drawn!r}: {e}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

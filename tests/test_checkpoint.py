@@ -1,0 +1,79 @@
+"""Checkpointer: roundtrip, atomic commit, GC, elastic repack."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ParallelConfig
+from repro.models.params import LeafSpec
+from repro.train.checkpoint import Checkpointer, repack_leaf
+
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones((5,))},
+        "opt": {"step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    st = _state()
+    ck.save(10, st, blocking=True)
+    assert ck.latest_step() == 10
+    out = ck.restore(10, st)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+    assert int(out["opt"]["step"]) == 7
+
+
+def test_gc_keeps_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(), blocking=True)
+    assert sorted(ck.steps()) == [3, 4]
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(5, _state(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+def test_no_tmp_dirs_left(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(1, _state(), blocking=True)
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_repack_leaf_dp_change():
+    """Elastic restart: repack a tp-sharded packed leaf from dp=4 to dp=2."""
+    spec = LeafSpec((5, 3))  # numel 15
+    old = ParallelConfig(dp=4, tp=2)
+    new = ParallelConfig(dp=2, tp=2)
+    seg_old = ((15 + 3) // 4) * 4  # 16
+    rng = np.random.RandomState(0)
+    segs = [rng.randn(15) for _ in range(2)]
+    packed = np.concatenate([np.concatenate([s, np.zeros(seg_old - 15)]) for s in segs])
+    out = repack_leaf(packed, spec, old, new)
+    seg_new = ((15 + 1) // 2) * 2  # 16
+    assert out.shape == (2 * seg_new,)
+    for r in range(2):
+        np.testing.assert_allclose(out[r * seg_new: r * seg_new + 15], segs[r])
+
+
+def test_repack_stacked_leaf():
+    spec = LeafSpec((7,), tp_sharded=False)
+    old = ParallelConfig(dp=4, tp=1)
+    new = ParallelConfig(dp=8, tp=1)
+    rng = np.random.RandomState(1)
+    seg_old = 8
+    rows = []
+    for _ in range(3):
+        v = rng.randn(7)
+        rows.append(np.concatenate([v, np.zeros(seg_old - 7)]))
+    packed = np.stack(rows)
+    out = repack_leaf(packed, spec, old, new)
+    assert out.shape == (3, 8)  # ceil(7/8)*8 = 8
+    np.testing.assert_allclose(out[:, :7], packed[:, :7])

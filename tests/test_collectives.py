@@ -1,0 +1,168 @@
+"""Overlapped collective matmuls vs. XLA oracles on 8 virtual devices
+(subprocess — the main pytest process keeps 1 device)."""
+import textwrap
+
+from conftest import run_devices
+
+SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np, functools
+    from jax.sharding import PartitionSpec as P
+    from repro.core import collective_matmul as cm
+
+    mesh = jax.make_mesh((8,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    M, K, N = 64, 32, 48
+    A = jnp.asarray(rng.randn(M, K), jnp.float32)
+    B = jnp.asarray(rng.randn(K, N), jnp.float32)
+    want = np.asarray(A @ B)
+    for mode in ["none", "ring", "bidir", "one_shot"]:
+        f = cm.make_sharded(functools.partial(cm.ag_matmul, axis="tp", mode=mode,
+                                              out_dtype=jnp.float32),
+                            mesh, (P("tp", None), P(None, "tp")), P(None, "tp"))
+        got = np.asarray(f(A, B))
+        assert np.abs(got - want).max() < 1e-4, mode
+    # sub-chunked ring
+    f = cm.make_sharded(functools.partial(cm.ag_matmul, axis="tp", mode="ring",
+                                          chunks_per_rank=2, out_dtype=jnp.float32),
+                        mesh, (P("tp", None), P(None, "tp")), P(None, "tp"))
+    assert np.abs(np.asarray(f(A, B)) - want).max() < 1e-4
+
+    A2 = jnp.asarray(rng.randn(M, 64), jnp.float32)
+    B2 = jnp.asarray(rng.randn(64, N), jnp.float32)
+    want2 = np.asarray(A2 @ B2)
+    for mode in ["none", "ring"]:
+        f = cm.make_sharded(functools.partial(cm.matmul_rs, axis="tp", mode=mode,
+                                              out_dtype=jnp.float32),
+                            mesh, (P(None, "tp"), P("tp", None)), P("tp", None))
+        assert np.abs(np.asarray(f(A2, B2)) - want2).max() < 1e-4, mode
+
+    mesh2 = jax.make_mesh((2, 4), ("pod", "tp"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    f = cm.make_sharded(functools.partial(cm.matmul_rs_2level, inner_axis="tp",
+                                          outer_axis="pod", out_dtype=jnp.float32),
+                        mesh2, (P(None, ("pod", "tp")), P(("pod", "tp"), None)),
+                        P(("pod", "tp"), None))
+    assert np.abs(np.asarray(f(A2, B2)) - want2).max() < 1e-4
+
+    x = jnp.asarray(rng.randn(64, 8), jnp.float32)
+    for mode in ("ring", "one_shot"):
+        f = cm.make_sharded(functools.partial(cm.all_gather_chunked, axis="tp",
+                                              mode=mode),
+                            mesh, P("tp", None), P(None, None))
+        assert np.abs(np.asarray(f(x)) - np.asarray(x)).max() == 0, mode
+    f = cm.make_sharded(functools.partial(cm.reduce_scatter_chunked, axis="tp"),
+                        mesh, P(None, None), P("tp", None))
+    assert np.abs(np.asarray(f(x)) - 8 * np.asarray(x)).max() < 1e-4
+    f = cm.make_sharded(functools.partial(cm.hierarchical_reduce_scatter,
+                                          inner_axis="tp", outer_axis="pod"),
+                        mesh2, P(None, None), P("tp", None))
+    assert np.abs(np.asarray(f(x)) - 8 * np.asarray(x)).max() < 1e-4
+    print("OK")
+""")
+
+
+def test_overlapped_collectives_equal_oracles():
+    out = run_devices(SCRIPT, devices=8)
+    assert "OK" in out
+
+
+A2A_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np, functools
+    from jax.sharding import PartitionSpec as P
+    from repro.core import moe_overlap as mo
+    from repro.core import flash_decode as fdm
+    from repro.kernels import ref
+
+    W, Eg, cap, d = 8, 16, 4, 8
+    mesh = jax.make_mesh((W,), ("ep",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    xg = rng.randn(W, Eg, cap, d).astype(np.float32)
+    xflat = jnp.asarray(xg.reshape(W * Eg, cap, d))
+    e_local = Eg // W
+    want = np.zeros((W, e_local, W, cap, d), np.float32)
+    for r in range(W):
+        for el in range(e_local):
+            for src in range(W):
+                want[r, el, src] = xg[src, r * e_local + el]
+    want = want.reshape(W * e_local, W * cap, d)
+    for mode in ("xla", "one_shot"):
+        f = jax.jit(jax.shard_map(functools.partial(mo.a2a_ep, axis=None or "ep", mode=mode),
+                    mesh=mesh, in_specs=P("ep", None, None),
+                    out_specs=P("ep", None, None), check_vma=False))
+        got = np.asarray(f(xflat))
+        assert np.abs(got - want).max() == 0, ("fwd", mode)
+        g = jax.jit(jax.shard_map(
+            lambda x: mo.a2a_ep_inverse(mo.a2a_ep(x, "ep", mode=mode), "ep", mode=mode),
+            mesh=mesh, in_specs=P("ep", None, None),
+            out_specs=P("ep", None, None), check_vma=False))
+        rt = np.asarray(g(xflat))
+        assert np.abs(rt - xg.reshape(W * Eg, cap, d)).max() == 0, ("rt", mode)
+
+    B, Hq, Hkv, S, Dh = 2, 4, 2, 64, 16
+    q = jnp.asarray(rng.randn(B, Hq, Dh), jnp.float32)
+    k = jnp.asarray(rng.randn(B, Hkv, S * 8, Dh), jnp.float32)
+    v = jnp.asarray(rng.randn(B, Hkv, S * 8, Dh), jnp.float32)
+    lens = jnp.full((B,), S * 8, jnp.int32)
+    def ddecode(q, ks, vs, mode):
+        ll = jnp.full((q.shape[0],), ks.shape[2], jnp.int32)
+        return fdm.distributed_flash_decode(q, ks, vs, ll, "ep", mode=mode)
+    want_o, _ = ref.flash_decode(q, k, v, length=lens)
+    for mode in ("xla", "one_shot"):
+        f = jax.jit(jax.shard_map(functools.partial(ddecode, mode=mode), mesh=mesh,
+            in_specs=(P(None,), P(None, None, "ep", None), P(None, None, "ep", None)),
+            out_specs=P(None,), check_vma=False))
+        got = np.asarray(f(q, k, v))
+        assert np.abs(got - np.asarray(want_o)).max() < 1e-5, mode
+    print("OK")
+""")
+
+
+def test_a2a_and_distributed_decode():
+    out = run_devices(A2A_SCRIPT, devices=8)
+    assert "OK" in out
+
+
+DISTKERNEL_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np, functools
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels.ag_gemm import ag_gemm
+    from repro.kernels.ll_allgather import ll_allgather
+    from repro.kernels.rs_gemm import rs_gemm
+
+    for W in (2, 4, 8):
+        mesh = jax.make_mesh((W,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.RandomState(0)
+        M, K, N = 16 * W, 32, 8 * W
+        A = jnp.asarray(rng.randn(M, K), jnp.float32)
+        B = jnp.asarray(rng.randn(K, N), jnp.float32)
+        f = jax.jit(jax.shard_map(
+            functools.partial(ag_gemm, axis="tp", world=W, out_dtype=jnp.float32),
+            mesh=mesh, in_specs=(P("tp", None), P(None, "tp")),
+            out_specs=P(None, "tp"), check_vma=False))
+        got = np.asarray(f(A, B))
+        assert np.abs(got - np.asarray(A @ B)).max() < 1e-4, W
+
+        x = jnp.asarray(rng.randn(8 * W, 8), jnp.float32)
+        g = jax.jit(jax.shard_map(
+            functools.partial(ll_allgather, axis="tp", world=W),
+            mesh=mesh, in_specs=P("tp", None), out_specs=P(None, None),
+            check_vma=False))
+        assert np.abs(np.asarray(g(x)) - np.asarray(x)).max() == 0, W
+
+        # fused GEMM+RS (Alg. 3): K sharded, output block-scattered
+        A2 = jnp.asarray(rng.randn(8 * W, 16 * W), jnp.float32)
+        B2 = jnp.asarray(rng.randn(16 * W, 24), jnp.float32)
+        h = jax.jit(jax.shard_map(
+            functools.partial(rs_gemm, axis="tp", world=W, out_dtype=jnp.float32),
+            mesh=mesh, in_specs=(P(None, "tp"), P("tp", None)),
+            out_specs=P("tp", None), check_vma=False))
+        assert np.abs(np.asarray(h(A2, B2)) - np.asarray(A2 @ B2)).max() < 1e-4, W
+    print("OK")
+""")
+
+
+def test_distributed_pallas_kernels():
+    """ag_gemm (Fig. 4 fused kernel, remote DMA + signals) and the
+    low-latency AllGather kernel (Alg. 4) in interpret mode."""
+    out = run_devices(DISTKERNEL_SCRIPT, devices=8)
+    assert "OK" in out

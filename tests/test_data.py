@@ -1,0 +1,50 @@
+"""Synthetic data pipeline: determinism + restart reproducibility."""
+import numpy as np
+
+from repro.data.pipeline import SyntheticTokens
+
+
+def test_deterministic_across_instances():
+    a = SyntheticTokens(vocab_size=100, seq_len=16, global_batch=4, seed=3)
+    b = SyntheticTokens(vocab_size=100, seq_len=16, global_batch=4, seed=3)
+    ta, la = a.global_batch_np(5)
+    tb, lb = b.global_batch_np(5)
+    np.testing.assert_array_equal(ta, tb)
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_labels_are_shifted_tokens():
+    d = SyntheticTokens(vocab_size=50, seq_len=8, global_batch=2, seed=0)
+    t, l = d.global_batch_np(0)
+    # labels are next-token targets of the same underlying stream
+    assert t.shape == l.shape == (2, 8)
+    np.testing.assert_array_equal(t[:, 1:], l[:, :-1])
+
+
+def test_steps_differ():
+    d = SyntheticTokens(vocab_size=1000, seq_len=32, global_batch=2, seed=0)
+    t0, _ = d.global_batch_np(0)
+    t1, _ = d.global_batch_np(1)
+    assert (t0 != t1).any()
+
+
+def test_rows_differ():
+    d = SyntheticTokens(vocab_size=1000, seq_len=32, global_batch=4, seed=0)
+    t, _ = d.global_batch_np(0)
+    assert (t[0] != t[1]).any()
+
+
+def test_tokens_in_vocab():
+    d = SyntheticTokens(vocab_size=17, seq_len=64, global_batch=3, seed=9)
+    t, l = d.global_batch_np(2)
+    for arr in (t, l):
+        assert arr.min() >= 0 and arr.max() < 17
+
+
+def test_prefetch_iterator():
+    d = SyntheticTokens(vocab_size=100, seq_len=8, global_batch=2, seed=0)
+    it = d.iterate(start_step=3)
+    step, (t, l) = next(it)
+    assert step == 3
+    t_direct, _ = d.global_batch_np(3)
+    np.testing.assert_array_equal(np.asarray(t), t_direct)

@@ -1,0 +1,166 @@
+"""Pallas kernel vs. pure-jnp oracle allclose sweeps (shapes x dtypes).
+
+Single-device: kernels run in interpret mode (pl.pallas_call on CPU)."""
+import sys, os
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import proptest as pt
+from repro.kernels import ops, ref
+
+R = np.random.RandomState(42)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(R.randn(*shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------- matmul
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (128, 256, 64), (96, 200, 130),
+                                   (256, 64, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, k, n, dtype):
+    a, b = _arr((m, k), dtype), _arr((k, n), dtype)
+    got = ops.matmul(a, b, force="pallas", bm=64, bk=64, bn=64)
+    want = ref.matmul(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("rank,world", [(0, 4), (2, 4), (3, 4), (1, 2)])
+def test_matmul_swizzled_grid(rank, world):
+    a, b = _arr((256, 64)), _arr((64, 64))
+    got = ops.matmul(a, b, force="pallas", bm=32, bk=64, bn=64,
+                     rank=rank, world=world)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul(a, b)),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------- grouped matmul
+@pytest.mark.parametrize("e,cap,k,n", [(4, 64, 96, 80), (8, 32, 64, 64),
+                                       (2, 128, 48, 96)])
+def test_grouped_matmul_sweep(e, cap, k, n):
+    x, w = _arr((e, cap, k)), _arr((e, k, n))
+    got = ops.grouped_matmul(x, w, force="pallas", bm=32, bk=32, bn=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.grouped_matmul(x, w)),
+                               atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------- flash attention
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(hq, hkv, causal):
+    q = _arr((2, hq, 128, 32))
+    k = _arr((2, hkv, 128, 32))
+    v = _arr((2, hkv, 128, 32))
+    got = ops.flash_attention(q, k, v, causal=causal, force="pallas", bq=32, bkv=32)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = _arr((1, 2, 64, 32), jnp.bfloat16)
+    k = _arr((1, 2, 64, 32), jnp.bfloat16)
+    v = _arr((1, 2, 64, 32), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, force="pallas", bq=32, bkv=32)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_flash_attention_chunked_matches_plain():
+    q, k, v = _arr((2, 4, 128, 32)), _arr((2, 2, 128, 32)), _arr((2, 2, 128, 32))
+    for causal in (True, False):
+        a = ref.flash_attention(q, k, v, causal=causal)
+        b = ref.flash_attention_chunked(q, k, v, causal=causal, kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------ flash decode
+@pt.given(examples=8, s=pt.sampled_from([64, 128, 256]),
+          hq=pt.sampled_from([2, 4]), hkv=pt.sampled_from([1, 2]))
+def test_flash_decode_sweep(s, hq, hkv):
+    b, d = 2, 32
+    q = _arr((b, hq, d))
+    k = _arr((b, hkv, s, d))
+    v = _arr((b, hkv, s, d))
+    lens = jnp.asarray([s, s // 2], jnp.int32)
+    og, lg = ops.flash_decode(q, k, v, lens, force="pallas", bkv=32)
+    ow, lw = ref.flash_decode(q, k, v, length=lens)
+    np.testing.assert_allclose(np.asarray(og), np.asarray(ow), atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lw), atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------- ssd scan
+@pt.given(examples=6, l=pt.sampled_from([32, 64]), h=pt.sampled_from([2, 4]),
+          g=pt.sampled_from([1, 2]), chunk=pt.sampled_from([8, 16, 32]))
+def test_ssd_scan_sweep(l, h, g, chunk):
+    if h % g != 0:
+        g = 1
+    b, p, s = 2, 16, 16
+    x = _arr((b, l, h, p), scale=0.5)
+    dt = jnp.asarray(R.rand(b, l, h) * 0.5 + 0.01, jnp.float32)
+    a = jnp.asarray(-np.abs(R.rand(h)) - 0.1, jnp.float32)
+    bm = _arr((b, l, g, s), scale=0.3)
+    cm = _arr((b, l, g, s), scale=0.3)
+    yg, sg = ops.ssd_scan(x, dt, a, bm, cm, chunk=chunk, force="pallas")
+    yw, sw = ref.ssd_scan(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(yw), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sg), np.asarray(sw), atol=1e-4, rtol=1e-4)
+
+
+@pt.given(examples=6, l=pt.sampled_from([32, 64]), chunk=pt.sampled_from([8, 16]))
+def test_ssd_chunked_matches_sequential(l, chunk):
+    """The chunked closed form (production XLA path) == per-step scan."""
+    b, h, p, g, s = 2, 4, 16, 2, 16
+    x = _arr((b, l, h, p), scale=0.5)
+    dt = jnp.asarray(R.rand(b, l, h) * 0.5 + 0.01, jnp.float32)
+    a = jnp.asarray(-np.abs(R.rand(h)) - 0.1, jnp.float32)
+    bm = _arr((b, l, g, s), scale=0.3)
+    cm = _arr((b, l, g, s), scale=0.3)
+    y1, s1 = ref.ssd_scan(x, dt, a, bm, cm)
+    y2, s2 = ref.ssd_scan_chunked(x, dt, a, bm, cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_scan_state_continuity():
+    """Scanning two halves with carried state == scanning the whole."""
+    b, l, h, p, g, s = 1, 64, 2, 16, 1, 16
+    x = _arr((b, l, h, p), scale=0.5)
+    dt = jnp.asarray(R.rand(b, l, h) * 0.3 + 0.01, jnp.float32)
+    a = jnp.asarray(-np.abs(R.rand(h)) - 0.1, jnp.float32)
+    bm = _arr((b, l, g, s), scale=0.3)
+    cm = _arr((b, l, g, s), scale=0.3)
+    y_full, s_full = ref.ssd_scan(x, dt, a, bm, cm)
+    y1, s1 = ref.ssd_scan(x[:, :32], dt[:, :32], a, bm[:, :32], cm[:, :32])
+    y2, s2 = ref.ssd_scan(x[:, 32:], dt[:, 32:], a, bm[:, 32:], cm[:, 32:],
+                          init_state=s1)
+    np.testing.assert_allclose(np.asarray(y_full[:, 32:]), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2), atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------- decode combine property
+@pt.given(examples=10, w=pt.sampled_from([2, 4, 8, 16]))
+def test_combine_flash_decode_partition_invariance(w):
+    """Splitting KV into W shards and combining == direct attention."""
+    b, h, s, d = 2, 2, 64, 16
+    q = _arr((b, h, d))
+    k = _arr((b, h, s, d))
+    v = _arr((b, h, s, d))
+    full_o, _ = ref.flash_decode(q, k, v)
+    assert s % w == 0
+    chunk = s // w
+    os_, ls_ = [], []
+    for i in range(w):
+        o, l = ref.flash_decode(q, k[:, :, i * chunk:(i + 1) * chunk],
+                                v[:, :, i * chunk:(i + 1) * chunk])
+        os_.append(o)
+        ls_.append(l)
+    got = ref.combine_flash_decode(jnp.stack(os_), jnp.stack(ls_))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full_o), atol=1e-5, rtol=1e-4)

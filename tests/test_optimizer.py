@@ -1,0 +1,124 @@
+"""Optimizer unit tests (reference AdamW equivalence, momentum mode,
+moment dtypes, LR schedule)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.train import optimizer as opt
+
+
+def _ref_adamw(p, g, m, v, step, tcfg, clip=1.0):
+    b1, b2 = tcfg.beta1, tcfg.beta2
+    lr = float(opt.lr_schedule(tcfg, jnp.int32(step)))
+    g = g * clip
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** step)
+    vh = v / (1 - b2 ** step)
+    p = p - lr * (mh / (np.sqrt(vh) + tcfg.eps) + tcfg.weight_decay * p)
+    return p, m, v
+
+
+def test_adamw_matches_reference():
+    tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=1, total_steps=100,
+                       grad_clip=1e9)
+    rng = np.random.RandomState(0)
+    p = {"w": jnp.asarray(rng.randn(4, 8).reshape(4, 8), jnp.float32)}
+    g = {"w": jnp.asarray(rng.randn(4, 8), jnp.float32)}
+    st = opt.init_opt_state(p)
+    new_p, new_st, lr = opt.adamw_update(p, g, st, tcfg, grad_norm=jnp.float32(1.0))
+    want_p, want_m, want_v = _ref_adamw(
+        np.asarray(p["w"]), np.asarray(g["w"]),
+        np.zeros((4, 8), np.float32), np.zeros((4, 8), np.float32), 1, tcfg)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want_p, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_st.mu["w"]), want_m, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_st.nu["w"]), want_v, atol=1e-6)
+
+
+def test_stacked_scan_update_matches_flat():
+    """The per-layer scanned update must equal the direct elementwise one."""
+    tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=1, total_steps=100)
+    rng = np.random.RandomState(1)
+    stacked = {"w": jnp.asarray(rng.randn(5, 16), jnp.float32)}  # (L, packed)
+    flat = {"w": stacked["w"][2:3]}  # one layer, still 2D but L=1 -> direct
+    g_st = {"w": jnp.asarray(rng.randn(5, 16), jnp.float32)}
+    st = opt.init_opt_state(stacked)
+    new_st_p, _, _ = opt.adamw_update(stacked, g_st, st, tcfg,
+                                      grad_norm=jnp.float32(1.0))
+    st1 = opt.init_opt_state(flat)
+    new_fl_p, _, _ = opt.adamw_update(flat, {"w": g_st["w"][2:3]}, st1, tcfg,
+                                      grad_norm=jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(new_st_p["w"][2]),
+                               np.asarray(new_fl_p["w"][0]), atol=1e-6)
+
+
+def test_momentum_mode():
+    tcfg = TrainConfig(optimizer="momentum", learning_rate=1e-2, warmup_steps=1,
+                       total_steps=100, grad_clip=1e9, weight_decay=0.0, beta1=0.9)
+    p = {"w": jnp.ones((3, 4), jnp.float32)}
+    g = {"w": jnp.full((3, 4), 0.5, jnp.float32)}
+    st = opt.init_opt_state(p, kind="momentum")
+    assert st.nu["w"].shape == (1,)  # placeholder, no second moment
+    new_p, new_st, lr = opt.adamw_update(p, g, st, tcfg, grad_norm=jnp.float32(1.0))
+    # m = 0.9*0 + g = 0.5 ; p -= lr * m
+    np.testing.assert_allclose(np.asarray(new_st.mu["w"]), 0.5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), 1.0 - float(lr) * 0.5,
+                               atol=1e-6)
+
+
+def test_grad_clipping():
+    tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=1, total_steps=100,
+                       grad_clip=1.0, weight_decay=0.0)
+    p = {"w": jnp.zeros((2,), jnp.float32)}
+    g = {"w": jnp.asarray([3.0, 4.0], jnp.float32)}  # norm 5 -> scaled by 1/5
+    st = opt.init_opt_state(p)
+    new_p, new_st, _ = opt.adamw_update(p, g, st, tcfg, grad_norm=jnp.float32(5.0))
+    np.testing.assert_allclose(np.asarray(new_st.mu["w"]),
+                               0.1 * np.asarray([0.6, 0.8]), atol=1e-5)
+
+
+def test_bf16_moments():
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = opt.init_opt_state(p, jnp.bfloat16)
+    assert st.mu["w"].dtype == jnp.bfloat16
+    tcfg = TrainConfig(warmup_steps=1, total_steps=10)
+    new_p, new_st, _ = opt.adamw_update(p, {"w": jnp.ones((4,), jnp.bfloat16)},
+                                        st, tcfg, grad_norm=jnp.float32(1.0))
+    assert new_st.mu["w"].dtype == jnp.bfloat16
+    assert new_p["w"].dtype == jnp.bfloat16
+
+
+def test_skip_gate_freezes_state():
+    """ok=False must be a full no-op (params, moments, AND step count) —
+    the donation-safe NaN/fault guard."""
+    tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=1, total_steps=100)
+    p = {"w": jnp.ones((3, 4), jnp.float32)}
+    g = {"w": jnp.full((3, 4), jnp.nan, jnp.float32)}
+    st = opt.init_opt_state(p)
+    new_p, new_st, _ = opt.adamw_update(p, g, st, tcfg,
+                                        grad_norm=jnp.float32(jnp.nan),
+                                        ok=jnp.bool_(False))
+    np.testing.assert_array_equal(np.asarray(new_p["w"]), np.asarray(p["w"]))
+    np.testing.assert_array_equal(np.asarray(new_st.mu["w"]),
+                                  np.asarray(st.mu["w"]))
+    np.testing.assert_array_equal(np.asarray(new_st.nu["w"]),
+                                  np.asarray(st.nu["w"]))
+    assert int(new_st.step) == 0
+    # and ok=True behaves exactly like the default
+    g2 = {"w": jnp.full((3, 4), 0.5, jnp.float32)}
+    a_p, a_st, _ = opt.adamw_update(p, g2, st, tcfg, grad_norm=jnp.float32(1.0),
+                                    ok=jnp.bool_(True))
+    b_p, b_st, _ = opt.adamw_update(p, g2, st, tcfg, grad_norm=jnp.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(a_p["w"]), np.asarray(b_p["w"]))
+    assert int(a_st.step) == int(b_st.step) == 1
+
+
+def test_lr_schedule_warmup_and_decay():
+    tcfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=110)
+    lrs = [float(opt.lr_schedule(tcfg, jnp.int32(s))) for s in (0, 5, 10, 60, 110)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 0.1) < 1e-6  # floor at 10%

@@ -1,0 +1,48 @@
+"""GPipe pipeline-parallel utility: pipelined == sequential, grads flow."""
+import textwrap
+
+from conftest import run_devices
+
+SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.pipeline import gpipe, gpipe_last_stage_value
+
+    S, M, MB, D = 4, 6, 2, 8
+    mesh = jax.make_mesh((S,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    ws = jnp.asarray(rng.randn(S, D, D) / np.sqrt(D), jnp.float32)
+    xs = jnp.asarray(rng.randn(M, MB, D), jnp.float32)
+
+    def stage_fn(p, x):
+        return jnp.tanh(x @ p["w"][0])
+
+    def run(params, micro):
+        outs = gpipe(stage_fn, params, micro, axis="stage")
+        return gpipe_last_stage_value(outs, "stage")
+
+    f = jax.jit(jax.shard_map(run, mesh=mesh,
+        in_specs=({"w": P("stage", None, None)}, P(None, None, None)),
+        out_specs=P(None, None, None), check_vma=False))
+    got = np.asarray(f({"w": ws}, xs))
+
+    want = np.asarray(xs)
+    for s in range(S):
+        want = np.tanh(want @ np.asarray(ws[s]))
+    assert np.abs(got - want).max() < 1e-5, np.abs(got - want).max()
+
+    # gradients flow through the pipeline (ppermute transposes)
+    def loss(params, micro):
+        return jnp.sum(jnp.square(run(params, micro)))
+    g = jax.jit(jax.shard_map(jax.grad(loss), mesh=mesh,
+        in_specs=({"w": P("stage", None, None)}, P(None, None, None)),
+        out_specs={"w": P("stage", None, None)}, check_vma=False))({"w": ws}, xs)
+    gn = np.asarray(g["w"])
+    assert np.isfinite(gn).all() and np.abs(gn).max() > 0
+    print("OK")
+""")
+
+
+def test_gpipe_matches_sequential_and_differentiates():
+    out = run_devices(SCRIPT, devices=4)
+    assert "OK" in out

@@ -1,0 +1,47 @@
+"""Ring attention (context parallelism) vs. full-attention oracle."""
+import textwrap
+
+from conftest import run_devices
+
+SCRIPT = textwrap.dedent("""
+    import functools
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.ring_attention import ring_attention
+    from repro.kernels import ref
+
+    W = 8
+    mesh = jax.make_mesh((W,), ("cp",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    B, H, HKV, S, D = 2, 4, 2, 64 * W, 16
+    q = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, HKV, S, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, HKV, S, D), jnp.float32)
+
+    for causal in (True, False):
+        f = jax.jit(jax.shard_map(
+            functools.partial(ring_attention, axis="cp", causal=causal),
+            mesh=mesh,
+            in_specs=(P(None, None, "cp", None),) * 3,
+            out_specs=P(None, None, "cp", None), check_vma=False))
+        got = np.asarray(f(q, k, v))
+        want = np.asarray(ref.flash_attention(q, k, v, causal=causal))
+        err = np.abs(got - want).max()
+        assert err < 2e-5, (causal, err)
+
+    # gradients flow through the ring (long-context TRAINING enabler)
+    def loss(q, k, v):
+        return jnp.sum(jnp.square(ring_attention(q, k, v, "cp", causal=True)))
+    g = jax.jit(jax.shard_map(jax.grad(loss, argnums=(0, 1, 2)), mesh=mesh,
+        in_specs=(P(None, None, "cp", None),) * 3,
+        out_specs=(P(None, None, "cp", None),) * 3, check_vma=False))(q, k, v)
+    for gi in g:
+        arr = np.asarray(gi)
+        assert np.isfinite(arr).all() and np.abs(arr).max() > 0
+    print("OK")
+""")
+
+
+def test_ring_attention_matches_full():
+    out = run_devices(SCRIPT, devices=8)
+    assert "OK" in out

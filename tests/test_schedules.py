@@ -1,0 +1,73 @@
+"""Property tests for the swizzle schedules (paper Fig. 7/8/10)."""
+import sys, os
+sys.path.insert(0, os.path.dirname(__file__))
+
+import proptest as pt
+from repro.core import schedules as S
+
+
+@pt.given(examples=30, world=pt.integers(1, 64))
+def test_ring_ag_valid(world):
+    assert S.validate_ring_ag(world)
+
+
+@pt.given(examples=30, world=pt.integers(1, 64))
+def test_ring_rs_valid(world):
+    assert S.validate_ring_rs(world)
+
+
+@pt.given(examples=30, world=pt.integers(2, 32), rank=pt.integers(0, 31))
+def test_one_shot_order_is_permutation(world, rank):
+    rank = rank % world
+    assert S.is_permutation(S.one_shot_ag_order(world, rank), world)
+    # local chunk first — zero-latency start (Alg. 4 property)
+    assert S.one_shot_ag_order(world, rank)[0] == rank
+
+
+@pt.given(examples=30, world=pt.integers(3, 32), rank=pt.integers(0, 31))
+def test_bidir_covers_all_half_chunks(world, rank):
+    rank = rank % world
+    pairs = S.bidir_ag_order(world, rank)
+    fwd = [p[0] for p in pairs]
+    bwd = [p[1] for p in pairs]
+    # every chunk's top half and bottom half each visited exactly once
+    assert S.is_permutation(fwd, world)
+    assert S.is_permutation(bwd, world)
+    assert fwd[0] == rank and bwd[0] == rank
+
+
+@pt.given(examples=20, no=pt.integers(2, 4), ni=pt.integers(2, 16),
+          orank=pt.integers(0, 3), irank=pt.integers(0, 15))
+def test_hierarchical_rs_regions(no, ni, orank, irank):
+    orank, irank = orank % no, irank % ni
+    steps = S.hierarchical_rs_schedule(no, ni, orank, irank)
+    regions = [s.region for s in steps]
+    assert S.is_permutation(regions, no)
+    # Fig. 10: own pod LAST (its inter-pod transfer does not exist)
+    assert regions[-1] == orank
+    for s in steps:
+        assert S.is_permutation(list(s.inner_order), ni)
+
+
+@pt.given(examples=20, no=pt.integers(2, 4), ni=pt.integers(2, 16),
+          orank=pt.integers(0, 3), irank=pt.integers(0, 15))
+def test_hierarchical_ag_regions(no, ni, orank, irank):
+    orank, irank = orank % no, irank % ni
+    steps = S.hierarchical_ag_schedule(no, ni, orank, irank)
+    regions = [s.region for s in steps]
+    assert S.is_permutation(regions, no)
+    # own pod FIRST — compute starts on local data while peer pods stream
+    assert regions[0] == orank
+
+
+@pt.given(examples=15, m=pt.sampled_from([4, 8, 16]), n=pt.integers(1, 6),
+          world=pt.sampled_from([2, 4]), rank=pt.integers(0, 3))
+def test_swizzled_grid_order(m, n, world, rank):
+    rank = rank % world
+    order = S.swizzled_grid_order(m, n, rank, world)
+    assert len(order) == m * n
+    assert len(set(order)) == m * n  # visits every tile once
+    # first tile belongs to this rank's own chunk
+    first_m = order[0][0]
+    per = m // world
+    assert rank * per <= first_m < (rank + 1) * per

@@ -1,0 +1,59 @@
+"""Autotuner tests: analytic model sanity + the paper's whole-step
+empirical protocol (§3.8)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tuner
+from repro import hw
+
+
+def test_analytic_ag_prefers_overlap_when_compute_bound():
+    # huge n_loc -> dot dominates -> any overlapped mode beats "none"
+    choice = tuner.analytic_ag_matmul(4096, 8192, 8192, world=16)
+    assert choice.mode != "none"
+    assert choice.t_total < choice.t_comm + choice.t_compute
+
+
+def test_analytic_ag_small_message_prefers_one_shot():
+    # tiny per-step compute, tiny message: latency regime
+    choice = tuner.analytic_ag_matmul(8, 256, 64, world=16)
+    assert choice.mode in ("one_shot", "bidir")
+
+
+def test_analytic_rs_overlap_wins_when_balanced():
+    c = tuner.analytic_matmul_rs(4096, 2048, 8192, world=16)
+    assert c.mode == "ring"
+    assert c.t_total <= c.t_compute + c.t_comm + 1e-9
+
+
+def test_analytic_respects_link_bandwidth():
+    slow = hw.HardwareSpec("slow", 197e12, 819e9, 1e9, 1, 16 << 30, 128 << 20)
+    fast = hw.HardwareSpec("fast", 197e12, 819e9, 400e9, 4, 16 << 30, 128 << 20)
+    c_slow = tuner.analytic_ag_matmul(1024, 4096, 4096, 16, spec=slow)
+    c_fast = tuner.analytic_ag_matmul(1024, 4096, 4096, 16, spec=fast)
+    assert c_slow.t_total > c_fast.t_total
+
+
+def test_empirical_tuner_whole_step_protocol():
+    """The tuner times the whole wrapped step, resets between configs, and
+    picks the global argmin."""
+    calls = {"reset": 0}
+
+    def make_step(cfg):
+        import time
+
+        def step():
+            # coarse 60ms granularity: robust to single-core scheduling noise
+            time.sleep(0.06 * cfg)
+            return jnp.zeros(())
+
+        return step
+
+    def reset():
+        calls["reset"] += 1
+
+    res = tuner.tune(make_step, [3, 1, 2], reset=reset, warmup=1, iters=2)
+    assert res.config == 1
+    # reset after every execution (warmup + iters per config)
+    assert calls["reset"] == 3 * (1 + 2)
+    assert set(res.all_timings) == {"1", "2", "3"}
