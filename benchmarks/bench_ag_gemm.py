@@ -13,7 +13,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collective_matmul as cm
-from repro.core import tuner
+from repro.core import overlap, tuner
 
 from .common import row, time_fn
 
@@ -27,7 +27,7 @@ def rows():
         a = jnp.asarray(rng.randn(m, k), jnp.float32)
         b = jnp.asarray(rng.randn(k, n), jnp.float32)
         base_us = None
-        for mode in ("none", "ring", "bidir", "one_shot"):
+        for mode in overlap.transports_for("ag_matmul", include_baseline=True):
             f = cm.make_sharded(
                 functools.partial(cm.ag_matmul, axis="tp", mode=mode,
                                   out_dtype=jnp.float32),

@@ -1,4 +1,5 @@
-"""Paper Fig. 12/14 — GEMM-ReduceScatter: overlapped ring vs. baseline."""
+"""Paper Fig. 12/14 — GEMM-ReduceScatter: overlapped transports (engine
+registry) vs. the monolithic baseline."""
 import functools
 
 import jax
@@ -7,7 +8,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collective_matmul as cm
-from repro.core import tuner
+from repro.core import overlap, tuner
 
 from .common import row, time_fn
 
@@ -21,7 +22,7 @@ def rows():
         a = jnp.asarray(rng.randn(m, k), jnp.float32)
         b = jnp.asarray(rng.randn(k, n), jnp.float32)
         base_us = None
-        for mode in ("none", "ring"):
+        for mode in overlap.transports_for("matmul_rs", include_baseline=True):
             f = cm.make_sharded(
                 functools.partial(cm.matmul_rs, axis="tp", mode=mode,
                                   out_dtype=jnp.float32),

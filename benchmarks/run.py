@@ -1,8 +1,10 @@
 """Benchmark harness — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Multi-device benches need >1
-virtual device, so this driver re-execs itself in a subprocess with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the flag is
+Prints ``name,us_per_call,derived`` CSV and writes the machine-readable
+``BENCH_overlap.json`` (one ``{op, mode, world, us_per_call}`` record per
+row) so the perf trajectory is tracked across PRs. Multi-device benches
+need >1 virtual device, so this driver re-execs itself in a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the flag is
 scoped to that subprocess, never set globally).
 
   Fig. 11/13  bench_ag_gemm        AG+GEMM overlap vs monolithic
@@ -14,12 +16,46 @@ scoped to that subprocess, never set globally).
   Fig. 19     bench_ll_allgather   low-latency AllGather
   (kernels)   bench_kernels        single-device kernel throughput
 """
+import json
 import os
 import subprocess
 import sys
 
+def _mode_vocabulary():
+    """Transport + baseline names, from the engine registry (the single
+    source of truth): a transport added there parses here automatically."""
+    from repro.core import overlap
+
+    vocab = set(overlap.TRANSPORTS)
+    for spec in overlap.registry().values():
+        vocab.add(spec.baseline)
+    return vocab
+
+
+def parse_row(tag: str, line: str, world: int, modes):
+    """'op/shape/mode,us,derived' -> {op, mode, world, us_per_call} or None."""
+    parts = line.split(",")
+    if len(parts) < 2:
+        return None
+    name = parts[0]
+    try:
+        us = float(parts[1])
+    except ValueError:
+        return None
+    segs = name.split("/")
+    mode = segs[-1] if segs[-1] in modes else ""
+    return {
+        "op": segs[0],
+        "mode": mode,
+        "world": world,
+        "us_per_call": us,
+        "name": f"{tag}/{name}",
+    }
+
 
 def _inner() -> None:
+    import jax
+
     from . import (
         bench_a2a,
         bench_ag_gemm,
@@ -31,24 +67,34 @@ def _inner() -> None:
         bench_moe_rs,
     )
 
+    world = min(8, jax.device_count())  # the mesh size multi-device benches use
+    modes = _mode_vocabulary()
     print("name,us_per_call,derived")
     modules = [
-        ("fig11_13", bench_ag_gemm),
-        ("fig12_14", bench_gemm_rs),
-        ("table4", bench_ag_moe),
-        ("table5", bench_moe_rs),
-        ("fig15", bench_flash_decode),
-        ("fig16", bench_a2a),
-        ("fig19", bench_ll_allgather),
-        ("kernels", bench_kernels),
+        ("fig11_13", bench_ag_gemm, world),
+        ("fig12_14", bench_gemm_rs, world),
+        ("table4", bench_ag_moe, world),
+        ("table5", bench_moe_rs, world),
+        ("fig15", bench_flash_decode, world),
+        ("fig16", bench_a2a, world),
+        ("fig19", bench_ll_allgather, world),
+        ("kernels", bench_kernels, 1),  # single-device kernel throughput
     ]
-    for tag, mod in modules:
+    records = []
+    for tag, mod, mod_world in modules:
         try:
             for line in mod.rows():
                 print(f"{tag}/{line}")
+                rec = parse_row(tag, line, mod_world, modes)
+                if rec is not None:
+                    records.append(rec)
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"{tag}/ERROR,,{type(e).__name__}: {e}")
         sys.stdout.flush()
+    out_path = os.environ.get("_REPRO_BENCH_JSON", "BENCH_overlap.json")
+    with open(out_path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"# wrote {len(records)} records to {out_path}", file=sys.stderr)
 
 
 def main() -> None:

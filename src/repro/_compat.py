@@ -1,0 +1,120 @@
+"""JAX version compatibility layer.
+
+The repro targets the current jax API surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``,
+``pltpu.CompilerParams`` / ``pltpu.InterpretParams``); the pinned
+container jax may predate some of it. This module backfills the missing
+names with semantically equivalent aliases so the same source runs on
+both. Installed once from ``repro.__init__`` (idempotent); tests and
+examples get it transitively by importing any ``repro`` module before
+touching the new names.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+# True when this jax ships the TPU Pallas interpreter that can emulate
+# cross-device remote DMAs + semaphore signals (native InterpretParams).
+# When False, the distributed Pallas kernels fall back to the graph-level
+# engine pipelines on CPU (same schedule, lax.ppermute transport).
+PALLAS_REMOTE_INTERPRET = False
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        sig = inspect.signature(jax.shard_map)
+        if "check_vma" in sig.parameters:
+            return
+        inner = jax.shard_map
+        accepts = set(sig.parameters)
+    else:
+        from jax.experimental.shard_map import shard_map as inner
+
+        accepts = set(inspect.signature(inner).parameters)
+
+    @functools.wraps(inner)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  check_rep=None, **kwargs):
+        if check_rep is None:
+            check_rep = True if check_vma is None else bool(check_vma)
+        if "check_rep" in accepts:
+            kwargs["check_rep"] = check_rep
+        elif "check_vma" in accepts:
+            kwargs["check_vma"] = check_rep
+        return inner(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return
+    inner = jax.make_mesh
+
+    @functools.wraps(inner)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types  # pre-AxisType jax: every mesh axis is Auto
+        return inner(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_axis_size() -> None:
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        # psum of a static 1 constant-folds to the (static) axis size.
+        if isinstance(axis_name, (tuple, list)):
+            n = 1
+            for a in axis_name:
+                n *= int(lax.psum(1, a))
+            return n
+        return int(lax.psum(1, axis_name))
+
+    lax.axis_size = axis_size
+
+
+def _install_pallas_tpu() -> None:
+    global PALLAS_REMOTE_INTERPRET
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception:  # pallas not available at all: nothing to backfill
+        return
+    PALLAS_REMOTE_INTERPRET = hasattr(pltpu, "InterpretParams")
+    if not hasattr(pltpu, "CompilerParams") and hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+    if not hasattr(pltpu, "InterpretParams"):
+        # Older jax has no TPU-interpret parameter object; plain
+        # interpret=True is the closest equivalent for pallas_call.
+        pltpu.InterpretParams = lambda **kwargs: True
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_axis_type()
+    _install_make_mesh()
+    _install_axis_size()
+    _install_pallas_tpu()
+
+
+install()

@@ -195,8 +195,18 @@ class ParallelConfig:
     #   none     — plain XLA all_gather/psum_scatter (the NCCL-baseline analogue)
     #   ring     — unidirectional ring collective-matmul (paper Fig. 7 swizzle)
     #   bidir    — bidirectional ring (2 links, halves the steps)
-    #   one_shot — low-latency one-shot AG (paper Alg. 4 analogue, decode)
+    #   one_shot — low-latency one-shot transport (paper Alg. 4 analogue, decode)
+    # ``overlap_mode`` is the session-wide default; ``overlap_modes`` holds
+    # per-op overrides keyed by the engine registry's op names (ag_matmul,
+    # matmul_rs, ag_moe, moe_rs, a2a_ep, ring_attention, flash_decode, ...).
+    # ``mode_for`` resolves an op's effective mode: override if present,
+    # else the global default clamped to what the op supports (e.g. a
+    # global "ring" resolves to "one_shot" for a2a_ep, which has no ring
+    # transport). Latency-bound small-message ops default to one_shot,
+    # matching the paper's low-latency kernels for EP dispatch and the
+    # decode combine.
     overlap_mode: str = "ring"
+    overlap_modes: tuple = (("a2a_ep", "one_shot"), ("flash_decode", "one_shot"))
     ag_chunks: int = 0  # 0 = one chunk per TP rank (paper default)
     rs_chunks: int = 0
 
@@ -210,6 +220,31 @@ class ParallelConfig:
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
     moment_dtype: str = "float32"  # bf16 for the 1T config
+
+    def __post_init__(self):
+        # accept a dict for ergonomics; store a hashable sorted tuple
+        if isinstance(self.overlap_modes, dict):
+            object.__setattr__(
+                self, "overlap_modes", tuple(sorted(self.overlap_modes.items()))
+            )
+
+    def mode_for(self, op: str) -> str:
+        """Effective overlap mode for registry op ``op`` (see overlap_modes)."""
+        for name, mode in self.overlap_modes:
+            if name == op:
+                requested = mode
+                break
+        else:
+            requested = self.overlap_mode
+        from ..core import overlap  # lazy: configs must stay import-light
+
+        return overlap.resolve_mode(op, requested)
+
+    def with_modes(self, **per_op: str) -> "ParallelConfig":
+        """A copy with per-op overlap overrides merged in."""
+        merged = dict(self.overlap_modes)
+        merged.update(per_op)
+        return dataclasses.replace(self, overlap_modes=tuple(sorted(merged.items())))
 
     @property
     def world(self) -> int:

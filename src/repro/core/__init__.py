@@ -1,9 +1,31 @@
 """repro.core — the paper's contribution: overlapping distributed kernels.
 
+The centerpiece is the **ring-pipeline engine** (``overlap``): one
+implementation of "compute a chunk while the next chunk rides the
+interconnect", parameterized by schedule x transport x per-chunk compute
+x combine. Every overlapped collective in the repo is a thin declaration
+over it, and every op registers an :class:`overlap.OverlapSpec` in the
+**mode registry** — the single source of truth for which transports
+(ring / bidir / one_shot / two_level) an op supports, its monolithic
+baseline, and its differentiation rule (one shared ``custom_vjp`` for
+the ops whose backward is their dual overlapped op).
+
+The registry is consumed by three layers:
+  - ``configs.base.ParallelConfig.mode_for(op)`` resolves per-op overlap
+    modes from config (global default + per-op overrides);
+  - ``tuner`` enumerates registry transports as its analytic candidates
+    and emits per-op mode maps (``recommend_overlap_modes``);
+  - ``tests/test_overlap_engine.py`` property-tests every registered
+    (op, transport) pair against its baseline.
+
+Modules:
+- overlap: the engine — AG/RS/bidir/2-level/a2a pipelines, registry,
+  shared custom_vjp
 - primitives: OpenSHMEM-style signal/symmetric-memory API on TPU
-- schedules: tile-swizzle orders (Fig. 7/8/10)
-- collective_matmul: overlapped AG+GEMM / GEMM+RS (1- and 2-level)
+- schedules: tile-swizzle orders + validity checks (Fig. 7/8/10)
+- collective_matmul: AG+GEMM / GEMM+RS declarations (1- and 2-level)
 - moe_overlap: AG+MoE, MoE+RS, EP AllToAll dispatch/combine
+- ring_attention: context parallelism as an engine AG pipeline
 - flash_decode: distributed flash decoding with low-latency combine
 - tuner: analytic + distributed-empirical autotuning (§3.8)
 """
@@ -11,6 +33,7 @@ from . import (
     collective_matmul,
     flash_decode,
     moe_overlap,
+    overlap,
     primitives,
     ring_attention,
     schedules,
@@ -21,6 +44,7 @@ __all__ = [
     "collective_matmul",
     "flash_decode",
     "moe_overlap",
+    "overlap",
     "primitives",
     "ring_attention",
     "schedules",

@@ -1,30 +1,39 @@
-"""Overlapped collective matmuls — the paper's flagship kernels at graph level.
+"""Overlapped collective matmuls — thin declarations over the ring-pipeline
+engine (``core.overlap``).
 
 These functions run INSIDE ``shard_map`` (they take local shards and use
-``lax`` collectives). They decompose XLA's monolithic
-``all_gather -> dot`` / ``dot -> psum_scatter`` into per-chunk one-sided
-transfers (``lax.ppermute`` = async collective-permute on TPU) interleaved
-with per-chunk matmuls in the swizzled order from ``core.schedules``:
+``lax`` collectives). Each op is its engine composition:
 
-  AG+GEMM  (Fig. 4/7):  rank r computes chunk (r - s) % W at step s while
-                        the next chunk rides the ring.
-  GEMM+RS  (Alg. 3/5):  rank r computes output block (r - s - 1) % W and
-                        forwards a running accumulator.
-  2-level  (Fig. 10):   inner ring per pod region, peer-pod regions first,
-                        inter-pod transfer overlapping the next region.
+  ag_matmul        AG+GEMM (Fig. 4/7): per-chunk dot folded into a
+                   scatter-into-output carry; transports ring / bidir /
+                   one_shot, plus ``ag_matmul_2level`` for multi-pod
+                   meshes (Fig. 10's AG side).
+  matmul_rs        GEMM+RS (Alg. 3/5): per-block dot as the rs_pipeline's
+                   compute; transports ring / bidir / one_shot, plus
+                   ``matmul_rs_2level``.
+  all_gather /     stand-alone decomposed collectives (gather_pipeline /
+  reduce_scatter   rs_pipeline) used by grad sync & decode paths.
 
-XLA's latency-hiding scheduler turns each ppermute into a
-collective-permute-start/done pair that runs on the ICI DMA engines
-concurrently with the MXU dots — the TPU analogue of the paper's
-copy-engine / SM-partition async tasks.
+No step loop lives here: the schedule orders, the transport permutes, and
+the compute/permute overlap all come from ``core.overlap`` (XLA lowers
+each ``ppermute`` to an async collective-permute start/done pair that the
+latency-hiding scheduler runs on the ICI DMA engines concurrently with
+the MXU dots — the TPU analogue of the paper's copy-engine async tasks).
 
-The non-overlapped baselines (`*_baseline`) are the "PyTorch+NCCL"
-equivalents used by benchmarks and tests.
+Differentiability is the engine's shared custom_vjp: each op registers
+its backward as its DUAL overlapped op (O(1) permute buffers, vs. O(W)
+for autodiff of an unrolled ring):
+
+    d(AG+GEMM)/dA = GEMM+RS(g, B^T)      (ring)
+    d(AG+GEMM)/dB = ring-accumulated A_s^T g_s
+    d(GEMM+RS)/dA = AG+GEMM(g, B^T)      (ring)
+    d(AG)/dx      = ring reduce-scatter
+
+The non-overlapped baselines (``*_baseline``) are the "PyTorch+NCCL"
+equivalents used by benchmarks and tests, and are each op's registered
+``baseline`` mode in the registry.
 """
 from __future__ import annotations
-
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +41,7 @@ from jax import lax
 
 from jax.ad_checkpoint import checkpoint_name
 
-from .primitives import offset_permute, ring_permute
+from . import overlap as ov
 
 Array = jax.Array
 
@@ -79,86 +88,70 @@ def _ag_matmul_impl(
     a_blk: (m_loc, k) — A sharded along M on ``axis`` (SP activations).
     b_loc: (k, n_loc) — B sharded along N (TP weights).
     Returns (m_loc * W, n_loc): the full-M strip of C this rank owns.
-
-    mode:
-      ring     unidirectional ring, Fig. 7 swizzle (paper default)
-      bidir    bidirectional ring — both link directions, half bytes each
-      one_shot all transfers issued up-front (low-latency, small messages)
-      none     baseline (monolithic all_gather)
     """
     out_dtype = out_dtype or a_blk.dtype
+    w = lax.axis_size(axis)
+    m_loc = a_blk.shape[0]
+    n_loc = b_loc.shape[1]
+    out0 = jnp.zeros((m_loc * w, n_loc), out_dtype)
+
+    if mode == "bidir" and m_loc % 2 == 0 and w >= 3:
+        h = m_loc // 2
+
+        def fold2(out, bufs, s, owner, direction):
+            partial = jnp.dot(bufs[0], b_loc, preferred_element_type=jnp.float32)
+            return _owner_update(out, partial.astype(out_dtype), owner, m_loc,
+                                 direction * h)
+
+        return ov.bidir_ag_pipeline((a_blk,), fold2, out0, axis)
     if mode == "bidir":
-        return _ag_matmul_bidir(a_blk, b_loc, axis, out_dtype=out_dtype)
-    if mode == "one_shot":
-        return _ag_matmul_one_shot(a_blk, b_loc, axis, out_dtype=out_dtype)
-    if mode != "ring":
+        mode = "ring"  # odd chunk or W < 3: bidir degenerates to ring
+    if mode not in ("ring", "one_shot"):
         raise ValueError(f"unknown ag mode {mode!r}")
 
-    w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
-    m_loc = a_blk.shape[0]
-    n_loc = b_loc.shape[1]
-    out = jnp.zeros((m_loc * w, n_loc), out_dtype)
-
-    s_sub = max(1, chunks_per_rank)
-    if m_loc % s_sub != 0:
-        s_sub = 1
-    m_sub = m_loc // s_sub
     # Sub-chunk ring: finer pipelining shrinks the first-chunk fill bubble
     # (the communication-tile-size knob of §3.6, exposed to the tuner).
-    bufs = [
+    s_sub = max(1, chunks_per_rank)
+    if m_loc % s_sub != 0 or mode == "one_shot":
+        s_sub = 1
+    m_sub = m_loc // s_sub
+    subs = tuple(
         lax.dynamic_slice(a_blk, (j * m_sub, 0), (m_sub, a_blk.shape[1]))
         for j in range(s_sub)
-    ]
-    for s in range(w):
-        owner = lax.rem(me - s + w, w)
-        for j in range(s_sub):
-            partial = jnp.dot(bufs[j], b_loc, preferred_element_type=jnp.float32)
-            out = _owner_update(out, partial.astype(out_dtype), owner, m_loc, j * m_sub)
-            if s != w - 1:
-                # next chunk rides the ring while later dots execute
-                bufs[j] = ring_permute(bufs[j], axis)
-    return out
+    )
+
+    def fold(out, bufs, s, owner):
+        for j, bj in enumerate(bufs):
+            partial = jnp.dot(bj, b_loc, preferred_element_type=jnp.float32)
+            out = _owner_update(out, partial.astype(out_dtype), owner, m_loc,
+                                j * m_sub)
+        return out
+
+    return ov.ag_pipeline(subs, fold, out0, axis, transport=mode)
 
 
-def _ag_matmul_bidir(a_blk: Array, b_loc: Array, axis: str, *, out_dtype) -> Array:
-    w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
+def ag_matmul_2level(
+    a_blk: Array,
+    b_loc: Array,
+    inner_axis: str,
+    outer_axis: str,
+    *,
+    out_dtype=None,
+) -> Array:
+    """AG+GEMM over a compound (outer=pod, inner=ring-in-pod) axis — the
+    AG dual of ``matmul_rs_2level``. Own pod's inner ring runs first
+    while peer-pod chunks travel the slow links (Fig. 10's shifted
+    start). a_blk: (m_loc, k); returns (m_loc * Wo * Wi, n_loc)."""
+    out_dtype = out_dtype or a_blk.dtype
+    total = lax.axis_size(outer_axis) * lax.axis_size(inner_axis)
     m_loc = a_blk.shape[0]
-    if m_loc % 2 != 0 or w < 3:
-        return _ag_matmul_impl(a_blk, b_loc, axis, mode="ring", out_dtype=out_dtype)
-    h = m_loc // 2
-    n_loc = b_loc.shape[1]
-    out = jnp.zeros((m_loc * w, n_loc), out_dtype)
-    fwd = a_blk[:h]
-    bwd = a_blk[h:]
-    for s in range(w):
-        owner_f = lax.rem(me - s + w, w)
-        owner_b = lax.rem(me + s, w)
-        pf = jnp.dot(fwd, b_loc, preferred_element_type=jnp.float32)
-        out = _owner_update(out, pf.astype(out_dtype), owner_f, m_loc, 0)
-        pb = jnp.dot(bwd, b_loc, preferred_element_type=jnp.float32)
-        out = _owner_update(out, pb.astype(out_dtype), owner_b, m_loc, h)
-        if s != w - 1:
-            fwd = ring_permute(fwd, axis)
-            bwd = ring_permute(bwd, axis, reverse=True)
-    return out
+    out0 = jnp.zeros((m_loc * total, b_loc.shape[1]), out_dtype)
 
+    def fold(out, bufs, s, owner):
+        partial = jnp.dot(bufs[0], b_loc, preferred_element_type=jnp.float32)
+        return _owner_update(out, partial.astype(out_dtype), owner, m_loc)
 
-def _ag_matmul_one_shot(a_blk: Array, b_loc: Array, axis: str, *, out_dtype) -> Array:
-    """Low-latency variant: issue every transfer before any dot (Alg. 4
-    structure). First dot runs on the local chunk with zero comm latency."""
-    w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
-    m_loc = a_blk.shape[0]
-    n_loc = b_loc.shape[1]
-    shards = [a_blk] + [offset_permute(a_blk, axis, off) for off in range(1, w)]
-    out = jnp.zeros((m_loc * w, n_loc), out_dtype)
-    for off, shard in enumerate(shards):
-        owner = lax.rem(me - off + w, w)
-        partial = jnp.dot(shard, b_loc, preferred_element_type=jnp.float32)
-        out = _owner_update(out, partial.astype(out_dtype), owner, m_loc)
-    return out
+    return ov.two_level_ag_pipeline((a_blk,), fold, out0, inner_axis, outer_axis)
 
 
 # ---------------------------------------------------------------------------
@@ -178,53 +171,36 @@ def _matmul_rs_impl(
     a_loc: (m, k_loc) — activations with K sharded on ``axis`` (TP).
     b_loc: (k_loc, n) — weights sharded on K.
     Returns (m / W, n): this rank's reduced output block (SP activations).
-
-    Ring schedule (Alg. 3): at step s rank r computes the partial product
-    for output block (r - s - 1) % W, adds the accumulator arriving from
-    rank r-1, and forwards it — the accumulator remains one block in
-    flight while the next block's dot executes.
     """
     out_dtype = out_dtype or a_loc.dtype
     w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
     m = a_loc.shape[0]
     assert m % w == 0, (m, w)
     m_blk = m // w
+
+    def a_block(blk):
+        return lax.dynamic_slice(a_loc, (blk * m_blk, 0), (m_blk, a_loc.shape[1]))
+
     if mode == "bidir" and b_loc.shape[1] % 2 == 0 and w >= 3:
         # split the output columns across BOTH ring directions: two
         # accumulators, half the bytes per link per step (2 ICI links).
-        # Reverse-ring handoff check: p(i-1, s+1) == p(i, s) for
-        # p(i, s) = (i + s + 1) % W.
         bl, br = jnp.split(b_loc, 2, axis=1)
-        acc_f = acc_r = None
-        for s in range(w):
-            blk_f = lax.rem(me - s - 1 + 2 * w, w)
-            blk_r = lax.rem(me + s + 1, w)
-            a_f = lax.dynamic_slice(a_loc, (blk_f * m_blk, 0), (m_blk, a_loc.shape[1]))
-            a_r = lax.dynamic_slice(a_loc, (blk_r * m_blk, 0), (m_blk, a_loc.shape[1]))
-            pf = jnp.dot(a_f, bl, preferred_element_type=jnp.float32)
-            pr = jnp.dot(a_r, br, preferred_element_type=jnp.float32)
-            acc_f = pf if acc_f is None else pf + ring_permute(acc_f, axis)
-            acc_r = pr if acc_r is None else pr + ring_permute(acc_r, axis, reverse=True)
+
+        def compute2(blk, s, direction):
+            return jnp.dot(a_block(blk), bl if direction == 0 else br,
+                           preferred_element_type=jnp.float32)
+
+        acc_f, acc_r = ov.bidir_rs_pipeline(compute2, axis)
         return jnp.concatenate([acc_f, acc_r], axis=1).astype(out_dtype)
-    if mode not in ("ring", "bidir"):
+    if mode == "bidir":
+        mode = "ring"
+    if mode not in ("ring", "one_shot"):
         raise ValueError(f"unknown rs mode {mode!r}")
-    acc = None
-    for s in range(w):
-        blk = lax.rem(me - s - 1 + 2 * w, w)
-        a_b = lax.dynamic_slice(a_loc, (blk * m_blk, 0), (m_blk, a_loc.shape[1]))
-        partial = jnp.dot(a_b, b_loc, preferred_element_type=jnp.float32)
-        if acc is None:
-            acc = partial
-        else:
-            # the permute of the previous accumulator overlaps this dot
-            acc = partial + ring_permute(acc, axis)
-    return acc.astype(out_dtype)
 
+    def compute(blk, s):
+        return jnp.dot(a_block(blk), b_loc, preferred_element_type=jnp.float32)
 
-# ---------------------------------------------------------------------------
-# 2-level (multi-pod) GEMM + ReduceScatter — Fig. 10 / Alg. 5
-# ---------------------------------------------------------------------------
+    return ov.rs_pipeline(compute, axis, transport=mode).astype(out_dtype)
 
 
 def matmul_rs_2level(
@@ -235,163 +211,124 @@ def matmul_rs_2level(
     *,
     out_dtype=None,
 ) -> Array:
-    """GEMM+RS over a compound (outer=pod, inner=ring-in-pod) axis.
-
-    a_loc: (m, k_loc) with K sharded over outer*inner; returns
-    (m / (Wo*Wi), n). Outer step s reduces — over the inner ring — the
-    partial sums for pod region (pod - s - 1) % Wo (peer pods first, own
-    pod last, Fig. 10's shifted start), then forwards the inter-pod
-    accumulator, overlapping the slow-link transfer with the next region's
-    Wi matmuls.
-    """
+    """GEMM+RS over a compound (outer=pod, inner=ring-in-pod) axis
+    (Fig. 10 / Alg. 5). a_loc: (m, k_loc) with K sharded over
+    outer*inner; returns (m / (Wo*Wi), n)."""
     out_dtype = out_dtype or a_loc.dtype
-    wo = lax.axis_size(outer_axis)
-    wi = lax.axis_size(inner_axis)
-    oid = lax.axis_index(outer_axis)
-    iid = lax.axis_index(inner_axis)
+    total = lax.axis_size(outer_axis) * lax.axis_size(inner_axis)
     m = a_loc.shape[0]
-    total = wo * wi
     assert m % total == 0, (m, total)
     m_blk = m // total
 
-    outer_acc = None
-    for s in range(wo):
-        region = lax.rem(oid - s - 1 + 2 * wo, wo)
-        # --- inner ring RS for this pod region (Alg. 5 "intra-node scatter
-        # + local reduction", expressed as a compute/permute ring) ---
-        inner_acc = None
-        for t in range(wi):
-            blk_inner = lax.rem(iid - t - 1 + 2 * wi, wi)
-            blk = region * wi + blk_inner
-            a_b = lax.dynamic_slice(a_loc, (blk * m_blk, 0), (m_blk, a_loc.shape[1]))
-            partial = jnp.dot(a_b, b_loc, preferred_element_type=jnp.float32)
-            if inner_acc is None:
-                inner_acc = partial
-            else:
-                inner_acc = partial + ring_permute(inner_acc, inner_axis)
-        # --- inter-pod P2P: forward the outer accumulator; this slow-link
-        # permute overlaps the next region's inner ring of dots ---
-        if outer_acc is None:
-            outer_acc = inner_acc
-        else:
-            outer_acc = inner_acc + ring_permute(outer_acc, outer_axis)
-    return outer_acc.astype(out_dtype)
+    def compute(blk, s):
+        a_b = lax.dynamic_slice(a_loc, (blk * m_blk, 0), (m_blk, a_loc.shape[1]))
+        return jnp.dot(a_b, b_loc, preferred_element_type=jnp.float32)
+
+    return ov.two_level_rs_pipeline(compute, inner_axis, outer_axis).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
-# Custom VJPs: each op's backward IS its dual overlapped op.
-#
-# Autodiff of an unrolled W-step ring holds all W permute buffers live
-# during the backward (O(W) memory — 20 GiB/layer-group at W=16 for 90B
-# models, measured). The mathematical transpose is another ring with O(1)
-# buffers:   d(AG+GEMM)/dA = GEMM+RS(g, B^T)      (ring)
-#            d(AG+GEMM)/dB = ring-accumulated A_s^T g_s
-#            d(GEMM+RS)/dA = AG+GEMM(g, B^T)      (ring)
-#            d(AG)/dx      = ring reduce-scatter
+# Weight-gradient rings (the "accumulate over static strips" duals)
 # ---------------------------------------------------------------------------
 
 
 def _weight_grad_ring(a_blk: Array, g: Array, axis: str) -> Array:
     """dB = A_full^T @ G without materializing A_full: ring A chunks past
     the static G strips. a_blk: (m_loc, k); g: (W*m_loc, n). -> (k, n)."""
-    w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
     m_loc = a_blk.shape[0]
-    db = jnp.zeros((a_blk.shape[1], g.shape[1]), jnp.float32)
-    buf = a_blk
-    for s in range(w):
-        owner = lax.rem(me - s + w, w)
+    db0 = jnp.zeros((a_blk.shape[1], g.shape[1]), jnp.float32)
+
+    def fold(db, bufs, s, owner):
         g_s = lax.dynamic_slice(g, (owner * m_loc, 0), (m_loc, g.shape[1]))
-        db = db + jax.lax.dot_general(
-            buf, g_s, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        return db + lax.dot_general(
+            bufs[0], g_s, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
         )
-        if s != w - 1:
-            buf = ring_permute(buf, axis)
-    return db
+
+    return ov.ag_pipeline((a_blk,), fold, db0, axis, transport="ring")
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _ag_matmul_cv(a_blk, b_loc, axis, mode, chunks_per_rank):
-    return _ag_matmul_impl(a_blk, b_loc, axis, mode=mode,
-                           chunks_per_rank=chunks_per_rank,
-                           out_dtype=a_blk.dtype)
-
-
-def _ag_matmul_cv_fwd(a_blk, b_loc, axis, mode, chunks_per_rank):
-    out = _ag_matmul_cv(a_blk, b_loc, axis, mode, chunks_per_rank)
-    return out, (a_blk, b_loc)
-
-
-def _ag_matmul_cv_bwd(axis, mode, chunks_per_rank, res, g):
-    a_blk, b_loc = res
-    da = matmul_rs(g, b_loc.T, axis, mode="ring", out_dtype=a_blk.dtype)
-    db = _weight_grad_ring(a_blk, g, axis).astype(b_loc.dtype)  # (k, n_loc)
-    return da, db
-
-
-_ag_matmul_cv.defvjp(_ag_matmul_cv_fwd, _ag_matmul_cv_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _matmul_rs_cv(a_loc, b_loc, axis, mode):
-    return _matmul_rs_impl(a_loc, b_loc, axis, mode=mode, out_dtype=a_loc.dtype)
-
-
-def _matmul_rs_cv_fwd(a_loc, b_loc, axis, mode):
-    return _matmul_rs_cv(a_loc, b_loc, axis, mode), (a_loc, b_loc)
-
-
-def _matmul_rs_cv_bwd(axis, mode, res, g):
-    a_loc, b_loc = res
-    # g: (m/W, n) block; dA = AG(g) @ B^T -> overlapped AG+GEMM ring
-    da = ag_matmul(g, b_loc.T, axis, mode="ring", out_dtype=a_loc.dtype)
-    # dB = A^T @ AG(g): ring the g blocks past the static A strips
-    w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
+def _rs_weight_grad_ring(a_loc: Array, g: Array, axis: str) -> Array:
+    """dB for GEMM+RS: ring the g blocks past the static A strips.
+    a_loc: (W*m_blk, k_loc); g: (m_blk, n). -> (k_loc, n)."""
     m_blk = g.shape[0]
-    db = jnp.zeros((a_loc.shape[1], g.shape[1]), jnp.float32)
-    buf = g
-    for s in range(w):
-        owner = lax.rem(me - s + w, w)
-        a_s = lax.dynamic_slice(
-            a_loc, (owner * m_blk, 0), (m_blk, a_loc.shape[1])
+    db0 = jnp.zeros((a_loc.shape[1], g.shape[1]), jnp.float32)
+
+    def fold(db, bufs, s, owner):
+        a_s = lax.dynamic_slice(a_loc, (owner * m_blk, 0), (m_blk, a_loc.shape[1]))
+        return db + lax.dot_general(
+            a_s, bufs[0], (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
         )
-        db = db + jax.lax.dot_general(
-            a_s, buf, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        if s != w - 1:
-            buf = ring_permute(buf, axis)
-    return da, db.astype(b_loc.dtype)
 
-
-_matmul_rs_cv.defvjp(_matmul_rs_cv_fwd, _matmul_rs_cv_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
-def _all_gather_cv(x, axis, mode):
-    return _all_gather_impl(x, axis, mode=mode)
-
-
-def _all_gather_cv_fwd(x, axis, mode):
-    return _all_gather_cv(x, axis, mode), None
-
-
-def _all_gather_cv_bwd(axis, mode, _, g):
-    return (reduce_scatter_chunked(g, axis).astype(g.dtype),)
-
-
-_all_gather_cv.defvjp(_all_gather_cv_fwd, _all_gather_cv_bwd)
+    return ov.ag_pipeline((g,), fold, db0, axis, transport="ring")
 
 
 # ---------------------------------------------------------------------------
-# Public overlapped ops (route through the custom-VJP wrappers)
+# Registry entries: fwd impls + dual-op backward rules, all routed through
+# the engine's ONE shared custom_vjp (overlap.apply).
+# ---------------------------------------------------------------------------
+
+
+def _ag_fwd(static, a_blk, b_loc):
+    return _ag_matmul_impl(a_blk, b_loc, static["axis"], mode=static["mode"],
+                           chunks_per_rank=static["chunks"], out_dtype=a_blk.dtype)
+
+
+def _ag_bwd(static, res, g):
+    a_blk, b_loc = res
+    axis = static["axis"]
+    da = matmul_rs(g, b_loc.T, axis, mode="ring", out_dtype=a_blk.dtype)
+    db = _weight_grad_ring(a_blk, g, axis).astype(b_loc.dtype)
+    return da, db
+
+
+def _rs_fwd(static, a_loc, b_loc):
+    return _matmul_rs_impl(a_loc, b_loc, static["axis"], mode=static["mode"],
+                           out_dtype=a_loc.dtype)
+
+
+def _rs_bwd(static, res, g):
+    a_loc, b_loc = res
+    axis = static["axis"]
+    # g: (m/W, n) block; dA = AG(g) @ B^T -> overlapped AG+GEMM ring
+    da = ag_matmul(g, b_loc.T, axis, mode="ring", out_dtype=a_loc.dtype)
+    db = _rs_weight_grad_ring(a_loc, g, axis).astype(b_loc.dtype)
+    return da, db
+
+
+def _gather_fwd(static, x):
+    if static["mode"] == "none":
+        return lax.all_gather(x, static["axis"], tiled=True)
+    return ov.gather_pipeline(x, static["axis"], transport=static["mode"])
+
+
+def _gather_bwd(static, res, g):
+    return (reduce_scatter_chunked(g, static["axis"]).astype(g.dtype),)
+
+
+ov.register("ag_matmul", kind="ag", transports=("ring", "bidir", "one_shot"),
+            baseline="none", default="ring", fwd=_ag_fwd, bwd=_ag_bwd)
+ov.register("matmul_rs", kind="rs", transports=("ring", "bidir", "one_shot"),
+            baseline="none", default="ring", fwd=_rs_fwd, bwd=_rs_bwd)
+ov.register("ag_matmul_2level", kind="ag", transports=("two_level",),
+            baseline="none", default="two_level")
+ov.register("matmul_rs_2level", kind="rs", transports=("two_level",),
+            baseline="none", default="two_level")
+ov.register("all_gather", kind="gather", transports=("ring", "one_shot"),
+            baseline="none", default="ring", fwd=_gather_fwd, bwd=_gather_bwd)
+ov.register("reduce_scatter", kind="rs", transports=("ring",),
+            baseline="none", default="ring")
+
+
+# ---------------------------------------------------------------------------
+# Public overlapped ops
 # ---------------------------------------------------------------------------
 
 
 def ag_matmul(a_blk, b_loc, axis, *, mode="ring", chunks_per_rank=1,
               out_dtype=None):
-    """Overlapped AllGather-GEMM (see _ag_matmul_impl for modes). The
-    backward pass is the dual overlapped GEMM+RS ring (O(1) buffers).
+    """Overlapped AllGather-GEMM (modes: see the "ag_matmul" registry
+    entry). The backward pass is the dual overlapped GEMM+RS ring (O(1)
+    buffers, engine shared custom_vjp).
 
     The output is tagged with checkpoint_name("ag_out") so the
     "block_save_ag" remat policy can keep gathered activations across the
@@ -401,7 +338,8 @@ def ag_matmul(a_blk, b_loc, axis, *, mode="ring", chunks_per_rank=1,
     if mode == "none":
         out = ag_matmul_baseline(a_blk, b_loc, axis, out_dtype=out_dtype)
     else:
-        out = _ag_matmul_cv(a_blk, b_loc, axis, mode, chunks_per_rank).astype(out_dtype)
+        out = ov.apply("ag_matmul", a_blk, b_loc, axis=axis, mode=mode,
+                       chunks=max(1, chunks_per_rank)).astype(out_dtype)
     return checkpoint_name(out, "ag_out")
 
 
@@ -410,12 +348,12 @@ def matmul_rs(a_loc, b_loc, axis, *, mode="ring", out_dtype=None):
     out_dtype = out_dtype or a_loc.dtype
     if mode == "none":
         return matmul_rs_baseline(a_loc, b_loc, axis, out_dtype=out_dtype)
-    return _matmul_rs_cv(a_loc, b_loc, axis, mode).astype(out_dtype)
+    return ov.apply("matmul_rs", a_loc, b_loc, axis=axis, mode=mode).astype(out_dtype)
 
 
 def all_gather_chunked(x: Array, axis: str, *, mode: str = "ring") -> Array:
     """Decomposed AllGather; backward = ring reduce-scatter (O(1))."""
-    return _all_gather_cv(x, axis, mode)
+    return ov.apply("all_gather", x, axis=axis, mode=mode)
 
 
 # ---------------------------------------------------------------------------
@@ -423,54 +361,27 @@ def all_gather_chunked(x: Array, axis: str, *, mode: str = "ring") -> Array:
 # ---------------------------------------------------------------------------
 
 
-def _all_gather_impl(x: Array, axis: str, mode: str = "ring") -> Array:
-    """One-sided decomposed AllGather (Alg. 1/2 push-ring, Alg. 4 one-shot)."""
-    w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
-    chunk = x.shape[0]
-    out = jnp.zeros((chunk * w,) + x.shape[1:], x.dtype)
-    out = _owner_update(out, x, me, chunk)
-    if mode == "one_shot":
-        for off in range(1, w):
-            shard = offset_permute(x, axis, off)
-            out = _owner_update(out, shard, lax.rem(me - off + w, w), chunk)
-        return out
-    buf = x
-    for s in range(1, w):
-        buf = ring_permute(buf, axis)
-        out = _owner_update(out, buf, lax.rem(me - s + w, w), chunk)
-    return out
-
-
 def reduce_scatter_chunked(x: Array, axis: str) -> Array:
     """Ring reduce-scatter along dim 0 (accumulator in f32)."""
     w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
     m = x.shape[0]
     assert m % w == 0
     m_blk = m // w
-    acc = None
-    for s in range(w):
-        blk = lax.rem(me - s - 1 + 2 * w, w)
-        piece = lax.dynamic_slice(x, (blk * m_blk,) + (0,) * (x.ndim - 1), (m_blk,) + x.shape[1:])
-        if acc is None:
-            acc = piece.astype(jnp.float32)
-        else:
-            acc = piece.astype(jnp.float32) + ring_permute(acc, axis)
-    return acc.astype(x.dtype)
+
+    def compute(blk, s):
+        piece = lax.dynamic_slice(
+            x, (blk * m_blk,) + (0,) * (x.ndim - 1), (m_blk,) + x.shape[1:]
+        )
+        return piece.astype(jnp.float32)
+
+    return ov.rs_pipeline(compute, axis, transport="ring").astype(x.dtype)
 
 
 def hierarchical_reduce_scatter(x: Array, inner_axis: str, outer_axis: str) -> Array:
     """RS along inner (fast links), then ring all-reduce along outer (slow
     links) on the already 1/Wi-sized shard — the gradient-sync pattern."""
     shard = reduce_scatter_chunked(x, inner_axis)
-    wo = lax.axis_size(outer_axis)
-    acc = shard.astype(jnp.float32)
-    buf = acc
-    for _ in range(wo - 1):
-        buf = ring_permute(buf, outer_axis)
-        acc = acc + buf
-    return acc.astype(x.dtype)
+    return ov.ring_allreduce(shard, outer_axis)
 
 
 def hierarchical_all_gather(x: Array, inner_axis: str, outer_axis: str) -> Array:

@@ -3,12 +3,14 @@
 Sequence-parallel decode: the KV cache is sharded along the sequence axis
 across TP ranks; each rank runs the flash-decode kernel over its shard,
 producing a partial (o, lse); the partials are exchanged with the
-LOW-LATENCY AllGather (small message — this is where the paper's Alg. 4
-kernel earns its keep) and merged with the logsumexp combine.
+engine's stack-gather pipeline (small message — the one_shot transport is
+where the paper's Alg. 4 kernel earns its keep) and merged with the
+logsumexp combine.
 
 The paper's scalability result reproduces structurally: per-rank HBM
 traffic is KV_bytes / W (the bandwidth-bound term scales), while the
 combine adds a W-sized small-message AllGather (the latency floor).
+Registry entry: "flash_decode".
 """
 from __future__ import annotations
 
@@ -17,7 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..kernels import ops
-from .primitives import offset_permute
+from . import overlap as ov
 
 Array = jax.Array
 
@@ -38,8 +40,7 @@ def distributed_flash_decode(
     force=None,
 ) -> Array:
     """Call inside shard_map. Returns the combined (B, Hq, D) output."""
-    w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
+    mode = ov.resolve_mode("flash_decode", mode)
     o_part, lse_part = local_flash_decode(q, k_shard, v_shard, length_local, force=force)
     b, h, d = o_part.shape
     # pack (o, lse) into one message so the combine needs ONE small AllGather
@@ -47,14 +48,11 @@ def distributed_flash_decode(
     if mode == "xla":
         gathered = lax.all_gather(packed, axis)  # (W,B,H,D+1)
     else:
-        # low-latency one-shot AG: all transfers up-front (Alg. 4 analogue)
-        parts = [packed] + [offset_permute(packed, axis, off) for off in range(1, w)]
-        gathered = jnp.zeros((w,) + packed.shape, packed.dtype)
-        for off, p in enumerate(parts):
-            src = lax.rem(me - off + w, w)
-            gathered = lax.dynamic_update_slice(
-                gathered, p[None], (src, 0, 0, 0)
-            )
+        gathered = ov.stack_gather_pipeline(packed, axis, transport=mode)
     o_parts = gathered[..., :d]
     lse_parts = gathered[..., d]
     return ops.combine_flash_decode(o_parts, lse_parts)
+
+
+ov.register("flash_decode", kind="combine", transports=("one_shot", "ring"),
+            baseline="xla", default="one_shot")

@@ -1,32 +1,34 @@
-"""Overlapped MoE communication (paper: AG+MoE, MoE+RS, low-latency AllToAll).
+"""Overlapped MoE communication (paper: AG+MoE, MoE+RS, low-latency
+AllToAll), declared over the ring-pipeline engine (``core.overlap``).
 
 Two parallelism modes, matching the paper's coverage:
 
   TP MoE (FLUX-style, the paper's AG+MoE / MoE+RS kernels): every rank
   holds a d_ff-shard of EVERY expert. Tokens are sequence-sharded; the
-  layer AllGathers token chunks around the ring and runs the grouped GEMM
-  per chunk as it arrives (Fig. 7 swizzle), then combines and
-  Reduce-Scatters the outputs chunk-by-chunk (Alg. 3).
+  layer rides token chunks on the engine's AG transports (ring / bidir /
+  one_shot) and runs the grouped GEMM per chunk as it arrives (Fig. 7
+  swizzle), then combines and Reduce-Scatters the outputs chunk-by-chunk
+  (Alg. 3 / the engine's RS transports).
 
   EP MoE (DeepEP-style, the paper's AllToAll dispatch/combine): experts
-  are sharded across ranks; tokens travel to their experts via a
-  decomposed one-shot AllToAll (all transfers issued up-front — the
+  are sharded across ranks; tokens travel to their experts via the
+  engine's a2a_pipeline (one_shot = all transfers issued up-front — the
   low-latency structure of the paper's inference AllToAll), compute runs
   per-arrival, and a second AllToAll brings results home.
 
 Dispatch is capacity-based (dense (E, cap, d) buffers) so the expert GEMM
-is a regular grouped matmul — the TPU-native substitute for ragged grouping.
+is a regular grouped matmul — the TPU-native substitute for ragged
+grouping. Registry entries: "ag_moe", "moe_rs", "a2a_ep".
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .primitives import offset_permute, ring_permute
+from . import overlap as ov
 
 Array = jax.Array
 
@@ -77,7 +79,7 @@ def topk_combine(out: Array, info: DispatchInfo, out_dtype=None) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# EP AllToAll — decomposed one-shot (low-latency) and XLA baseline
+# EP AllToAll — engine a2a_pipeline (one_shot low-latency / XLA baseline)
 # ---------------------------------------------------------------------------
 
 
@@ -91,25 +93,10 @@ def a2a_ep(x: Array, axis: str, *, mode: str = "one_shot") -> Array:
     w = lax.axis_size(axis)
     e_global, cap, d = x.shape
     e_local = e_global // w
-    xs = x.reshape(w, e_local, cap, d)
-    if mode == "xla":
-        y = lax.all_to_all(xs, axis, split_axis=0, concat_axis=0, tiled=False)
-        # y: (W, e_local, cap, d) — block i is rank i's tokens for my experts
-        return jnp.moveaxis(y, 0, 1).reshape(e_local, w * cap, d)
-    # one-shot decomposition (paper's low-latency AllToAll structure):
-    # all W-1 sends issued up-front with distinct ring offsets.
-    me = lax.axis_index(axis)
-    out = jnp.zeros((e_local, w, cap, d), x.dtype)
-    my_blk = lax.dynamic_slice(xs, (me, 0, 0, 0), (1, e_local, cap, d))[0]
-    out = lax.dynamic_update_slice(out, my_blk[:, None], (0, me, 0, 0))
-    for off in range(1, w):
-        # send my slab for the experts of rank (me+off) to that rank
-        tgt = lax.rem(me + off, w)
-        send_blk = lax.dynamic_slice(xs, (tgt, 0, 0, 0), (1, e_local, cap, d))[0]
-        recv_blk = offset_permute(send_blk, axis, off)  # arrives from me-off
-        src = lax.rem(me - off + w, w)
-        out = lax.dynamic_update_slice(out, recv_blk[:, None], (0, src, 0, 0))
-    return out.reshape(e_local, w * cap, d)
+    xs = x.reshape(w, e_local, cap, d)  # block t = my tokens for rank t's experts
+    y = ov.a2a_pipeline(xs, axis, transport=mode)
+    # y[src] = rank src's tokens for my experts
+    return jnp.moveaxis(y, 0, 1).reshape(e_local, w * cap, d)
 
 
 def a2a_ep_inverse(y: Array, axis: str, *, mode: str = "one_shot") -> Array:
@@ -118,20 +105,8 @@ def a2a_ep_inverse(y: Array, axis: str, *, mode: str = "one_shot") -> Array:
     e_local, wc, d = y.shape
     cap = wc // w
     ys = jnp.moveaxis(y.reshape(e_local, w, cap, d), 1, 0)  # (W, e_local, cap, d)
-    if mode == "xla":
-        x = lax.all_to_all(ys, axis, split_axis=0, concat_axis=0, tiled=False)
-        return x.reshape(w * e_local, cap, d)
-    me = lax.axis_index(axis)
-    out = jnp.zeros((w, e_local, cap, d), y.dtype)
-    mine = lax.dynamic_slice(ys, (me, 0, 0, 0), (1, e_local, cap, d))
-    out = lax.dynamic_update_slice(out, mine, (me, 0, 0, 0))
-    for off in range(1, w):
-        tgt = lax.rem(me + off, w)
-        send_blk = lax.dynamic_slice(ys, (tgt, 0, 0, 0), (1, e_local, cap, d))
-        recv_blk = offset_permute(send_blk, axis, off)
-        src = lax.rem(me - off + w, w)
-        out = lax.dynamic_update_slice(out, recv_blk, (src, 0, 0, 0))
-    return out.reshape(w * e_local, cap, d)
+    x = ov.a2a_pipeline(ys, axis, transport=mode)
+    return x.reshape(w * e_local, cap, d)
 
 
 # ---------------------------------------------------------------------------
@@ -147,28 +122,55 @@ def ag_moe(
     *,
     mode: str = "ring",
 ) -> Array:
-    """AllGather-MoE overlap: ring token chunks; run the (d_ff-sharded)
-    expert computation on each chunk as it arrives; every rank produces
-    the full sequence's partial outputs (to be reduced by rs afterwards
-    or combined directly when expert_fn output is complete)."""
+    """AllGather-MoE overlap: token chunks ride the engine transport; the
+    (d_ff-sharded) expert computation runs on each chunk as it arrives;
+    every rank produces the full sequence's partial outputs (to be
+    reduced by rs afterwards or combined directly when expert_fn output
+    is complete).
+
+    Assembly avoids a dynamic_update_slice chain (whose autodiff keeps
+    all W buffer versions live in the backward): chunks are collected in
+    computation order and realigned with ONE static concat + ONE cyclic
+    roll per direction (an O(1)-buffer transpose).
+    """
+    mode = ov.resolve_mode("ag_moe", mode)
+    if mode == "none":
+        # monolithic baseline: gather everything, then one big expert pass
+        return expert_fn(
+            lax.all_gather(x_blk, axis, tiled=True),
+            lax.all_gather(logits_blk, axis, tiled=True),
+        )
     w = lax.axis_size(axis)
     me = lax.axis_index(axis)
     t_loc = x_blk.shape[0]
-    ys = []
-    buf_x, buf_l = x_blk, logits_blk
-    for s in range(w):
-        ys.append(expert_fn(buf_x, buf_l))  # chunk of owner (me - s) % w
-        if s != w - 1:
-            if mode == "one_shot":
-                buf_x = offset_permute(x_blk, axis, s + 1)
-                buf_l = offset_permute(logits_blk, axis, s + 1)
-            else:
-                buf_x = ring_permute(buf_x, axis)
-                buf_l = ring_permute(buf_l, axis)
-    # Assemble owner-ascending WITHOUT a dynamic_update_slice chain (whose
-    # autodiff keeps all W buffer versions live in the backward): reversed
-    # computation order is owners ascending cyclically from (me+1), so one
-    # static concat + one cyclic roll (O(1)-buffer transpose) suffices.
+
+    if mode == "bidir" and t_loc % 2 == 0 and w >= 3:
+        h = t_loc // 2
+
+        def fold2(carry, bufs, s, owner, direction):
+            ys_f, ys_b = carry
+            y = expert_fn(bufs[0], bufs[1])
+            return (ys_f + [y], ys_b) if direction == 0 else (ys_f, ys_b + [y])
+
+        ys_f, ys_b = ov.bidir_ag_pipeline((x_blk, logits_blk), fold2, ([], []), axis)
+        d_out = ys_f[0].shape[-1]
+        # forward halves: owners me, me-1, ... -> reversed is ascending
+        # cyclically from me+1; backward halves: owners me, me+1, ... are
+        # already ascending from me.
+        tops = jnp.roll(jnp.concatenate(ys_f[::-1], 0), (me + 1) * h, axis=0)
+        bots = jnp.roll(jnp.concatenate(ys_b, 0), me * h, axis=0)
+        out = jnp.concatenate(
+            [tops.reshape(w, h, d_out), bots.reshape(w, h, d_out)], axis=1
+        )
+        return out.reshape(w * t_loc, d_out)
+
+    if mode == "bidir":
+        mode = "ring"
+
+    def fold(ys, bufs, s, owner):
+        return ys + [expert_fn(bufs[0], bufs[1])]  # chunk of owner (me - s) % w
+
+    ys = ov.ag_pipeline((x_blk, logits_blk), fold, [], axis, transport=mode)
     rev = jnp.concatenate(ys[::-1], axis=0)
     return jnp.roll(rev, shift=(me + 1) * t_loc, axis=0)
 
@@ -178,24 +180,59 @@ def moe_rs(
     logits_full: Array,  # (T, E)
     expert_fn,  # partial-output expert computation (d_ff-sharded)
     axis: str,
+    *,
+    mode: str = "ring",
 ) -> Array:
-    """GroupGEMM-ReduceScatter overlap (paper MoE+RS): compute the expert
-    output block destined for rank (me - s - 1) at step s and ring-reduce
-    the accumulator (Alg. 3 schedule)."""
+    """GroupGEMM-ReduceScatter overlap (paper MoE+RS): the expert output
+    block destined for each rank is the rs_pipeline's per-block compute;
+    the accumulator rides the engine transport (Alg. 3 schedule, plus
+    bidir token-halves and the one_shot low-latency variant)."""
+    mode = ov.resolve_mode("moe_rs", mode)
+    if mode == "none":
+        # monolithic baseline: full expert pass, then XLA's reduce-scatter
+        partial = expert_fn(x_full, logits_full).astype(jnp.float32)
+        return lax.psum_scatter(
+            partial, axis, scatter_dimension=0, tiled=True
+        ).astype(x_full.dtype)
     w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
     t = x_full.shape[0]
     t_blk = t // w
-    acc = None
-    for s in range(w):
-        blk = lax.rem(me - s - 1 + 2 * w, w)
-        xb = lax.dynamic_slice(x_full, (blk * t_blk, 0), (t_blk, x_full.shape[1]))
-        lb = lax.dynamic_slice(
-            logits_full, (blk * t_blk, 0), (t_blk, logits_full.shape[1])
-        )
-        partial = expert_fn(xb, lb).astype(jnp.float32)
-        if acc is None:
-            acc = partial
-        else:
-            acc = partial + ring_permute(acc, axis)
-    return acc.astype(x_full.dtype)
+
+    def rows(start, size):
+        xb = lax.dynamic_slice(x_full, (start, 0), (size, x_full.shape[1]))
+        lb = lax.dynamic_slice(logits_full, (start, 0), (size, logits_full.shape[1]))
+        return xb, lb
+
+    if mode == "bidir" and t_blk % 2 == 0 and w >= 3:
+        h = t_blk // 2
+
+        def compute2(blk, s, direction):
+            xb, lb = rows(blk * t_blk + direction * h, h)
+            return expert_fn(xb, lb).astype(jnp.float32)
+
+        acc_f, acc_r = ov.bidir_rs_pipeline(compute2, axis)
+        return jnp.concatenate([acc_f, acc_r], axis=0).astype(x_full.dtype)
+
+    if mode == "bidir":
+        mode = "ring"
+
+    def compute(blk, s):
+        xb, lb = rows(blk * t_blk, t_blk)
+        return expert_fn(xb, lb).astype(jnp.float32)
+
+    return ov.rs_pipeline(compute, axis, transport=mode).astype(x_full.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry entries (these ops differentiate through the pipeline directly:
+# ag_moe's concat+roll assembly and moe_rs's accumulator chain are already
+# O(1)-buffer under autodiff, and expert_fn is checkpointed per chunk by
+# the caller)
+# ---------------------------------------------------------------------------
+
+ov.register("ag_moe", kind="ag", transports=("ring", "bidir", "one_shot"),
+            baseline="none", default="ring")
+ov.register("moe_rs", kind="rs", transports=("ring", "bidir", "one_shot"),
+            baseline="none", default="ring")
+ov.register("a2a_ep", kind="a2a", transports=("one_shot",),
+            baseline="xla", default="one_shot")

@@ -1,0 +1,492 @@
+"""The ring-pipeline engine: one implementation of "compute a chunk while
+the next chunk rides the interconnect" for EVERY overlapped collective.
+
+The paper's central argument (§3.7) is that an overlapped kernel is a
+*composition*, not a monolith:
+
+    overlapped op = schedule (core.schedules)
+                  x transport (how chunks move between ranks)
+                  x per-chunk compute (the op-specific FLOPs)
+                  x combine (how per-chunk results become the output)
+
+This module is that composition, written once. The five former
+hand-rolled copies of the ``for step: compute chunk; ring_permute(buf)``
+loop (collective matmuls x3, MoE overlap, ring attention) are now thin
+declarations over these pipelines.
+
+Transports
+----------
+  ring      unidirectional ring: operand chunks move one hop per step
+            (rank -> rank+1); rank r holds chunk (r - s) % W at step s.
+  bidir     bidirectional ring: each operand is split in half; the top
+            half rides rank->rank+1, the bottom half rank->rank-1, so
+            each link direction carries half the bytes.
+  one_shot  all W-1 transfers issued up-front with distinct ring offsets
+            (the paper's low-latency Alg. 4 structure) — no serial
+            dependency chain; latency-optimal for small messages.
+  two_level hierarchical (Fig. 10): an inner ring per pod plus an outer
+            ring across pods; the slow inter-pod hop overlaps a full
+            inner ring of compute.
+
+Pipelines
+---------
+AG-side (``*ag_pipeline``): operand chunks ride the transport; a fold
+function consumes each arriving chunk. The fold's carry generalizes all
+combine styles: scatter-into-output (AG+GEMM), list-of-chunks
+(AG+MoE's O(1)-buffer concat), online-softmax state (ring attention),
+and weight-gradient accumulators.
+
+RS-side (``*rs_pipeline``): the *accumulator* rides the transport while a
+block-compute function produces the partial sum for the schedule's block
+at each step (Alg. 3's accumulate-and-forward).
+
+``a2a_pipeline`` (AllToAll) and ``ring_allreduce`` round out the set used
+by expert parallelism and gradient sync.
+
+Registry + shared custom_vjp
+----------------------------
+Every overlapped op registers an :class:`OverlapSpec` (name, kind,
+supported transports, baseline, optional differentiation rule). The
+registry is the single source of truth consumed by
+
+  - ``configs.base.ParallelConfig.mode_for`` (per-op mode resolution),
+  - ``core.tuner`` (analytic candidates enumerate the registry),
+  - ``tests/test_overlap_engine.py`` (every (op, transport) pair is
+    property-tested against its monolithic baseline).
+
+Ops whose mathematical transpose is another overlapped op (AG+GEMM <->
+GEMM+RS) declare a ``bwd`` rule and are routed through ONE shared
+``jax.custom_vjp`` (:func:`apply`), so O(1)-buffer differentiability is
+implemented exactly once instead of per kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .primitives import offset_permute, ring_permute
+
+Array = jax.Array
+
+# Transport names understood by the engine (baselines like "none"/"xla"
+# are op-specific monolithic fallbacks, not transports).
+TRANSPORTS = ("ring", "bidir", "one_shot", "two_level")
+
+
+def _advance(bufs: Tuple[Array, ...], axis: str, *, reverse: bool = False):
+    return tuple(ring_permute(b, axis, reverse=reverse) for b in bufs)
+
+
+# ---------------------------------------------------------------------------
+# AG-side pipelines: operand chunks ride the transport, a fold consumes them
+# ---------------------------------------------------------------------------
+
+
+def ag_pipeline(
+    operands: Tuple[Array, ...],
+    fold: Callable[[Any, Tuple[Array, ...], int, Array], Any],
+    init: Any,
+    axis: str,
+    *,
+    transport: str = "ring",
+):
+    """Generic AllGather-style pipeline.
+
+    ``operands`` are this rank's chunks (they ride the transport
+    together); ``fold(carry, bufs, step, owner)`` consumes the chunk
+    owned by rank ``owner`` at each step. Returns the final carry.
+
+    ring:      chunks move one hop per step; the permute of step s+1's
+               chunk overlaps the fold of step s (Fig. 7 swizzle).
+    one_shot:  every transfer issued up-front at distinct offsets; folds
+               consume chunks in ring-distance order (Alg. 4).
+    """
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    carry = init
+    if transport == "one_shot":
+        for s in range(w):
+            bufs = operands if s == 0 else tuple(
+                offset_permute(x, axis, s) for x in operands
+            )
+            carry = fold(carry, bufs, s, lax.rem(me - s + w, w))
+        return carry
+    if transport != "ring":
+        raise ValueError(f"ag_pipeline: unknown transport {transport!r}")
+    bufs = operands
+    for s in range(w):
+        carry = fold(carry, bufs, s, lax.rem(me - s + w, w))
+        if s != w - 1:
+            # the next chunk rides the ring while this fold's FLOPs retire
+            bufs = _advance(bufs, axis)
+    return carry
+
+
+def bidir_ag_pipeline(
+    operands: Tuple[Array, ...],
+    fold: Callable[[Any, Tuple[Array, ...], int, Array, int], Any],
+    init: Any,
+    axis: str,
+):
+    """Bidirectional-ring AG pipeline (schedules.bidir_ag_order).
+
+    Each operand is split in half along dim 0; the top halves travel the
+    forward ring (owner (r - s) % W), the bottom halves the reverse ring
+    (owner (r + s) % W). ``fold(carry, half_bufs, step, owner,
+    direction)`` is called twice per step with direction 0 (forward /
+    top) then 1 (backward / bottom). Each link direction carries half
+    the bytes — 2x effective link bandwidth.
+    """
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    fwd = tuple(x[: x.shape[0] // 2] for x in operands)
+    bwd = tuple(x[x.shape[0] // 2 :] for x in operands)
+    carry = init
+    for s in range(w):
+        carry = fold(carry, fwd, s, lax.rem(me - s + w, w), 0)
+        carry = fold(carry, bwd, s, lax.rem(me + s, w), 1)
+        if s != w - 1:
+            fwd = _advance(fwd, axis)
+            bwd = _advance(bwd, axis, reverse=True)
+    return carry
+
+
+def two_level_ag_pipeline(
+    operands: Tuple[Array, ...],
+    fold: Callable[[Any, Tuple[Array, ...], int, Array], Any],
+    init: Any,
+    inner_axis: str,
+    outer_axis: str,
+):
+    """Hierarchical AG (Fig. 10 / schedules.hierarchical_ag_schedule).
+
+    Outer step s works on pod region (pod - s) % Wo — own pod first, so
+    compute starts on local data while peer-pod chunks stream over the
+    slow links; the single outer hop per region overlaps the next
+    region's full inner ring. ``owner`` passed to ``fold`` is the
+    linearized (outer * Wi + inner) rank whose chunk is being consumed.
+    """
+    wo = lax.axis_size(outer_axis)
+    wi = lax.axis_size(inner_axis)
+    oid = lax.axis_index(outer_axis)
+    iid = lax.axis_index(inner_axis)
+    carry = init
+    outer_bufs = operands
+    for so in range(wo):
+        region = lax.rem(oid - so + wo, wo)
+        inner_bufs = outer_bufs
+        for si in range(wi):
+            owner = region * wi + lax.rem(iid - si + wi, wi)
+            carry = fold(carry, inner_bufs, so * wi + si, owner)
+            if si != wi - 1:
+                inner_bufs = _advance(inner_bufs, inner_axis)
+        if so != wo - 1:
+            # slow-link hop overlaps the next region's inner ring
+            outer_bufs = _advance(outer_bufs, outer_axis)
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# RS-side pipelines: the accumulator rides the transport
+# ---------------------------------------------------------------------------
+
+
+def rs_pipeline(
+    compute_block: Callable[[Array, int], Array],
+    axis: str,
+    *,
+    transport: str = "ring",
+) -> Array:
+    """Generic ReduceScatter-style pipeline.
+
+    ``compute_block(blk, step)`` returns the (f32) partial sum this rank
+    contributes to output block ``blk``. Returns this rank's fully
+    reduced block.
+
+    ring:      Alg. 3 — rank r computes block (r - s - 1) % W at step s,
+               adds the accumulator arriving from r-1 and forwards it;
+               the permute overlaps the next block's compute.
+    one_shot:  every peer's partial issued up-front at distinct offsets
+               (low-latency structure); the owner sums arrivals.
+    """
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    if transport == "one_shot":
+        acc = compute_block(me, 0)
+        for off in range(1, w):
+            tgt = lax.rem(me + off, w)
+            # my partial for rank tgt's block travels distance `off`; the
+            # arrival (from rank me - off) is that rank's partial for MY
+            # block. No serial dependency between the W-1 transfers.
+            acc = acc + offset_permute(compute_block(tgt, off), axis, off)
+        return acc
+    if transport != "ring":
+        raise ValueError(f"rs_pipeline: unknown transport {transport!r}")
+    acc = None
+    for s in range(w):
+        blk = lax.rem(me - s - 1 + 2 * w, w)
+        partial = compute_block(blk, s)
+        if acc is None:
+            acc = partial
+        else:
+            # the permute of the previous accumulator overlaps this compute
+            acc = partial + ring_permute(acc, axis)
+    return acc
+
+
+def bidir_rs_pipeline(
+    compute_block: Callable[[Array, int, int], Array],
+    axis: str,
+) -> Tuple[Array, Array]:
+    """Bidirectional-ring RS (schedules.bidir_rs_order): two accumulators,
+    one per ring direction, each carrying half the per-block output
+    (caller splits columns/rows across directions and concatenates the
+    returned (acc_fwd, acc_bwd) pair).
+
+    ``compute_block(blk, step, direction)`` returns the partial for block
+    ``blk`` restricted to ``direction``'s half. Hand-off invariants:
+    p_f(r+1, s+1) == p_f(r, s) and p_b(r-1, s+1) == p_b(r, s).
+    """
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    acc_f = acc_r = None
+    for s in range(w):
+        blk_f = lax.rem(me - s - 1 + 2 * w, w)
+        blk_r = lax.rem(me + s + 1, w)
+        pf = compute_block(blk_f, s, 0)
+        pr = compute_block(blk_r, s, 1)
+        acc_f = pf if acc_f is None else pf + ring_permute(acc_f, axis)
+        acc_r = pr if acc_r is None else pr + ring_permute(acc_r, axis, reverse=True)
+    return acc_f, acc_r
+
+
+def two_level_rs_pipeline(
+    compute_block: Callable[[Array, int], Array],
+    inner_axis: str,
+    outer_axis: str,
+) -> Array:
+    """Hierarchical RS (Fig. 10 / Alg. 5): outer step s reduces — over the
+    inner ring — the partials for pod region (pod - s - 1) % Wo (peer
+    pods first, own pod last), then forwards the inter-pod accumulator;
+    the slow-link transfer overlaps the next region's Wi computes.
+    ``compute_block(blk, step)`` takes a linearized (region * Wi + inner)
+    block id."""
+    wo = lax.axis_size(outer_axis)
+    wi = lax.axis_size(inner_axis)
+    oid = lax.axis_index(outer_axis)
+    iid = lax.axis_index(inner_axis)
+    outer_acc = None
+    for so in range(wo):
+        region = lax.rem(oid - so - 1 + 2 * wo, wo)
+        inner_acc = None
+        for si in range(wi):
+            blk = region * wi + lax.rem(iid - si - 1 + 2 * wi, wi)
+            partial = compute_block(blk, so * wi + si)
+            if inner_acc is None:
+                inner_acc = partial
+            else:
+                inner_acc = partial + ring_permute(inner_acc, inner_axis)
+        if outer_acc is None:
+            outer_acc = inner_acc
+        else:
+            outer_acc = inner_acc + ring_permute(outer_acc, outer_axis)
+    return outer_acc
+
+
+# ---------------------------------------------------------------------------
+# AllToAll and allreduce pipelines
+# ---------------------------------------------------------------------------
+
+
+def a2a_pipeline(xs: Array, axis: str, *, transport: str = "one_shot") -> Array:
+    """AllToAll over the leading dim: ``xs[i]`` is this rank's block
+    destined for rank i; returns ``out`` with ``out[j]`` = the block rank
+    j sent to this rank.
+
+    one_shot: the paper's low-latency decomposition — all W-1 one-sided
+    sends issued up-front with distinct ring offsets. xla: the monolithic
+    ``lax.all_to_all`` baseline.
+    """
+    if transport == "xla":
+        return lax.all_to_all(xs, axis, split_axis=0, concat_axis=0, tiled=False)
+    if transport != "one_shot":
+        raise ValueError(f"a2a_pipeline: unknown transport {transport!r}")
+    w = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    mine = lax.dynamic_slice_in_dim(xs, me, 1, axis=0)
+    out = jnp.zeros_like(xs)
+    out = lax.dynamic_update_slice_in_dim(out, mine, me, axis=0)
+    for off in range(1, w):
+        tgt = lax.rem(me + off, w)
+        send = lax.dynamic_slice_in_dim(xs, tgt, 1, axis=0)
+        recv = offset_permute(send, axis, off)  # arrives from rank me - off
+        out = lax.dynamic_update_slice_in_dim(
+            out, recv, lax.rem(me - off + w, w), axis=0
+        )
+    return out
+
+
+def ring_allreduce(x: Array, axis: str, *, acc_dtype=jnp.float32) -> Array:
+    """Ring all-reduce of same-shaped per-rank values (W-1 hops); the
+    gradient-sync pattern for params replicated across pods."""
+    def fold(acc, bufs, s, owner):
+        del s, owner
+        return acc + bufs[0].astype(acc_dtype)
+
+    total = ag_pipeline(
+        (x,), fold, jnp.zeros(x.shape, acc_dtype), axis, transport="ring"
+    )
+    return total.astype(x.dtype)
+
+
+def gather_pipeline(x: Array, axis: str, *, transport: str = "ring") -> Array:
+    """Decomposed AllGather along dim 0: (chunk, ...) -> (W * chunk, ...),
+    owner-major. The ring flavor is Alg. 1/2's push-ring; one_shot is the
+    low-latency Alg. 4 structure."""
+    w = lax.axis_size(axis)
+    chunk = x.shape[0]
+    out0 = jnp.zeros((chunk * w,) + x.shape[1:], x.dtype)
+
+    def fold(out, bufs, s, owner):
+        del s
+        start = (owner * chunk,) + (0,) * (x.ndim - 1)
+        return lax.dynamic_update_slice(out, bufs[0], start)
+
+    return ag_pipeline((x,), fold, out0, axis, transport=transport)
+
+
+def stack_gather_pipeline(x: Array, axis: str, *, transport: str = "one_shot") -> Array:
+    """AllGather with a NEW leading rank dim: (...) -> (W, ...). The
+    small-message combine used by distributed flash decode."""
+    w = lax.axis_size(axis)
+    out0 = jnp.zeros((w,) + x.shape, x.dtype)
+
+    def fold(out, bufs, s, owner):
+        del s
+        return lax.dynamic_update_slice(out, bufs[0][None], (owner,) + (0,) * x.ndim)
+
+    return ag_pipeline((x,), fold, out0, axis, transport=transport)
+
+
+# ---------------------------------------------------------------------------
+# Mode registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapSpec:
+    """One overlapped op's declaration in the mode registry.
+
+    name        op identifier (the key used by ParallelConfig.mode_for,
+                the tuner, and the property tests)
+    kind        "ag" | "rs" | "gather" | "a2a" | "attn" | "combine"
+    transports  engine transports this op supports
+    baseline    the monolithic fallback mode name ("none" = XLA
+                collective + compute, "xla" = builtin collective)
+    default     transport chosen when an unsupported mode is requested
+    fwd         optional: fwd(static: dict, *tensors) -> out, routed
+                through the shared custom_vjp when ``bwd`` is set
+    bwd         optional: bwd(static: dict, residuals, cotangent) ->
+                per-tensor gradients (the op's dual overlapped op)
+    """
+
+    name: str
+    kind: str
+    transports: Tuple[str, ...]
+    baseline: str = "none"
+    default: str = "ring"
+    fwd: Optional[Callable] = None
+    bwd: Optional[Callable] = None
+
+
+_REGISTRY: Dict[str, OverlapSpec] = {}
+
+
+def register(
+    name: str,
+    *,
+    kind: str,
+    transports: Sequence[str],
+    baseline: str = "none",
+    default: str = "ring",
+    fwd: Optional[Callable] = None,
+    bwd: Optional[Callable] = None,
+) -> OverlapSpec:
+    for t in transports:
+        if t not in TRANSPORTS:
+            raise ValueError(f"{name}: unknown transport {t!r}")
+    if default not in transports:
+        raise ValueError(f"{name}: default {default!r} not in {transports}")
+    spec = OverlapSpec(name, kind, tuple(transports), baseline, default, fwd, bwd)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def registry() -> Mapping[str, OverlapSpec]:
+    """The live op registry (populated on import of the op modules)."""
+    return dict(_REGISTRY)
+
+
+def get(name: str) -> OverlapSpec:
+    return _REGISTRY[name]
+
+
+def transports_for(name: str, *, include_baseline: bool = False) -> Tuple[str, ...]:
+    spec = _REGISTRY[name]
+    if include_baseline:
+        return (spec.baseline,) + spec.transports
+    return spec.transports
+
+
+def resolve_mode(name: str, requested: str) -> str:
+    """Clamp a requested overlap mode to what ``name`` supports.
+
+    The baseline name passes through (explicitly asking for the
+    monolithic path); a supported transport passes through; anything
+    else falls back to the op's registered default (e.g. a global
+    ``overlap_mode="ring"`` resolves to "one_shot" for a2a_ep, which has
+    no ring transport)."""
+    spec = _REGISTRY[name]
+    if requested == spec.baseline or requested in spec.transports:
+        return requested
+    return spec.default
+
+
+# ---------------------------------------------------------------------------
+# The shared custom_vjp: differentiability implemented once
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _diff_apply(name: str, static: Tuple[Tuple[str, Any], ...], *tensors):
+    return _REGISTRY[name].fwd(dict(static), *tensors)
+
+
+def _diff_fwd(name, static, *tensors):
+    return _diff_apply(name, static, *tensors), tensors
+
+
+def _diff_bwd(name, static, residuals, g):
+    return tuple(_REGISTRY[name].bwd(dict(static), residuals, g))
+
+
+_diff_apply.defvjp(_diff_fwd, _diff_bwd)
+
+
+def apply(name: str, *tensors, **static):
+    """Run a registered op. Ops with a ``bwd`` rule are routed through the
+    ONE shared custom_vjp (their backward is their dual overlapped ring,
+    O(1) permute buffers instead of autodiff's O(W)); ops without one
+    differentiate through the pipeline directly. ``static`` values must
+    be hashable (mode strings, axis names, ints, dtypes)."""
+    spec = _REGISTRY[name]
+    if spec.fwd is None:
+        raise ValueError(f"{name} has no registered fwd implementation")
+    if spec.bwd is None:
+        return spec.fwd(static, *tensors)
+    return _diff_apply(name, tuple(sorted(static.items())), *tensors)

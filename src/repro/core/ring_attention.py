@@ -1,18 +1,22 @@
-"""Ring attention (context parallelism) — the paper's overlap structure
-applied to attention itself.
+"""Ring attention (context parallelism) — the engine's AG pipeline applied
+to attention itself.
 
 Sequence is sharded along ``axis`` (heads REPLICATED on that axis —
 compose with TP on a different axis). Each rank keeps its Q block
-resident; K/V blocks ride the ring, one hop per step, exactly like the
-AG+GEMM data chunks of Fig. 7 — the ppermute of block s+1 overlaps the
-blockwise-softmax compute of block s. Per-rank memory is O(S_loc) instead
-of O(S): this is the enabler for long-context (500k+) TRAINING, which
+resident; K/V blocks ride the engine transport ("ring": one hop per
+step, exactly like the AG+GEMM data chunks of Fig. 7 — the ppermute of
+block s+1 overlaps the blockwise-softmax compute of block s; "one_shot":
+all K/V blocks issued up-front, the low-latency variant for short
+sequences). Per-rank memory is O(S_loc) instead of O(S) under the ring
+transport: this is the enabler for long-context (500k+) TRAINING, which
 the paper's decode-side FlashDecode+AG does not cover.
 
-Blockwise online softmax carries (m, l, acc) in f32; causal masking uses
-global offsets, and fully-future blocks contribute nothing (compute is
-spent for SPMD uniformity — on TPU the skipped-block optimization would
-be a per-step `lax.cond`, noted in EXPERIMENTS).
+The blockwise online softmax carries (m, l, acc) in f32 as the
+pipeline's fold state; causal masking uses global offsets derived from
+the fold's ``owner``, and fully-future blocks contribute nothing
+(compute is spent for SPMD uniformity — on TPU the skipped-block
+optimization would be a per-step ``lax.cond``, noted in EXPERIMENTS).
+Registry entry: "ring_attention".
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .primitives import ring_permute
+from . import overlap as ov
 
 Array = jax.Array
 
@@ -34,8 +38,10 @@ def ring_attention(
     *,
     causal: bool = True,
     scale: float | None = None,
+    mode: str = "ring",
 ) -> Array:
     """Returns (B, H, S_loc, D): attention over the GLOBAL sequence."""
+    mode = ov.resolve_mode("ring_attention", mode)
     b, h, s_loc, d = q.shape
     hkv = k.shape[1]
     group = h // hkv
@@ -43,16 +49,34 @@ def ring_attention(
     w = lax.axis_size(axis)
     me = lax.axis_index(axis)
 
+    if mode == "none":
+        # monolithic baseline: gather the full K/V, one softmax pass
+        kf = jnp.repeat(
+            lax.all_gather(k, axis, axis=2, tiled=True).astype(jnp.float32),
+            group, axis=1)
+        vf = jnp.repeat(
+            lax.all_gather(v, axis, axis=2, tiled=True).astype(jnp.float32),
+            group, axis=1)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kf)
+        if causal:
+            rows_g = me * s_loc + jnp.arange(s_loc)
+            mask = rows_g[:, None] >= jnp.arange(s_loc * w)[None, :]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
     qf = q.astype(jnp.float32) * scale
     rows = me * s_loc + jnp.arange(s_loc)  # global q positions
 
-    m = jnp.full((b, h, s_loc), -1e30, jnp.float32)
-    l = jnp.zeros((b, h, s_loc), jnp.float32)
-    acc = jnp.zeros((b, h, s_loc, d), jnp.float32)
+    init = (
+        jnp.full((b, h, s_loc), -1e30, jnp.float32),  # running max
+        jnp.zeros((b, h, s_loc), jnp.float32),  # running sum
+        jnp.zeros((b, h, s_loc, d), jnp.float32),  # weighted-value acc
+    )
 
-    buf_k, buf_v = k, v
-    for s in range(w):
-        owner = lax.rem(me - s + w, w)  # whose KV block we hold (Fig. 7)
+    def fold(carry, bufs, s, owner):
+        m, l, acc = carry
+        buf_k, buf_v = bufs
         kk = jnp.repeat(buf_k.astype(jnp.float32), group, axis=1)
         vv = jnp.repeat(buf_v.astype(jnp.float32), group, axis=1)
         logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kk)
@@ -65,9 +89,11 @@ def ring_attention(
         alpha = jnp.exp(m - m_new)
         l = l * alpha + jnp.sum(p, axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
-        m = m_new
-        if s != w - 1:
-            # next KV block rides the ring while this block's FLOPs retire
-            buf_k = ring_permute(buf_k, axis)
-            buf_v = ring_permute(buf_v, axis)
+        return m_new, l, acc
+
+    _, l, acc = ov.ag_pipeline((k, v), fold, init, axis, transport=mode)
     return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+ov.register("ring_attention", kind="attn", transports=("ring", "one_shot"),
+            baseline="none", default="ring")

@@ -60,6 +60,16 @@ def bidir_ag_order(world: int, rank: int) -> List[Tuple[int, int]]:
     return [((rank - s) % world, (rank + s) % world) for s in range(world)]
 
 
+def bidir_rs_order(world: int, rank: int) -> List[Tuple[int, int]]:
+    """Bidirectional-ring RS: (forward_block, backward_block) pairs per
+    step. The forward accumulator (carrying one output half) follows the
+    Alg. 3 order (rank - s - 1); the backward accumulator mirrors it on
+    the reverse ring (rank + s + 1). Each direction's hand-off invariant
+    matches its ring: p_f(r+1, s+1) == p_f(r, s) and
+    p_b(r-1, s+1) == p_b(r, s)."""
+    return [((rank - s - 1) % world, (rank + s + 1) % world) for s in range(world)]
+
+
 # ---------------------------------------------------------------------------
 # 2-level (multi-pod / inter-node) schedules — Fig. 10
 # ---------------------------------------------------------------------------
@@ -162,4 +172,105 @@ def validate_ring_rs(world: int) -> bool:
                 return False
         if order[-1] != r:
             return False
+    return True
+
+
+def validate_bidir_ag(world: int) -> bool:
+    """Both half-chunk streams are permutations, start on local data, and
+    never compute a half before its transport can have delivered it: the
+    forward half of chunk c arrives on rank r at step (r - c) % W (one
+    forward hop per step) and the backward half at step (c - r) % W."""
+    for r in range(world):
+        pairs = bidir_ag_order(world, r)
+        fwd = [p[0] for p in pairs]
+        bwd = [p[1] for p in pairs]
+        if not (is_permutation(fwd, world) and is_permutation(bwd, world)):
+            return False
+        if fwd[0] != r or bwd[0] != r:
+            return False
+        for s, (cf, cb) in enumerate(pairs):
+            if s < (r - cf) % world or s < (cb - r) % world:
+                return False
+    return True
+
+
+def validate_bidir_rs(world: int) -> bool:
+    """Both accumulator hand-offs line up — forward rides rank->rank+1
+    (p_f(r+1, s+1) == p_f(r, s)), backward rides rank->rank-1
+    (p_b(r-1, s+1) == p_b(r, s)) — and each rank finishes on its own
+    block in both directions."""
+    for r in range(world):
+        pairs = bidir_rs_order(world, r)
+        fwd = [p[0] for p in pairs]
+        bwd = [p[1] for p in pairs]
+        if not (is_permutation(fwd, world) and is_permutation(bwd, world)):
+            return False
+        nxt_f = [p[0] for p in bidir_rs_order(world, (r + 1) % world)]
+        nxt_b = [p[1] for p in bidir_rs_order(world, (r - 1) % world)]
+        for s in range(world - 1):
+            if nxt_f[s + 1] != fwd[s] or nxt_b[s + 1] != bwd[s]:
+                return False
+        if fwd[-1] != r or bwd[-1] != r:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# 2-level flat orders + validators (the engine's two_level transports)
+# ---------------------------------------------------------------------------
+
+def two_level_ag_order(
+    n_outer: int, n_inner: int, outer_rank: int, inner_rank: int
+) -> List[int]:
+    """Flatten hierarchical_ag_schedule to GLOBAL chunk ids
+    (region * n_inner + inner_chunk), one per engine step."""
+    out: List[int] = []
+    for step in hierarchical_ag_schedule(n_outer, n_inner, outer_rank, inner_rank):
+        out.extend(step.region * n_inner + c for c in step.inner_order)
+    return out
+
+
+def two_level_rs_order(
+    n_outer: int, n_inner: int, outer_rank: int, inner_rank: int
+) -> List[int]:
+    """Flatten hierarchical_rs_schedule to GLOBAL block ids."""
+    out: List[int] = []
+    for step in hierarchical_rs_schedule(n_outer, n_inner, outer_rank, inner_rank):
+        out.extend(step.region * n_inner + c for c in step.inner_order)
+    return out
+
+
+def validate_two_level_ag(n_outer: int, n_inner: int) -> bool:
+    """Every rank's flat order covers each global chunk exactly once and
+    starts on its OWN chunk (Fig. 10: own pod's inner ring first, so
+    compute begins with zero transport latency)."""
+    total = n_outer * n_inner
+    for ro in range(n_outer):
+        for ri in range(n_inner):
+            order = two_level_ag_order(n_outer, n_inner, ro, ri)
+            if not is_permutation(order, total):
+                return False
+            if order[0] != ro * n_inner + ri:
+                return False
+    return True
+
+
+def validate_two_level_rs(n_outer: int, n_inner: int) -> bool:
+    """Flat RS order is a permutation, each rank's own block comes LAST
+    (its inter-pod transfer does not exist), and within every region the
+    inner hand-off matches the 1-level ring invariant."""
+    total = n_outer * n_inner
+    for ro in range(n_outer):
+        for ri in range(n_inner):
+            order = two_level_rs_order(n_outer, n_inner, ro, ri)
+            if not is_permutation(order, total):
+                return False
+            if order[-1] != ro * n_inner + ri:
+                return False
+            nxt = two_level_rs_order(n_outer, n_inner, ro, (ri + 1) % n_inner)
+            for so in range(n_outer):
+                base = so * n_inner
+                for si in range(n_inner - 1):
+                    if nxt[base + si + 1] != order[base + si]:
+                        return False
     return True

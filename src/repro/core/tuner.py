@@ -20,16 +20,17 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Iterable, Optional, Sequence
+from typing import Callable, Dict, Iterable, Optional, Sequence
 
 import jax
 
 from .. import hw
+from . import overlap
 
 
 @dataclass(frozen=True)
 class OverlapChoice:
-    mode: str  # "ring" | "bidir" | "one_shot" | "none"
+    mode: str  # a transport from the engine registry, or the op baseline
     chunks_per_rank: int
     # analytic estimates (seconds) for the roofline log
     t_compute: float
@@ -49,16 +50,22 @@ def analytic_ag_matmul(
     *,
     dtype_bytes: int = 2,
     spec: hw.HardwareSpec = hw.DEFAULT,
-    candidates: Sequence[str] = ("none", "ring", "bidir", "one_shot"),
+    candidates: Optional[Sequence[str]] = None,
     max_sub: int = 4,
 ) -> OverlapChoice:
     """Pick the overlap strategy for AllGather-GEMM.
+
+    Candidates default to the engine registry's ag_matmul transports
+    (baseline included) — adding a transport to the registry
+    automatically enrolls it here.
 
     Per ring step: compute = dot(m_loc, k, n_loc); comm = ship one chunk
     (m_loc * k * bytes) over one link (ring) or both directions (bidir).
     one_shot: all (W-1) chunks in flight at once across the torus links —
     bandwidth-limited by links/chip, latency-optimal for small messages.
     """
+    if candidates is None:
+        candidates = overlap.transports_for("ag_matmul", include_baseline=True)
     chunk_bytes = m_loc * k * dtype_bytes
     t_dot = _dot_time(m_loc, k, n_loc, spec)
     best: Optional[OverlapChoice] = None
@@ -102,7 +109,15 @@ def analytic_ag_matmul(
                                  t_comp, t_comm, t_total)
             if best is None or cand.t_total < best.t_total:
                 best = cand
-    assert best is not None
+    if best is None:
+        # every candidate was infeasible (e.g. bidir with odd m_loc):
+        # mirror the engine, which degrades such requests to ring
+        t_step_comm = chunk_bytes / spec.ici_link_bandwidth
+        best = OverlapChoice(
+            "ring", 1, world * t_dot,
+            (world - 1) * t_step_comm,
+            t_step_comm + world * max(t_step_comm, t_dot),
+        )
     return best
 
 
@@ -114,16 +129,76 @@ def analytic_matmul_rs(
     *,
     dtype_bytes: int = 2,
     spec: hw.HardwareSpec = hw.DEFAULT,
+    candidates: Optional[Sequence[str]] = None,
 ) -> OverlapChoice:
+    """Pick the overlap strategy for GEMM-ReduceScatter. Candidates
+    default to the engine registry's matmul_rs transports (baseline
+    included)."""
+    if candidates is None:
+        candidates = overlap.transports_for("matmul_rs", include_baseline=True)
     m_blk = m // world
     t_dot = _dot_time(m_blk, k_loc, n, spec)
     acc_bytes = m_blk * n * 4  # f32 accumulator rides the ring
     t_step_comm = acc_bytes / spec.ici_link_bandwidth
-    t_ring = t_step_comm + world * max(t_dot, t_step_comm)
-    t_none = world * t_dot + (world - 1) * acc_bytes / spec.ici_link_bandwidth
-    if t_ring <= t_none:
-        return OverlapChoice("ring", 1, world * t_dot, (world - 1) * t_step_comm, t_ring)
-    return OverlapChoice("none", 1, world * t_dot, (world - 1) * t_step_comm, t_none)
+    t_comp = world * t_dot
+    t_comm = (world - 1) * t_step_comm
+    best: Optional[OverlapChoice] = None
+    for mode in candidates:
+        if mode == "none":
+            # serialized: all dots, then the monolithic reduce-scatter
+            t_total = t_comp + t_comm
+        elif mode == "ring":
+            t_total = t_step_comm + world * max(t_dot, t_step_comm)
+        elif mode == "bidir":
+            if world < 3:
+                continue
+            # half the accumulator columns per direction, both links busy
+            t_total = t_step_comm / 2 + world * max(t_dot, t_step_comm / 2)
+        elif mode == "one_shot":
+            # W-1 full partials in flight at once across all links: latency
+            # optimal, bandwidth hungry ((W-1)x the wire bytes of ring's
+            # steady state per link)
+            t_total = t_comp + (world - 1) * acc_bytes / (
+                spec.ici_link_bandwidth * spec.ici_links
+            )
+        else:
+            continue
+        cand = OverlapChoice(mode, 1, t_comp, t_comm, t_total)
+        if best is None or cand.t_total < best.t_total:
+            best = cand
+    if best is None:
+        # every candidate was infeasible (e.g. bidir with world < 3):
+        # mirror the engine, which degrades such requests to ring
+        t_total = t_step_comm + world * max(t_dot, t_step_comm)
+        best = OverlapChoice("ring", 1, t_comp, t_comm, t_total)
+    return best
+
+
+def recommend_overlap_modes(
+    m: int,
+    k: int,
+    n: int,
+    world: int,
+    *,
+    dtype_bytes: int = 2,
+    spec: hw.HardwareSpec = hw.DEFAULT,
+) -> Dict[str, object]:
+    """Analytic per-op mode map for a layer with GLOBAL GEMM dims (m, k, n)
+    sharded over ``world`` TP ranks — the input for
+    ``ParallelConfig.overlap_modes`` (launch/steps.default_pcfg consumes
+    this under ``overlap_mode="auto"``).
+
+    Returns {"ag_matmul": mode, "matmul_rs": mode, "ag_chunks": int}.
+    The latency-bound ops (a2a_ep, flash_decode) keep their registry
+    defaults (one_shot) — their message sizes do not depend on the layer
+    dims the analytic model sees.
+    """
+    ag = analytic_ag_matmul(max(1, m // world), k, max(1, n // world), world,
+                            dtype_bytes=dtype_bytes, spec=spec)
+    rs = analytic_matmul_rs(m, max(1, k // world), n, world,
+                            dtype_bytes=dtype_bytes, spec=spec)
+    return {"ag_matmul": ag.mode, "matmul_rs": rs.mode,
+            "ag_chunks": ag.chunks_per_rank}
 
 
 # ---------------------------------------------------------------------------

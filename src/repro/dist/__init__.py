@@ -1,0 +1,9 @@
+"""repro.dist — cross-pod distributed utilities (slow-link regime).
+
+- compress: quantized gradient all-reduce over the pod axis (int8 +
+  error feedback), built on the ring-pipeline engine.
+- pipeline: SPMD GPipe pipeline parallelism over a mesh axis.
+"""
+from . import compress, pipeline
+
+__all__ = ["compress", "pipeline"]

@@ -1,0 +1,75 @@
+"""Compressed gradient all-reduce for the pod axis (the slow links).
+
+Cross-pod gradient sync moves full parameter-sized tensors over the
+lowest-bandwidth links in the system, so it is the natural place for
+lossy compression. ``pod_allreduce_int8`` implements the standard
+production recipe:
+
+  1. error feedback: add the residual carried from the previous step to
+     the fresh gradient (so quantization error is compensated over time
+     instead of accumulating as bias);
+  2. per-row symmetric int8 quantization: scale = max|row| / 127 — one
+     f32 scale per row, 4x fewer wire bytes than f32 gradients;
+  3. ring all-reduce of the (int8 payload, scale) pairs over the pod
+     axis via the overlap engine's AG pipeline: W-1 hops, each hop
+     carrying quantized bytes, each arrival dequantized and accumulated
+     in f32;
+  4. record the new local residual (bounded by half an LSB of the local
+     scale) as the next step's error-feedback state.
+
+Every pod ends with the same (approximate) sum; the approximation error
+is one quantization step per contributor, which the error feedback
+re-injects next step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import overlap as ov
+
+Array = jax.Array
+
+
+def quantize_int8(g: Array) -> Tuple[Array, Array]:
+    """Per-row symmetric int8 quantization along the last axis.
+
+    Returns (q int8, scale f32 with keepdims); g ≈ q * scale.
+    """
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)  # all-zero rows: avoid div-by-zero
+    q = jnp.clip(jnp.round(gf / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def pod_allreduce_int8(g: Array, ef: Array, axis: str) -> Tuple[Array, Array]:
+    """Int8 ring all-reduce over ``axis`` with error feedback.
+
+    g:  this pod's local gradient (any float dtype).
+    ef: carried error-feedback state (f32, same shape as g).
+    Returns (summed gradient in g.dtype, new error-feedback state).
+    Call inside shard_map with ``axis`` mapped to the pod mesh axis.
+    """
+    gf = g.astype(jnp.float32) + ef
+    q, scale = quantize_int8(gf)
+    new_ef = gf - dequantize_int8(q, scale)  # |new_ef| <= scale / 2
+
+    def fold(acc, bufs, s, owner):
+        del s, owner
+        qq, ss = bufs
+        return acc + dequantize_int8(qq, ss)
+
+    # (q, scale) ride the ring together: W-1 hops of int8 payload (+ one
+    # f32 scale per row), dequantize-and-add on arrival — the engine's AG
+    # pipeline with an accumulator carry.
+    total = ov.ag_pipeline(
+        (q, scale), fold, jnp.zeros(gf.shape, jnp.float32), axis, transport="ring"
+    )
+    return total.astype(g.dtype), new_ef

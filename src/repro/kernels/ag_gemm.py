@@ -35,6 +35,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import _compat
+
 
 def _ag_gemm_kernel(
     a_ref,  # (m_loc, k)  ANY — my A shard
@@ -150,6 +152,13 @@ def ag_gemm(
     out_dtype = out_dtype or a_blk.dtype
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if interpret and not _compat.PALLAS_REMOTE_INTERPRET:
+        # This jax's Pallas interpreter cannot emulate remote DMAs /
+        # signals; validate the same ring schedule through the graph-level
+        # engine pipeline instead.
+        from ..core import collective_matmul as cm
+
+        return cm.ag_matmul(a_blk, b_loc, axis, mode="ring", out_dtype=out_dtype)
     interp = pltpu.InterpretParams() if interpret else False
     kernel = functools.partial(
         _ag_gemm_kernel,

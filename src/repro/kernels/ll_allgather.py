@@ -23,6 +23,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import _compat
+
 
 def _ll_ag_kernel(
     x_ref,  # (m_loc, n) ANY
@@ -88,6 +90,12 @@ def ll_allgather(
     m_loc, n = x.shape
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if interpret and not _compat.PALLAS_REMOTE_INTERPRET:
+        # no remote-DMA emulation in this jax's interpreter: same one-shot
+        # structure via the graph-level engine pipeline.
+        from ..core import overlap as ov
+
+        return ov.gather_pipeline(x, axis, transport="one_shot")
     interp = pltpu.InterpretParams() if interpret else False
     kernel = functools.partial(_ll_ag_kernel, axis=axis, world=world, m_loc=m_loc)
     return pl.pallas_call(

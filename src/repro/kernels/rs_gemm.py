@@ -23,6 +23,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import _compat
+
 
 def _rs_gemm_kernel(
     a_ref,  # (m, k_loc) ANY — my A shard (K sharded)
@@ -122,6 +124,12 @@ def rs_gemm(
     out_dtype = out_dtype or a_loc.dtype
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if interpret and not _compat.PALLAS_REMOTE_INTERPRET:
+        # no remote-DMA emulation in this jax's interpreter: same Alg. 3
+        # schedule via the graph-level engine pipeline.
+        from ..core import collective_matmul as cm
+
+        return cm.matmul_rs(a_loc, b_loc, axis, mode="ring", out_dtype=out_dtype)
     interp = pltpu.InterpretParams() if interpret else False
     kernel = functools.partial(
         _rs_gemm_kernel, axis=axis, world=world, m_blk=m_blk, out_dtype=out_dtype

@@ -80,7 +80,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
         hlo_text=hlo,
         loop_trips=trips,
         model_flops_total=model_flops,
-        links_used={"ring": 1, "bidir": 2, "one_shot": 4, "none": 2}[overlap_mode],
+        links_used={"ring": 1, "bidir": 2, "one_shot": 4, "none": 2}.get(
+            pcfg.mode_for("ag_matmul"), 1),
         backward=training,
     )
     out = json.loads(rep.to_json())
@@ -118,7 +119,7 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--overlap", default="ring",
-                    choices=["ring", "bidir", "one_shot", "none"])
+                    choices=["ring", "bidir", "one_shot", "none", "auto"])
     ap.add_argument("--tag", default="")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", default="reports/dryrun")

@@ -147,6 +147,14 @@ class RooflineReport:
         return json.dumps(asdict(self), indent=1)
 
 
+def normalize_cost(cost) -> dict:
+    """``compiled.cost_analysis()`` returns a dict on current jax and a
+    one-element list of dicts on older builds; accept both."""
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return cost
+
+
 def analyze(
     *,
     arch: str,
@@ -170,6 +178,7 @@ def analyze(
     unscanned head/tail is a small correction, folded into the ratio
     column rather than double-counted.
     """
+    cost = normalize_cost(cost)
     flops_dev = float(cost.get("flops", 0.0)) * loop_trips
     bytes_dev = float(cost.get("bytes accessed", 0.0)) * loop_trips
     coll = parse_collectives(hlo_text, loop_trips=loop_trips)

@@ -39,7 +39,8 @@ def run(args):
     caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_shapes)
 
     eng = Engine(built.fn, params, caches, batch=args.batch,
-                 max_len=args.max_len, seed=0)
+                 max_len=args.max_len, seed=0, pcfg=pcfg)
+    print("overlap modes:", eng.overlap_modes())
     rng = np.random.RandomState(0)
     for i in range(args.requests):
         prompt = rng.randint(1, cfg.vocab_size, size=rng.randint(3, 8)).tolist()

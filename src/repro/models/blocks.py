@@ -299,11 +299,13 @@ def moe_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
         t_c = t_loc // n_chunks
         cap = _capacity(t_c, k, cfg.num_experts, cfg.capacity_factor)
 
+        a2a_mode = pcfg.mode_for("a2a_ep")
+
         def ep_chunk(hc, lc):
             disp, dinfo = mo.topk_dispatch(hc, lc, k, cap)  # (E, cap, D)
-            x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode="one_shot")
+            x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a_mode)
             y_ep = _expert_ffn(cfg, x_ep, wi, wo)  # (E_loc, tp*cap, D)
-            back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode="one_shot")
+            back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode=a2a_mode)
             return mo.topk_combine(back, dinfo, out_dtype=dt)
 
         if pcfg.remat != "none":
@@ -332,7 +334,7 @@ def moe_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
         expert_fn = jax.checkpoint(expert_fn)
 
     if tp > 1:
-        full = mo.ag_moe(h, logits, expert_fn, MODEL_AXIS, mode=pcfg.overlap_mode)
+        full = mo.ag_moe(h, logits, expert_fn, MODEL_AXIS, mode=pcfg.mode_for("ag_moe"))
         out = cm.reduce_scatter_chunked(full, MODEL_AXIS)
     else:
         out = expert_fn(h, logits)
@@ -350,9 +352,10 @@ def moe_decode(cfg, pcfg, info, p: dict, x: Array) -> Array:
     cap = _capacity(h.shape[0], k, cfg.num_experts, cfg.capacity_factor)
     disp, dinfo = mo.topk_dispatch(h, logits, k, cap)
     if info.moe_mode == "ep" and pcfg.tp > 1:
-        x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode="one_shot")
+        a2a_mode = pcfg.mode_for("a2a_ep")
+        x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a_mode)
         y_ep = _expert_ffn(cfg, x_ep, wi, wo)
-        back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode="one_shot")
+        back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode=a2a_mode)
         out = mo.topk_combine(back, dinfo, out_dtype=dt)
     else:
         y = _expert_ffn(cfg, disp, wi, wo)

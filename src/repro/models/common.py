@@ -111,7 +111,7 @@ def ag_linear(
     b: Optional[Array] = None,
 ) -> Array:
     """SP -> TP boundary: AllGather-GEMM. Returns (T, cols_loc)."""
-    mode = pcfg.overlap_mode if pcfg.tp > 1 else "none"
+    mode = pcfg.mode_for("ag_matmul") if pcfg.tp > 1 else "none"
     y = cm.ag_matmul(
         x_sp,
         w,
@@ -131,9 +131,7 @@ def rs_linear(
     pcfg: ParallelConfig,
 ) -> Array:
     """TP -> SP boundary: GEMM-ReduceScatter. Returns (T_loc, D)."""
-    mode = pcfg.overlap_mode if pcfg.tp > 1 else "none"
-    if mode == "one_shot":
-        mode = "ring"  # RS has ring / bidir / baseline variants
+    mode = pcfg.mode_for("matmul_rs") if pcfg.tp > 1 else "none"
     return cm.matmul_rs(y_tp, w, MODEL_AXIS, mode=mode, out_dtype=y_tp.dtype)
 
 

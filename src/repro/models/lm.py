@@ -485,7 +485,8 @@ class LM:
         cv = jnp.where(owns, upd_v, cache["v"])
         valid = jnp.clip(cache_len + 1 - me_d * s_shard, 0, s_shard)
         lengths = jnp.full((b,), valid, jnp.int32)
-        o = dfd.distributed_flash_decode(q, ck, cv, lengths, DATA_AXIS, mode="one_shot")
+        o = dfd.distributed_flash_decode(q, ck, cv, lengths, DATA_AXIS,
+                                         mode=pcfg.mode_for("flash_decode"))
         o = o.astype(h.dtype).reshape(b, info.hq_loc * hd)
         out = psum_tp(local_linear(o, pp.wo), pcfg)
         return h + out.reshape(b, 1, d), ck, cv

@@ -29,6 +29,9 @@ class Engine:
     """step_fn(params, caches, cache_len, token) -> (logits, new_caches)
     — the jit(shard_map(decode_step_local)) closure built by the launcher."""
 
+    # decode-path ops whose effective overlap mode the engine reports
+    OVERLAP_OPS = ("ag_matmul", "matmul_rs", "a2a_ep", "flash_decode")
+
     def __init__(
         self,
         step_fn: Callable,
@@ -38,6 +41,7 @@ class Engine:
         max_len: int,
         eos_id: int = -1,
         seed: int = 0,
+        pcfg=None,  # ParallelConfig: per-op overlap-mode provenance
     ):
         self.step_fn = step_fn
         self.params = params
@@ -45,11 +49,19 @@ class Engine:
         self.batch = batch
         self.max_len = max_len
         self.eos_id = eos_id
+        self.pcfg = pcfg
         self.requests: List[Optional[Request]] = [None] * batch
         self.pending: List[Request] = []
         self.cache_len = 0
         self.rng = np.random.RandomState(seed)
         self._prompt_cursor = [0] * batch
+
+    def overlap_modes(self) -> dict:
+        """Effective per-op overlap modes of the compiled decode step
+        (resolved through the engine registry); {} when no pcfg given."""
+        if self.pcfg is None:
+            return {}
+        return {op: self.pcfg.mode_for(op) for op in self.OVERLAP_OPS}
 
     # ------------------------------------------------------------------
     def add(self, req: Request):

@@ -22,8 +22,36 @@ def test_analytic_ag_small_message_prefers_one_shot():
 
 def test_analytic_rs_overlap_wins_when_balanced():
     c = tuner.analytic_matmul_rs(4096, 2048, 8192, world=16)
-    assert c.mode == "ring"
+    # comm-heavy regime: a ring transport (uni- or bidirectional) beats
+    # the serialized baseline and the bandwidth-hungry one_shot
+    assert c.mode in ("ring", "bidir")
     assert c.t_total <= c.t_compute + c.t_comm + 1e-9
+
+
+def test_analytic_candidates_come_from_registry():
+    from repro.core import overlap
+
+    # every transport the registry declares is considered (plus baseline)
+    assert set(overlap.transports_for("ag_matmul", include_baseline=True)) == {
+        "none", "ring", "bidir", "one_shot"}
+    assert set(overlap.transports_for("matmul_rs", include_baseline=True)) == {
+        "none", "ring", "bidir", "one_shot"}
+    # an op-restricted candidate list narrows the search
+    only_ring = tuner.analytic_matmul_rs(4096, 2048, 8192, world=16,
+                                         candidates=("ring",))
+    assert only_ring.mode == "ring"
+
+
+def test_recommend_overlap_modes_resolves_per_op():
+    rec = tuner.recommend_overlap_modes(4096, 8192, 8192, world=16)
+    assert set(rec) == {"ag_matmul", "matmul_rs", "ag_chunks"}
+    from repro.core import overlap
+
+    assert rec["ag_matmul"] in overlap.transports_for(
+        "ag_matmul", include_baseline=True)
+    assert rec["matmul_rs"] in overlap.transports_for(
+        "matmul_rs", include_baseline=True)
+    assert rec["ag_chunks"] >= 1
 
 
 def test_analytic_respects_link_bandwidth():
