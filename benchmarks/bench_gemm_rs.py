@@ -23,16 +23,32 @@ def rows():
         b = jnp.asarray(rng.randn(k, n), jnp.float32)
         base_us = None
         for mode in overlap.transports_for("matmul_rs", include_baseline=True):
-            f = cm.make_sharded(
-                functools.partial(cm.matmul_rs, axis="tp", mode=mode,
-                                  out_dtype=jnp.float32),
-                mesh, (P(None, "tp"), P("tp", None)), P("tp", None))
-            us = time_fn(f, a, b)
-            if mode == "none":
-                base_us = us
-            choice = tuner.analytic_matmul_rs(4096, 12288 // 16, 3072, 16)
-            serial = choice.t_compute + choice.t_comm
-            derived = (f"v5e_speedup={serial / choice.t_total:.2f}x"
-                       f";cpu_speedup={base_us / us:.2f}x")
-            out.append(row(f"gemm_rs/{m}x{k}x{n}/{mode}", us, derived))
+            for backend in overlap.backends_for("matmul_rs"):
+                if overlap.resolve_backend("matmul_rs", backend, mode) != backend:
+                    continue  # no kernel lowering for this mode
+                if backend == "kernel" and m > 512:
+                    # emulated-DMA rows: small shape only (see bench_ag_gemm)
+                    continue
+                f = cm.make_sharded(
+                    functools.partial(cm.matmul_rs, axis="tp", mode=mode,
+                                      backend=backend, out_dtype=jnp.float32),
+                    mesh, (P(None, "tp"), P("tp", None)), P("tp", None))
+                us = time_fn(f, a, b)
+                if mode == "none":
+                    base_us = us
+                choice = tuner.analytic_matmul_rs(4096, 12288 // 16, 3072, 16)
+                serial = choice.t_compute + choice.t_comm
+                derived = (f"v5e_speedup={serial / choice.t_total:.2f}x"
+                           f";cpu_speedup={base_us / us:.2f}x")
+                suffix = "/kernel" if backend == "kernel" else ""
+                out.append(row(f"gemm_rs/{m}x{k}x{n}/{mode}{suffix}", us,
+                               derived))
+        # the rs_chunks sub-chunking knob (mirrors ag_chunks)
+        f = cm.make_sharded(
+            functools.partial(cm.matmul_rs, axis="tp", mode="ring",
+                              chunks_per_rank=2, out_dtype=jnp.float32),
+            mesh, (P(None, "tp"), P("tp", None)), P("tp", None))
+        us = time_fn(f, a, b)
+        out.append(row(f"gemm_rs/{m}x{k}x{n}/ring_sub2", us,
+                       f"cpu_speedup={base_us / us:.2f}x"))
     return out

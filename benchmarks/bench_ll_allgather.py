@@ -27,13 +27,19 @@ def rows():
             "one_shot": functools.partial(cm.all_gather_chunked, axis="x",
                                           mode="one_shot"),
         }
+        if msg_bytes <= 64 * 1024:
+            # the fused LL AllGather shmem kernel (emulated DMA on CPU:
+            # correctness vehicle, benched on small messages only)
+            variants["one_shot/kernel"] = functools.partial(
+                cm.all_gather_chunked, axis="x", mode="one_shot",
+                backend="kernel")
         for name, fn in variants.items():
             f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x", None),
                                       out_specs=P(None, None), check_vma=False))
             us = time_fn(f, x)
             # derived: v5e latency floor — ring pays (W-1) hops, one-shot 1
             hop_us = 1.0  # ~1us ICI hop latency
-            hops = 1 if name == "one_shot" else (w - 1)
+            hops = (w - 1) if name == "ring" else 1
             out.append(row(f"ll_allgather/{msg_bytes}B/{name}", us,
                            f"v5e_latency_floor_us={hops * hop_us:.0f}"))
     return out

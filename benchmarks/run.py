@@ -1,10 +1,11 @@
 """Benchmark harness — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes the machine-readable
-``BENCH_overlap.json`` (one ``{op, mode, world, us_per_call}`` record per
-row) so the perf trajectory is tracked across PRs. Multi-device benches
-need >1 virtual device, so this driver re-execs itself in a subprocess
-with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the flag is
+``BENCH_overlap.json`` (one ``{op, mode, backend, world, us_per_call}``
+record per row) so the perf trajectory is tracked across PRs.
+Multi-device benches need >1 virtual device, so this driver re-execs
+itself in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the flag is
 scoped to that subprocess, never set globally).
 
   Fig. 11/13  bench_ag_gemm        AG+GEMM overlap vs monolithic
@@ -15,11 +16,24 @@ scoped to that subprocess, never set globally).
   Fig. 16     bench_a2a            EP AllToAll dispatch/combine
   Fig. 19     bench_ll_allgather   low-latency AllGather
   (kernels)   bench_kernels        single-device kernel throughput
+
+Regression gate (CI): ``--check`` reruns the suite into a scratch file
+and compares per-record timings against the committed
+``BENCH_overlap.json``. Ratios are normalized by the run's median
+fresh/baseline ratio (the machine-speed factor), so a uniformly slower
+runner passes while a single op regressing relative to the suite fails:
+a row whose normalized slowdown exceeds ``1 + tol`` (``--tolerance``,
+default 1.0 — CPU timing is noisy) or a disappeared record fails the
+run. ``--update`` refreshes the committed baseline instead.
 """
+import argparse
 import json
 import os
 import subprocess
 import sys
+
+_MIN_CHECK_US = 200.0  # ignore sub-200us rows: scheduling noise dominates
+
 
 def _mode_vocabulary():
     """Transport + baseline names, from the engine registry (the single
@@ -33,7 +47,7 @@ def _mode_vocabulary():
 
 
 def parse_row(tag: str, line: str, world: int, modes):
-    """'op/shape/mode,us,derived' -> {op, mode, world, us_per_call} or None."""
+    """'op/shape/mode[/backend],us,derived' -> a BENCH record or None."""
     parts = line.split(",")
     if len(parts) < 2:
         return None
@@ -43,10 +57,15 @@ def parse_row(tag: str, line: str, world: int, modes):
     except ValueError:
         return None
     segs = name.split("/")
+    backend = "graph"
+    if segs[-1] in ("graph", "kernel"):
+        backend = segs[-1]
+        segs = segs[:-1]
     mode = segs[-1] if segs[-1] in modes else ""
     return {
         "op": segs[0],
         "mode": mode,
+        "backend": backend,
         "world": world,
         "us_per_call": us,
         "name": f"{tag}/{name}",
@@ -97,20 +116,86 @@ def _inner() -> None:
     print(f"# wrote {len(records)} records to {out_path}", file=sys.stderr)
 
 
+def check_regressions(baseline_path: str, fresh_path: str,
+                      tolerance: float) -> int:
+    """Compare fresh timings against the committed baseline. Returns the
+    number of failures (regressed or disappeared records).
+
+    The baseline was recorded on a different machine, so absolute
+    microseconds are not comparable — the check normalizes every row's
+    fresh/baseline ratio by the run's MEDIAN ratio (the machine-speed
+    factor) and flags rows whose normalized slowdown exceeds
+    ``1 + tolerance``. A uniformly slower CI runner passes; a single op
+    regressing relative to the rest of the suite fails."""
+    with open(baseline_path) as f:
+        baseline = {r["name"]: r for r in json.load(f)}
+    with open(fresh_path) as f:
+        fresh = {r["name"]: r for r in json.load(f)}
+    failures = 0
+    ratios = {}
+    for name, base in sorted(baseline.items()):
+        got = fresh.get(name)
+        if got is None:
+            print(f"REGRESSION: record disappeared: {name}")
+            failures += 1
+            continue
+        if base["us_per_call"] >= _MIN_CHECK_US:
+            ratios[name] = got["us_per_call"] / max(1e-9, base["us_per_call"])
+    if ratios:
+        ordered = sorted(ratios.values())
+        machine = ordered[len(ordered) // 2]  # median = machine-speed factor
+        print(f"# machine-speed factor vs baseline host: {machine:.2f}x")
+        for name, ratio in sorted(ratios.items()):
+            if ratio > machine * (1.0 + tolerance):
+                print(f"REGRESSION: {name}: {ratio:.2f}x vs baseline "
+                      f"(> {machine * (1.0 + tolerance):.2f}x = "
+                      f"median {machine:.2f}x * {1.0 + tolerance:.2f})")
+                failures += 1
+    new = sorted(set(fresh) - set(baseline))
+    if new:
+        print(f"# {len(new)} new records (not in baseline): first={new[0]}")
+    if failures == 0:
+        print(f"# bench check OK: {len(ratios)} comparable records within "
+              f"{1.0 + tolerance:.2f}x of the machine-speed median")
+    return failures
+
+
 def main() -> None:
     if os.environ.get("_REPRO_BENCH_INNER") == "1":
         _inner()
         return
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--check", action="store_true",
+                    help="compare against committed BENCH_overlap.json; "
+                         "nonzero exit on regression")
+    ap.add_argument("--update", action="store_true",
+                    help="refresh the committed BENCH_overlap.json")
+    ap.add_argument("--tolerance", type=float, default=1.0,
+                    help="allowed slowdown fraction for --check "
+                         "(1.0 = fail above 2x baseline)")
+    args = ap.parse_args()
+
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    baseline = os.path.join(here, "BENCH_overlap.json")
+    out_json = baseline
+    if args.check and not args.update:
+        out_json = os.path.join(here, "BENCH_overlap.fresh.json")
+
     env = dict(os.environ)
     env["_REPRO_BENCH_INNER"] = "1"
+    env["_REPRO_BENCH_JSON"] = out_json
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(here, "src"), here, env.get("PYTHONPATH", "")]
     )
     proc = subprocess.run([sys.executable, "-m", "benchmarks.run"], env=env,
                           cwd=here)
-    sys.exit(proc.returncode)
+    if proc.returncode != 0:
+        sys.exit(proc.returncode)
+    if args.check and not args.update:
+        failures = check_regressions(baseline, out_json, args.tolerance)
+        os.remove(out_json)
+        sys.exit(1 if failures else 0)
 
 
 if __name__ == "__main__":

@@ -17,13 +17,6 @@ import inspect
 
 import jax
 
-# True when this jax ships the TPU Pallas interpreter that can emulate
-# cross-device remote DMAs + semaphore signals (native InterpretParams).
-# When False, the distributed Pallas kernels fall back to the graph-level
-# engine pipelines on CPU (same schedule, lax.ppermute transport).
-PALLAS_REMOTE_INTERPRET = False
-
-
 def _install_shard_map() -> None:
     if hasattr(jax, "shard_map"):
         sig = inspect.signature(jax.shard_map)
@@ -95,12 +88,10 @@ def _install_axis_size() -> None:
 
 
 def _install_pallas_tpu() -> None:
-    global PALLAS_REMOTE_INTERPRET
     try:
         from jax.experimental.pallas import tpu as pltpu
     except Exception:  # pallas not available at all: nothing to backfill
         return
-    PALLAS_REMOTE_INTERPRET = hasattr(pltpu, "InterpretParams")
     if not hasattr(pltpu, "CompilerParams") and hasattr(pltpu, "TPUCompilerParams"):
         pltpu.CompilerParams = pltpu.TPUCompilerParams
     if not hasattr(pltpu, "InterpretParams"):

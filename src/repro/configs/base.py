@@ -208,7 +208,18 @@ class ParallelConfig:
     overlap_mode: str = "ring"
     overlap_modes: tuple = (("a2a_ep", "one_shot"), ("flash_decode", "one_shot"))
     ag_chunks: int = 0  # 0 = one chunk per TP rank (paper default)
-    rs_chunks: int = 0
+    rs_chunks: int = 0  # RS-side sub-chunking (accumulator column groups)
+
+    # HOW a transport is lowered (orthogonal to the mode):
+    #   graph  — lax.ppermute engine pipelines (runs everywhere)
+    #   kernel — the fused shmem-based kernels (repro.kernels over
+    #            repro.shmem): remote DMAs on TPU, emulated DMA on CPU.
+    # ``overlap_backend`` is the session default; ``overlap_backends``
+    # holds per-op overrides; ``backend_for`` clamps to the registry's
+    # kernel-capable (op, transport) pairs (graph is the universal
+    # fallback, e.g. for bidir/2-level modes or ops with no kernel).
+    overlap_backend: str = "graph"
+    overlap_backends: tuple = ()
 
     remat: str = "block"  # "none" | "dots" | "block"
     grad_compression: str = "none"  # "none" | "int8"
@@ -227,6 +238,11 @@ class ParallelConfig:
             object.__setattr__(
                 self, "overlap_modes", tuple(sorted(self.overlap_modes.items()))
             )
+        if isinstance(self.overlap_backends, dict):
+            object.__setattr__(
+                self, "overlap_backends",
+                tuple(sorted(self.overlap_backends.items())),
+            )
 
     def mode_for(self, op: str) -> str:
         """Effective overlap mode for registry op ``op`` (see overlap_modes)."""
@@ -240,11 +256,33 @@ class ParallelConfig:
 
         return overlap.resolve_mode(op, requested)
 
+    def backend_for(self, op: str) -> str:
+        """Effective lowering backend for ``op``: per-op override if
+        present, else the session default, clamped by the registry to
+        the (op, mode) pairs with a kernel lowering."""
+        for name, backend in self.overlap_backends:
+            if name == op:
+                requested = backend
+                break
+        else:
+            requested = self.overlap_backend
+        from ..core import overlap  # lazy: configs must stay import-light
+
+        return overlap.resolve_backend(op, requested, self.mode_for(op))
+
     def with_modes(self, **per_op: str) -> "ParallelConfig":
         """A copy with per-op overlap overrides merged in."""
         merged = dict(self.overlap_modes)
         merged.update(per_op)
         return dataclasses.replace(self, overlap_modes=tuple(sorted(merged.items())))
+
+    def with_backends(self, **per_op: str) -> "ParallelConfig":
+        """A copy with per-op backend overrides merged in."""
+        merged = dict(self.overlap_backends)
+        merged.update(per_op)
+        return dataclasses.replace(
+            self, overlap_backends=tuple(sorted(merged.items()))
+        )
 
     @property
     def world(self) -> int:

@@ -18,10 +18,17 @@ The registry is consumed by three layers:
   - ``tests/test_overlap_engine.py`` property-tests every registered
     (op, transport) pair against its baseline.
 
+The registry also carries a backend axis (graph | kernel): "kernel"
+lowers an op through the fused shmem kernels in ``repro.kernels``
+(built on the ``repro.shmem`` subsystem — remote DMAs on TPU, the
+emulated DMA engine on CPU), resolved per (op, transport) by
+``overlap.resolve_backend`` / ``ParallelConfig.backend_for``.
+
 Modules:
 - overlap: the engine — AG/RS/bidir/2-level/a2a pipelines, registry,
   shared custom_vjp
-- primitives: OpenSHMEM-style signal/symmetric-memory API on TPU
+- primitives: graph-level permute primitives + re-exports of the
+  repro.shmem kernel-level API (paper Table 1)
 - schedules: tile-swizzle orders + validity checks (Fig. 7/8/10)
 - collective_matmul: AG+GEMM / GEMM+RS declarations (1- and 2-level)
 - moe_overlap: AG+MoE, MoE+RS, EP AllToAll dispatch/combine

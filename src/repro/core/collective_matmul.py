@@ -164,6 +164,7 @@ def _matmul_rs_impl(
     b_loc: Array,
     axis: str,
     mode: str = "ring",
+    chunks_per_rank: int = 1,
     out_dtype=None,
 ) -> Array:
     """Overlapped GEMM-ReduceScatter (implementation; see matmul_rs).
@@ -196,6 +197,29 @@ def _matmul_rs_impl(
         mode = "ring"
     if mode not in ("ring", "one_shot"):
         raise ValueError(f"unknown rs mode {mode!r}")
+
+    # Sub-chunked RS ring (rs_chunks, mirroring the AG side's ag_chunks):
+    # the accumulator is split into column groups, each riding its own
+    # independent ring, so per-permute messages shrink by s_sub (the
+    # communication-tile-size knob of §3.6) and XLA's latency-hiding
+    # scheduler interleaves the pipelines' permutes with the dots.
+    s_sub = max(1, chunks_per_rank)
+    n = b_loc.shape[1]
+    if n % s_sub != 0 or mode == "one_shot":
+        s_sub = 1
+    if s_sub > 1:
+        n_sub = n // s_sub
+        outs = []
+        for j in range(s_sub):
+            b_j = lax.dynamic_slice(b_loc, (0, j * n_sub),
+                                    (b_loc.shape[0], n_sub))
+
+            def compute_j(blk, s, b_j=b_j):
+                return jnp.dot(a_block(blk), b_j,
+                               preferred_element_type=jnp.float32)
+
+            outs.append(ov.rs_pipeline(compute_j, axis, transport="ring"))
+        return jnp.concatenate(outs, axis=1).astype(out_dtype)
 
     def compute(blk, s):
         return jnp.dot(a_block(blk), b_loc, preferred_element_type=jnp.float32)
@@ -283,6 +307,7 @@ def _ag_bwd(static, res, g):
 
 def _rs_fwd(static, a_loc, b_loc):
     return _matmul_rs_impl(a_loc, b_loc, static["axis"], mode=static["mode"],
+                           chunks_per_rank=static.get("chunks", 1),
                            out_dtype=a_loc.dtype)
 
 
@@ -305,16 +330,60 @@ def _gather_bwd(static, res, g):
     return (reduce_scatter_chunked(g, static["axis"]).astype(g.dtype),)
 
 
+# --- kernel-backend lowerings: the fused shmem kernels -------------------
+# (lazy kernel imports: repro.kernels imports are heavier than core's)
+
+
+def _ag_kernel_fwd(static, a_blk, b_loc):
+    """backend="kernel" AG+GEMM: ring -> the fused ag_gemm kernel (Fig. 4
+    producer/consumer protocol); one_shot -> the low-latency AllGather
+    kernel (Alg. 4) feeding the local dot. Sub-chunking (``chunks``) is
+    the kernel's own double-buffer pipelining — the knob is ignored."""
+    from ..kernels.ag_gemm import ag_gemm
+    from ..kernels.ll_allgather import ll_allgather
+
+    axis = static["axis"]
+    w = lax.axis_size(axis)
+    if static["mode"] == "one_shot":
+        a_full = ll_allgather(a_blk, axis=axis, world=w)
+        return jnp.dot(a_full, b_loc,
+                       preferred_element_type=jnp.float32).astype(a_blk.dtype)
+    return ag_gemm(a_blk, b_loc, axis=axis, world=w, out_dtype=a_blk.dtype)
+
+
+def _rs_kernel_fwd(static, a_loc, b_loc):
+    """backend="kernel" GEMM+RS: the fused rs_gemm kernel (Alg. 3 push
+    protocol — partials one-sided-pushed to their owner as they retire).
+    Sub-chunking (``chunks`` / rs_chunks) is a graph-pipeline knob; the
+    kernel pushes one whole block per step and ignores it."""
+    from ..kernels.rs_gemm import rs_gemm
+
+    axis = static["axis"]
+    return rs_gemm(a_loc, b_loc, axis=axis, world=lax.axis_size(axis),
+                   out_dtype=a_loc.dtype)
+
+
+def _gather_kernel_fwd(static, x):
+    """backend="kernel" AllGather: the low-latency one-shot kernel."""
+    from ..kernels.ll_allgather import ll_allgather
+
+    axis = static["axis"]
+    return ll_allgather(x, axis=axis, world=lax.axis_size(axis))
+
+
 ov.register("ag_matmul", kind="ag", transports=("ring", "bidir", "one_shot"),
-            baseline="none", default="ring", fwd=_ag_fwd, bwd=_ag_bwd)
+            baseline="none", default="ring", fwd=_ag_fwd, bwd=_ag_bwd,
+            kernel_transports=("ring", "one_shot"), kernel_fwd=_ag_kernel_fwd)
 ov.register("matmul_rs", kind="rs", transports=("ring", "bidir", "one_shot"),
-            baseline="none", default="ring", fwd=_rs_fwd, bwd=_rs_bwd)
+            baseline="none", default="ring", fwd=_rs_fwd, bwd=_rs_bwd,
+            kernel_transports=("ring",), kernel_fwd=_rs_kernel_fwd)
 ov.register("ag_matmul_2level", kind="ag", transports=("two_level",),
             baseline="none", default="two_level")
 ov.register("matmul_rs_2level", kind="rs", transports=("two_level",),
             baseline="none", default="two_level")
 ov.register("all_gather", kind="gather", transports=("ring", "one_shot"),
-            baseline="none", default="ring", fwd=_gather_fwd, bwd=_gather_bwd)
+            baseline="none", default="ring", fwd=_gather_fwd, bwd=_gather_bwd,
+            kernel_transports=("one_shot",), kernel_fwd=_gather_kernel_fwd)
 ov.register("reduce_scatter", kind="rs", transports=("ring",),
             baseline="none", default="ring")
 
@@ -325,10 +394,15 @@ ov.register("reduce_scatter", kind="rs", transports=("ring",),
 
 
 def ag_matmul(a_blk, b_loc, axis, *, mode="ring", chunks_per_rank=1,
-              out_dtype=None):
+              out_dtype=None, backend="graph"):
     """Overlapped AllGather-GEMM (modes: see the "ag_matmul" registry
     entry). The backward pass is the dual overlapped GEMM+RS ring (O(1)
-    buffers, engine shared custom_vjp).
+    buffers, engine shared custom_vjp) for BOTH backends — a kernel
+    forward keeps the graph-lowered dual as its backward.
+
+    ``backend="kernel"`` lowers through the fused shmem kernels
+    (ag_gemm / ll_allgather) where the (mode) supports it; graph
+    otherwise (overlap.resolve_backend).
 
     The output is tagged with checkpoint_name("ag_out") so the
     "block_save_ag" remat policy can keep gathered activations across the
@@ -339,21 +413,30 @@ def ag_matmul(a_blk, b_loc, axis, *, mode="ring", chunks_per_rank=1,
         out = ag_matmul_baseline(a_blk, b_loc, axis, out_dtype=out_dtype)
     else:
         out = ov.apply("ag_matmul", a_blk, b_loc, axis=axis, mode=mode,
-                       chunks=max(1, chunks_per_rank)).astype(out_dtype)
+                       chunks=max(1, chunks_per_rank),
+                       backend=backend).astype(out_dtype)
     return checkpoint_name(out, "ag_out")
 
 
-def matmul_rs(a_loc, b_loc, axis, *, mode="ring", out_dtype=None):
-    """Overlapped GEMM-ReduceScatter; backward = dual AG+GEMM ring."""
+def matmul_rs(a_loc, b_loc, axis, *, mode="ring", chunks_per_rank=1,
+              out_dtype=None, backend="graph"):
+    """Overlapped GEMM-ReduceScatter; backward = dual AG+GEMM ring.
+    ``chunks_per_rank`` (rs_chunks) sub-chunks the ring accumulator into
+    column groups; ``backend="kernel"`` lowers through the fused rs_gemm
+    shmem kernel (ring only)."""
     out_dtype = out_dtype or a_loc.dtype
     if mode == "none":
         return matmul_rs_baseline(a_loc, b_loc, axis, out_dtype=out_dtype)
-    return ov.apply("matmul_rs", a_loc, b_loc, axis=axis, mode=mode).astype(out_dtype)
+    return ov.apply("matmul_rs", a_loc, b_loc, axis=axis, mode=mode,
+                    chunks=max(1, chunks_per_rank),
+                    backend=backend).astype(out_dtype)
 
 
-def all_gather_chunked(x: Array, axis: str, *, mode: str = "ring") -> Array:
-    """Decomposed AllGather; backward = ring reduce-scatter (O(1))."""
-    return ov.apply("all_gather", x, axis=axis, mode=mode)
+def all_gather_chunked(x: Array, axis: str, *, mode: str = "ring",
+                       backend: str = "graph") -> Array:
+    """Decomposed AllGather; backward = ring reduce-scatter (O(1)).
+    ``backend="kernel"`` lowers one_shot through the LL AllGather kernel."""
+    return ov.apply("all_gather", x, axis=axis, mode=mode, backend=backend)
 
 
 # ---------------------------------------------------------------------------

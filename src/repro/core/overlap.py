@@ -28,6 +28,17 @@ Transports
             ring across pods; the slow inter-pod hop overlaps a full
             inner ring of compute.
 
+Backends (orthogonal to transports)
+-----------------------------------
+A transport says WHAT moves when; a backend says HOW it is lowered:
+``graph`` lowers hops to ``lax.ppermute`` (the pipelines below),
+``kernel`` routes them through the fused shmem-based kernels in
+``repro.kernels`` (the op issues its own putmem_signal / signal_wait
+communication via ``repro.shmem`` — remote DMAs on TPU, the emulated
+DMA engine on CPU). Ops declare their kernel-capable transports in
+``OverlapSpec.kernel_transports``; ``resolve_backend`` degrades
+everything else to graph.
+
 Pipelines
 ---------
 AG-side (``*ag_pipeline``): operand chunks ride the transport; a fold
@@ -76,6 +87,16 @@ Array = jax.Array
 # Transport names understood by the engine (baselines like "none"/"xla"
 # are op-specific monolithic fallbacks, not transports).
 TRANSPORTS = ("ring", "bidir", "one_shot", "two_level")
+
+# Backend names: HOW a transport is lowered.
+#   graph   lax.ppermute pipelines in this module (XLA async
+#           collective-permute; runs everywhere).
+#   kernel  the fused shmem-based kernels in repro.kernels — the op
+#           issues its own communication (putmem_signal / signal_wait
+#           via repro.shmem: remote DMAs on TPU, the emulated DMA
+#           engine on CPU). Available for the (op, transport) pairs an
+#           op declares in ``kernel_transports``.
+BACKENDS = ("graph", "kernel")
 
 
 def _advance(bufs: Tuple[Array, ...], axis: str, *, reverse: bool = False):
@@ -393,6 +414,12 @@ class OverlapSpec:
                 through the shared custom_vjp when ``bwd`` is set
     bwd         optional: bwd(static: dict, residuals, cotangent) ->
                 per-tensor gradients (the op's dual overlapped op)
+    kernel_transports  transports with a kernel-backend lowering
+                (``backend="kernel"`` routes these through kernel_fwd)
+    kernel_fwd  optional: the fused shmem-kernel lowering,
+                kernel_fwd(static: dict, *tensors) -> out. Shares the
+                op's ``bwd`` rule (the backward of a fused kernel is
+                its dual overlapped op regardless of lowering).
     """
 
     name: str
@@ -402,6 +429,8 @@ class OverlapSpec:
     default: str = "ring"
     fwd: Optional[Callable] = None
     bwd: Optional[Callable] = None
+    kernel_transports: Tuple[str, ...] = ()
+    kernel_fwd: Optional[Callable] = None
 
 
 _REGISTRY: Dict[str, OverlapSpec] = {}
@@ -416,13 +445,21 @@ def register(
     default: str = "ring",
     fwd: Optional[Callable] = None,
     bwd: Optional[Callable] = None,
+    kernel_transports: Sequence[str] = (),
+    kernel_fwd: Optional[Callable] = None,
 ) -> OverlapSpec:
     for t in transports:
         if t not in TRANSPORTS:
             raise ValueError(f"{name}: unknown transport {t!r}")
     if default not in transports:
         raise ValueError(f"{name}: default {default!r} not in {transports}")
-    spec = OverlapSpec(name, kind, tuple(transports), baseline, default, fwd, bwd)
+    for t in kernel_transports:
+        if t not in transports:
+            raise ValueError(f"{name}: kernel transport {t!r} not in {transports}")
+    if bool(kernel_transports) != (kernel_fwd is not None):
+        raise ValueError(f"{name}: kernel_transports and kernel_fwd go together")
+    spec = OverlapSpec(name, kind, tuple(transports), baseline, default, fwd, bwd,
+                       tuple(kernel_transports), kernel_fwd)
     _REGISTRY[name] = spec
     return spec
 
@@ -457,14 +494,48 @@ def resolve_mode(name: str, requested: str) -> str:
     return spec.default
 
 
+def backends_for(name: str) -> Tuple[str, ...]:
+    """Backends op ``name`` can lower through (graph always; kernel when
+    the op registered a fused shmem-kernel lowering)."""
+    spec = _REGISTRY[name]
+    return BACKENDS if spec.kernel_fwd is not None else ("graph",)
+
+
+def resolve_backend(name: str, requested: str, mode: Optional[str] = None) -> str:
+    """Clamp a requested backend to what (op, transport) supports.
+
+    "kernel" sticks only when the op registered a kernel lowering AND
+    the (resolved) mode is one of its kernel transports; everything
+    else — including the baseline mode — lowers through "graph", the
+    universal fallback. An unknown backend name is an error (unlike
+    modes, there is no per-op backend default to degrade to)."""
+    if requested not in BACKENDS:
+        raise ValueError(f"unknown backend {requested!r} (not in {BACKENDS})")
+    spec = _REGISTRY[name]
+    if requested != "kernel" or spec.kernel_fwd is None:
+        return "graph"
+    if mode is not None and mode not in spec.kernel_transports:
+        return "graph"
+    return "kernel"
+
+
 # ---------------------------------------------------------------------------
 # The shared custom_vjp: differentiability implemented once
 # ---------------------------------------------------------------------------
 
 
+def _run_fwd(name: str, static: Dict[str, Any], *tensors):
+    """Dispatch an op's forward to the lowering ``static['backend']``
+    selects (resolved upstream by :func:`resolve_backend`)."""
+    spec = _REGISTRY[name]
+    if static.get("backend", "graph") == "kernel":
+        return spec.kernel_fwd(static, *tensors)
+    return spec.fwd(static, *tensors)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _diff_apply(name: str, static: Tuple[Tuple[str, Any], ...], *tensors):
-    return _REGISTRY[name].fwd(dict(static), *tensors)
+    return _run_fwd(name, dict(static), *tensors)
 
 
 def _diff_fwd(name, static, *tensors):
@@ -483,10 +554,18 @@ def apply(name: str, *tensors, **static):
     ONE shared custom_vjp (their backward is their dual overlapped ring,
     O(1) permute buffers instead of autodiff's O(W)); ops without one
     differentiate through the pipeline directly. ``static`` values must
-    be hashable (mode strings, axis names, ints, dtypes)."""
+    be hashable (mode strings, axis names, ints, dtypes).
+
+    ``static["backend"]`` picks the lowering ("graph" default, "kernel"
+    for the fused shmem kernels); it is resolved here against the op's
+    kernel_transports, so requesting kernel for an unsupported
+    (op, mode) silently degrades to graph — mirroring resolve_mode."""
     spec = _REGISTRY[name]
     if spec.fwd is None:
         raise ValueError(f"{name} has no registered fwd implementation")
+    static["backend"] = resolve_backend(
+        name, static.get("backend", "graph"), static.get("mode")
+    )
     if spec.bwd is None:
-        return spec.fwd(static, *tensors)
+        return _run_fwd(name, static, *tensors)
     return _diff_apply(name, tuple(sorted(static.items())), *tensors)

@@ -2,174 +2,40 @@
 
 Two levels:
 
-1. **Kernel level** (inside a Pallas TPU kernel) — the faithful port of the
-   OpenSHMEM / non-OpenSHMEM primitive set. Symmetric memory is `pl.ANY`
-   refs under SPMD shard_map; signals are DMA/REGULAR semaphores; data
-   transfer is the chip's async remote-DMA engine. The recv semaphore *is*
-   the paper's signal: TPU DMAs signal data arrival in hardware, which is
-   why the LL flag-in-word protocol does not need porting.
+1. **Kernel level** — the OpenSHMEM-style primitive set now lives in
+   :mod:`repro.shmem` (one API, two backends: ``tpu_backend`` for real
+   TPU Pallas kernels, ``emulated`` for host-side symmetric-heap
+   emulation on CPU). The names are re-exported here unchanged, bound
+   to the pltpu backend, so in-kernel code keeps reading as the paper
+   writes it.
 
 2. **Graph level** (inside shard_map, outside kernels) — decomposed
-   collectives built from `lax.ppermute`, which XLA lowers to async
+   collectives built from ``lax.ppermute``, which XLA lowers to async
    collective-permute (start/done) pairs; the "signal" is the data
-   dependency on the permute result.
-
-Validation: all kernel-level primitives run under
-``pltpu.InterpretParams()`` on CPU with multiple virtual devices.
+   dependency on the permute result. These are the overlap engine's
+   ``backend="graph"`` transport and live here.
 """
 from __future__ import annotations
-
-from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-# ---------------------------------------------------------------------------
-# Rank identity (OpenSHMEM: my_pe / n_pes)
-# ---------------------------------------------------------------------------
-
-
-def my_pe(axis: str | Sequence[str]) -> jax.Array:
-    """Linearized rank along one or more mesh axes (row-major)."""
-    if isinstance(axis, str):
-        return lax.axis_index(axis)
-    idx = lax.axis_index(axis[0])
-    for a in axis[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
-    return idx
-
-
-def n_pes(axis: str | Sequence[str]) -> int:
-    if isinstance(axis, str):
-        return lax.axis_size(axis)
-    n = 1
-    for a in axis:
-        n *= lax.axis_size(a)
-    return n
-
-
-# ---------------------------------------------------------------------------
-# Kernel-level primitives (Pallas TPU)
-# ---------------------------------------------------------------------------
-
-
-def putmem_signal_nbi(
-    src_ref,
-    dst_ref,
-    send_sem,
-    recv_sem,
-    peer,
-    *,
-    axis: Optional[str] = None,
-):
-    """Non-blocking one-sided put + arrival signal (paper: putmem_signal_nbi).
-
-    Starts an async remote DMA copying ``src_ref`` (local) into ``dst_ref``
-    *on device* ``peer`` along mesh axis ``axis``. The remote ``recv_sem``
-    is incremented by the hardware when the data lands — the signal write
-    and the data transfer are one operation, as in NVSHMEM's putmem_signal.
-    Returns the copy descriptor; call ``.wait()`` (or ``quiet``) later.
-    """
-    device_id = (peer,)
-    copy = pltpu.make_async_remote_copy(
-        src_ref=src_ref,
-        dst_ref=dst_ref,
-        send_sem=send_sem,
-        recv_sem=recv_sem,
-        device_id=device_id,
-        device_id_type=pltpu.DeviceIdType.MESH,
-    )
-    copy.start()
-    return copy
-
-
-def putmem_signal(src_ref, dst_ref, send_sem, recv_sem, peer, *, axis=None):
-    """Blocking variant: returns after the local send side has completed."""
-    copy = putmem_signal_nbi(src_ref, dst_ref, send_sem, recv_sem, peer, axis=axis)
-    copy.wait_send()
-    return copy
-
-
-def local_copy_nbi(src_ref, dst_ref, sem):
-    """Async local (HBM<->HBM/VMEM) DMA — the 'copy engine' analogue."""
-    copy = pltpu.make_async_copy(src_ref, dst_ref, sem)
-    copy.start()
-    return copy
-
-
-def signal_op(sem, peer, *, inc: int = 1, axis: Optional[str] = None):
-    """Increment a remote signal (paper: signal_op / notify)."""
-    pltpu.semaphore_signal(
-        sem,
-        inc=inc,
-        device_id=(peer,),
-        device_id_type=pltpu.DeviceIdType.MESH,
-    )
-
-
-notify = signal_op
-
-
-def signal_wait_until(sem, value: int):
-    """Spin-wait until the local signal reaches ``value``, then consume it
-    (paper: signal_wait_until / wait)."""
-    pltpu.semaphore_wait(sem, value)
-
-
-wait = signal_wait_until
-
-
-def consume_token(x, token=None):
-    """Paper: consume_token — creates a data dependency between a wait and
-    a following load. Pallas refs are effect-ordered, so loads issued after
-    a ``semaphore_wait`` are already ordered; kept for source fidelity."""
-    del token
-    return x
-
-
-def quiet(*copies):
-    """Ensure completion of outstanding one-sided ops (paper: quiet)."""
-    for c in copies:
-        c.wait()
-
-
-def barrier_all(axis: str, world: int):
-    """Barrier across all ranks on ``axis`` (paper: barrier_all).
-
-    Uses the kernel's collective barrier semaphore: signal every peer, then
-    wait for ``world - 1`` arrivals. Requires
-    ``compiler_params=pltpu.CompilerParams(collective_id=...)``.
-    """
-    barrier = pltpu.get_barrier_semaphore()
-    me = lax.axis_index(axis)
-    for off in range(1, world):
-        peer = lax.rem(me + off, world)
-        pltpu.semaphore_signal(
-            barrier, inc=1, device_id=(peer,), device_id_type=pltpu.DeviceIdType.MESH
-        )
-    pltpu.semaphore_wait(barrier, world - 1)
-
-
-def broadcast_put(src_ref, dst_ref, send_sem, recv_sem, axis: str, world: int):
-    """multimem_st analogue: store the same data to all peers.
-
-    ICI exposes no multicast primitive, so this is a peer loop of one-sided
-    puts (documented hardware-adaptation change). All DMAs are started
-    before any wait — they proceed in parallel on the DMA engines.
-    """
-    me = lax.axis_index(axis)
-    copies = []
-    for off in range(1, world):
-        peer = lax.rem(me + off, world)
-        copies.append(
-            putmem_signal_nbi(src_ref, dst_ref, send_sem, recv_sem, peer, axis=axis)
-        )
-    for c in copies:
-        c.wait_send()
-
+# Rank identity + kernel-level primitives: re-exported from the shmem
+# subsystem (pltpu backend) for compatibility with in-kernel callers.
+from ..shmem.api import consume_token, my_pe, n_pes  # noqa: F401
+from ..shmem.tpu_backend import (  # noqa: F401
+    barrier_all,
+    broadcast_put,
+    local_copy_nbi,
+    notify,
+    putmem_signal,
+    putmem_signal_nbi,
+    quiet,
+    signal_op,
+    signal_wait_until,
+    wait,
+)
 
 # ---------------------------------------------------------------------------
 # Graph-level primitives (shard_map)

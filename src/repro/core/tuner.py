@@ -87,7 +87,11 @@ def analytic_ag_matmul(
             if mode == "none":
                 pass
             elif mode == "ring":
-                t_step_comm = (chunk_bytes / sub) / spec.ici_link_bandwidth
+                # per-message fixed overhead is what caps useful sub-
+                # chunking: finer chunks shrink the fill bubble but pay
+                # the hop/descriptor cost world*sub times
+                t_step_comm = (chunk_bytes / sub) / spec.ici_link_bandwidth \
+                    + spec.ici_msg_overhead
                 t_step_comp = t_dot / sub
                 fill = t_step_comm  # first remote chunk latency
                 t_comm = (world - 1) * chunk_bytes / spec.ici_link_bandwidth
@@ -130,10 +134,16 @@ def analytic_matmul_rs(
     dtype_bytes: int = 2,
     spec: hw.HardwareSpec = hw.DEFAULT,
     candidates: Optional[Sequence[str]] = None,
+    max_sub: int = 4,
 ) -> OverlapChoice:
     """Pick the overlap strategy for GEMM-ReduceScatter. Candidates
     default to the engine registry's matmul_rs transports (baseline
-    included)."""
+    included).
+
+    ring also enumerates ``rs_chunks`` sub-chunking (the accumulator
+    split into column groups, mirroring ag_chunks): sub-chunking shrinks
+    the first-message fill bubble at the cost of more, smaller permutes.
+    """
     if candidates is None:
         candidates = overlap.transports_for("matmul_rs", include_baseline=True)
     m_blk = m // world
@@ -144,34 +154,69 @@ def analytic_matmul_rs(
     t_comm = (world - 1) * t_step_comm
     best: Optional[OverlapChoice] = None
     for mode in candidates:
-        if mode == "none":
-            # serialized: all dots, then the monolithic reduce-scatter
-            t_total = t_comp + t_comm
-        elif mode == "ring":
-            t_total = t_step_comm + world * max(t_dot, t_step_comm)
-        elif mode == "bidir":
-            if world < 3:
-                continue
-            # half the accumulator columns per direction, both links busy
-            t_total = t_step_comm / 2 + world * max(t_dot, t_step_comm / 2)
-        elif mode == "one_shot":
-            # W-1 full partials in flight at once across all links: latency
-            # optimal, bandwidth hungry ((W-1)x the wire bytes of ring's
-            # steady state per link)
-            t_total = t_comp + (world - 1) * acc_bytes / (
-                spec.ici_link_bandwidth * spec.ici_links
-            )
+        if mode == "ring":
+            subs = tuple(s for s in range(1, max_sub + 1) if n % s == 0)
         else:
-            continue
-        cand = OverlapChoice(mode, 1, t_comp, t_comm, t_total)
-        if best is None or cand.t_total < best.t_total:
-            best = cand
+            subs = (1,)
+        for sub in subs:
+            if mode == "none":
+                # serialized: all dots, then the monolithic reduce-scatter
+                t_total = t_comp + t_comm
+            elif mode == "ring":
+                # sub column-groups: each ring step moves acc_bytes/sub
+                # per group (fill = one sub-message flight), paying the
+                # fixed per-message cost world*sub times — the trade-off
+                # that keeps the enumeration from degenerating to max_sub
+                t_sub_comm = t_step_comm / sub + spec.ici_msg_overhead
+                t_total = t_sub_comm + world * sub * max(t_dot / sub, t_sub_comm)
+            elif mode == "bidir":
+                if world < 3:
+                    continue
+                # half the accumulator columns per direction, both links busy
+                t_total = t_step_comm / 2 + world * max(t_dot, t_step_comm / 2)
+            elif mode == "one_shot":
+                # W-1 full partials in flight at once across all links: latency
+                # optimal, bandwidth hungry ((W-1)x the wire bytes of ring's
+                # steady state per link)
+                t_total = t_comp + (world - 1) * acc_bytes / (
+                    spec.ici_link_bandwidth * spec.ici_links
+                )
+            else:
+                continue
+            cand = OverlapChoice(mode, sub if mode == "ring" else 1,
+                                 t_comp, t_comm, t_total)
+            if best is None or cand.t_total < best.t_total:
+                best = cand
     if best is None:
         # every candidate was infeasible (e.g. bidir with world < 3):
         # mirror the engine, which degrades such requests to ring
         t_total = t_step_comm + world * max(t_dot, t_step_comm)
         best = OverlapChoice("ring", 1, t_comp, t_comm, t_total)
     return best
+
+
+def recommend_backend(modes: Optional[Dict[str, str]] = None) -> str:
+    """Lowering backend for the current platform (the backend axis of the
+    registry, enumerated alongside the transport candidates).
+
+    On real TPU the fused shmem kernels ("kernel") remove the per-step
+    XLA dispatch between chunk compute and chunk DMA, so they are the
+    default whenever the chosen mode has a kernel lowering for at least
+    one op. On CPU the emulated-DMA backend is a correctness vehicle
+    (host callbacks), not a fast path — recommend "graph".
+    ``ParallelConfig.backend_for`` re-clamps per op, so emitting
+    "kernel" is safe even when only some ops support it.
+    """
+    import jax
+
+    if jax.default_backend() != "tpu":
+        return "graph"
+    modes = modes or {}
+    for op, mode in modes.items():
+        spec = overlap.registry().get(op)
+        if spec is not None and mode in spec.kernel_transports:
+            return "kernel"
+    return "graph" if modes else "kernel"
 
 
 def recommend_overlap_modes(
@@ -188,17 +233,22 @@ def recommend_overlap_modes(
     ``ParallelConfig.overlap_modes`` (launch/steps.default_pcfg consumes
     this under ``overlap_mode="auto"``).
 
-    Returns {"ag_matmul": mode, "matmul_rs": mode, "ag_chunks": int}.
-    The latency-bound ops (a2a_ep, flash_decode) keep their registry
-    defaults (one_shot) — their message sizes do not depend on the layer
-    dims the analytic model sees.
+    Returns {"ag_matmul": mode, "matmul_rs": mode, "ag_chunks": int,
+    "rs_chunks": int, "backend": str}. The latency-bound ops (a2a_ep,
+    flash_decode) keep their registry defaults (one_shot) — their message
+    sizes do not depend on the layer dims the analytic model sees. The
+    backend key is the lowering recommendation (see
+    :func:`recommend_backend`).
     """
     ag = analytic_ag_matmul(max(1, m // world), k, max(1, n // world), world,
                             dtype_bytes=dtype_bytes, spec=spec)
     rs = analytic_matmul_rs(m, max(1, k // world), n, world,
                             dtype_bytes=dtype_bytes, spec=spec)
     return {"ag_matmul": ag.mode, "matmul_rs": rs.mode,
-            "ag_chunks": ag.chunks_per_rank}
+            "ag_chunks": ag.chunks_per_rank,
+            "rs_chunks": rs.chunks_per_rank,
+            "backend": recommend_backend(
+                {"ag_matmul": ag.mode, "matmul_rs": rs.mode})}
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +276,10 @@ def tune(
     ``make_step(config)`` returns a zero-arg callable executing the full
     overlapped step (comm + compute + host logic). Between candidate
     configs ``reset()`` restores signal state — the paper's requirement
-    that overlapped kernels cannot be replayed without resetting signals.
+    that overlapped kernels cannot be replayed without resetting signals
+    (for ``backend="kernel"`` candidates on CPU, pass
+    ``repro.shmem.emulated.reset`` to clear the symmetric heaps and
+    signal slots an aborted candidate leaves behind).
     """
     timings: dict = {}
     best_cfg, best_t = None, float("inf")

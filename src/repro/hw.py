@@ -16,6 +16,9 @@ class HardwareSpec:
     vmem_bytes: int
     # inter-pod (DCN-ish) effective per-chip bandwidth for the pod axis
     pod_link_bandwidth: float = 6.25e9
+    # fixed per-message cost of one ICI transfer (hop latency + DMA
+    # descriptor setup): what sub-chunking trades bandwidth against
+    ici_msg_overhead: float = 1e-6
 
 
 TPU_V5E = HardwareSpec(

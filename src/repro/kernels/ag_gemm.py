@@ -1,4 +1,5 @@
-"""Fused AllGather-GEMM Pallas kernel — the paper's Figure 4, on TPU.
+"""Fused AllGather-GEMM kernel — the paper's Figure 4, on the shmem
+subsystem (``repro.shmem``).
 
 One kernel per rank plays BOTH roles of the paper's producer/consumer
 pair (on TPU the async-task split is the DMA engines vs. the MXU, not
@@ -8,8 +9,8 @@ threadblocks vs. threadblocks):
               workspace with ``putmem_signal`` (remote DMA; the recv
               semaphore is the arrival signal);
   consumer  — ``signal_wait`` for the chunk of step s (= data of rank
-              (me - s) % W, the Fig. 7 swizzle), stage it HBM->VMEM, run
-              the MXU dot, and write the output strip.
+              (me - s) % W, the Fig. 7 swizzle), stage it, run the dot,
+              and write the output strip.
 
 Flow control is the paper's signal-exchange protocol: a credit semaphore
 grants the left neighbor permission to overwrite a workspace slot only
@@ -17,13 +18,17 @@ after the slot has been consumed (double buffering => 1 initial credit +
 one per consumed slot). The DMA of chunk s+1 is in flight while the dot
 of chunk s executes — this is the overlap.
 
-Validated on CPU via ``pltpu.InterpretParams()`` under shard_map (the
-interpreter emulates cross-device DMAs + semaphores). On real TPU the
-same code lowers to Mosaic with ICI remote DMAs.
+Backends (``repro.shmem.default_backend``):
+  pltpu     real TPU: the Pallas kernel body below, remote DMAs on ICI.
+  emulated  CPU / virtual devices: the SAME ring + credit protocol
+            executed against host-side symmetric heaps and signal slots
+            (``shmem.emulated``) — every put, arrival signal, credit and
+            barrier runs with true concurrency semantics, so the kernel
+            logic is validated without hardware.
 
-Scale note: refs are whole-shard (VMEM-resident per step). For production
-shapes, wrap the dot in ``pltpu.emit_pipeline`` to tile (bm, bk, bn)
-within each chunk; the signal protocol is unchanged.
+Scale note (pltpu): refs are whole-shard (VMEM-resident per step). For
+production shapes, wrap the dot in ``pltpu.emit_pipeline`` to tile
+(bm, bk, bn) within each chunk; the signal protocol is unchanged.
 """
 from __future__ import annotations
 
@@ -35,7 +40,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .. import _compat
+from .. import shmem
+from ..shmem import emulated as em
 
 
 def _ag_gemm_kernel(
@@ -64,15 +70,7 @@ def _ag_gemm_kernel(
 
     # Symmetric-memory handshake: every rank's workspace must exist before
     # any one-sided put lands in it (paper: barrier_all after allocation).
-    barrier = pltpu.get_barrier_semaphore()
-    for off in range(1, world):
-        pltpu.semaphore_signal(
-            barrier,
-            inc=1,
-            device_id=(lax.rem(me + off, world),),
-            device_id_type=pltpu.DeviceIdType.MESH,
-        )
-    pltpu.semaphore_wait(barrier, world - 1)
+    shmem.tpu_backend.barrier_all(axis, world)
 
     # Stage my B shard into VMEM once; copy my A chunk into ring slot 0.
     cb = pltpu.make_async_copy(b_ref, b_vmem, local_sem)
@@ -83,9 +81,7 @@ def _ag_gemm_kernel(
     c0.wait()
 
     # Initially my right neighbor's slot 1 is free: grant 1 credit.
-    pltpu.semaphore_signal(
-        cap_sem, inc=1, device_id=(left,), device_id_type=pltpu.DeviceIdType.MESH
-    )
+    shmem.tpu_backend.signal_op(cap_sem, left, axis=axis)
 
     for s in range(world):
         slot = s % 2
@@ -93,16 +89,15 @@ def _ag_gemm_kernel(
         if s != world - 1:
             # producer: wait for a free slot at the right neighbor, then
             # putmem_signal my current chunk into their next slot.
-            pltpu.semaphore_wait(cap_sem, 1)
-            send = pltpu.make_async_remote_copy(
-                src_ref=ws_ref.at[slot],
-                dst_ref=ws_ref.at[(s + 1) % 2],
-                send_sem=send_sem,
-                recv_sem=recv_sem,
-                device_id=(right,),
-                device_id_type=pltpu.DeviceIdType.MESH,
+            shmem.tpu_backend.signal_wait_until(cap_sem, 1)
+            send = shmem.tpu_backend.putmem_signal_nbi(
+                ws_ref.at[slot],
+                ws_ref.at[(s + 1) % 2],
+                send_sem,
+                recv_sem,
+                right,
+                axis=axis,
             )
-            send.start()
 
         # consumer: chunk of step s is rank (me - s)'s data. For s>0 its
         # arrival is ordered by recv_sem via the previous step's wait.
@@ -131,35 +126,12 @@ def _ag_gemm_kernel(
         # races the in-flight outgoing read (one-sided put corruption).
         # Skip grants that would exceed the W-1 sends the neighbor makes.
         if s < world - 2:
-            pltpu.semaphore_signal(
-                cap_sem, inc=1, device_id=(left,), device_id_type=pltpu.DeviceIdType.MESH
-            )
+            shmem.tpu_backend.signal_op(cap_sem, left, axis=axis)
 
 
-def ag_gemm(
-    a_blk: jax.Array,  # (m_loc, k) — call inside shard_map, sharded on M
-    b_loc: jax.Array,  # (k, n_loc) — sharded on N
-    *,
-    axis: str,
-    world: int,
-    out_dtype=None,
-    collective_id: int = 7,
-    interpret: bool | None = None,
-) -> jax.Array:
-    """Fused overlapped AllGather-GEMM. Returns (m_loc * world, n_loc)."""
+def _ag_gemm_pltpu(a_blk, b_loc, *, axis, world, out_dtype, collective_id):
     m_loc, k = a_blk.shape
     _, n_loc = b_loc.shape
-    out_dtype = out_dtype or a_blk.dtype
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    if interpret and not _compat.PALLAS_REMOTE_INTERPRET:
-        # This jax's Pallas interpreter cannot emulate remote DMAs /
-        # signals; validate the same ring schedule through the graph-level
-        # engine pipeline instead.
-        from ..core import collective_matmul as cm
-
-        return cm.ag_matmul(a_blk, b_loc, axis, mode="ring", out_dtype=out_dtype)
-    interp = pltpu.InterpretParams() if interpret else False
     kernel = functools.partial(
         _ag_gemm_kernel,
         axis=axis,
@@ -191,6 +163,61 @@ def ag_gemm(
             pltpu.SemaphoreType.REGULAR,
         ],
         compiler_params=pltpu.CompilerParams(collective_id=collective_id),
-        interpret=interp,
     )(a_blk, b_loc)
     return out
+
+
+def _ag_gemm_emulated(a_blk, b_loc, *, axis, world, out_dtype, collective_id):
+    """The same producer/consumer ring + credit protocol on the emulated
+    DMA engine: slot parity, initial credit, grant-after-consume and the
+    skip of the final grants mirror the Pallas body line for line."""
+    me = lax.axis_index(axis)
+    left = lax.rem(me + world - 1, world)
+    right = lax.rem(me + 1, world)
+    m_loc, k = a_blk.shape
+    n_loc = b_loc.shape[1]
+
+    ctx = em.ShmemCtx(axis, world, collective_id)
+    ctx.barrier_all()
+    ctx.signal_op(left, sig="cap")
+
+    cur = a_blk
+    out = jnp.zeros((m_loc * world, n_loc), out_dtype)
+    for s in range(world):
+        if s != world - 1:
+            ctx.signal_wait_until(sig="cap", value=1)
+            ctx.putmem_signal_nbi(cur, right, buf="ws", slot=(s + 1) % 2,
+                                  sig="recv")
+        partial = jnp.dot(
+            cur, b_loc, preferred_element_type=jnp.float32
+        ).astype(out_dtype)
+        owner = lax.rem(me - s + world, world)
+        out = lax.dynamic_update_slice(out, partial, (owner * m_loc, 0))
+        if s != world - 1:
+            cur = ctx.wait_read((m_loc, k), a_blk.dtype, buf="ws",
+                                slot=(s + 1) % 2, sig="recv")
+            if s < world - 2:
+                ctx.signal_op(left, sig="cap")
+    ctx.barrier_all()
+    return out
+
+
+def ag_gemm(
+    a_blk: jax.Array,  # (m_loc, k) — call inside shard_map, sharded on M
+    b_loc: jax.Array,  # (k, n_loc) — sharded on N
+    *,
+    axis: str,
+    world: int,
+    out_dtype=None,
+    collective_id: int = 7,
+    backend: str | None = None,
+) -> jax.Array:
+    """Fused overlapped AllGather-GEMM. Returns (m_loc * world, n_loc).
+
+    ``backend`` is a shmem backend name ("pltpu" | "emulated"); default
+    picks per platform (`shmem.default_backend`)."""
+    out_dtype = out_dtype or a_blk.dtype
+    backend = backend or shmem.default_backend()
+    impl = _ag_gemm_pltpu if backend == "pltpu" else _ag_gemm_emulated
+    return impl(a_blk, b_loc, axis=axis, world=world, out_dtype=out_dtype,
+                collective_id=collective_id)

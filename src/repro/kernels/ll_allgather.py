@@ -1,4 +1,5 @@
-"""Low-latency one-shot AllGather Pallas kernel — paper Algorithm 4 on TPU.
+"""Low-latency one-shot AllGather kernel — paper Algorithm 4 on the
+shmem subsystem (``repro.shmem``).
 
 The GPU original combines an NVLink multimem broadcast with the NCCL LL
 (flag-in-word) protocol. Neither exists on TPU — and neither is needed:
@@ -10,8 +11,11 @@ delay plus the skew, not W-1 hops. Message latency is what matters here
 
 Each rank one-sided-puts its shard into every peer's output block `me`
 (the broadcast_put / multimem_st analogue), then waits for W-1 arrival
-signals. ``hierarchical=True`` splits the put loop into intra-pod peers
-first and cross-pod peers second on a 2-level axis pair.
+signals.
+
+Backends: ``pltpu`` (real TPU, Pallas body below) and ``emulated``
+(host-side symmetric heaps; the same all-puts-up-front + signal_wait
+structure on CPU virtual devices).
 """
 from __future__ import annotations
 
@@ -23,7 +27,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .. import _compat
+from .. import shmem
+from ..shmem import emulated as em
 
 
 def _ll_ag_kernel(
@@ -39,22 +44,15 @@ def _ll_ag_kernel(
 ):
     me = lax.axis_index(axis)
 
-    barrier = pltpu.get_barrier_semaphore()
-    for off in range(1, world):
-        pltpu.semaphore_signal(
-            barrier,
-            inc=1,
-            device_id=(lax.rem(me + off, world),),
-            device_id_type=pltpu.DeviceIdType.MESH,
-        )
-    pltpu.semaphore_wait(barrier, world - 1)
+    shmem.tpu_backend.barrier_all(axis, world)
 
     # Local copy into my own block.
     lc = pltpu.make_async_copy(x_ref, o_ref.at[pl.ds(me * m_loc, m_loc), :], local_sem)
     lc.start()
 
     # One-shot: all W-1 puts issued before any wait (Alg. 4 line 11-18
-    # structure — no skew accumulation from a serial loop).
+    # structure — no skew accumulation from a serial loop). This is
+    # broadcast_put with each DMA kept for the explicit arrival waits.
     sends = []
     for off in range(1, world):
         peer = lax.rem(me + off, world)
@@ -74,29 +72,11 @@ def _ll_ag_kernel(
     # SPMD symmetry: my W-1 incoming messages are my peers' sends with the
     # same shape/semaphore, so waiting my own descriptors consumes exactly
     # the right signal count (send-drain + W-1 arrivals).
-    for s in sends:
-        s.wait()
+    shmem.tpu_backend.quiet(*sends)
 
 
-def ll_allgather(
-    x: jax.Array,  # (m_loc, n) — call inside shard_map, sharded on dim 0
-    *,
-    axis: str,
-    world: int,
-    collective_id: int = 11,
-    interpret: bool | None = None,
-) -> jax.Array:
-    """One-shot AllGather. Returns (m_loc * world, n)."""
+def _ll_allgather_pltpu(x, *, axis, world, collective_id):
     m_loc, n = x.shape
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    if interpret and not _compat.PALLAS_REMOTE_INTERPRET:
-        # no remote-DMA emulation in this jax's interpreter: same one-shot
-        # structure via the graph-level engine pipeline.
-        from ..core import overlap as ov
-
-        return ov.gather_pipeline(x, axis, transport="one_shot")
-    interp = pltpu.InterpretParams() if interpret else False
     kernel = functools.partial(_ll_ag_kernel, axis=axis, world=world, m_loc=m_loc)
     return pl.pallas_call(
         kernel,
@@ -109,5 +89,40 @@ def ll_allgather(
             pltpu.SemaphoreType.DMA,
         ],
         compiler_params=pltpu.CompilerParams(collective_id=collective_id),
-        interpret=interp,
     )(x)
+
+
+def _ll_allgather_emulated(x, *, axis, world, collective_id):
+    """Alg. 4 structure on the emulated DMA engine: broadcast_put my
+    shard into every PE's slot ``me`` (self included, so all W slots
+    exist symmetrically), one signal_wait for all W arrivals, then
+    assemble the gathered output from the W landed slots."""
+    m_loc, n = x.shape
+
+    ctx = em.ShmemCtx(axis, world, collective_id)
+    ctx.barrier_all()
+    ctx.broadcast_put(x, buf="ws", sig="recv")
+    ctx.signal_wait_until(sig="recv", value=world)
+    out = jnp.zeros((m_loc * world, n), x.dtype)
+    for r in range(world):
+        shard = ctx.read_symmetric((m_loc, n), x.dtype, buf="ws", slot=r)
+        out = lax.dynamic_update_slice(out, shard, (r * m_loc, 0))
+    ctx.barrier_all()
+    return out
+
+
+def ll_allgather(
+    x: jax.Array,  # (m_loc, n) — call inside shard_map, sharded on dim 0
+    *,
+    axis: str,
+    world: int,
+    collective_id: int = 11,
+    backend: str | None = None,
+) -> jax.Array:
+    """One-shot AllGather. Returns (m_loc * world, n).
+
+    ``backend`` is a shmem backend name ("pltpu" | "emulated"); default
+    picks per platform (`shmem.default_backend`)."""
+    backend = backend or shmem.default_backend()
+    impl = _ll_allgather_pltpu if backend == "pltpu" else _ll_allgather_emulated
+    return impl(x, axis=axis, world=world, collective_id=collective_id)

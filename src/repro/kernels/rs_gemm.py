@@ -1,17 +1,20 @@
-"""Fused GEMM-ReduceScatter Pallas kernel — paper Algorithm 3 on TPU.
+"""Fused GEMM-ReduceScatter kernel — paper Algorithm 3 on the shmem
+subsystem (``repro.shmem``).
 
 The paper's push-mode ReduceScatter: as soon as a tile of the producer
 GEMM's output is ready, it is one-sided-pushed (putmem_signal) to the rank
 that owns that output block; each rank then locally reduces the W partial
 tiles that landed in its symmetric workspace after signal_wait.
 
-On TPU, one kernel per rank plays both roles: per ring step s it computes
-the partial block destined for rank (me - s - 1) % W (the Alg. 3 swizzle
-order, peers first, own block last), pushes it with a remote DMA whose
-recv semaphore is the arrival signal, and finally reduces its own W
+One kernel per rank plays both roles: per ring step s it computes the
+partial block destined for rank (me - s - 1) % W (the Alg. 3 swizzle
+order, peers first, own block last), pushes it with a one-sided put whose
+recv signal is the arrival notification, and finally reduces its own W
 arrived partials. Compute of step s+1 overlaps the DMA of step s.
 
-Validated under ``pltpu.InterpretParams()`` (cross-device DMA emulation).
+Backends: ``pltpu`` (real TPU, Pallas body below) and ``emulated``
+(host-side symmetric heaps — the same push/signal/reduce protocol
+validated on CPU virtual devices; see ``shmem.emulated``).
 """
 from __future__ import annotations
 
@@ -23,7 +26,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .. import _compat
+from .. import shmem
+from ..shmem import emulated as em
 
 
 def _rs_gemm_kernel(
@@ -45,14 +49,7 @@ def _rs_gemm_kernel(
 ):
     me = lax.axis_index(axis)
 
-    barrier = pltpu.get_barrier_semaphore()
-    for off in range(1, world):
-        pltpu.semaphore_signal(
-            barrier, inc=1,
-            device_id=(lax.rem(me + off, world),),
-            device_id_type=pltpu.DeviceIdType.MESH,
-        )
-    pltpu.semaphore_wait(barrier, world - 1)
+    shmem.tpu_backend.barrier_all(axis, world)
 
     cb = pltpu.make_async_copy(b_ref, b_vmem, local_sem)
     cb.start()
@@ -77,15 +74,9 @@ def _rs_gemm_kernel(
             cl.wait()
         else:
             # one-sided push + arrival signal to the owner (slot = me)
-            send = pltpu.make_async_remote_copy(
-                src_ref=p_vmem,
-                dst_ref=ws_ref.at[me],
-                send_sem=send_sem,
-                recv_sem=recv_sem,
-                device_id=(blk,),
-                device_id_type=pltpu.DeviceIdType.MESH,
+            send = shmem.tpu_backend.putmem_signal_nbi(
+                p_vmem, ws_ref.at[me], send_sem, recv_sem, blk, axis=axis
             )
-            send.start()
             # the next step's dot overlaps this DMA; drain before reusing
             # p_vmem (single partial buffer — correctness over depth here)
             send.wait_send()
@@ -106,31 +97,10 @@ def _rs_gemm_kernel(
     co.wait()
 
 
-def rs_gemm(
-    a_loc: jax.Array,  # (m, k_loc) — call inside shard_map, K sharded
-    b_loc: jax.Array,  # (k_loc, n)
-    *,
-    axis: str,
-    world: int,
-    out_dtype=None,
-    collective_id: int = 9,
-    interpret: bool | None = None,
-) -> jax.Array:
-    """Fused overlapped GEMM+ReduceScatter. Returns (m / world, n)."""
+def _rs_gemm_pltpu(a_loc, b_loc, *, axis, world, out_dtype, collective_id):
     m, k_loc = a_loc.shape
     _, n = b_loc.shape
-    assert m % world == 0
     m_blk = m // world
-    out_dtype = out_dtype or a_loc.dtype
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    if interpret and not _compat.PALLAS_REMOTE_INTERPRET:
-        # no remote-DMA emulation in this jax's interpreter: same Alg. 3
-        # schedule via the graph-level engine pipeline.
-        from ..core import collective_matmul as cm
-
-        return cm.matmul_rs(a_loc, b_loc, axis, mode="ring", out_dtype=out_dtype)
-    interp = pltpu.InterpretParams() if interpret else False
     kernel = functools.partial(
         _rs_gemm_kernel, axis=axis, world=world, m_blk=m_blk, out_dtype=out_dtype
     )
@@ -157,6 +127,58 @@ def rs_gemm(
             pltpu.SemaphoreType.DMA,
         ],
         compiler_params=pltpu.CompilerParams(collective_id=collective_id),
-        interpret=interp,
     )(a_loc, b_loc)
     return out
+
+
+def _rs_gemm_emulated(a_loc, b_loc, *, axis, world, out_dtype, collective_id):
+    """Alg. 3 push protocol on the emulated DMA engine: per-step put of
+    the partial into the owner's workspace slot ``me`` (own block pushed
+    to self at the last step, so all W slots land symmetrically), then
+    one signal_wait for W arrivals and the local f32 reduction."""
+    me = lax.axis_index(axis)
+    m, k_loc = a_loc.shape
+    n = b_loc.shape[1]
+    m_blk = m // world
+
+    ctx = em.ShmemCtx(axis, world, collective_id)
+    ctx.barrier_all()
+    for s in range(world):
+        # Alg. 3 swizzle: peers' blocks first, own block last (blk == me)
+        blk = lax.rem(me - s - 1 + 2 * world, world)
+        a_b = lax.dynamic_slice(a_loc, (blk * m_blk, 0), (m_blk, k_loc))
+        partial = jnp.dot(
+            a_b, b_loc, preferred_element_type=jnp.float32
+        ).astype(out_dtype)
+        ctx.putmem_signal_nbi(partial, blk, buf="ws", slot=me, sig="recv")
+
+    ctx.signal_wait_until(sig="recv", value=world)
+    acc = jnp.zeros((m_blk, n), jnp.float32)
+    for r in range(world):
+        part = ctx.read_symmetric((m_blk, n), out_dtype, buf="ws", slot=r)
+        acc = acc + part.astype(jnp.float32)
+    ctx.barrier_all()
+    return acc.astype(out_dtype)
+
+
+def rs_gemm(
+    a_loc: jax.Array,  # (m, k_loc) — call inside shard_map, K sharded
+    b_loc: jax.Array,  # (k_loc, n)
+    *,
+    axis: str,
+    world: int,
+    out_dtype=None,
+    collective_id: int = 9,
+    backend: str | None = None,
+) -> jax.Array:
+    """Fused overlapped GEMM+ReduceScatter. Returns (m / world, n).
+
+    ``backend`` is a shmem backend name ("pltpu" | "emulated"); default
+    picks per platform (`shmem.default_backend`)."""
+    m, _ = a_loc.shape
+    assert m % world == 0
+    out_dtype = out_dtype or a_loc.dtype
+    backend = backend or shmem.default_backend()
+    impl = _rs_gemm_pltpu if backend == "pltpu" else _rs_gemm_emulated
+    return impl(a_loc, b_loc, axis=axis, world=world, out_dtype=out_dtype,
+                collective_id=collective_id)

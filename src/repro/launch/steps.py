@@ -262,6 +262,8 @@ def default_pcfg(cfg: ModelConfig, shape: ShapeConfig, *, multi_pod: bool,
     big = cfg.param_count() > 500e9
     moment = "bfloat16" if big else "float32"
     ag_chunks = 0
+    rs_chunks = 0
+    overlap_backend = "graph"
     auto_modes: dict = {}
     if overlap_mode == "auto":
         from ..core import tuner
@@ -270,6 +272,8 @@ def default_pcfg(cfg: ModelConfig, shape: ShapeConfig, *, multi_pod: bool,
         m = max(tp, shape.tokens // max(1, dp * pods_n))  # rows per data rank
         rec = tuner.recommend_overlap_modes(m, cfg.d_model, cfg.d_ff, tp)
         ag_chunks = int(rec.pop("ag_chunks"))
+        rs_chunks = int(rec.pop("rs_chunks"))
+        overlap_backend = str(rec.pop("backend"))
         auto_modes = {k: str(v) for k, v in rec.items()}
         overlap_mode = auto_modes.get("ag_matmul", "ring")
     auto_modes.update(dict(overlap_modes))
@@ -280,7 +284,9 @@ def default_pcfg(cfg: ModelConfig, shape: ShapeConfig, *, multi_pod: bool,
         fsdp=True,
         fsdp_pods=multi_pod,  # 1T-class states only fit when FSDP spans pods
         overlap_mode=overlap_mode,
+        overlap_backend=overlap_backend,
         ag_chunks=ag_chunks,
+        rs_chunks=rs_chunks,
         remat="block",
         moment_dtype=moment,
         kv_shard=kv_shard,

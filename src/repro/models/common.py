@@ -119,6 +119,7 @@ def ag_linear(
         mode=mode,
         chunks_per_rank=max(1, pcfg.ag_chunks),
         out_dtype=x_sp.dtype,
+        backend=pcfg.backend_for("ag_matmul"),
     )
     if b is not None:
         y = y + b.astype(y.dtype)
@@ -132,7 +133,10 @@ def rs_linear(
 ) -> Array:
     """TP -> SP boundary: GEMM-ReduceScatter. Returns (T_loc, D)."""
     mode = pcfg.mode_for("matmul_rs") if pcfg.tp > 1 else "none"
-    return cm.matmul_rs(y_tp, w, MODEL_AXIS, mode=mode, out_dtype=y_tp.dtype)
+    return cm.matmul_rs(y_tp, w, MODEL_AXIS, mode=mode,
+                        chunks_per_rank=max(1, pcfg.rs_chunks),
+                        out_dtype=y_tp.dtype,
+                        backend=pcfg.backend_for("matmul_rs"))
 
 
 def local_linear(x: Array, w: Array, b: Optional[Array] = None) -> Array:

@@ -1,0 +1,69 @@
+"""repro.shmem — the paper's OpenSHMEM-style communication subsystem.
+
+The paper's first contribution (§2-3) is compiling OpenSHMEM-compliant
+primitives INTO the kernels, so an overlapped kernel issues its own
+communication instead of delegating to a graph-level collective. This
+package is that primitive layer, with one API and two backends:
+
+  ``tpu_backend``   the in-kernel primitive set for real TPU Pallas
+                    kernels: symmetric memory is ``pl.ANY`` refs under
+                    SPMD shard_map, signals are DMA/REGULAR semaphores,
+                    data transfer is the chip's async remote-DMA engine
+                    (``pltpu.make_async_remote_copy``). Only lowerable
+                    on actual TPU (Mosaic).
+
+  ``emulated``      the emulated-DMA backend: per-device host-side
+                    symmetric heaps and signal slots, driven by ordered
+                    ``io_callback``s from inside ``shard_map``. Every
+                    virtual CPU device runs its SPMD program on its own
+                    thread, so blocking ``signal_wait_until`` calls
+                    really do wait for a peer's ``putmem_signal`` — the
+                    full signal-exchange protocol (credits, barriers,
+                    arrival signals) executes on CPU with N virtual
+                    devices. This is what makes the fused kernels in
+                    ``repro.kernels`` testable without hardware.
+
+Backend selection: :func:`default_backend` returns ``"pltpu"`` on real
+TPU and ``"emulated"`` everywhere else; ``REPRO_SHMEM_BACKEND`` forces
+either. The fused kernels (``kernels/ag_gemm.py`` etc.) consume this —
+callers never pick a backend by hand.
+
+Rank identity (``my_pe`` / ``n_pes``) is backend-independent (mesh axis
+arithmetic) and lives in :mod:`api`.
+"""
+from __future__ import annotations
+
+import os
+
+from . import api, emulated, tpu_backend
+from .api import my_pe, n_pes
+
+BACKENDS = ("pltpu", "emulated")
+
+
+def default_backend() -> str:
+    """The shmem backend for the current platform.
+
+    ``"pltpu"`` — real TPU: primitives lower to Mosaic remote DMAs.
+    ``"emulated"`` — everything else: host-side symmetric heaps.
+    ``REPRO_SHMEM_BACKEND`` overrides (tests / forcing emulation on TPU).
+    """
+    forced = os.environ.get("REPRO_SHMEM_BACKEND", "")
+    if forced:
+        if forced not in BACKENDS:
+            raise ValueError(f"REPRO_SHMEM_BACKEND={forced!r} not in {BACKENDS}")
+        return forced
+    import jax
+
+    return "pltpu" if jax.default_backend() == "tpu" else "emulated"
+
+
+__all__ = [
+    "api",
+    "emulated",
+    "tpu_backend",
+    "my_pe",
+    "n_pes",
+    "BACKENDS",
+    "default_backend",
+]

@@ -1,0 +1,66 @@
+"""Backend-independent pieces of the shmem API.
+
+The primitive set (paper Table 1, OpenSHMEM names):
+
+  my_pe / n_pes            rank identity (this module — pure mesh-axis
+                           arithmetic, valid inside kernels and graphs)
+  putmem_signal_nbi        non-blocking one-sided put whose arrival
+                           signal and data transfer are ONE operation
+  putmem_signal            blocking variant (returns after send drains)
+  signal_op / notify       increment a remote signal without data
+  signal_wait_until / wait spin until a local signal reaches a value,
+                           then consume it
+  barrier_all              all-ranks rendezvous
+  broadcast_put            multimem_st analogue (put to every peer)
+  quiet                    drain outstanding one-sided ops
+  consume_token            data-dependency fence (source fidelity)
+  symmetric allocation     pltpu: extra kernel outputs in ``pl.ANY``
+                           (stable cross-device addresses);
+                           emulated: ``emulated.symmetric_alloc``
+
+Each backend module (``tpu_backend``, ``emulated``) implements the set
+against its own memory model; this module holds what is common.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import jax
+from jax import lax
+
+Axis = Union[str, Sequence[str]]
+
+
+def my_pe(axis: Axis) -> jax.Array:
+    """Linearized rank along one or more mesh axes (row-major).
+
+    OpenSHMEM ``shmem_my_pe``: valid both at graph level (inside
+    shard_map) and at kernel level (inside a Pallas kernel body), since
+    mesh axis indices are available in both.
+    """
+    if isinstance(axis, str):
+        return lax.axis_index(axis)
+    idx = lax.axis_index(axis[0])
+    for a in axis[1:]:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def n_pes(axis: Axis) -> int:
+    """OpenSHMEM ``shmem_n_pes``: world size along the axis (static)."""
+    if isinstance(axis, str):
+        return lax.axis_size(axis)
+    n = 1
+    for a in axis:
+        n *= lax.axis_size(a)
+    return n
+
+
+def consume_token(x, token=None):
+    """Paper: consume_token — creates a data dependency between a wait
+    and a following load. Pallas refs are effect-ordered and the
+    emulated backend's ordered callbacks are sequenced per device, so
+    loads issued after a wait are already ordered; kept for source
+    fidelity with the paper's primitive list."""
+    del token
+    return x

@@ -1,0 +1,377 @@
+"""The emulated-DMA backend: shmem on host-side symmetric heaps.
+
+This jax's Pallas interpreter cannot emulate cross-device remote DMAs or
+semaphore signals, which used to gate every fused distributed kernel
+behind a graph-level fallback on CPU. This module removes that gate by
+emulating the DMA engine itself:
+
+  symmetric heap   one host-side store per traced kernel instance
+                   (namespaced by collective_id), holding one numpy
+                   buffer per (name, pe, slot) — the analogue of
+                   NVSHMEM's symmetric heap (same name on every PE, PE-
+                   indexed storage).
+  signal slots     per-(name, pe) counting semaphores guarded by one
+                   condition variable per instance — the analogue of
+                   the chip's DMA-completion semaphores.
+
+Every primitive is an ``io_callback`` issued from inside ``shard_map``:
+jax's CPU client runs each virtual device's SPMD program on its own
+thread, so a blocking ``signal_wait_until`` on PE i really does sleep
+until PE j's ``putmem_signal_nbi`` lands — puts, arrival signals,
+credit flow-control and barriers all execute with their true
+concurrency semantics.
+
+Ordering: this jax crashes on ordered effects in multi-parameter jitted
+programs (XLA sharding-propagation CHECK), so per-device program order
+is enforced with an explicit **token chain** instead — every callback
+consumes the previous callback's token and emits a new one, giving a
+hard data-dependency order. :class:`ShmemCtx` threads the token so
+kernel bodies read like their Pallas counterparts (the token chain is
+the emulated analogue of Pallas ref effect-ordering).
+
+Protocol rules for kernels built on this backend:
+
+  1. Open and close every kernel with ``barrier_all`` (the paper's
+     barrier-after-allocation, plus: the trailing barrier makes
+     back-to-back executions of the same traced kernel — which share
+     one state instance — unable to interleave their signal state).
+  2. A correct kernel consumes every signal it causes — semaphores must
+     return to zero at the trailing barrier. :func:`reset` exists for
+     the tuner's between-candidates cleanup of *aborted* runs, matching
+     the paper's "overlapped kernels cannot be replayed without
+     resetting signals".
+
+Packetization: XLA's CPU runtime moves callback operands/results above
+~100KB through an asynchronous transfer path that can starve (and
+deadlock) on small hosts while other device threads sit in blocking
+waits. The emulated engine therefore moves data like a real DMA engine
+moves it — in bounded packets: a put larger than ``_PACKET_BYTES``
+issues one callback per packet into the destination buffer and raises
+the arrival signal only with the LAST packet (signal-on-completion,
+putmem_signal semantics); reads mirror this. Payloads per callback stay
+small enough for the synchronous transfer path regardless of transfer
+size.
+
+All waits time out (``REPRO_SHMEM_TIMEOUT`` seconds, default 60) and
+raise with a dump of the live signal state instead of deadlocking the
+test harness.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from .api import my_pe
+
+_TIMEOUT = float(os.environ.get("REPRO_SHMEM_TIMEOUT", "60"))
+
+# Max bytes per callback operand/result: keep under XLA CPU's ~100KB
+# synchronous host-transfer cutoff (larger transfers take an async path
+# that can starve against blocked device threads).
+_PACKET_BYTES = int(os.environ.get("REPRO_SHMEM_PACKET_BYTES", str(64 * 1024)))
+
+
+class _World:
+    """Shared state for one kernel instance: heap + signals + barrier."""
+
+    def __init__(self) -> None:
+        self.cond = threading.Condition()
+        self.heap: Dict[Tuple[str, int, int], np.ndarray] = {}
+        self.sems: Dict[Tuple[str, int], int] = {}
+        self.bar_count = 0
+        self.bar_gen = 0
+
+
+# State is keyed by (collective_id, trace-time instance number): every
+# traced ShmemCtx gets a PRIVATE world. Under shard_map the kernel is
+# traced once for all devices, so each device's callbacks agree on the
+# instance number — but two kernels in the same program (e.g. two
+# ag_linear layers) can never touch each other's heap/signals even when
+# they share a collective_id, and io_callback(ordered=False)'s freedom
+# to reorder data-independent callbacks across the two kernels becomes
+# harmless. Re-executions of the same traced program DO share the
+# instance (that is the replay path, protected by the trailing barrier
+# + per-device launch FIFO).
+_worlds: Dict[Tuple[int, int], _World] = {}
+_worlds_lock = threading.Lock()
+
+
+def _world(key: Tuple[int, int]) -> _World:
+    with _worlds_lock:
+        w = _worlds.get(key)
+        if w is None:
+            w = _worlds[key] = _World()
+        return w
+
+
+def reset(cid: Optional[int] = None) -> None:
+    """Drop heap + signal state (every instance of one collective_id, or
+    everything).
+
+    Only call between executions (the empirical tuner's ``reset``
+    callback after an aborted/partial candidate) — never while an SPMD
+    program using the state is in flight.
+    """
+    with _worlds_lock:
+        if cid is None:
+            _worlds.clear()
+        else:
+            for key in [k for k in _worlds if k[0] == cid]:
+                _worlds.pop(key, None)
+
+
+def _signal_state(w: _World) -> str:
+    live = {k: v for k, v in w.sems.items() if v}
+    return f"live signals: {live or '{}'}; heap keys: {len(w.heap)}"
+
+
+# ---------------------------------------------------------------------------
+# Host side (runs on each virtual device's execution thread)
+# ---------------------------------------------------------------------------
+
+
+def _host_put_packet(cid, buf, sig, total, dtype, off, last, tok, peer, slot, pkt):
+    """One DMA packet of a put: copy into [off, off+len) of the (flat)
+    destination buffer; the LAST packet raises the arrival signal."""
+    w = _world(cid)
+    pkt = np.asarray(pkt)
+    with w.cond:
+        key = (buf, int(peer), int(slot))
+        arr = w.heap.get(key)
+        if arr is None or arr.size != total or arr.dtype != np.dtype(dtype):
+            arr = w.heap[key] = np.empty(total, dtype)
+        arr[off:off + pkt.size] = pkt
+        if last and sig:
+            skey = (sig, int(peer))
+            w.sems[skey] = w.sems.get(skey, 0) + 1
+            w.cond.notify_all()
+    return np.int32(tok) + 1
+
+
+def _host_signal(cid, sig, tok, peer, inc):
+    w = _world(cid)
+    with w.cond:
+        key = (sig, int(peer))
+        w.sems[key] = w.sems.get(key, 0) + int(inc)
+        w.cond.notify_all()
+    return np.int32(tok) + 1
+
+
+def _host_wait(cid, sig, tok, me, value):
+    w = _world(cid)
+    key = (sig, int(me))
+    with w.cond:
+        ok = w.cond.wait_for(
+            lambda: w.sems.get(key, 0) >= int(value), timeout=_TIMEOUT
+        )
+        if not ok:
+            raise RuntimeError(
+                f"shmem.emulated: signal_wait_until timed out (cid={cid}, "
+                f"sig={sig!r}, pe={int(me)}, want={int(value)}, "
+                f"have={w.sems.get(key, 0)}); {_signal_state(w)}"
+            )
+        w.sems[key] -= int(value)
+    return np.int32(tok) + 1
+
+
+def _host_read_packet(cid, buf, off, n, tok, me, slot):
+    """One DMA packet of a read: [off, off+n) of the (flat) local buffer."""
+    w = _world(cid)
+    with w.cond:
+        key = (buf, int(me), int(slot))
+        if key not in w.heap:
+            raise RuntimeError(
+                f"shmem.emulated: read of unwritten symmetric buffer "
+                f"{key} (cid={cid}); {_signal_state(w)}"
+            )
+        return w.heap[key][off:off + n].copy(), np.int32(tok) + 1
+
+
+def _host_alloc(cid, buf, world, total, dtype, tok, me):
+    # Symmetric allocation: the same named buffer exists on every PE.
+    # First caller materializes all PE copies; idempotent thereafter.
+    w = _world(cid)
+    with w.cond:
+        for pe in range(int(world)):
+            key = (buf, pe, 0)
+            if key not in w.heap:
+                w.heap[key] = np.zeros(total, dtype)
+    return np.int32(tok) + 1
+
+
+def _host_barrier(cid, world, tok, me):
+    w = _world(cid)
+    with w.cond:
+        gen = w.bar_gen
+        w.bar_count += 1
+        if w.bar_count >= int(world):
+            w.bar_count = 0
+            w.bar_gen += 1
+            w.cond.notify_all()
+        else:
+            ok = w.cond.wait_for(lambda: w.bar_gen != gen, timeout=_TIMEOUT)
+            if not ok:
+                raise RuntimeError(
+                    f"shmem.emulated: barrier_all timed out (cid={cid}, "
+                    f"pe={int(me)}, arrived={w.bar_count}/{int(world)}); "
+                    f"{_signal_state(w)}"
+                )
+    return np.int32(tok) + 1
+
+
+# ---------------------------------------------------------------------------
+# Traced side: ShmemCtx threads the ordering token through the callbacks
+# ---------------------------------------------------------------------------
+
+_TOKEN = jax.ShapeDtypeStruct((), jnp.int32)
+
+# Trace-time instance numbers: each traced ShmemCtx owns a private world
+# (see _worlds). Doubles as a distinct initial-token constant so no two
+# contexts present identical leading callbacks.
+_instances = itertools.count(1)
+
+
+class ShmemCtx:
+    """One kernel's handle to the emulated DMA engine.
+
+    Construct inside the kernel body (under shard_map), use the paper's
+    primitive names as methods, and let the context thread the ordering
+    token. Peer ids and slot ids may be traced values. Each construction
+    (= each traced kernel call) gets private heap/signal/barrier state;
+    ``collective_id`` namespaces it for diagnostics and targeted
+    :func:`reset`.
+    """
+
+    def __init__(self, axis: str, world: int, cid: int):
+        self.axis = axis
+        self.world = world
+        self.cid = cid
+        inst = next(_instances)
+        self._key = (cid, inst)
+        self._me = jnp.asarray(my_pe(axis), jnp.int32)
+        self._tok = jnp.asarray(inst, jnp.int32)
+
+    # -- internal -----------------------------------------------------
+    def _io(self, host_fn, result, *operands):
+        return io_callback(host_fn, result, self._tok, *operands,
+                           ordered=False)
+
+    @staticmethod
+    def _packets(shape, dtype):
+        """(total_elems, [(off, n), ...]) DMA packets for a buffer."""
+        total = 1
+        for d in shape:
+            total *= int(d)
+        per = max(1, _PACKET_BYTES // max(1, jnp.dtype(dtype).itemsize))
+        if total == 0:
+            return 0, [(0, 0)]
+        return total, [(off, min(per, total - off))
+                       for off in range(0, total, per)]
+
+    # -- primitive set ------------------------------------------------
+    def barrier_all(self):
+        """All-ranks rendezvous for this collective_id (paper: barrier_all)."""
+        self._tok = self._io(
+            functools.partial(_host_barrier, self._key, self.world),
+            _TOKEN, self._me,
+        )
+
+    def putmem_signal_nbi(self, x, peer, *, buf: str = "ws", slot=0,
+                          sig: str = "recv"):
+        """One-sided put of value ``x`` into ``peer``'s symmetric buffer
+        ``(buf, slot)`` + arrival signal ``sig`` on the peer. Large
+        values move as bounded DMA packets; the signal rides the last
+        packet, so — as in NVSHMEM's putmem_signal — it fires only once
+        the full payload has landed. (The emulated copy completes inside
+        the callbacks, so there is no separate ``quiet``; ordering comes
+        from the token chain.)"""
+        total, packets = self._packets(x.shape, x.dtype)
+        xf = jnp.ravel(x)
+        peer = jnp.asarray(peer, jnp.int32)
+        slot = jnp.asarray(slot, jnp.int32)
+        dtype = jnp.dtype(x.dtype).name
+        for off, n in packets:
+            pkt = jax.lax.slice(xf, (off,), (off + n,))
+            last = off + n >= total
+            self._tok = self._io(
+                functools.partial(_host_put_packet, self._key, buf,
+                                  sig if last else "", total, dtype, off, last),
+                _TOKEN, peer, slot, pkt,
+            )
+
+    putmem_signal = putmem_signal_nbi  # emulated sends complete synchronously
+
+    def signal_op(self, peer, *, sig: str, inc: int = 1):
+        """Increment signal ``sig`` on ``peer`` (paper: signal_op / notify)."""
+        self._tok = self._io(
+            functools.partial(_host_signal, self._key, sig),
+            _TOKEN,
+            jnp.asarray(peer, jnp.int32),
+            jnp.asarray(inc, jnp.int32),
+        )
+
+    notify = signal_op
+
+    def signal_wait_until(self, *, sig: str, value: int = 1):
+        """Block this PE until its ``sig`` count reaches ``value``; consume."""
+        self._tok = self._io(
+            functools.partial(_host_wait, self._key, sig),
+            _TOKEN,
+            self._me,
+            jnp.asarray(value, jnp.int32),
+        )
+
+    wait = signal_wait_until
+
+    def read_symmetric(self, shape, dtype, *, buf: str = "ws", slot=0):
+        """Read this PE's copy of symmetric buffer ``(buf, slot)``
+        (packetized like puts; reassembled and reshaped to ``shape``)."""
+        total, packets = self._packets(shape, dtype)
+        slot = jnp.asarray(slot, jnp.int32)
+        parts = []
+        for off, n in packets:
+            part, self._tok = self._io(
+                functools.partial(_host_read_packet, self._key, buf, off, n),
+                (jax.ShapeDtypeStruct((n,), dtype), _TOKEN),
+                self._me, slot,
+            )
+            parts.append(part)
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        return flat.reshape(shape)
+
+    def wait_read(self, shape, dtype, *, buf: str = "ws", slot=0,
+                  sig: str = "recv", value: int = 1):
+        """signal_wait_until + read: the common consumer idiom — wait for
+        the arrival signal (which rides the put's last packet), then load
+        the chunk."""
+        self.signal_wait_until(sig=sig, value=value)
+        return self.read_symmetric(shape, dtype, buf=buf, slot=slot)
+
+    def symmetric_alloc(self, shape, dtype, *, buf: str):
+        """shmem_malloc analogue: ensure ``buf`` slot 0 exists (zeroed) on
+        every PE. Follow with :meth:`barrier_all` before any one-sided
+        access, as OpenSHMEM requires."""
+        total, _ = self._packets(shape, dtype)
+        self._tok = self._io(
+            functools.partial(_host_alloc, self._key, buf, self.world,
+                              total, jnp.dtype(dtype).name),
+            _TOKEN,
+            self._me,
+        )
+
+    def broadcast_put(self, x, *, buf: str = "ws", sig: str = "recv"):
+        """multimem_st analogue: put ``x`` into every peer's ``(buf, my_pe)``
+        slot (peer loop of one-sided puts, matching the pltpu backend's
+        hardware adaptation). Also stores locally so all W slots exist
+        symmetrically; signals ``sig`` once per delivery (W total per PE)."""
+        for off in range(self.world):
+            peer = jax.lax.rem(self._me + off, self.world)
+            self.putmem_signal_nbi(x, peer, buf=buf, slot=self._me, sig=sig)

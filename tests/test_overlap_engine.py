@@ -6,7 +6,11 @@
    devices. The script asserts its own coverage against the live
    registry, so registering a new op without extending the harness
    fails loudly.
-2. Schedule validity: the bidir and 2-level orders in core/schedules.py
+2. Kernel-backend equivalence: every (op, transport) pair with a
+   registered kernel lowering (OverlapSpec.kernel_transports) must match
+   the graph backend's output — on CPU this runs the fused shmem kernels
+   on the emulated-DMA backend (real put/signal/credit protocol).
+3. Schedule validity: the bidir and 2-level orders in core/schedules.py
    satisfy their permutation / arrival / hand-off invariants.
 """
 import textwrap
@@ -66,6 +70,11 @@ SCRIPT = textwrap.dedent("""
                                  out_dtype=jnp.float32),
                (P(None, "tp"), P("tp", None)), P("tp", None))
         check(("matmul_rs", mode), f(A2, B2), want2)
+    # sub-chunked RS ring (the rs_chunks knob, mirroring ag_chunks)
+    f = sh(functools.partial(cm.matmul_rs, axis="tp", mode="ring",
+                             chunks_per_rank=2, out_dtype=jnp.float32),
+           (P(None, "tp"), P("tp", None)), P("tp", None))
+    check(("matmul_rs", "ring/sub2"), f(A2, B2), want2)
     tested.add("matmul_rs")
 
     # ---------------- 2-level ops on a (2, W//2) compound mesh -------
@@ -103,6 +112,44 @@ SCRIPT = textwrap.dedent("""
            P(None, None), P("tp", None))
     check("reduce_scatter", f(x), W * np.asarray(x))
     tested.add("reduce_scatter")
+
+    # ---------------- kernel backend: fused shmem kernels ------------
+    # Every (op, transport) the registry declares kernel-capable must
+    # match the graph backend's output (the emulated-DMA backend runs
+    # the real put/signal/credit protocol on CPU virtual devices).
+    def run_ag(mode, backend):
+        f = sh(functools.partial(cm.ag_matmul, axis="tp", mode=mode,
+                                 backend=backend, out_dtype=jnp.float32),
+               (P("tp", None), P(None, "tp")), P(None, "tp"))
+        return np.asarray(f(A, B))
+
+    def run_rs(mode, backend):
+        f = sh(functools.partial(cm.matmul_rs, axis="tp", mode=mode,
+                                 backend=backend, out_dtype=jnp.float32),
+               (P(None, "tp"), P("tp", None)), P("tp", None))
+        return np.asarray(f(A2, B2))
+
+    def run_gather(mode, backend):
+        f = sh(functools.partial(cm.all_gather_chunked, axis="tp", mode=mode,
+                                 backend=backend),
+               P("tp", None), P(None, None))
+        return np.asarray(f(x))
+
+    kernel_runners = {"ag_matmul": run_ag, "matmul_rs": run_rs,
+                      "all_gather": run_gather}
+    kernel_pairs = [(nm, t) for nm, spec in ov.registry().items()
+                    for t in spec.kernel_transports]
+    assert kernel_pairs, "no kernel-capable (op, transport) pairs registered"
+    for nm, t in kernel_pairs:
+        assert nm in kernel_runners, \
+            f"kernel transport {nm}/{t} without a harness"
+        got_k = kernel_runners[nm](t, "kernel")
+        got_g = kernel_runners[nm](t, "graph")
+        err = np.abs(got_k - got_g).max()
+        assert err < TOL, ("kernel-vs-graph", nm, t, err)
+    # requesting kernel where no kernel lowering exists degrades to graph
+    check(("matmul_rs", "bidir", "kernel->graph"),
+          run_rs("bidir", "kernel"), want2)
 
     # ---------------- MoE: ag_moe / moe_rs (rank-dependent expert) ---
     T_loc, D, E = 8, 8, 4
@@ -236,3 +283,26 @@ def test_registry_declares_known_transports_only():
         assert spec.default in spec.transports, name
         # resolving an unsupported request falls back to the default
         assert ov.resolve_mode(name, "definitely-not-a-mode") == spec.default
+
+
+def test_registry_backend_resolution():
+    import pytest
+
+    from repro.core import overlap as ov
+
+    for name, spec in ov.registry().items():
+        # kernel transports are a subset of the op's transports and come
+        # paired with a kernel lowering
+        for t in spec.kernel_transports:
+            assert t in spec.transports, (name, t)
+        assert bool(spec.kernel_transports) == (spec.kernel_fwd is not None)
+        assert ov.backends_for(name)[0] == "graph"
+        # graph always resolves; kernel resolves only for kernel pairs
+        assert ov.resolve_backend(name, "graph") == "graph"
+        for t in spec.transports:
+            want = "kernel" if t in spec.kernel_transports else "graph"
+            assert ov.resolve_backend(name, "kernel", t) == want, (name, t)
+        # the baseline mode never lowers through the kernel backend
+        assert ov.resolve_backend(name, "kernel", spec.baseline) == "graph"
+    with pytest.raises(ValueError):
+        ov.resolve_backend("ag_matmul", "definitely-not-a-backend")

@@ -1,78 +1,69 @@
-"""Direct tests of the paper's Table-1 primitive API (core/primitives.py)
-inside Pallas kernels under the cross-device interpreter."""
+"""Direct tests of the paper's Table-1 primitive API on the shmem
+subsystem's emulated-DMA backend (no hardware, no skip: the emulated
+backend implements the kernel-level primitive set on host-side
+symmetric heaps — see repro/shmem/emulated.py)."""
 import textwrap
 
-import pytest
-
 from conftest import run_devices
-from repro import _compat
 
 SCRIPT = textwrap.dedent("""
-    import functools
     import jax, jax.numpy as jnp, numpy as np
     from jax import lax
     from jax.sharding import PartitionSpec as P
-    from jax.experimental import pallas as pl
-    from jax.experimental.pallas import tpu as pltpu
     from repro.core import primitives as prim
+    from repro.shmem import emulated as em
 
     W = 4
     mesh = jax.make_mesh((W,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
 
-    # ---- putmem_signal + signal-ordered read: ring rotate by one ----
-    def rotate_kernel(x_ref, o_ref, send_sem, recv_sem):
-        me = lax.axis_index("x")
-        prim.barrier_all("x", W)
-        peer = lax.rem(me + 1, W)
-        copy = prim.putmem_signal_nbi(x_ref, o_ref, send_sem, recv_sem, peer)
-        prim.quiet(copy)   # send drained + my incoming arrived
+    def sh(fn, in_specs, out_specs):
+        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_vma=False))
 
+    # ---- putmem_signal + signal-ordered read: ring rotate by one ----
     def rotate(x):
-        return pl.pallas_call(
-            rotate_kernel,
-            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-            out_specs=pl.BlockSpec(memory_space=pl.ANY),
-            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-            scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
-            compiler_params=pltpu.CompilerParams(collective_id=3),
-            interpret=pltpu.InterpretParams())(x)
+        ctx = em.ShmemCtx("x", W, cid=3)
+        me = lax.axis_index("x")
+        ctx.barrier_all()
+        peer = lax.rem(me + 1, W)
+        ctx.putmem_signal_nbi(x, peer, sig="recv")
+        out = ctx.wait_read(x.shape, x.dtype, sig="recv")
+        ctx.barrier_all()
+        return out
 
     x = jnp.arange(W * 8, dtype=jnp.float32).reshape(W, 8)
-    f = jax.jit(jax.shard_map(rotate, mesh=mesh, in_specs=P("x", None),
-                              out_specs=P("x", None), check_vma=False))
-    got = np.asarray(f(x))
+    got = np.asarray(sh(rotate, P("x", None), P("x", None))(x))
     want = np.roll(np.asarray(x), 1, axis=0)  # rank r's data lands at r+1
     assert np.abs(got - want).max() == 0, got
 
-    # ---- broadcast_put (multimem_st analogue): all ranks see rank data ----
-    def bcast_kernel(x_ref, o_ref, send_sem, recv_sem, local_sem):
-        me = lax.axis_index("x")
-        prim.barrier_all("x", W)
-        lc = pltpu.make_async_copy(x_ref, o_ref, local_sem)
-        lc.start()
-        prim.broadcast_put(x_ref, o_ref, send_sem, recv_sem, "x", W)
-        lc.wait()
-        # wait for W-1 arrivals (symmetric senders)
-        for _ in range(W - 1):
-            pltpu.make_async_copy(x_ref, o_ref, recv_sem).wait()
-
-    # NOTE: every rank overwrites o_ref with ITS x — last writer wins per
-    # slot; with identical payloads this asserts delivery, not ordering.
-    xx = jnp.ones((W, 8), jnp.float32) * 7.0
+    # ---- broadcast_put (multimem_st analogue): all ranks see all data ----
     def bcast(x):
-        return pl.pallas_call(
-            bcast_kernel,
-            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-            out_specs=pl.BlockSpec(memory_space=pl.ANY),
-            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-            scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
-                            pltpu.SemaphoreType.DMA],
-            compiler_params=pltpu.CompilerParams(collective_id=4),
-            interpret=pltpu.InterpretParams())(x)
-    g = jax.jit(jax.shard_map(bcast, mesh=mesh, in_specs=P("x", None),
-                              out_specs=P("x", None), check_vma=False))
-    got = np.asarray(g(xx))
+        ctx = em.ShmemCtx("x", W, cid=4)
+        ctx.barrier_all()
+        ctx.broadcast_put(x, sig="recv")
+        ctx.signal_wait_until(sig="recv", value=W)  # W arrivals (self incl.)
+        out = jnp.zeros((W * x.shape[0],) + x.shape[1:], x.dtype)
+        for r in range(W):
+            s = ctx.read_symmetric(x.shape, x.dtype, slot=r)
+            out = lax.dynamic_update_slice(out, s, (r * x.shape[0], 0))
+        ctx.barrier_all()
+        return out
+
+    xx = jnp.ones((W, 8), jnp.float32) * 7.0
+    got = np.asarray(sh(bcast, P("x", None), P(None, None))(xx))
     assert np.all(got == 7.0), got
+
+    # ---- notify / wait aliases (signal_op / signal_wait_until) ----
+    def handshake(x):
+        ctx = em.ShmemCtx("x", W, cid=5)
+        me = lax.axis_index("x")
+        ctx.barrier_all()
+        ctx.notify(lax.rem(me + 1, W), sig="hs", inc=2)
+        ctx.wait(sig="hs", value=2)
+        ctx.barrier_all()
+        return x
+
+    np.asarray(sh(handshake, P("x", None), P("x", None))(x))
 
     # ---- my_pe / n_pes linearization over 2 axes ----
     mesh2 = jax.make_mesh((2, 2), ("a", "b"),
@@ -85,19 +76,14 @@ SCRIPT = textwrap.dedent("""
     ids = np.asarray(h(jnp.zeros((4,), jnp.int32)))
     assert sorted(ids.tolist()) == [0, 1, 2, 3], ids
 
-    # consume_token is a no-op passthrough (Pallas refs are effect-ordered)
+    # consume_token is a no-op passthrough (ordering comes from Pallas ref
+    # effects on TPU / the emulated token chain on CPU)
     t = prim.consume_token(jnp.ones(3), token=None)
     assert np.all(np.asarray(t) == 1.0)
     print("OK")
 """)
 
 
-@pytest.mark.skipif(
-    not _compat.PALLAS_REMOTE_INTERPRET,
-    reason="this jax's Pallas interpreter cannot emulate remote DMA signals "
-           "(no pltpu.InterpretParams); kernel-level primitives need real "
-           "TPU or a newer jax",
-)
 def test_table1_primitives():
     out = run_devices(SCRIPT, devices=4)
     assert "OK" in out

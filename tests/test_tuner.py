@@ -44,7 +44,8 @@ def test_analytic_candidates_come_from_registry():
 
 def test_recommend_overlap_modes_resolves_per_op():
     rec = tuner.recommend_overlap_modes(4096, 8192, 8192, world=16)
-    assert set(rec) == {"ag_matmul", "matmul_rs", "ag_chunks"}
+    assert set(rec) == {"ag_matmul", "matmul_rs", "ag_chunks", "rs_chunks",
+                        "backend"}
     from repro.core import overlap
 
     assert rec["ag_matmul"] in overlap.transports_for(
@@ -52,6 +53,31 @@ def test_recommend_overlap_modes_resolves_per_op():
     assert rec["matmul_rs"] in overlap.transports_for(
         "matmul_rs", include_baseline=True)
     assert rec["ag_chunks"] >= 1
+    assert rec["rs_chunks"] >= 1
+    assert rec["backend"] in overlap.BACKENDS
+    # CPU test host: the emulated-DMA kernel backend is a correctness
+    # vehicle, not a fast path — the tuner must recommend graph here
+    assert rec["backend"] == "graph"
+
+
+def test_recommend_backend_enumerates_registry():
+    from repro.core import overlap
+
+    # ops with a kernel lowering expose both backends to the tuner
+    assert overlap.backends_for("ag_matmul") == ("graph", "kernel")
+    assert overlap.backends_for("matmul_rs") == ("graph", "kernel")
+    assert overlap.backends_for("all_gather") == ("graph", "kernel")
+    # ops without one only enumerate graph
+    assert overlap.backends_for("reduce_scatter") == ("graph",)
+
+
+def test_analytic_rs_enumerates_sub_chunks():
+    # n divisible by 4: the ring candidate set includes rs_chunks in
+    # {1,2,4}; whatever wins must be one of them
+    c = tuner.analytic_matmul_rs(4096, 2048, 8192, world=16, max_sub=4,
+                                 candidates=("ring",))
+    assert c.mode == "ring"
+    assert c.chunks_per_rank in (1, 2, 4)
 
 
 def test_analytic_respects_link_bandwidth():
