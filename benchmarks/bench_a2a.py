@@ -30,12 +30,15 @@ def rows():
             bytes_dev = e_glob * cap * d * 4 * (w - 1) / w
             out.append(row(f"a2a_dispatch/E{e_glob}c{cap}d{d}/{mode}", us,
                            f"bytes_per_dev={bytes_dev:.0f}"))
+            # time the combine (inverse) path directly on a DISPATCHED
+            # tensor — a difference of two noisy medians (roundtrip -
+            # dispatch) can even go negative on loaded CPU hosts
+            y = jax.block_until_ready(f(x))
             g = jax.jit(jax.shard_map(
-                lambda y: mo.a2a_ep_inverse(
-                    mo.a2a_ep(y, "ep", mode=mode), "ep", mode=mode),
+                lambda yy: mo.a2a_ep_inverse(yy, "ep", mode=mode),
                 mesh=mesh, in_specs=P("ep", None, None),
                 out_specs=P("ep", None, None), check_vma=False))
-            us2 = time_fn(g, x)
-            out.append(row(f"a2a_combine/E{e_glob}c{cap}d{d}/{mode}", us2 - us,
-                           f"roundtrip_us={us2:.1f}"))
+            us2 = time_fn(g, y)
+            out.append(row(f"a2a_combine/E{e_glob}c{cap}d{d}/{mode}", us2,
+                           f"dispatch_us={us:.1f}"))
     return out

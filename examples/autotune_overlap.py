@@ -57,8 +57,13 @@ for k, v in sorted(res.all_timings.items(), key=lambda kv: kv[1]):
     print(f"  {k:20s} {v*1e6:9.1f} us")
 print(f"chosen: {res.config}   (signal resets performed: {resets['n']})")
 
-a = tuner.analytic_ag_matmul(M // W, K, N, W)
-print(f"\nanalytic v5e recommendation for the same op: mode={a.mode} "
-      f"chunks={a.chunks_per_rank} (compute {a.t_compute*1e6:.1f}us, "
-      f"comm {a.t_comm*1e6:.1f}us, total {a.t_total*1e6:.1f}us)")
+# the analytic tuner hands back a whole OverlapPolicy — consumable as-is
+# (drop onto ParallelConfig.overlap or pass to any repro.ops call)
+policy = tuner.recommend_overlap_modes(M, K, N, W)
+print(f"\nanalytic v5e recommendation, as one OverlapPolicy:")
+print(f"  ag_matmul -> {policy.describe('ag_matmul')}   "
+      f"matmul_rs -> {policy.describe('matmul_rs')}")
+r = policy.resolve("ag_matmul")
+print(f"  resolve('ag_matmul') = mode={r.mode} backend={r.backend} "
+      f"chunks={r.chunks}")
 print("ok")

@@ -1,4 +1,8 @@
-"""Quickstart: the paper's overlapped kernels in 60 lines.
+"""Quickstart: the paper's overlapped kernels through `repro.ops`.
+
+One typed op object per overlapped collective, one `OverlapPolicy` that
+answers "how should op X overlap?", and the analytic tuner that produces
+a policy for your shapes.
 
 Run (8 virtual CPU devices):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -11,8 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import collective_matmul as cm
-from repro.core import tuner
+from repro import ops
+from repro.core import overlap, tuner
+from repro.core.collective_matmul import make_sharded
 
 W = jax.device_count()
 mesh = jax.make_mesh((W,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
@@ -25,12 +30,26 @@ B = jnp.asarray(rng.randn(K, N), jnp.float32)  # sharded on N (TP weight)
 print(f"AllGather-GEMM on {W} devices: C[{M},{N}] = AG(A) @ B\n")
 want = np.asarray(A @ B)
 for mode in ("none", "ring", "bidir", "one_shot"):
-    f = cm.make_sharded(
-        functools.partial(cm.ag_matmul, axis="tp", mode=mode, out_dtype=jnp.float32),
+    f = make_sharded(
+        functools.partial(ops.ag_matmul, axis="tp", mode=mode,
+                          out_dtype=jnp.float32),
         mesh, (P("tp", None), P(None, "tp")), P(None, "tp"))
     got = np.asarray(f(A, B))
     err = np.abs(got - want).max()
     print(f"  mode={mode:9s} max|err| vs oracle = {err:.2e}")
+
+print("\nOne OverlapPolicy drives every op (mode/backend/chunks, resolved "
+      "against the registry):")
+policy = tuner.recommend_overlap_modes(M, K, N, world=W)
+for op in ("ag_matmul", "matmul_rs", "all_gather", "a2a_ep"):
+    print(f"  {op:12s} -> {policy.describe(op)}")
+
+f = make_sharded(
+    functools.partial(ops.ag_matmul, axis="tp", policy=policy,
+                      out_dtype=jnp.float32),
+    mesh, (P("tp", None), P(None, "tp")), P(None, "tp"))
+err = np.abs(np.asarray(f(A, B)) - want).max()
+print(f"  policy-driven ag_matmul max|err| = {err:.2e}")
 
 print("\nAnalytic tuner (paper §3.8, TPU v5e): which overlap for this op?")
 for m_loc, k, n_loc in [(256, 12288, 3072), (8, 512, 64)]:
@@ -42,9 +61,28 @@ for m_loc, k, n_loc in [(256, 12288, 3072), (8, 512, 64)]:
 print("\nGEMM-ReduceScatter (ring accumulator):")
 A2 = jnp.asarray(rng.randn(M, 2 * K), jnp.float32)
 B2 = jnp.asarray(rng.randn(2 * K, N), jnp.float32)
-f = cm.make_sharded(
-    functools.partial(cm.matmul_rs, axis="tp", mode="ring", out_dtype=jnp.float32),
+f = make_sharded(
+    functools.partial(ops.matmul_rs, axis="tp", mode="ring",
+                      out_dtype=jnp.float32),
     mesh, (P(None, "tp"), P("tp", None)), P("tp", None))
 err = np.abs(np.asarray(f(A2, B2)) - np.asarray(A2 @ B2)).max()
 print(f"  ring GEMM+RS max|err| = {err:.2e}")
+
+print("\nAuthor a NEW overlapped op in one declaration (graph + kernel "
+      "lowerings + backward all derived):")
+scaled = ops.declare(ops.OverlapOp(
+    name="qs_scaled_ag_matmul",
+    kind="ag",
+    tile=lambda a, b: 2.0 * jnp.dot(a, b, preferred_element_type=jnp.float32),
+    transports=("ring", "one_shot"),
+    kernel_protocols=(("ring", "ring_ag"),),
+    transpose="matmul_rs",
+    rowwise=True,
+))
+f = make_sharded(
+    functools.partial(scaled, axis="tp", mode="ring", out_dtype=jnp.float32),
+    mesh, (P("tp", None), P(None, "tp")), P(None, "tp"))
+err = np.abs(np.asarray(f(A, B)) - 2.0 * want).max()
+print(f"  declared op registered: "
+      f"{'qs_scaled_ag_matmul' in overlap.registry()}; max|err| = {err:.2e}")
 print("\nok")

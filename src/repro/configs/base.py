@@ -191,20 +191,20 @@ class ParallelConfig:
     # for peak memory; also the natural grain for overlapped a2a).
     moe_chunks: int = 1
 
-    # Overlap strategy for the paper's technique:
+    # Overlap strategy for the paper's technique. The consolidated knob
+    # is ``overlap``: an ``repro.ops.OverlapPolicy`` (mode/backend
+    # defaults, per-op override maps, chunk counts) with one
+    # ``resolve(op, hw)`` clamped against the engine registry. When
+    # ``overlap`` is None, the legacy fields below are folded into a
+    # policy on the fly (``ParallelConfig.policy``), so existing
+    # configs keep working:
     #   none     — plain XLA all_gather/psum_scatter (the NCCL-baseline analogue)
     #   ring     — unidirectional ring collective-matmul (paper Fig. 7 swizzle)
     #   bidir    — bidirectional ring (2 links, halves the steps)
     #   one_shot — low-latency one-shot transport (paper Alg. 4 analogue, decode)
-    # ``overlap_mode`` is the session-wide default; ``overlap_modes`` holds
-    # per-op overrides keyed by the engine registry's op names (ag_matmul,
-    # matmul_rs, ag_moe, moe_rs, a2a_ep, ring_attention, flash_decode, ...).
-    # ``mode_for`` resolves an op's effective mode: override if present,
-    # else the global default clamped to what the op supports (e.g. a
-    # global "ring" resolves to "one_shot" for a2a_ep, which has no ring
-    # transport). Latency-bound small-message ops default to one_shot,
-    # matching the paper's low-latency kernels for EP dispatch and the
-    # decode combine.
+    # Latency-bound small-message ops (a2a_ep, flash_decode) default to
+    # one_shot, matching the paper's low-latency kernels.
+    overlap: object = None  # Optional[repro.ops.OverlapPolicy]
     overlap_mode: str = "ring"
     overlap_modes: tuple = (("a2a_ep", "one_shot"), ("flash_decode", "one_shot"))
     ag_chunks: int = 0  # 0 = one chunk per TP rank (paper default)
@@ -214,10 +214,6 @@ class ParallelConfig:
     #   graph  — lax.ppermute engine pipelines (runs everywhere)
     #   kernel — the fused shmem-based kernels (repro.kernels over
     #            repro.shmem): remote DMAs on TPU, emulated DMA on CPU.
-    # ``overlap_backend`` is the session default; ``overlap_backends``
-    # holds per-op overrides; ``backend_for`` clamps to the registry's
-    # kernel-capable (op, transport) pairs (graph is the universal
-    # fallback, e.g. for bidir/2-level modes or ops with no kernel).
     overlap_backend: str = "graph"
     overlap_backends: tuple = ()
 
@@ -244,40 +240,67 @@ class ParallelConfig:
                 tuple(sorted(self.overlap_backends.items())),
             )
 
-    def mode_for(self, op: str) -> str:
-        """Effective overlap mode for registry op ``op`` (see overlap_modes)."""
-        for name, mode in self.overlap_modes:
-            if name == op:
-                requested = mode
-                break
-        else:
-            requested = self.overlap_mode
-        from ..core import overlap  # lazy: configs must stay import-light
+    @property
+    def policy(self):
+        """The consolidated overlap policy (``repro.ops.OverlapPolicy``).
 
-        return overlap.resolve_mode(op, requested)
+        ``overlap`` when set; otherwise the legacy per-field knobs folded
+        into a policy, so both config styles resolve identically."""
+        if self.overlap is not None:
+            return self.overlap
+        from ..ops.policy import OverlapPolicy  # lazy: stay import-light
+
+        return OverlapPolicy(
+            mode=self.overlap_mode,
+            backend=self.overlap_backend,
+            modes=self.overlap_modes,
+            backends=self.overlap_backends,
+            ag_chunks=self.ag_chunks,
+            rs_chunks=self.rs_chunks,
+        )
+
+    def mode_for(self, op: str) -> str:
+        """Effective overlap mode for registry op ``op`` (policy.resolve)."""
+        return self.policy.mode_for(op)
 
     def backend_for(self, op: str) -> str:
-        """Effective lowering backend for ``op``: per-op override if
-        present, else the session default, clamped by the registry to
-        the (op, mode) pairs with a kernel lowering."""
-        for name, backend in self.overlap_backends:
-            if name == op:
-                requested = backend
-                break
-        else:
-            requested = self.overlap_backend
-        from ..core import overlap  # lazy: configs must stay import-light
-
-        return overlap.resolve_backend(op, requested, self.mode_for(op))
+        """Effective lowering backend for ``op`` (policy.resolve)."""
+        return self.policy.backend_for(op)
 
     def with_modes(self, **per_op: str) -> "ParallelConfig":
-        """A copy with per-op overlap overrides merged in."""
+        """Deprecated: use an ``OverlapPolicy`` (``pcfg.policy.with_modes``
+        on the ``overlap`` field). A copy with per-op overrides merged."""
+        import warnings
+
+        warnings.warn(
+            "ParallelConfig.with_modes is deprecated: set "
+            "ParallelConfig.overlap to an ops.OverlapPolicy "
+            "(policy.with_modes) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if self.overlap is not None:
+            return dataclasses.replace(
+                self, overlap=self.overlap.with_modes(**per_op))
         merged = dict(self.overlap_modes)
         merged.update(per_op)
         return dataclasses.replace(self, overlap_modes=tuple(sorted(merged.items())))
 
     def with_backends(self, **per_op: str) -> "ParallelConfig":
-        """A copy with per-op backend overrides merged in."""
+        """Deprecated: use an ``OverlapPolicy`` (``pcfg.policy.with_backends``
+        on the ``overlap`` field). A copy with per-op overrides merged."""
+        import warnings
+
+        warnings.warn(
+            "ParallelConfig.with_backends is deprecated: set "
+            "ParallelConfig.overlap to an ops.OverlapPolicy "
+            "(policy.with_backends) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if self.overlap is not None:
+            return dataclasses.replace(
+                self, overlap=self.overlap.with_backends(**per_op))
         merged = dict(self.overlap_backends)
         merged.update(per_op)
         return dataclasses.replace(

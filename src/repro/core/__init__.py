@@ -11,18 +11,22 @@ baseline, and its differentiation rule (one shared ``custom_vjp`` for
 the ops whose backward is their dual overlapped op).
 
 The registry is consumed by three layers:
-  - ``configs.base.ParallelConfig.mode_for(op)`` resolves per-op overlap
-    modes from config (global default + per-op overrides);
+  - ``repro.ops.OverlapPolicy`` (on ``ParallelConfig.overlap``) resolves
+    per-op (mode, backend, chunks) in one place (``policy.resolve``);
   - ``tuner`` enumerates registry transports as its analytic candidates
-    and emits per-op mode maps (``recommend_overlap_modes``);
+    and returns a whole ``OverlapPolicy`` (``recommend_overlap_modes``);
   - ``tests/test_overlap_engine.py`` property-tests every registered
     (op, transport) pair against its baseline.
 
 The registry also carries a backend axis (graph | kernel): "kernel"
-lowers an op through the fused shmem kernels in ``repro.kernels``
-(built on the ``repro.shmem`` subsystem — remote DMAs on TPU, the
-emulated DMA engine on CPU), resolved per (op, transport) by
-``overlap.resolve_backend`` / ``ParallelConfig.backend_for``.
+lowers an op through the shmem tile executor / fused kernels (built on
+the ``repro.shmem`` subsystem — remote DMAs on TPU, the emulated DMA
+engine on CPU), resolved per (op, transport) by
+``overlap.resolve_backend``. Ops are REGISTERED via the declarative
+front-end ``repro.ops`` (``OverlapOp`` + ``declare``), which derives
+graph/kernel lowerings and the dual-schedule backward from one
+tile-level declaration; ``overlap.register`` remains the low-level hook
+for hand-written entries (2-level ops, attention, MoE).
 
 Modules:
 - overlap: the engine — AG/RS/bidir/2-level/a2a pipelines, registry,

@@ -549,7 +549,7 @@ def _diff_bwd(name, static, residuals, g):
 _diff_apply.defvjp(_diff_fwd, _diff_bwd)
 
 
-def apply(name: str, *tensors, **static):
+def dispatch(name: str, *tensors, **static):
     """Run a registered op. Ops with a ``bwd`` rule are routed through the
     ONE shared custom_vjp (their backward is their dual overlapped ring,
     O(1) permute buffers instead of autodiff's O(W)); ops without one
@@ -569,3 +569,18 @@ def apply(name: str, *tensors, **static):
     if spec.bwd is None:
         return _run_fwd(name, static, *tensors)
     return _diff_apply(name, tuple(sorted(static.items())), *tensors)
+
+
+def apply(name: str, *tensors, **static):
+    """Deprecated string-keyed entry point: use the typed op objects in
+    ``repro.ops`` (``ops.ag_matmul(x, w, policy=...)``) or, for raw
+    engine access, :func:`dispatch`."""
+    import warnings
+
+    warnings.warn(
+        "overlap.apply is deprecated: call the declared op in repro.ops "
+        f"(ops.{name} where declared) or overlap.dispatch",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return dispatch(name, *tensors, **static)

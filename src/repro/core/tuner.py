@@ -227,28 +227,34 @@ def recommend_overlap_modes(
     *,
     dtype_bytes: int = 2,
     spec: hw.HardwareSpec = hw.DEFAULT,
-) -> Dict[str, object]:
-    """Analytic per-op mode map for a layer with GLOBAL GEMM dims (m, k, n)
-    sharded over ``world`` TP ranks — the input for
-    ``ParallelConfig.overlap_modes`` (launch/steps.default_pcfg consumes
-    this under ``overlap_mode="auto"``).
+):
+    """Analytic :class:`repro.ops.OverlapPolicy` for a layer with GLOBAL
+    GEMM dims (m, k, n) sharded over ``world`` TP ranks — drop it
+    straight onto ``ParallelConfig.overlap`` (``launch/steps.default_pcfg``
+    does, under ``overlap_mode="auto"``; no dict re-packing anywhere).
 
-    Returns {"ag_matmul": mode, "matmul_rs": mode, "ag_chunks": int,
-    "rs_chunks": int, "backend": str}. The latency-bound ops (a2a_ep,
-    flash_decode) keep their registry defaults (one_shot) — their message
-    sizes do not depend on the layer dims the analytic model sees. The
-    backend key is the lowering recommendation (see
-    :func:`recommend_backend`).
+    The per-op mode map carries the analytic AG/RS picks plus the
+    latency-bound ops' registry defaults (a2a_ep, flash_decode stay
+    one_shot — their message sizes do not depend on the layer dims the
+    analytic model sees); the chunk knobs are the enumerated sub-chunk
+    winners; the backend is the lowering recommendation
+    (:func:`recommend_backend`).
     """
+    from ..ops.policy import LATENCY_OPS, OverlapPolicy
+
     ag = analytic_ag_matmul(max(1, m // world), k, max(1, n // world), world,
                             dtype_bytes=dtype_bytes, spec=spec)
     rs = analytic_matmul_rs(m, max(1, k // world), n, world,
                             dtype_bytes=dtype_bytes, spec=spec)
-    return {"ag_matmul": ag.mode, "matmul_rs": rs.mode,
-            "ag_chunks": ag.chunks_per_rank,
-            "rs_chunks": rs.chunks_per_rank,
-            "backend": recommend_backend(
-                {"ag_matmul": ag.mode, "matmul_rs": rs.mode})}
+    modes = dict(LATENCY_OPS)
+    modes.update({"ag_matmul": ag.mode, "matmul_rs": rs.mode})
+    return OverlapPolicy(
+        mode=ag.mode,
+        backend=recommend_backend({"ag_matmul": ag.mode, "matmul_rs": rs.mode}),
+        modes=modes,
+        ag_chunks=ag.chunks_per_rank,
+        rs_chunks=rs.chunks_per_rank,
+    )
 
 
 # ---------------------------------------------------------------------------

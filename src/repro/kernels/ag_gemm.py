@@ -1,205 +1,19 @@
-"""Fused AllGather-GEMM kernel — the paper's Figure 4, on the shmem
-subsystem (``repro.shmem``).
+"""Fused AllGather-GEMM kernel — the paper's Figure 4, declared over the
+shmem tile executor (``repro.shmem.executor``).
 
-One kernel per rank plays BOTH roles of the paper's producer/consumer
-pair (on TPU the async-task split is the DMA engines vs. the MXU, not
-threadblocks vs. threadblocks):
-
-  producer  — push my current chunk to the right neighbor's symmetric
-              workspace with ``putmem_signal`` (remote DMA; the recv
-              semaphore is the arrival signal);
-  consumer  — ``signal_wait`` for the chunk of step s (= data of rank
-              (me - s) % W, the Fig. 7 swizzle), stage it, run the dot,
-              and write the output strip.
-
-Flow control is the paper's signal-exchange protocol: a credit semaphore
-grants the left neighbor permission to overwrite a workspace slot only
-after the slot has been consumed (double buffering => 1 initial credit +
-one per consumed slot). The DMA of chunk s+1 is in flight while the dot
-of chunk s executes — this is the overlap.
-
-Backends (``repro.shmem.default_backend``):
-  pltpu     real TPU: the Pallas kernel body below, remote DMAs on ICI.
-  emulated  CPU / virtual devices: the SAME ring + credit protocol
-            executed against host-side symmetric heaps and signal slots
-            (``shmem.emulated``) — every put, arrival signal, credit and
-            barrier runs with true concurrency semantics, so the kernel
-            logic is validated without hardware.
-
-Scale note (pltpu): refs are whole-shard (VMEM-resident per step). For
-production shapes, wrap the dot in ``pltpu.emit_pipeline`` to tile
-(bm, bk, bn) within each chunk; the signal protocol is unchanged.
+The producer/consumer ring, the credit flow control, the double-buffered
+symmetric workspace and the barrier handshake all live in the executor's
+``ring_ag`` protocol; this op is just its tile compute — the per-chunk
+dot whose MXU time overlaps the in-flight remote DMA of the next chunk.
+Both backends (pltpu remote DMAs on TPU, the emulated DMA engine on CPU)
+come with the protocol.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax import lax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from .. import shmem
-from ..shmem import emulated as em
-
-
-def _ag_gemm_kernel(
-    a_ref,  # (m_loc, k)  ANY — my A shard
-    b_ref,  # (k, n_loc)  ANY — my B shard
-    o_ref,  # (m_loc*W, n_loc) ANY — my C strip
-    ws_ref,  # (2, m_loc, k) ANY — symmetric ring workspace (double buffer);
-    #          declared as an extra kernel output so the interpreter and
-    #          Mosaic both give it a stable cross-device (symmetric) address
-    a_vmem,  # (m_loc, k) VMEM
-    b_vmem,  # (k, n_loc) VMEM
-    o_vmem,  # (m_loc, n_loc) VMEM
-    local_sem,  # DMA
-    send_sem,  # DMA
-    recv_sem,  # DMA
-    cap_sem,  # REGULAR — slot credits granted to my left neighbor
-    *,
-    axis: str,
-    world: int,
-    m_loc: int,
-    out_dtype,
-):
-    me = lax.axis_index(axis)
-    left = lax.rem(me + world - 1, world)
-    right = lax.rem(me + 1, world)
-
-    # Symmetric-memory handshake: every rank's workspace must exist before
-    # any one-sided put lands in it (paper: barrier_all after allocation).
-    shmem.tpu_backend.barrier_all(axis, world)
-
-    # Stage my B shard into VMEM once; copy my A chunk into ring slot 0.
-    cb = pltpu.make_async_copy(b_ref, b_vmem, local_sem)
-    cb.start()
-    c0 = pltpu.make_async_copy(a_ref, ws_ref.at[0], local_sem)
-    c0.start()
-    cb.wait()
-    c0.wait()
-
-    # Initially my right neighbor's slot 1 is free: grant 1 credit.
-    shmem.tpu_backend.signal_op(cap_sem, left, axis=axis)
-
-    for s in range(world):
-        slot = s % 2
-        send = None
-        if s != world - 1:
-            # producer: wait for a free slot at the right neighbor, then
-            # putmem_signal my current chunk into their next slot.
-            shmem.tpu_backend.signal_wait_until(cap_sem, 1)
-            send = shmem.tpu_backend.putmem_signal_nbi(
-                ws_ref.at[slot],
-                ws_ref.at[(s + 1) % 2],
-                send_sem,
-                recv_sem,
-                right,
-                axis=axis,
-            )
-
-        # consumer: chunk of step s is rank (me - s)'s data. For s>0 its
-        # arrival is ordered by recv_sem via the previous step's wait.
-        ca = pltpu.make_async_copy(ws_ref.at[slot], a_vmem, local_sem)
-        ca.start()
-        ca.wait()
-
-        # The MXU dot overlaps the in-flight remote DMA of chunk s+1.
-        o_vmem[...] = jnp.dot(
-            a_vmem[...], b_vmem[...], preferred_element_type=jnp.float32
-        ).astype(out_dtype)
-        owner = lax.rem(me - s + world, world)
-        co = pltpu.make_async_copy(
-            o_vmem, o_ref.at[pl.ds(owner * m_loc, m_loc), :], local_sem
-        )
-        co.start()
-        co.wait()
-
-        if send is not None:
-            # wait: my send drained + my incoming chunk (from the left
-            # neighbor's symmetric send) has landed in slot (s+1)%2.
-            send.wait()
-        # Slot fully consumed — BOTH readers are done: the HBM->VMEM copy
-        # AND my outgoing remote DMA (send.wait() above). Only now may the
-        # left neighbor overwrite it; granting after the vmem copy alone
-        # races the in-flight outgoing read (one-sided put corruption).
-        # Skip grants that would exceed the W-1 sends the neighbor makes.
-        if s < world - 2:
-            shmem.tpu_backend.signal_op(cap_sem, left, axis=axis)
-
-
-def _ag_gemm_pltpu(a_blk, b_loc, *, axis, world, out_dtype, collective_id):
-    m_loc, k = a_blk.shape
-    _, n_loc = b_loc.shape
-    kernel = functools.partial(
-        _ag_gemm_kernel,
-        axis=axis,
-        world=world,
-        m_loc=m_loc,
-        out_dtype=out_dtype,
-    )
-    out, _ws = pl.pallas_call(
-        kernel,
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m_loc * world, n_loc), out_dtype),
-            jax.ShapeDtypeStruct((2, m_loc, k), a_blk.dtype),  # ring workspace
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((m_loc, k), a_blk.dtype),
-            pltpu.VMEM((k, n_loc), b_loc.dtype),
-            pltpu.VMEM((m_loc, n_loc), out_dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.REGULAR,
-        ],
-        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
-    )(a_blk, b_loc)
-    return out
-
-
-def _ag_gemm_emulated(a_blk, b_loc, *, axis, world, out_dtype, collective_id):
-    """The same producer/consumer ring + credit protocol on the emulated
-    DMA engine: slot parity, initial credit, grant-after-consume and the
-    skip of the final grants mirror the Pallas body line for line."""
-    me = lax.axis_index(axis)
-    left = lax.rem(me + world - 1, world)
-    right = lax.rem(me + 1, world)
-    m_loc, k = a_blk.shape
-    n_loc = b_loc.shape[1]
-
-    ctx = em.ShmemCtx(axis, world, collective_id)
-    ctx.barrier_all()
-    ctx.signal_op(left, sig="cap")
-
-    cur = a_blk
-    out = jnp.zeros((m_loc * world, n_loc), out_dtype)
-    for s in range(world):
-        if s != world - 1:
-            ctx.signal_wait_until(sig="cap", value=1)
-            ctx.putmem_signal_nbi(cur, right, buf="ws", slot=(s + 1) % 2,
-                                  sig="recv")
-        partial = jnp.dot(
-            cur, b_loc, preferred_element_type=jnp.float32
-        ).astype(out_dtype)
-        owner = lax.rem(me - s + world, world)
-        out = lax.dynamic_update_slice(out, partial, (owner * m_loc, 0))
-        if s != world - 1:
-            cur = ctx.wait_read((m_loc, k), a_blk.dtype, buf="ws",
-                                slot=(s + 1) % 2, sig="recv")
-            if s < world - 2:
-                ctx.signal_op(left, sig="cap")
-    ctx.barrier_all()
-    return out
+from ..shmem import executor
 
 
 def ag_gemm(
@@ -216,8 +30,11 @@ def ag_gemm(
 
     ``backend`` is a shmem backend name ("pltpu" | "emulated"); default
     picks per platform (`shmem.default_backend`)."""
-    out_dtype = out_dtype or a_blk.dtype
-    backend = backend or shmem.default_backend()
-    impl = _ag_gemm_pltpu if backend == "pltpu" else _ag_gemm_emulated
-    return impl(a_blk, b_loc, axis=axis, world=world, out_dtype=out_dtype,
-                collective_id=collective_id)
+
+    def tile(a_chunk, b):
+        return jnp.dot(a_chunk, b, preferred_element_type=jnp.float32)
+
+    return executor.run(
+        "ring_ag", tile, a_blk, (b_loc,), axis=axis, world=world,
+        out_dtype=out_dtype or a_blk.dtype, collective_id=collective_id,
+        backend=backend)

@@ -1,114 +1,18 @@
-"""Low-latency one-shot AllGather kernel — paper Algorithm 4 on the
-shmem subsystem (``repro.shmem``).
+"""Low-latency one-shot AllGather kernel — paper Algorithm 4, declared
+over the shmem tile executor (``repro.shmem.executor``).
 
 The GPU original combines an NVLink multimem broadcast with the NCCL LL
-(flag-in-word) protocol. Neither exists on TPU — and neither is needed:
-ICI remote DMAs carry hardware arrival semaphores. What DOES transfer is
-the *structure* that makes Alg. 4 fast: every transfer is issued up-front
-with no serial ring dependency, so the total latency is one propagation
-delay plus the skew, not W-1 hops. Message latency is what matters here
-(decode-time AllGather of per-rank partials), not bandwidth.
-
-Each rank one-sided-puts its shard into every peer's output block `me`
-(the broadcast_put / multimem_st analogue), then waits for W-1 arrival
-signals.
-
-Backends: ``pltpu`` (real TPU, Pallas body below) and ``emulated``
-(host-side symmetric heaps; the same all-puts-up-front + signal_wait
-structure on CPU virtual devices).
+(flag-in-word) protocol; on TPU the remote DMAs carry hardware arrival
+semaphores, so what transfers is the *structure* that makes Alg. 4 fast:
+every put issued up-front with no serial ring dependency. That structure
+is the executor's ``one_shot_ag`` protocol; with no tile compute
+(``tile=None``) it IS this kernel.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from .. import shmem
-from ..shmem import emulated as em
-
-
-def _ll_ag_kernel(
-    x_ref,  # (m_loc, n) ANY
-    o_ref,  # (m_loc*W, n) ANY
-    local_sem,
-    send_sem,
-    recv_sem,
-    *,
-    axis: str,
-    world: int,
-    m_loc: int,
-):
-    me = lax.axis_index(axis)
-
-    shmem.tpu_backend.barrier_all(axis, world)
-
-    # Local copy into my own block.
-    lc = pltpu.make_async_copy(x_ref, o_ref.at[pl.ds(me * m_loc, m_loc), :], local_sem)
-    lc.start()
-
-    # One-shot: all W-1 puts issued before any wait (Alg. 4 line 11-18
-    # structure — no skew accumulation from a serial loop). This is
-    # broadcast_put with each DMA kept for the explicit arrival waits.
-    sends = []
-    for off in range(1, world):
-        peer = lax.rem(me + off, world)
-        sends.append(
-            pltpu.make_async_remote_copy(
-                src_ref=x_ref,
-                dst_ref=o_ref.at[pl.ds(me * m_loc, m_loc), :],
-                send_sem=send_sem,
-                recv_sem=recv_sem,
-                device_id=(peer,),
-                device_id_type=pltpu.DeviceIdType.MESH,
-            )
-        )
-    for s in sends:
-        s.start()
-    lc.wait()
-    # SPMD symmetry: my W-1 incoming messages are my peers' sends with the
-    # same shape/semaphore, so waiting my own descriptors consumes exactly
-    # the right signal count (send-drain + W-1 arrivals).
-    shmem.tpu_backend.quiet(*sends)
-
-
-def _ll_allgather_pltpu(x, *, axis, world, collective_id):
-    m_loc, n = x.shape
-    kernel = functools.partial(_ll_ag_kernel, axis=axis, world=world, m_loc=m_loc)
-    return pl.pallas_call(
-        kernel,
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((m_loc * world, n), x.dtype),
-        scratch_shapes=[
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-        ],
-        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
-    )(x)
-
-
-def _ll_allgather_emulated(x, *, axis, world, collective_id):
-    """Alg. 4 structure on the emulated DMA engine: broadcast_put my
-    shard into every PE's slot ``me`` (self included, so all W slots
-    exist symmetrically), one signal_wait for all W arrivals, then
-    assemble the gathered output from the W landed slots."""
-    m_loc, n = x.shape
-
-    ctx = em.ShmemCtx(axis, world, collective_id)
-    ctx.barrier_all()
-    ctx.broadcast_put(x, buf="ws", sig="recv")
-    ctx.signal_wait_until(sig="recv", value=world)
-    out = jnp.zeros((m_loc * world, n), x.dtype)
-    for r in range(world):
-        shard = ctx.read_symmetric((m_loc, n), x.dtype, buf="ws", slot=r)
-        out = lax.dynamic_update_slice(out, shard, (r * m_loc, 0))
-    ctx.barrier_all()
-    return out
+from ..shmem import executor
 
 
 def ll_allgather(
@@ -123,6 +27,6 @@ def ll_allgather(
 
     ``backend`` is a shmem backend name ("pltpu" | "emulated"); default
     picks per platform (`shmem.default_backend`)."""
-    backend = backend or shmem.default_backend()
-    impl = _ll_allgather_pltpu if backend == "pltpu" else _ll_allgather_emulated
-    return impl(x, axis=axis, world=world, collective_id=collective_id)
+    return executor.run(
+        "one_shot_ag", None, x, (), axis=axis, world=world,
+        collective_id=collective_id, backend=backend)

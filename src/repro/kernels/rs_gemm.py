@@ -1,164 +1,27 @@
-"""Fused GEMM-ReduceScatter kernel — paper Algorithm 3 on the shmem
-subsystem (``repro.shmem``).
+"""Fused GEMM-ReduceScatter kernel — paper Algorithm 3, declared over the
+shmem tile executor (``repro.shmem.executor``).
 
-The paper's push-mode ReduceScatter: as soon as a tile of the producer
-GEMM's output is ready, it is one-sided-pushed (putmem_signal) to the rank
-that owns that output block; each rank then locally reduces the W partial
-tiles that landed in its symmetric workspace after signal_wait.
+The push protocol (partials one-sided-pushed to their owner's symmetric
+slot as they retire, signal_wait + local f32 reduction at the end) lives
+in the executor; this op contributes only the tile compute — the
+per-block dot. Two transports:
 
-One kernel per rank plays both roles: per ring step s it computes the
-partial block destined for rank (me - s - 1) % W (the Alg. 3 swizzle
-order, peers first, own block last), pushes it with a one-sided put whose
-recv signal is the arrival notification, and finally reduces its own W
-arrived partials. Compute of step s+1 overlaps the DMA of step s.
-
-Backends: ``pltpu`` (real TPU, Pallas body below) and ``emulated``
-(host-side symmetric heaps — the same push/signal/reduce protocol
-validated on CPU virtual devices; see ``shmem.emulated``).
+  ring      the executor's ``push_rs``: Alg. 3 swizzle order (peers
+            first, own block last), compute of step s+1 overlapping the
+            DMA of step s.
+  one_shot  the executor's ``one_shot_rs`` (low-latency variant): all W
+            partials computed first, all puts issued up-front with
+            distinct ring offsets — no serial compute/DMA dependency,
+            latency-optimal for small blocks.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax import lax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from .. import shmem
-from ..shmem import emulated as em
+from ..shmem import executor
 
-
-def _rs_gemm_kernel(
-    a_ref,  # (m, k_loc) ANY — my A shard (K sharded)
-    b_ref,  # (k_loc, n) ANY — my B shard
-    o_ref,  # (m_blk, n)  ANY — my reduced output block
-    ws_ref,  # (W, m_blk, n) ANY — symmetric landing workspace
-    a_vmem,  # (m_blk, k_loc) VMEM
-    b_vmem,  # (k_loc, n) VMEM
-    p_vmem,  # (m_blk, n) VMEM — partial tile
-    local_sem,
-    send_sem,
-    recv_sem,
-    *,
-    axis: str,
-    world: int,
-    m_blk: int,
-    out_dtype,
-):
-    me = lax.axis_index(axis)
-
-    shmem.tpu_backend.barrier_all(axis, world)
-
-    cb = pltpu.make_async_copy(b_ref, b_vmem, local_sem)
-    cb.start()
-    cb.wait()
-
-    sends = []
-    for s in range(world):
-        # Alg. 3 swizzle: peers' blocks first, own block last
-        blk = lax.rem(me - s - 1 + 2 * world, world)
-        ca = pltpu.make_async_copy(
-            a_ref.at[pl.ds(blk * m_blk, m_blk), :], a_vmem, local_sem
-        )
-        ca.start()
-        ca.wait()
-        p_vmem[...] = jnp.dot(
-            a_vmem[...], b_vmem[...], preferred_element_type=jnp.float32
-        ).astype(out_dtype)
-        if s == world - 1:
-            # my own block: local copy into my slot of my workspace
-            cl = pltpu.make_async_copy(p_vmem, ws_ref.at[me], local_sem)
-            cl.start()
-            cl.wait()
-        else:
-            # one-sided push + arrival signal to the owner (slot = me)
-            send = shmem.tpu_backend.putmem_signal_nbi(
-                p_vmem, ws_ref.at[me], send_sem, recv_sem, blk, axis=axis
-            )
-            # the next step's dot overlaps this DMA; drain before reusing
-            # p_vmem (single partial buffer — correctness over depth here)
-            send.wait_send()
-            sends.append(send)
-
-    # signal_wait for all W-1 remote partials, then local reduction
-    for send in sends:
-        send.wait_recv()
-    acc = jnp.zeros((m_blk, o_ref.shape[1]), jnp.float32)
-    for r in range(world):
-        ct = pltpu.make_async_copy(ws_ref.at[r], p_vmem, local_sem)
-        ct.start()
-        ct.wait()
-        acc = acc + p_vmem[...].astype(jnp.float32)
-    p_vmem[...] = acc.astype(out_dtype)
-    co = pltpu.make_async_copy(p_vmem, o_ref, local_sem)
-    co.start()
-    co.wait()
-
-
-def _rs_gemm_pltpu(a_loc, b_loc, *, axis, world, out_dtype, collective_id):
-    m, k_loc = a_loc.shape
-    _, n = b_loc.shape
-    m_blk = m // world
-    kernel = functools.partial(
-        _rs_gemm_kernel, axis=axis, world=world, m_blk=m_blk, out_dtype=out_dtype
-    )
-    out, _ws = pl.pallas_call(
-        kernel,
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m_blk, n), out_dtype),
-            jax.ShapeDtypeStruct((world, m_blk, n), out_dtype),  # workspace
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((m_blk, k_loc), a_loc.dtype),
-            pltpu.VMEM((k_loc, n), b_loc.dtype),
-            pltpu.VMEM((m_blk, n), out_dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-        ],
-        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
-    )(a_loc, b_loc)
-    return out
-
-
-def _rs_gemm_emulated(a_loc, b_loc, *, axis, world, out_dtype, collective_id):
-    """Alg. 3 push protocol on the emulated DMA engine: per-step put of
-    the partial into the owner's workspace slot ``me`` (own block pushed
-    to self at the last step, so all W slots land symmetrically), then
-    one signal_wait for W arrivals and the local f32 reduction."""
-    me = lax.axis_index(axis)
-    m, k_loc = a_loc.shape
-    n = b_loc.shape[1]
-    m_blk = m // world
-
-    ctx = em.ShmemCtx(axis, world, collective_id)
-    ctx.barrier_all()
-    for s in range(world):
-        # Alg. 3 swizzle: peers' blocks first, own block last (blk == me)
-        blk = lax.rem(me - s - 1 + 2 * world, world)
-        a_b = lax.dynamic_slice(a_loc, (blk * m_blk, 0), (m_blk, k_loc))
-        partial = jnp.dot(
-            a_b, b_loc, preferred_element_type=jnp.float32
-        ).astype(out_dtype)
-        ctx.putmem_signal_nbi(partial, blk, buf="ws", slot=me, sig="recv")
-
-    ctx.signal_wait_until(sig="recv", value=world)
-    acc = jnp.zeros((m_blk, n), jnp.float32)
-    for r in range(world):
-        part = ctx.read_symmetric((m_blk, n), out_dtype, buf="ws", slot=r)
-        acc = acc + part.astype(jnp.float32)
-    ctx.barrier_all()
-    return acc.astype(out_dtype)
+_PROTO = {"ring": "push_rs", "one_shot": "one_shot_rs"}
 
 
 def rs_gemm(
@@ -170,15 +33,19 @@ def rs_gemm(
     out_dtype=None,
     collective_id: int = 9,
     backend: str | None = None,
+    transport: str = "ring",
 ) -> jax.Array:
     """Fused overlapped GEMM+ReduceScatter. Returns (m / world, n).
 
     ``backend`` is a shmem backend name ("pltpu" | "emulated"); default
-    picks per platform (`shmem.default_backend`)."""
-    m, _ = a_loc.shape
-    assert m % world == 0
-    out_dtype = out_dtype or a_loc.dtype
-    backend = backend or shmem.default_backend()
-    impl = _rs_gemm_pltpu if backend == "pltpu" else _rs_gemm_emulated
-    return impl(a_loc, b_loc, axis=axis, world=world, out_dtype=out_dtype,
-                collective_id=collective_id)
+    picks per platform (`shmem.default_backend`). ``transport`` picks the
+    push protocol ("ring" = Alg. 3, "one_shot" = all puts up-front)."""
+    assert a_loc.shape[0] % world == 0, (a_loc.shape, world)
+
+    def tile(a_blk, b):
+        return jnp.dot(a_blk, b, preferred_element_type=jnp.float32)
+
+    return executor.run(
+        _PROTO[transport], tile, a_loc, (b_loc,), axis=axis, world=world,
+        out_dtype=out_dtype or a_loc.dtype, collective_id=collective_id,
+        backend=backend)

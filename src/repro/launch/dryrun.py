@@ -81,7 +81,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
         loop_trips=trips,
         model_flops_total=model_flops,
         links_used={"ring": 1, "bidir": 2, "one_shot": 4, "none": 2}.get(
-            pcfg.mode_for("ag_matmul"), 1),
+            pcfg.policy.resolve("ag_matmul").mode, 1),
         backward=training,
     )
     out = json.loads(rep.to_json())

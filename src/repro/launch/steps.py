@@ -256,40 +256,34 @@ def default_pcfg(cfg: ModelConfig, shape: ShapeConfig, *, multi_pod: bool,
     (engine registry candidates) sized to this cell's dominant GEMM;
     explicit ``overlap_modes`` pairs always win over both.
     """
+    from ..ops.policy import OverlapPolicy
+
     kv_shard = "heads"
     if shape.name == "long_500k":
         kv_shard = "sequence"  # distributed flash decode over "data"
     big = cfg.param_count() > 500e9
     moment = "bfloat16" if big else "float32"
-    ag_chunks = 0
-    rs_chunks = 0
-    overlap_backend = "graph"
-    auto_modes: dict = {}
     if overlap_mode == "auto":
         from ..core import tuner
 
         pods_n = 2 if multi_pod else 1
         m = max(tp, shape.tokens // max(1, dp * pods_n))  # rows per data rank
-        rec = tuner.recommend_overlap_modes(m, cfg.d_model, cfg.d_ff, tp)
-        ag_chunks = int(rec.pop("ag_chunks"))
-        rs_chunks = int(rec.pop("rs_chunks"))
-        overlap_backend = str(rec.pop("backend"))
-        auto_modes = {k: str(v) for k, v in rec.items()}
-        overlap_mode = auto_modes.get("ag_matmul", "ring")
-    auto_modes.update(dict(overlap_modes))
-    pcfg = ParallelConfig(
+        # the tuner hands back a whole OverlapPolicy — no dict re-packing
+        policy = tuner.recommend_overlap_modes(m, cfg.d_model, cfg.d_ff, tp)
+    else:
+        policy = OverlapPolicy(mode=overlap_mode)
+    if overlap_modes:
+        policy = policy.with_modes(**dict(overlap_modes))
+    return ParallelConfig(
         dp=dp,
         tp=tp,
         pods=2 if multi_pod else 1,
         fsdp=True,
         fsdp_pods=multi_pod,  # 1T-class states only fit when FSDP spans pods
-        overlap_mode=overlap_mode,
-        overlap_backend=overlap_backend,
-        ag_chunks=ag_chunks,
-        rs_chunks=rs_chunks,
+        overlap=policy,
+        overlap_mode=policy.mode,  # legacy mirror (logs / dryrun labels)
         remat="block",
         moment_dtype=moment,
         kv_shard=kv_shard,
         moe_chunks=8 if (cfg.family == "moe" and cfg.d_model >= 4096) else 1,
     )
-    return pcfg.with_modes(**auto_modes) if auto_modes else pcfg

@@ -120,7 +120,9 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--overlap", default="ring",
-                    choices=["ring", "bidir", "one_shot", "none"])
+                    choices=["ring", "bidir", "one_shot", "none", "auto"],
+                    help="overlap transport; 'auto' asks the analytic "
+                         "tuner for a whole OverlapPolicy")
     ap.add_argument("--remat", default="block", choices=["none", "dots", "block"])
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--no-fsdp", action="store_true")

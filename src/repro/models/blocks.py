@@ -299,7 +299,7 @@ def moe_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
         t_c = t_loc // n_chunks
         cap = _capacity(t_c, k, cfg.num_experts, cfg.capacity_factor)
 
-        a2a_mode = pcfg.mode_for("a2a_ep")
+        a2a_mode = pcfg.policy.resolve("a2a_ep").mode
 
         def ep_chunk(hc, lc):
             disp, dinfo = mo.topk_dispatch(hc, lc, k, cap)  # (E, cap, D)
@@ -334,7 +334,7 @@ def moe_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
         expert_fn = jax.checkpoint(expert_fn)
 
     if tp > 1:
-        full = mo.ag_moe(h, logits, expert_fn, MODEL_AXIS, mode=pcfg.mode_for("ag_moe"))
+        full = mo.ag_moe(h, logits, expert_fn, MODEL_AXIS, mode=pcfg.policy.resolve("ag_moe").mode)
         out = cm.reduce_scatter_chunked(full, MODEL_AXIS)
     else:
         out = expert_fn(h, logits)
@@ -352,7 +352,7 @@ def moe_decode(cfg, pcfg, info, p: dict, x: Array) -> Array:
     cap = _capacity(h.shape[0], k, cfg.num_experts, cfg.capacity_factor)
     disp, dinfo = mo.topk_dispatch(h, logits, k, cap)
     if info.moe_mode == "ep" and pcfg.tp > 1:
-        a2a_mode = pcfg.mode_for("a2a_ep")
+        a2a_mode = pcfg.policy.resolve("a2a_ep").mode
         x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a_mode)
         y_ep = _expert_ffn(cfg, x_ep, wi, wo)
         back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode=a2a_mode)

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import ops
 from ..configs.base import ModelConfig, ParallelConfig
 from ..core import collective_matmul as cm
 from .params import LeafSpec, TPInfo, unpack
@@ -111,16 +112,12 @@ def ag_linear(
     b: Optional[Array] = None,
 ) -> Array:
     """SP -> TP boundary: AllGather-GEMM. Returns (T, cols_loc)."""
-    mode = pcfg.mode_for("ag_matmul") if pcfg.tp > 1 else "none"
-    y = cm.ag_matmul(
-        x_sp,
-        w,
-        MODEL_AXIS,
-        mode=mode,
-        chunks_per_rank=max(1, pcfg.ag_chunks),
-        out_dtype=x_sp.dtype,
-        backend=pcfg.backend_for("ag_matmul"),
-    )
+    if pcfg.tp > 1:
+        y = ops.ag_matmul(x_sp, w, axis=MODEL_AXIS, policy=pcfg.policy,
+                          out_dtype=x_sp.dtype)
+    else:
+        y = ops.ag_matmul(x_sp, w, axis=MODEL_AXIS, mode="none",
+                          out_dtype=x_sp.dtype)
     if b is not None:
         y = y + b.astype(y.dtype)
     return y
@@ -132,11 +129,11 @@ def rs_linear(
     pcfg: ParallelConfig,
 ) -> Array:
     """TP -> SP boundary: GEMM-ReduceScatter. Returns (T_loc, D)."""
-    mode = pcfg.mode_for("matmul_rs") if pcfg.tp > 1 else "none"
-    return cm.matmul_rs(y_tp, w, MODEL_AXIS, mode=mode,
-                        chunks_per_rank=max(1, pcfg.rs_chunks),
-                        out_dtype=y_tp.dtype,
-                        backend=pcfg.backend_for("matmul_rs"))
+    if pcfg.tp > 1:
+        return ops.matmul_rs(y_tp, w, axis=MODEL_AXIS, policy=pcfg.policy,
+                             out_dtype=y_tp.dtype)
+    return ops.matmul_rs(y_tp, w, axis=MODEL_AXIS, mode="none",
+                         out_dtype=y_tp.dtype)
 
 
 def local_linear(x: Array, w: Array, b: Optional[Array] = None) -> Array:

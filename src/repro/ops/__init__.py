@@ -1,0 +1,45 @@
+"""repro.ops — the declarative op-authoring front-end.
+
+This package is the primary user surface for overlapped ops, replacing
+the string-keyed ``overlap.apply("ag_matmul", ...)`` plus four parallel
+per-op dicts on ``ParallelConfig``:
+
+  ``OverlapOp`` / ``declare``   author a new overlapped op from ONE
+      tile-level declaration; the graph lowering (ppermute pipelines),
+      the kernel lowering (shmem tile executor protocols), the
+      dual-schedule backward and the registry/tuner/test enrollment are
+      all derived. See ``authoring`` for the contract.
+
+  ``OverlapPolicy``             the ONE object answering "how should op
+      X overlap?" — mode/backend defaults, per-op override maps and the
+      chunk knobs, with a single ``resolve(op, hw)`` clamped against the
+      live registry. Lives on ``ParallelConfig.overlap`` and is produced
+      whole by ``tuner.recommend_overlap_modes``.
+
+  ``ops.ag_matmul`` / ``ops.matmul_rs`` / ``ops.all_gather``   the
+      standard library, declared in ``library`` — call them inside
+      ``shard_map`` as ``ops.ag_matmul(x, w, axis="model",
+      policy=pcfg.policy)``.
+
+Migration from the string-keyed surface (kept as DeprecationWarning
+shims): ``overlap.apply(name, ...)`` -> ``ops.<name>(...)``;
+``ParallelConfig.with_modes/with_backends`` -> ``pcfg.policy.with_modes``
+/ ``OverlapPolicy`` on the config.
+"""
+from .authoring import BoundOp, OverlapOp, declare, declared, get
+from .library import ag_matmul, all_gather, matmul_rs
+from .policy import LATENCY_OPS, OverlapPolicy, ResolvedOverlap
+
+__all__ = [
+    "BoundOp",
+    "OverlapOp",
+    "OverlapPolicy",
+    "ResolvedOverlap",
+    "LATENCY_OPS",
+    "ag_matmul",
+    "all_gather",
+    "matmul_rs",
+    "declare",
+    "declared",
+    "get",
+]

@@ -1,0 +1,489 @@
+"""`OverlapOp` — declare an overlapped op once, get every lowering derived.
+
+The paper's claim (§2, §3.7) is a *programming model*, not an op zoo: an
+overlapped op is a tile-level compute composed with a communication
+schedule. This module is that claim as an API. One declaration
+
+    op = declare(OverlapOp(
+        name="ag_matmul", kind="ag",
+        tile=lambda a_chunk, b: jnp.dot(a_chunk, b,
+                                        preferred_element_type=jnp.float32),
+        transports=("ring", "bidir", "one_shot"),
+        kernel_protocols=(("ring", "ring_ag"), ("one_shot", "one_shot_ag")),
+        transpose="matmul_rs",
+    ))
+
+derives and registers, from the single ``tile`` function:
+
+  graph lowering   the ``ag_pipeline``/``rs_pipeline`` folds of
+                   ``core.overlap`` (lax.ppermute, runs everywhere),
+                   including bidir splitting and the sub-chunking knob;
+  kernel lowering  the shmem tile executor (``shmem.executor``): the
+                   declared protocol wraps ``tile`` in the ring/credit,
+                   Alg.-3 push, or one-shot put/signal protocol — remote
+                   DMAs on TPU, the emulated DMA engine on CPU;
+  backward         the op's dual schedule, via ``jax.vjp`` of ``tile``
+                   composed with the transpose pipeline (an AG op's
+                   operand gradient rides the dual RS ring and vice
+                   versa), routed through the engine's ONE shared
+                   custom_vjp — so a kernel forward keeps the graph
+                   dual as its backward and grads are bit-identical
+                   across backends;
+  registration     an ``OverlapSpec`` in the engine registry, which is
+                   what ``OverlapPolicy`` resolution, the tuner's
+                   candidate enumeration and the parity-test matrix all
+                   consume — a declared op shows up in all three with no
+                   further wiring.
+
+Contract for ``tile(chunk, *statics)``
+--------------------------------------
+Pure jax function; the first argument is the tensor that rides the
+transport (AG kinds: the gathered operand's per-rank chunk; RS kinds:
+one dim-0 block of the local operand), the rest stay rank-resident. It
+must be **linear in the riding argument** (every op in the paper is —
+the communicated factor of a GEMM enters linearly); statics may enter
+arbitrarily. Return the f32 partial; the framework handles output-dtype
+casts. Declare ``rowwise=True`` when the tile maps rows to rows
+one-to-one (enables bidir halving and the AG sub-chunking knob).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name
+
+from ..core import overlap as ov
+from ..shmem import executor
+from ..shmem.executor import slice_rows as _slice_rows
+from ..shmem.executor import update_rows as _update
+
+Array = jax.Array
+
+# Dual kinds: an op's transpose partner must lower through the dual
+# schedule (the AG operand-gradient rides an RS ring and vice versa).
+_DUAL_KIND = {"ag": ("rs",), "gather": ("rs",), "rs": ("ag", "gather"),
+              "a2a": ("a2a",)}
+
+# collective_id allocation for declared kernel lowerings (the hand-tuned
+# kernels in repro.kernels keep their historical ids below 32).
+_CIDS = itertools.count(32)
+
+
+@dataclass(frozen=True)
+class OverlapOp:
+    """One overlapped op, declared at tile level.
+
+    name              registry identifier (policy / tuner / test key)
+    kind              "ag" | "gather" | "rs" | "a2a" — which side of the
+                      transport the op sits on (what rides: the operand
+                      chunks, or the accumulator)
+    tile              tile compute ``tile(chunk, *statics) -> f32 tile``;
+                      None = identity (pure data movement)
+    transports        engine transports the graph lowering supports
+    baseline          monolithic fallback mode name
+    default           transport used when an unsupported mode is asked
+    kernel_protocols  (transport, executor protocol) pairs: each one
+                      becomes a kernel-backend lowering via the shmem
+                      tile executor
+    transpose         the dual op's registry name, by reference (the
+                      derived backward rides the partner's schedule;
+                      validated against the registry)
+    rowwise           tile maps chunk rows 1:1 to tile rows — enables
+                      bidir halving and AG-side sub-chunking
+    static_split      optional ``(statics, n) -> [statics_j] | None``:
+                      split the statics into n output column groups (RS
+                      sub-chunking and RS bidir); None = not splittable
+    split_axis        output axis the split groups concatenate on
+    differentiable    derive + register the dual-schedule backward
+    baseline_fwd      optional explicit monolithic lowering
+                      ``(operand, statics, axis, out_dtype) -> out``
+                      (derived from ``tile`` when omitted)
+    checkpoint_tag    optional ``checkpoint_name`` tag on the output
+                      (remat policies key on it)
+    """
+
+    name: str
+    kind: str
+    tile: Optional[Callable] = None
+    transports: Tuple[str, ...] = ("ring",)
+    baseline: str = "none"
+    default: str = "ring"
+    kernel_protocols: Tuple[Tuple[str, str], ...] = ()
+    transpose: Optional[str] = None
+    rowwise: bool = False
+    static_split: Optional[Callable] = None
+    split_axis: int = 1
+    differentiable: bool = True
+    baseline_fwd: Optional[Callable] = None
+    checkpoint_tag: Optional[str] = None
+
+    def __post_init__(self):
+        if isinstance(self.kernel_protocols, Mapping):
+            object.__setattr__(self, "kernel_protocols",
+                               tuple(self.kernel_protocols.items()))
+        if self.kind not in _DUAL_KIND:
+            raise ValueError(f"{self.name}: unknown kind {self.kind!r}")
+        for t, proto in self.kernel_protocols:
+            if proto not in executor.PROTOCOLS:
+                raise ValueError(
+                    f"{self.name}: unknown executor protocol {proto!r}")
+
+    def tile_fn(self) -> Callable:
+        return self.tile if self.tile is not None else (lambda x: x)
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _tile_rows(op: OverlapOp, chunk, statics) -> Tuple[int, Tuple[int, ...]]:
+    ts = jax.eval_shape(op.tile_fn(), chunk, *statics)
+    return ts.shape[0], tuple(ts.shape[1:])
+
+
+def _out_dtype(static, operand):
+    """Output dtype from the static dict (operand dtype when a caller —
+    e.g. a legacy string-keyed ``overlap.apply`` — omitted it)."""
+    return jnp.dtype(static.get("out_dtype") or operand.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Graph lowering (ag_pipeline / rs_pipeline folds)
+# ---------------------------------------------------------------------------
+
+
+def _ag_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
+    axis = static["axis"]
+    mode = static["mode"]
+    out_dtype = _out_dtype(static, operand)
+    tile = op.tile_fn()
+    w = lax.axis_size(axis)
+    m_loc = operand.shape[0]
+    tile_m, rest = _tile_rows(op, operand, statics)
+    out0 = jnp.zeros((tile_m * w,) + rest, out_dtype)
+
+    if mode == "bidir" and op.rowwise and m_loc % 2 == 0 and w >= 3:
+        h = tile_m // 2
+
+        def fold2(out, bufs, s, owner, direction):
+            t = tile(bufs[0], *statics).astype(out_dtype)
+            return _update(out, t, owner * tile_m + direction * h)
+
+        return ov.bidir_ag_pipeline((operand,), fold2, out0, axis)
+    if mode == "bidir":
+        mode = "ring"  # odd chunk or W < 3: bidir degenerates to ring
+    if mode not in ("ring", "one_shot"):
+        raise ValueError(f"{op.name}: unknown ag mode {mode!r}")
+
+    # Sub-chunk ring: finer pipelining shrinks the first-chunk fill
+    # bubble (the communication-tile-size knob of §3.6).
+    s_sub = max(1, static.get("chunks", 1)) if op.rowwise else 1
+    if m_loc % s_sub != 0 or mode == "one_shot":
+        s_sub = 1
+    m_sub = m_loc // s_sub
+    subs = tuple(_slice_rows(operand, j * m_sub, m_sub) for j in range(s_sub))
+
+    def fold(out, bufs, s, owner):
+        for j, bj in enumerate(bufs):
+            t = tile(bj, *statics).astype(out_dtype)
+            out = _update(out, t, owner * tile_m + j * m_sub)
+        return out
+
+    return ov.ag_pipeline(subs, fold, out0, axis, transport=mode)
+
+
+def _rs_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
+    axis = static["axis"]
+    mode = static["mode"]
+    out_dtype = _out_dtype(static, operand)
+    tile = op.tile_fn()
+    w = lax.axis_size(axis)
+    m = operand.shape[0]
+    assert m % w == 0, (m, w)
+    m_blk = m // w
+
+    def block(blk):
+        return _slice_rows(operand, blk * m_blk, m_blk)
+
+    if mode == "bidir" and op.static_split is not None and w >= 3:
+        halves = op.static_split(statics, 2)
+        if halves is not None:
+            # split the output columns across BOTH ring directions: two
+            # accumulators, half the bytes per link per step.
+            def compute2(blk, s, direction):
+                return tile(block(blk), *halves[direction])
+
+            acc_f, acc_r = ov.bidir_rs_pipeline(compute2, axis)
+            return jnp.concatenate(
+                [acc_f, acc_r], axis=op.split_axis).astype(out_dtype)
+    if mode == "bidir":
+        mode = "ring"
+    if mode not in ("ring", "one_shot"):
+        raise ValueError(f"{op.name}: unknown rs mode {mode!r}")
+
+    # Sub-chunked RS ring: the accumulator split into column groups, each
+    # riding its own independent ring (§3.6's tile-size knob, RS side).
+    s_sub = max(1, static.get("chunks", 1))
+    groups = (op.static_split(statics, s_sub)
+              if s_sub > 1 and mode == "ring" and op.static_split else None)
+    if groups is not None:
+        outs = [
+            ov.rs_pipeline(
+                lambda blk, s, g=g: tile(block(blk), *g), axis,
+                transport="ring")
+            for g in groups
+        ]
+        return jnp.concatenate(outs, axis=op.split_axis).astype(out_dtype)
+
+    def compute(blk, s):
+        return tile(block(blk), *statics)
+
+    return ov.rs_pipeline(compute, axis, transport=mode).astype(out_dtype)
+
+
+def _a2a_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
+    out = ov.a2a_pipeline(operand, static["axis"], transport=static["mode"])
+    if op.tile is not None:
+        out = op.tile(out, *statics)
+    return out.astype(_out_dtype(static, operand))
+
+
+def _default_baseline(op: OverlapOp):
+    """Monolithic fallback derived from the tile: collective first, then
+    the tile per owner chunk (AG kinds) / tile per block then the
+    collective (RS kinds) — the "NCCL + compute" analogue."""
+    tile = op.tile_fn()
+
+    def ag_baseline(operand, statics, axis, out_dtype):
+        w = lax.axis_size(axis)
+        full = lax.all_gather(operand, axis, tiled=True)
+        m_loc = operand.shape[0]
+        tiles = [
+            tile(_slice_rows(full, i * m_loc, m_loc), *statics).astype(out_dtype)
+            for i in range(w)
+        ]
+        return jnp.concatenate(tiles, axis=0)
+
+    def rs_baseline(operand, statics, axis, out_dtype):
+        w = lax.axis_size(axis)
+        m_blk = operand.shape[0] // w
+        partial = jnp.concatenate(
+            [tile(_slice_rows(operand, i * m_blk, m_blk), *statics)
+             for i in range(w)], axis=0)
+        return lax.psum_scatter(
+            partial, axis, scatter_dimension=0, tiled=True).astype(out_dtype)
+
+    return rs_baseline if op.kind == "rs" else ag_baseline
+
+
+def _make_graph_fwd(op: OverlapOp) -> Callable:
+    lower = {"ag": _ag_graph, "gather": _ag_graph, "rs": _rs_graph,
+             "a2a": _a2a_graph}[op.kind]
+    baseline = op.baseline_fwd or _default_baseline(op)
+
+    def fwd(static, operand, *statics):
+        if static["mode"] == op.baseline and op.kind != "a2a":
+            return baseline(operand, statics, static["axis"],
+                            _out_dtype(static, operand))
+        return lower(op, static, operand, *statics)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Kernel lowering (the shmem tile executor)
+# ---------------------------------------------------------------------------
+
+
+def _make_kernel_fwd(op: OverlapOp, cid: int) -> Optional[Callable]:
+    if not op.kernel_protocols:
+        return None
+    protos = dict(op.kernel_protocols)
+
+    def kernel_fwd(static, operand, *statics):
+        axis = static["axis"]
+        return executor.run(
+            protos[static["mode"]], op.tile, operand, statics, axis=axis,
+            world=lax.axis_size(axis),
+            out_dtype=_out_dtype(static, operand), collective_id=cid)
+
+    return kernel_fwd
+
+
+# ---------------------------------------------------------------------------
+# Backward derivation: the dual schedule over jax.vjp of the tile
+# ---------------------------------------------------------------------------
+
+
+def _make_bwd(op: OverlapOp) -> Optional[Callable]:
+    if not op.differentiable or op.kind == "a2a":
+        return None
+    tile = op.tile_fn()
+
+    def tile_cast(out_dtype, chunk, *statics):
+        return tile(chunk, *statics).astype(out_dtype)
+
+    if op.kind in ("ag", "gather"):
+
+        def bwd(static, res, g):
+            operand, *statics = res
+            axis = static["axis"]
+            out_dtype = _out_dtype(static, operand)
+            tile_m, rest = _tile_rows(op, operand, statics)
+            zeros = jnp.zeros(operand.shape, operand.dtype)
+
+            # operand gradient: rides the DUAL RS ring (the transpose
+            # partner's schedule) — O(1) permute buffers.
+            def compute_block(blk, s):
+                g_blk = _slice_rows(g, blk * tile_m, tile_m)
+                _, vjp = jax.vjp(
+                    lambda xc: tile_cast(out_dtype, xc, *statics), zeros)
+                return vjp(g_blk)[0].astype(jnp.float32)
+
+            d_op = ov.rs_pipeline(
+                compute_block, axis, transport="ring").astype(operand.dtype)
+            if not statics:
+                return (d_op,)
+
+            # statics gradients: ring the residual chunk past the static
+            # cotangent strips, accumulating in f32.
+            def fold(ds, bufs, s, owner):
+                g_o = _slice_rows(g, owner * tile_m, tile_m)
+                _, vjp = jax.vjp(
+                    lambda *st: tile_cast(out_dtype, bufs[0], *st), *statics)
+                return tuple(d + gi.astype(jnp.float32)
+                             for d, gi in zip(ds, vjp(g_o)))
+
+            ds0 = tuple(jnp.zeros(s.shape, jnp.float32) for s in statics)
+            d_statics = ov.ag_pipeline((operand,), fold, ds0, axis,
+                                       transport="ring")
+            return (d_op,) + tuple(
+                d.astype(s.dtype) for d, s in zip(d_statics, statics))
+
+        return bwd
+
+    def bwd(static, res, g):  # kind == "rs"
+        operand, *statics = res
+        axis = static["axis"]
+        out_dtype = _out_dtype(static, operand)
+        w = lax.axis_size(axis)
+        m_blk = operand.shape[0] // w
+
+        # ONE dual AG ring of the cotangent block: each arriving g chunk
+        # yields this rank's operand-block gradient (scattered at the
+        # owner's rows) AND its statics contribution — both vjps of the
+        # tile at the true local primal block.
+        def fold(carry, bufs, s, owner):
+            d_opnd, ds = carry
+            blk_val = _slice_rows(operand, owner * m_blk, m_blk)
+            _, vjp = jax.vjp(
+                lambda xb, *st: tile_cast(out_dtype, xb, *st),
+                blk_val, *statics)
+            grads = vjp(bufs[0])
+            d_opnd = _update(d_opnd, grads[0].astype(jnp.float32),
+                             owner * m_blk)
+            ds = tuple(d + gi.astype(jnp.float32)
+                       for d, gi in zip(ds, grads[1:]))
+            return d_opnd, ds
+
+        init = (jnp.zeros(operand.shape, jnp.float32),
+                tuple(jnp.zeros(s.shape, jnp.float32) for s in statics))
+        d_opnd, d_statics = ov.ag_pipeline((g,), fold, init, axis,
+                                           transport="ring")
+        return (d_opnd.astype(operand.dtype),) + tuple(
+            d.astype(s.dtype) for d, s in zip(d_statics, statics))
+
+    return bwd
+
+
+# ---------------------------------------------------------------------------
+# declare() + the bound callable
+# ---------------------------------------------------------------------------
+
+_DECLARED: Dict[str, "BoundOp"] = {}
+
+
+class BoundOp:
+    """A declared op, callable with a policy: ``op(x, w, axis=...,
+    policy=pcfg.policy)`` or with explicit ``mode=/backend=/chunks=``
+    overrides. Runs inside ``shard_map``; routed through the engine's
+    shared custom_vjp when the declaration is differentiable."""
+
+    def __init__(self, op: OverlapOp):
+        self.decl = op
+        self.name = op.name
+        self.__doc__ = f"Overlapped op {op.name!r} ({op.kind}): " \
+                       f"transports {op.transports}, " \
+                       f"kernel {tuple(dict(op.kernel_protocols))}"
+
+    @property
+    def spec(self) -> ov.OverlapSpec:
+        return ov.get(self.name)
+
+    def __repr__(self):
+        return f"<ops.{self.name} kind={self.decl.kind}>"
+
+    def __call__(self, *tensors, axis: str, policy=None, mode: Optional[str] = None,
+                 backend: Optional[str] = None, chunks: Optional[int] = None,
+                 out_dtype=None):
+        if policy is not None:
+            r = policy.resolve(self.name)
+            mode = mode or r.mode
+            backend = backend or r.backend
+            chunks = r.chunks if chunks is None else chunks
+        mode = ov.resolve_mode(self.name, mode or self.decl.default)
+        out_dtype = jnp.dtype(out_dtype or tensors[0].dtype)
+        out = ov.dispatch(
+            self.name, *tensors, axis=axis, mode=mode,
+            chunks=max(1, chunks or 1), backend=backend or "graph",
+            out_dtype=out_dtype.name)
+        if self.decl.checkpoint_tag:
+            out = checkpoint_name(out, self.decl.checkpoint_tag)
+        return out
+
+
+def declare(op: OverlapOp) -> BoundOp:
+    """Register one OverlapOp declaration and return its callable.
+
+    Derives the graph lowering, the kernel lowering (when the declaration
+    maps transports to executor protocols), and the dual-schedule
+    backward; enters the engine registry — which auto-enrolls the op in
+    ``OverlapPolicy`` resolution, the tuner's candidate enumeration and
+    the engine parity-test matrix."""
+    if op.transpose is not None:
+        partner = ov.registry().get(op.transpose)
+        if partner is not None and partner.kind not in _DUAL_KIND[op.kind]:
+            raise ValueError(
+                f"{op.name}: transpose partner {op.transpose!r} has kind "
+                f"{partner.kind!r}, not dual to {op.kind!r}")
+    cid = next(_CIDS)
+    ov.register(
+        op.name,
+        kind=op.kind,
+        transports=op.transports,
+        baseline=op.baseline,
+        default=op.default,
+        fwd=_make_graph_fwd(op),
+        bwd=_make_bwd(op),
+        kernel_transports=tuple(dict(op.kernel_protocols)),
+        kernel_fwd=_make_kernel_fwd(op, cid),
+    )
+    bound = BoundOp(op)
+    _DECLARED[op.name] = bound
+    return bound
+
+
+def declared() -> Mapping[str, BoundOp]:
+    """All ops declared through this front-end (name -> callable)."""
+    return dict(_DECLARED)
+
+
+def get(name: str) -> BoundOp:
+    return _DECLARED[name]

@@ -1,0 +1,87 @@
+"""The standard overlapped-op library, as `OverlapOp` declarations.
+
+These used to be ~350 lines of hand-written graph folds plus three
+hand-rolled kernel protocol loops; each is now one declaration whose
+graph lowering, kernel lowering (shmem tile executor) and dual-schedule
+backward are derived by ``authoring.declare``. The registry names are
+unchanged, so policies, the tuner and the parity tests see the same ops.
+
+Note the ``matmul_rs`` one_shot kernel protocol: the ROADMAP's
+"push all partials up-front" rs_gemm variant is the pair
+``("one_shot", "one_shot_rs")`` below — the authoring API's whole
+cost for a new kernel lowering.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .authoring import OverlapOp, declare
+
+
+def _dot_tile(chunk, w):
+    return jnp.dot(chunk, w, preferred_element_type=jnp.float32)
+
+
+def _split_cols(statics, n):
+    """Split the weight's output columns into n groups (RS sub-chunking
+    and the bidir column halves); None when the columns don't divide."""
+    (w,) = statics
+    if n < 2 or w.shape[1] % n:
+        return None
+    n_sub = w.shape[1] // n
+    return [
+        (lax.dynamic_slice(w, (0, j * n_sub), (w.shape[0], n_sub)),)
+        for j in range(n)
+    ]
+
+
+def _ag_matmul_baseline(operand, statics, axis, out_dtype):
+    """all_gather(A) @ B with XLA's built-in collective (one big dot)."""
+    a_full = lax.all_gather(operand, axis, tiled=True)
+    return jnp.dot(a_full, statics[0],
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _matmul_rs_baseline(operand, statics, axis, out_dtype):
+    """psum_scatter(A @ B) with XLA's built-in collective."""
+    partial = jnp.dot(operand, statics[0], preferred_element_type=jnp.float32)
+    return lax.psum_scatter(
+        partial, axis, scatter_dimension=0, tiled=True).astype(out_dtype)
+
+
+ag_matmul = declare(OverlapOp(
+    name="ag_matmul",
+    kind="ag",
+    tile=_dot_tile,
+    transports=("ring", "bidir", "one_shot"),
+    kernel_protocols=(("ring", "ring_ag"), ("one_shot", "one_shot_ag")),
+    transpose="matmul_rs",
+    rowwise=True,
+    baseline_fwd=_ag_matmul_baseline,
+    # remat policy "block_save_ag" keeps gathered activations across the
+    # backward instead of re-running the gather ring
+    checkpoint_tag="ag_out",
+))
+
+matmul_rs = declare(OverlapOp(
+    name="matmul_rs",
+    kind="rs",
+    tile=_dot_tile,
+    transports=("ring", "bidir", "one_shot"),
+    kernel_protocols=(("ring", "push_rs"), ("one_shot", "one_shot_rs")),
+    transpose="ag_matmul",
+    static_split=_split_cols,
+    split_axis=1,
+    baseline_fwd=_matmul_rs_baseline,
+))
+
+all_gather = declare(OverlapOp(
+    name="all_gather",
+    kind="gather",
+    tile=None,  # identity: pure decomposed data movement
+    transports=("ring", "one_shot"),
+    kernel_protocols=(("one_shot", "one_shot_ag"),),
+    transpose="reduce_scatter",
+    rowwise=True,
+))

@@ -1,0 +1,135 @@
+"""OverlapPolicy — the ONE object that answers "how should op X overlap?".
+
+It consolidates what used to be four parallel knobs on ``ParallelConfig``
+(``overlap_mode`` + ``overlap_modes`` + ``overlap_backend`` +
+``overlap_backends``) plus the two chunk counts into a single value with
+a single resolution point: :meth:`OverlapPolicy.resolve` clamps the
+requested (mode, backend, chunks) against the live engine registry — a
+global ``mode="ring"`` resolves to "one_shot" for an op with no ring
+transport, ``backend="kernel"`` degrades to "graph" for (op, mode) pairs
+without a kernel lowering, and the chunk count is picked by the op's
+kind (AG ops sub-chunk the riding operand, RS ops the accumulator's
+column groups).
+
+The policy is a frozen, hashable dataclass: it can live on
+``ParallelConfig``, be produced whole by ``tuner.recommend_overlap_modes``
+and recorded per benchmark row. This module imports no jax — the
+registry is consulted lazily — so config modules stay import-light.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Mapping, Tuple
+
+# Ops whose messages are latency-bound regardless of layer shape default
+# to the paper's low-latency one-shot kernels (EP dispatch, decode combine).
+LATENCY_OPS: Tuple[Tuple[str, str], ...] = (
+    ("a2a_ep", "one_shot"),
+    ("flash_decode", "one_shot"),
+)
+
+
+@dataclass(frozen=True)
+class ResolvedOverlap:
+    """One op's effective lowering: what the engine will actually run."""
+
+    mode: str
+    backend: str
+    chunks: int
+
+
+def _as_items(value) -> Tuple[Tuple[str, str], ...]:
+    if isinstance(value, Mapping):
+        return tuple(sorted(value.items()))
+    return tuple(value)
+
+
+@dataclass(frozen=True)
+class OverlapPolicy:
+    """How overlapped ops lower, session-wide.
+
+    mode       default transport (an engine transport name or an op's
+               baseline, e.g. "none")
+    backend    default lowering ("graph" = lax.ppermute pipelines,
+               "kernel" = the fused shmem kernels)
+    modes      per-op transport overrides, keyed by registry op name
+    backends   per-op backend overrides
+    ag_chunks  sub-chunks per rank for AG-side ops (0 = 1, paper default)
+    rs_chunks  accumulator column groups for RS-side ops (0 = 1)
+    """
+
+    mode: str = "ring"
+    backend: str = "graph"
+    modes: tuple = LATENCY_OPS
+    backends: tuple = ()
+    ag_chunks: int = 0
+    rs_chunks: int = 0
+
+    def __post_init__(self):
+        # accept dicts for ergonomics; store hashable sorted tuples
+        object.__setattr__(self, "modes", _as_items(self.modes))
+        object.__setattr__(self, "backends", _as_items(self.backends))
+
+    # -- resolution ----------------------------------------------------
+    def _requested(self, table, default: str, op: str) -> str:
+        for name, value in table:
+            if name == op:
+                return value
+        return default
+
+    def mode_for(self, op: str) -> str:
+        """Effective transport for registry op ``op`` (override if
+        present, else the session default, clamped by the registry)."""
+        from ..core import overlap  # lazy: keep this module import-light
+
+        return overlap.resolve_mode(op, self._requested(self.modes, self.mode, op))
+
+    def backend_for(self, op: str) -> str:
+        """Effective lowering backend for ``op``, clamped to the
+        registry's kernel-capable (op, mode) pairs."""
+        from ..core import overlap
+
+        return overlap.resolve_backend(
+            op, self._requested(self.backends, self.backend, op),
+            self.mode_for(op))
+
+    def chunks_for(self, op: str) -> int:
+        """Sub-chunk count for ``op``, by its registry kind (AG ops ride
+        finer operand chunks; RS ops split the accumulator's columns)."""
+        from ..core import overlap
+
+        kind = overlap.get(op).kind
+        return max(1, self.rs_chunks if kind == "rs" else self.ag_chunks)
+
+    def resolve(self, op: str, hw=None) -> ResolvedOverlap:
+        """The op's effective (mode, backend, chunks).
+
+        ``hw`` optionally names the target platform's
+        :class:`repro.hw.HardwareSpec`: on a spec without ICI links the
+        kernel backend has no remote-DMA engine to drive, so it degrades
+        to graph (the emulated backend stays reachable by requesting
+        ``backend="kernel"`` per call, as the parity tests do)."""
+        backend = self.backend_for(op)
+        if hw is not None and getattr(hw, "ici_links", 0) == 0:
+            backend = "graph"
+        return ResolvedOverlap(self.mode_for(op), backend, self.chunks_for(op))
+
+    # -- functional updates -------------------------------------------
+    def with_modes(self, **per_op: str) -> "OverlapPolicy":
+        """A copy with per-op transport overrides merged in."""
+        merged = dict(self.modes)
+        merged.update(per_op)
+        return dataclasses.replace(self, modes=tuple(sorted(merged.items())))
+
+    def with_backends(self, **per_op: str) -> "OverlapPolicy":
+        """A copy with per-op backend overrides merged in."""
+        merged = dict(self.backends)
+        merged.update(per_op)
+        return dataclasses.replace(self, backends=tuple(sorted(merged.items())))
+
+    def describe(self, op: str) -> str:
+        """Compact 'mode/backend[/xN]' string (benchmark + log rows)."""
+        r = self.resolve(op)
+        sub = f"/x{r.chunks}" if r.chunks > 1 else ""
+        return f"{r.mode}/{r.backend}{sub}"

@@ -57,11 +57,12 @@ class Engine:
         self._prompt_cursor = [0] * batch
 
     def overlap_modes(self) -> dict:
-        """Effective per-op overlap modes of the compiled decode step
-        (resolved through the engine registry); {} when no pcfg given."""
+        """Effective per-op overlap lowering of the compiled decode step
+        ('mode/backend', resolved through the policy + engine registry);
+        {} when no pcfg given."""
         if self.pcfg is None:
             return {}
-        return {op: self.pcfg.mode_for(op) for op in self.OVERLAP_OPS}
+        return {op: self.pcfg.policy.describe(op) for op in self.OVERLAP_OPS}
 
     # ------------------------------------------------------------------
     def add(self, req: Request):

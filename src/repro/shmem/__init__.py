@@ -25,8 +25,11 @@ package is that primitive layer, with one API and two backends:
 
 Backend selection: :func:`default_backend` returns ``"pltpu"`` on real
 TPU and ``"emulated"`` everywhere else; ``REPRO_SHMEM_BACKEND`` forces
-either. The fused kernels (``kernels/ag_gemm.py`` etc.) consume this —
-callers never pick a backend by hand.
+either. The shared **tile executor** (:mod:`executor`) consumes this —
+it implements every fused-kernel communication protocol (ring+credit,
+Alg.-3 push, one-shot puts) once, generic over a per-tile compute, on
+both backends; the fused kernels (``kernels/ag_gemm.py`` etc.) and the
+``repro.ops`` kernel lowerings are declarations over it.
 
 Rank identity (``my_pe`` / ``n_pes``) is backend-independent (mesh axis
 arithmetic) and lives in :mod:`api`.
@@ -58,9 +61,12 @@ def default_backend() -> str:
     return "pltpu" if jax.default_backend() == "tpu" else "emulated"
 
 
+from . import executor  # noqa: E402  (needs default_backend above)
+
 __all__ = [
     "api",
     "emulated",
+    "executor",
     "tpu_backend",
     "my_pe",
     "n_pes",

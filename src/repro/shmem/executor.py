@@ -1,0 +1,531 @@
+"""The shmem **tile executor**: every fused-kernel communication protocol,
+written once, generic over a per-tile compute function.
+
+The fused kernels used to hand-roll their put/signal step loops (ring +
+credit flow control in ``ag_gemm``, the Alg. 3 push in ``rs_gemm``, the
+Alg. 4 all-puts-up-front structure in ``ll_allgather``). Those protocols
+are op-independent: what varies per op is only the *tile compute* — the
+pure function applied to a chunk when it arrives (or before it is
+pushed). This module factors the protocols out, so an overlapped kernel
+is now a DECLARATION: ``executor.run(protocol, tile, operand, statics)``.
+
+Protocols
+---------
+  ring_ag      Fig. 4 producer/consumer ring with credit flow control:
+               the operand chunk rides rank -> rank+1 through a double-
+               buffered symmetric workspace; a credit semaphore grants
+               the left neighbor permission to overwrite a slot only
+               after BOTH readers (local stage + outgoing remote DMA)
+               are done. ``tile(chunk, *statics)`` consumes the chunk of
+               step s (= rank (me - s) % W's data, the Fig. 7 swizzle);
+               the result lands in that owner's output strip. The DMA of
+               chunk s+1 is in flight while tile s computes.
+  one_shot_ag  Alg. 4 low-latency structure: every rank one-sided-puts
+               its chunk into every peer's slot ``me`` up-front (no
+               serial ring dependency), waits for W arrivals, then runs
+               ``tile`` per landed chunk. ``tile=None`` is the plain
+               low-latency AllGather.
+  push_rs      Alg. 3 push-mode GEMM+ReduceScatter: per step s the rank
+               computes the partial tile for output block
+               (me - s - 1) % W (peers first, own block last) and
+               one-sided-pushes it to the owner's slot ``me``; each rank
+               then waits for its W arrivals and locally reduces in f32.
+               Compute of step s+1 overlaps the DMA of step s.
+  one_shot_rs  the low-latency RS variant (ROADMAP): ALL W partials are
+               computed first and the W puts issued up-front with
+               distinct ring offsets — no compute/DMA interleaving
+               dependency, latency-optimal for small blocks.
+
+Backends (``repro.shmem.default_backend``)
+------------------------------------------
+  pltpu     real TPU: a generic Pallas kernel per protocol (below);
+            statics are staged to VMEM once, ``tile`` runs on VMEM
+            values, communication is remote DMA + hardware semaphores.
+  emulated  CPU / virtual devices: the SAME protocols against the
+            host-side symmetric heaps of ``shmem.emulated`` — every
+            put, arrival signal, credit and barrier runs with true
+            concurrency semantics, validating the protocol logic
+            without hardware.
+
+Contract for ``tile``
+---------------------
+``tile(chunk, *statics) -> tile_value`` must be a pure jax function of
+its inputs (it is traced inside the kernel). For the AG protocols the
+output's leading dim defines the per-owner strip written into the
+gathered output; for the RS protocols the output is the partial for one
+output block (accumulated across ranks in f32).
+
+Scale note (pltpu): refs are whole-shard (VMEM-resident per step). For
+production shapes, wrap ``tile`` in ``pltpu.emit_pipeline`` tiling; the
+signal protocols are unchanged.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import default_backend, tpu_backend
+from . import emulated as em
+
+Array = jax.Array
+
+PROTOCOLS = ("ring_ag", "one_shot_ag", "push_rs", "one_shot_rs")
+
+
+def _identity(x):
+    return x
+
+
+def _tile_struct(tile, chunk_struct, statics) -> jax.ShapeDtypeStruct:
+    return jax.eval_shape(tile, chunk_struct, *statics)
+
+
+def update_rows(out: Array, t: Array, row: int | Array) -> Array:
+    """Write ``t`` into ``out`` at row offset ``row`` (all other dims full)."""
+    return lax.dynamic_update_slice(out, t, (row,) + (0,) * (t.ndim - 1))
+
+
+def slice_rows(x: Array, row, n: int) -> Array:
+    """Slice ``n`` rows of ``x`` starting at ``row`` (all other dims full)."""
+    return lax.dynamic_slice(x, (row,) + (0,) * (x.ndim - 1),
+                             (n,) + x.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# Emulated backend: the protocols on host-side symmetric heaps
+# ---------------------------------------------------------------------------
+
+
+def _ring_ag_emulated(tile, chunk, statics, *, axis, world, out_dtype, cid):
+    """Ring + credit protocol (Fig. 4): slot parity, 1 initial credit,
+    grant-after-consume, and the skip of the final grants — the former
+    ``_ag_gemm_emulated`` body, now op-independent."""
+    me = lax.axis_index(axis)
+    left = lax.rem(me + world - 1, world)
+    right = lax.rem(me + 1, world)
+    ts = _tile_struct(tile, chunk, statics)
+    tile_m = ts.shape[0]
+
+    ctx = em.ShmemCtx(axis, world, cid)
+    ctx.barrier_all()
+    # Initially my right neighbor's slot 1 is free: grant 1 credit.
+    ctx.signal_op(left, sig="cap")
+
+    cur = chunk
+    out = jnp.zeros((tile_m * world,) + ts.shape[1:], out_dtype)
+    for s in range(world):
+        if s != world - 1:
+            # producer: wait for a free slot at the right neighbor, then
+            # putmem_signal my current chunk into their next slot.
+            ctx.signal_wait_until(sig="cap", value=1)
+            ctx.putmem_signal_nbi(cur, right, buf="ws", slot=(s + 1) % 2,
+                                  sig="recv")
+        # consumer: chunk of step s is rank (me - s)'s data.
+        t = tile(cur, *statics).astype(out_dtype)
+        owner = lax.rem(me - s + world, world)
+        out = update_rows(out, t, owner * tile_m)
+        if s != world - 1:
+            cur = ctx.wait_read(chunk.shape, chunk.dtype, buf="ws",
+                                slot=(s + 1) % 2, sig="recv")
+            # Slot fully consumed — only now may the left neighbor
+            # overwrite it. Skip grants beyond the W-1 sends it makes.
+            if s < world - 2:
+                ctx.signal_op(left, sig="cap")
+    ctx.barrier_all()
+    return out
+
+
+def _one_shot_ag_emulated(tile, chunk, statics, *, axis, world, out_dtype, cid):
+    """Alg. 4 structure: broadcast_put my chunk into every PE's slot
+    ``me`` (self included, so all W slots exist symmetrically), one
+    signal_wait for all W arrivals, then tile each landed chunk."""
+    ts = _tile_struct(tile, chunk, statics)
+    tile_m = ts.shape[0]
+
+    ctx = em.ShmemCtx(axis, world, cid)
+    ctx.barrier_all()
+    ctx.broadcast_put(chunk, buf="ws", sig="recv")
+    ctx.signal_wait_until(sig="recv", value=world)
+    out = jnp.zeros((tile_m * world,) + ts.shape[1:], out_dtype)
+    for r in range(world):
+        shard = ctx.read_symmetric(chunk.shape, chunk.dtype, buf="ws", slot=r)
+        out = update_rows(out, tile(shard, *statics).astype(out_dtype),
+                          r * tile_m)
+    ctx.barrier_all()
+    return out
+
+
+def _block(operand, blk, m_blk):
+    return slice_rows(operand, blk * m_blk, m_blk)
+
+
+def _rs_reduce(ctx, ts, world, out_dtype):
+    """signal_wait for all W partials, then the local f32 reduction."""
+    ctx.signal_wait_until(sig="recv", value=world)
+    acc = jnp.zeros(ts.shape, jnp.float32)
+    for r in range(world):
+        part = ctx.read_symmetric(ts.shape, out_dtype, buf="ws", slot=r)
+        acc = acc + part.astype(jnp.float32)
+    ctx.barrier_all()
+    return acc.astype(out_dtype)
+
+
+def _push_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid):
+    """Alg. 3 push protocol: per-step put of the partial into the owner's
+    slot ``me`` (own block pushed to self at the last step, so all W
+    slots land symmetrically), then one signal_wait + f32 reduction."""
+    me = lax.axis_index(axis)
+    m_blk = operand.shape[0] // world
+    ts = _tile_struct(tile, _block(operand, 0, m_blk), statics)
+
+    ctx = em.ShmemCtx(axis, world, cid)
+    ctx.barrier_all()
+    for s in range(world):
+        # Alg. 3 swizzle: peers' blocks first, own block last (blk == me)
+        blk = lax.rem(me - s - 1 + 2 * world, world)
+        partial = tile(_block(operand, blk, m_blk), *statics).astype(out_dtype)
+        ctx.putmem_signal_nbi(partial, blk, buf="ws", slot=me, sig="recv")
+    return _rs_reduce(ctx, ts, world, out_dtype)
+
+
+def _one_shot_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid):
+    """Low-latency RS: ALL W partials computed first, then the W puts
+    issued up-front at distinct ring offsets (own block first) — no
+    serial compute/DMA dependency chain."""
+    me = lax.axis_index(axis)
+    m_blk = operand.shape[0] // world
+    ts = _tile_struct(tile, _block(operand, 0, m_blk), statics)
+
+    ctx = em.ShmemCtx(axis, world, cid)
+    ctx.barrier_all()
+    partials = []
+    for off in range(world):
+        tgt = lax.rem(me + off, world)
+        partials.append(
+            (tgt, tile(_block(operand, tgt, m_blk), *statics).astype(out_dtype)))
+    for tgt, partial in partials:  # all puts up-front, no waits between
+        ctx.putmem_signal_nbi(partial, tgt, buf="ws", slot=me, sig="recv")
+    return _rs_reduce(ctx, ts, world, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# pltpu backend: one generic Pallas kernel per protocol
+# ---------------------------------------------------------------------------
+
+
+def _stage(refs, vmems, sem):
+    copies = [pltpu.make_async_copy(r, v, sem) for r, v in zip(refs, vmems)]
+    for c in copies:
+        c.start()
+    for c in copies:
+        c.wait()
+
+
+def _ring_ag_body(*refs, tile, axis, world, n_static, tile_m, out_dtype):
+    (chunk_ref, *rest) = refs
+    static_refs = rest[:n_static]
+    o_ref, ws_ref = rest[n_static], rest[n_static + 1]
+    chunk_vmem = rest[n_static + 2]
+    static_vmems = rest[n_static + 3:2 * n_static + 3]
+    o_vmem = rest[2 * n_static + 3]
+    local_sem, send_sem, recv_sem, cap_sem = rest[2 * n_static + 4:]
+
+    me = lax.axis_index(axis)
+    left = lax.rem(me + world - 1, world)
+    right = lax.rem(me + 1, world)
+
+    # Symmetric-memory handshake: every rank's workspace must exist before
+    # any one-sided put lands in it (paper: barrier_all after allocation).
+    tpu_backend.barrier_all(axis, world)
+
+    # Stage the statics into VMEM once; copy my chunk into ring slot 0.
+    _stage((chunk_ref,) + tuple(static_refs),
+           (ws_ref.at[0],) + tuple(static_vmems), local_sem)
+
+    # Initially my right neighbor's slot 1 is free: grant 1 credit.
+    tpu_backend.signal_op(cap_sem, left, axis=axis)
+
+    for s in range(world):
+        slot = s % 2
+        send = None
+        if s != world - 1:
+            # producer: wait for a free slot at the right neighbor, then
+            # putmem_signal my current chunk into their next slot.
+            tpu_backend.signal_wait_until(cap_sem, 1)
+            send = tpu_backend.putmem_signal_nbi(
+                ws_ref.at[slot], ws_ref.at[(s + 1) % 2],
+                send_sem, recv_sem, right, axis=axis)
+
+        # consumer: chunk of step s is rank (me - s)'s data; its arrival
+        # is ordered by recv_sem via the previous step's wait.
+        _stage((ws_ref.at[slot],), (chunk_vmem,), local_sem)
+
+        # the tile compute overlaps the in-flight remote DMA of chunk s+1
+        o_vmem[...] = tile(
+            chunk_vmem[...], *[v[...] for v in static_vmems]
+        ).astype(out_dtype)
+        owner = lax.rem(me - s + world, world)
+        _stage((o_vmem,), (o_ref.at[pl.ds(owner * tile_m, tile_m)],), local_sem)
+
+        if send is not None:
+            # wait: my send drained + my incoming chunk has landed.
+            send.wait()
+        # Slot fully consumed — BOTH readers done (VMEM stage AND the
+        # outgoing remote DMA). Only now may the left neighbor overwrite
+        # it. Skip grants beyond the W-1 sends the neighbor makes.
+        if s < world - 2:
+            tpu_backend.signal_op(cap_sem, left, axis=axis)
+
+
+def _ring_ag_pltpu(tile, chunk, statics, *, axis, world, out_dtype, cid):
+    ts = _tile_struct(tile, chunk, statics)
+    body = functools.partial(
+        _ring_ag_body, tile=tile, axis=axis, world=world,
+        n_static=len(statics), tile_m=ts.shape[0], out_dtype=out_dtype)
+    out, _ws = pl.pallas_call(
+        body,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + len(statics)),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 2,
+        out_shape=[
+            jax.ShapeDtypeStruct((ts.shape[0] * world,) + ts.shape[1:], out_dtype),
+            jax.ShapeDtypeStruct((2,) + chunk.shape, chunk.dtype),  # ring ws
+        ],
+        scratch_shapes=[pltpu.VMEM(chunk.shape, chunk.dtype)]
+        + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
+        + [pltpu.VMEM(ts.shape, out_dtype),
+           pltpu.SemaphoreType.DMA,
+           pltpu.SemaphoreType.DMA,
+           pltpu.SemaphoreType.DMA,
+           pltpu.SemaphoreType.REGULAR],
+        compiler_params=pltpu.CompilerParams(collective_id=cid),
+    )(chunk, *statics)
+    return out
+
+
+def _one_shot_ag_body(*refs, tile, axis, world, n_static, tile_m, out_dtype):
+    (chunk_ref, *rest) = refs
+    static_refs = rest[:n_static]
+    gather_direct = tile is _identity and n_static == 0
+    if gather_direct:
+        o_ref = rest[n_static]
+        local_sem, send_sem, recv_sem = rest[n_static + 1:]
+    else:
+        o_ref, ws_ref = rest[n_static], rest[n_static + 1]
+        chunk_vmem = rest[n_static + 2]
+        static_vmems = rest[n_static + 3:2 * n_static + 3]
+        o_vmem = rest[2 * n_static + 3]
+        local_sem, send_sem, recv_sem = rest[2 * n_static + 4:]
+
+    me = lax.axis_index(axis)
+    tpu_backend.barrier_all(axis, world)
+
+    # landing site: the gathered output itself (plain AllGather) or the
+    # symmetric workspace slot `me` (a tile compute consumes the chunks)
+    dst = (o_ref.at[pl.ds(me * tile_m, tile_m)] if gather_direct
+           else ws_ref.at[me])
+    lc = pltpu.make_async_copy(chunk_ref, dst, local_sem)
+    lc.start()
+
+    # One-shot: all W-1 puts issued before any wait (Alg. 4 structure —
+    # no skew accumulation from a serial loop).
+    sends = []
+    for off in range(1, world):
+        peer = lax.rem(me + off, world)
+        sends.append(tpu_backend.putmem_signal_nbi(
+            chunk_ref, dst, send_sem, recv_sem, peer, axis=axis))
+    lc.wait()
+    # SPMD symmetry: my W-1 incoming messages are my peers' sends with the
+    # same shape/semaphore, so waiting my own descriptors consumes exactly
+    # the right signal count (send-drain + W-1 arrivals).
+    tpu_backend.quiet(*sends)
+
+    if not gather_direct:
+        if n_static:
+            _stage(tuple(static_refs), tuple(static_vmems), local_sem)
+        for r in range(world):
+            _stage((ws_ref.at[r],), (chunk_vmem,), local_sem)
+            o_vmem[...] = tile(
+                chunk_vmem[...], *[v[...] for v in static_vmems]
+            ).astype(out_dtype)
+            _stage((o_vmem,), (o_ref.at[pl.ds(r * tile_m, tile_m)],), local_sem)
+
+
+def _one_shot_ag_pltpu(tile, chunk, statics, *, axis, world, out_dtype, cid):
+    ts = _tile_struct(tile, chunk, statics)
+    gather_direct = tile is _identity and not statics
+    body = functools.partial(
+        _one_shot_ag_body, tile=tile, axis=axis, world=world,
+        n_static=len(statics), tile_m=ts.shape[0], out_dtype=out_dtype)
+    out_shape = [jax.ShapeDtypeStruct(
+        (ts.shape[0] * world,) + ts.shape[1:], out_dtype)]
+    scratch = [pltpu.SemaphoreType.DMA] * 3
+    if not gather_direct:
+        out_shape.append(  # symmetric landing workspace
+            jax.ShapeDtypeStruct((world,) + chunk.shape, chunk.dtype))
+        scratch = ([pltpu.VMEM(chunk.shape, chunk.dtype)]
+                   + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
+                   + [pltpu.VMEM(ts.shape, out_dtype)] + scratch)
+    outs = pl.pallas_call(
+        body,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + len(statics)),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * len(out_shape),
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(collective_id=cid),
+    )(chunk, *statics)
+    return outs[0] if isinstance(outs, (tuple, list)) else outs
+
+
+def _push_rs_body(*refs, tile, axis, world, n_static, m_blk, one_shot,
+                  out_dtype):
+    (a_ref, *rest) = refs
+    static_refs = rest[:n_static]
+    o_ref, ws_ref = rest[n_static], rest[n_static + 1]
+    stage_ref = rest[n_static + 2] if one_shot else None
+    base = n_static + (3 if one_shot else 2)
+    a_vmem = rest[base]
+    static_vmems = rest[base + 1:base + 1 + n_static]
+    p_vmem = rest[base + 1 + n_static]
+    local_sem, send_sem, recv_sem = rest[base + 2 + n_static:]
+
+    me = lax.axis_index(axis)
+    tpu_backend.barrier_all(axis, world)
+    if n_static:
+        _stage(tuple(static_refs), tuple(static_vmems), local_sem)
+
+    def compute(blk):
+        _stage((a_ref.at[pl.ds(blk * m_blk, m_blk)],), (a_vmem,), local_sem)
+        p_vmem[...] = tile(
+            a_vmem[...], *[v[...] for v in static_vmems]).astype(out_dtype)
+
+    sends = []
+    if one_shot:
+        # low-latency variant: ALL partials computed into local staging
+        # first, then the W-1 puts issued up-front with no waits between
+        # (own block, off 0, is a local copy — no self-targeted DMA).
+        for off in range(world):
+            compute(lax.rem(me + off, world))
+            _stage((p_vmem,), (stage_ref.at[off],), local_sem)
+        _stage((stage_ref.at[0],), (ws_ref.at[me],), local_sem)
+        for off in range(1, world):
+            tgt = lax.rem(me + off, world)
+            sends.append(tpu_backend.putmem_signal_nbi(
+                stage_ref.at[off], ws_ref.at[me], send_sem, recv_sem, tgt,
+                axis=axis))
+        for send in sends:
+            send.wait_send()
+    else:
+        for s in range(world):
+            # Alg. 3 swizzle: peers' blocks first, own block last
+            blk = lax.rem(me - s - 1 + 2 * world, world)
+            compute(blk)
+            if s == world - 1:
+                # my own block: local copy into my slot of my workspace
+                _stage((p_vmem,), (ws_ref.at[me],), local_sem)
+            else:
+                # one-sided push + arrival signal to the owner (slot = me)
+                send = tpu_backend.putmem_signal_nbi(
+                    p_vmem, ws_ref.at[me], send_sem, recv_sem, blk, axis=axis)
+                # the next step's compute overlaps this DMA; drain before
+                # reusing p_vmem (single partial buffer)
+                send.wait_send()
+                sends.append(send)
+
+    # signal_wait for the W-1 remote partials (SPMD symmetry: waiting my
+    # own descriptors consumes my peers' arrivals), then the f32 reduction
+    for send in sends:
+        send.wait_recv()
+    acc = jnp.zeros(p_vmem.shape, jnp.float32)
+    for r in range(world):
+        _stage((ws_ref.at[r],), (p_vmem,), local_sem)
+        acc = acc + p_vmem[...].astype(jnp.float32)
+    p_vmem[...] = acc.astype(out_dtype)
+    _stage((p_vmem,), (o_ref,), local_sem)
+
+
+def _rs_pltpu(tile, operand, statics, *, axis, world, out_dtype, cid,
+              one_shot):
+    m_blk = operand.shape[0] // world
+    blk_struct = jax.ShapeDtypeStruct((m_blk,) + operand.shape[1:],
+                                      operand.dtype)
+    ts = _tile_struct(tile, blk_struct, statics)
+    body = functools.partial(
+        _push_rs_body, tile=tile, axis=axis, world=world,
+        n_static=len(statics), m_blk=m_blk, one_shot=one_shot,
+        out_dtype=out_dtype)
+    out_shape = [
+        jax.ShapeDtypeStruct(ts.shape, out_dtype),
+        jax.ShapeDtypeStruct((world,) + ts.shape, out_dtype),  # landing ws
+    ]
+    if one_shot:
+        out_shape.append(  # local staging for the up-front puts
+            jax.ShapeDtypeStruct((world,) + ts.shape, out_dtype))
+    outs = pl.pallas_call(
+        body,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + len(statics)),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * len(out_shape),
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM(blk_struct.shape, operand.dtype)]
+        + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
+        + [pltpu.VMEM(ts.shape, out_dtype),
+           pltpu.SemaphoreType.DMA,
+           pltpu.SemaphoreType.DMA,
+           pltpu.SemaphoreType.DMA],
+        compiler_params=pltpu.CompilerParams(collective_id=cid),
+    )(operand, *statics)
+    return outs[0]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+_EMULATED = {
+    "ring_ag": _ring_ag_emulated,
+    "one_shot_ag": _one_shot_ag_emulated,
+    "push_rs": _push_rs_emulated,
+    "one_shot_rs": _one_shot_rs_emulated,
+}
+
+_PLTPU = {
+    "ring_ag": _ring_ag_pltpu,
+    "one_shot_ag": _one_shot_ag_pltpu,
+    "push_rs": functools.partial(_rs_pltpu, one_shot=False),
+    "one_shot_rs": functools.partial(_rs_pltpu, one_shot=True),
+}
+
+
+def run(
+    protocol: str,
+    tile: Optional[Callable],
+    operand: Array,
+    statics: Sequence[Array] = (),
+    *,
+    axis: str,
+    world: int,
+    out_dtype=None,
+    collective_id: int = 0,
+    backend: Optional[str] = None,
+) -> Array:
+    """Execute ``tile`` under a shmem communication protocol.
+
+    ``operand`` is the tensor that moves (AG protocols: the chunk that
+    rides/broadcasts; RS protocols: the local tensor whose dim-0 blocks
+    produce the pushed partials). ``statics`` stay rank-resident.
+    ``tile=None`` is the identity (pure data movement). ``backend`` is a
+    shmem backend name ("pltpu" | "emulated"); default picks per
+    platform (``shmem.default_backend``).
+    """
+    if protocol not in PROTOCOLS:
+        raise ValueError(f"unknown protocol {protocol!r} (not in {PROTOCOLS})")
+    tile = tile or _identity
+    backend = backend or default_backend()
+    impl = (_PLTPU if backend == "pltpu" else _EMULATED)[protocol]
+    return impl(tile, operand, tuple(statics), axis=axis, world=world,
+                out_dtype=out_dtype or operand.dtype, cid=collective_id)

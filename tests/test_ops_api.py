@@ -1,0 +1,290 @@
+"""repro.ops authoring-API tests.
+
+1. Declaring a toy op IN-TEST via ``OverlapOp`` auto-appears in the
+   engine registry with derived graph + kernel lowerings and the derived
+   dual-schedule backward; it passes graph-vs-kernel parity at worlds
+   2/4/8 and round-trips grads bit-identically through the ONE shared
+   custom_vjp (kernel forward keeps the graph dual as its backward).
+2. Back-compat shims: string-keyed ``overlap.apply`` and
+   ``ParallelConfig.with_modes/with_backends`` keep working but emit a
+   ``DeprecationWarning`` naming the replacement, and the shim path is
+   bit-identical to the new ``repro.ops`` path.
+3. ``OverlapPolicy``: single-point resolution (mode clamped by the
+   registry, backend degraded off kernel-incapable pairs, chunk count
+   picked by op kind), dict ergonomics, hw-aware degrade.
+"""
+import dataclasses
+import textwrap
+import warnings
+
+import pytest
+
+from conftest import run_devices
+
+TOY = textwrap.dedent("""
+    import functools
+    import jax, jax.numpy as jnp, numpy as np
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro import ops
+    from repro.core import overlap as ov
+
+    W = __WORLD__
+    mesh = jax.make_mesh((W,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+
+    # ---- declare toy ops IN-TEST (nonlinear in the static operand) ----
+    assert "toy_ag" not in ov.registry()
+    toy_tile = lambda c, w: jnp.dot(c, jnp.tanh(w),
+                                    preferred_element_type=jnp.float32)
+    toy_ag = ops.declare(ops.OverlapOp(
+        name="toy_ag", kind="ag", tile=toy_tile,
+        transports=("ring", "bidir", "one_shot"),
+        kernel_protocols=(("ring", "ring_ag"), ("one_shot", "one_shot_ag")),
+        transpose="matmul_rs", rowwise=True))
+    toy_rs = ops.declare(ops.OverlapOp(
+        name="toy_rs", kind="rs", tile=toy_tile,
+        transports=("ring", "one_shot"),
+        kernel_protocols=(("ring", "push_rs"), ("one_shot", "one_shot_rs")),
+        transpose="toy_ag"))
+
+    # auto-registration: spec with derived fwd/bwd/kernel_fwd appears
+    spec = ov.get("toy_ag")
+    assert spec.kind == "ag"
+    assert spec.kernel_transports == ("ring", "one_shot")
+    assert spec.fwd is not None and spec.bwd is not None
+    assert spec.kernel_fwd is not None
+    # ...and is immediately visible to tuner candidate enumeration and
+    # policy resolution, with no extra wiring
+    assert ov.transports_for("toy_ag") == ("ring", "bidir", "one_shot")
+    assert ov.backends_for("toy_rs") == ("graph", "kernel")
+    pol = ops.OverlapPolicy(mode="ring", backend="kernel")
+    assert pol.resolve("toy_ag").backend == "kernel"
+    assert pol.resolve("toy_rs").backend == "kernel"
+    assert pol.resolve("toy_ag", hw=None).mode == "ring"
+
+    def sh(fn, in_specs, out_specs):
+        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_vma=False))
+
+    M, K, N = 4 * W, 8, 2 * W
+    A = jnp.asarray(rng.randn(M, K), jnp.float32)
+    Wt = jnp.asarray(rng.randn(K, N), jnp.float32)
+    want = np.asarray(A) @ np.tanh(np.asarray(Wt))
+
+    AG_SPECS = ((P("tp", None), P(None, "tp")), P(None, "tp"))
+    # derived graph lowering matches the oracle on every transport
+    for mode in ("none", "ring", "bidir", "one_shot"):
+        f = sh(functools.partial(toy_ag, axis="tp", mode=mode,
+                                 out_dtype=jnp.float32), *AG_SPECS)
+        err = np.abs(np.asarray(f(A, Wt)) - want).max()
+        assert err < 2e-4, ("toy_ag", mode, err)
+
+    # graph-vs-kernel parity for every declared (transport, protocol)
+    def run(op, specs, mode, backend, *xs):
+        f = sh(functools.partial(op, axis="tp", mode=mode, backend=backend,
+                                 out_dtype=jnp.float32), *specs)
+        return np.asarray(f(*xs))
+
+    for mode in ("ring", "one_shot"):
+        k = run(toy_ag, AG_SPECS, mode, "kernel", A, Wt)
+        g = run(toy_ag, AG_SPECS, mode, "graph", A, Wt)
+        assert np.abs(k - g).max() < 2e-4, ("toy_ag kernel", mode)
+
+    RS_SPECS = ((P(None, "tp"), P("tp", None)), P("tp", None))
+    A2 = jnp.asarray(rng.randn(M, 4 * W), jnp.float32)
+    W2 = jnp.asarray(rng.randn(4 * W, N), jnp.float32)
+    want2 = np.asarray(A2) @ np.tanh(np.asarray(W2))
+    for mode in ("none", "ring", "one_shot"):
+        g = run(toy_rs, RS_SPECS, mode, "graph", A2, W2)
+        assert np.abs(g - want2).max() < 2e-4, ("toy_rs", mode)
+    for mode in ("ring", "one_shot"):
+        k = run(toy_rs, RS_SPECS, mode, "kernel", A2, W2)
+        g = run(toy_rs, RS_SPECS, mode, "graph", A2, W2)
+        assert np.abs(k - g).max() < 2e-4, ("toy_rs kernel", mode)
+
+    # grads round-trip the SHARED custom_vjp bit-identically across
+    # backends (kernel fwd keeps the graph dual as its backward), and
+    # match autodiff of the unfused oracle
+    def make_grad(backend):
+        def f(a, w):
+            out = toy_ag(a, w, axis="tp", mode="ring", backend=backend,
+                         out_dtype=jnp.float32)
+            return lax.psum(jnp.sum(out * out), "tp")
+        return sh(jax.grad(f, argnums=(0, 1)),
+                  (P("tp", None), P(None, "tp")),
+                  (P("tp", None), P(None, "tp")))
+
+    gg = [np.asarray(t) for t in make_grad("graph")(A, Wt)]
+    gk = [np.asarray(t) for t in make_grad("kernel")(A, Wt)]
+    for a, b in zip(gg, gk):
+        assert np.array_equal(a, b), "toy_ag grads differ across backends"
+
+    def oracle(a, w):
+        out = jnp.dot(lax.all_gather(a, "tp", tiled=True), jnp.tanh(w),
+                      preferred_element_type=jnp.float32)
+        return lax.psum(jnp.sum(out * out), "tp")
+
+    go = sh(jax.grad(oracle, argnums=(0, 1)),
+            (P("tp", None), P(None, "tp")),
+            (P("tp", None), P(None, "tp")))(A, Wt)
+    for a, b in zip(gg, [np.asarray(t) for t in go]):
+        assert np.abs(a - b).max() < 1e-3, "toy_ag grads vs oracle"
+    print("OK toy ops", W)
+""")
+
+
+@pytest.mark.parametrize("world", [2, 4, 8])
+def test_toy_op_declaration_registry_parity_grads(world):
+    out = run_devices(TOY.replace("__WORLD__", str(world)), devices=world,
+                      timeout=1200)
+    assert "OK" in out
+
+
+SHIM = textwrap.dedent("""
+    import functools, warnings
+    import jax, jax.numpy as jnp, numpy as np
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro import ops
+    from repro.core import overlap as ov
+
+    W = 4
+    mesh = jax.make_mesh((W,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    A = jnp.asarray(rng.randn(8 * W, 16), jnp.float32)
+    B = jnp.asarray(rng.randn(16, 4 * W), jnp.float32)
+
+    def sh(fn):
+        return jax.jit(jax.shard_map(fn, mesh=mesh,
+                                     in_specs=(P("tp", None), P(None, "tp")),
+                                     out_specs=P(None, "tp"), check_vma=False))
+
+    new = sh(functools.partial(ops.ag_matmul, axis="tp", mode="ring",
+                               out_dtype=jnp.float32))(A, B)
+
+    # the string-keyed shim warns (naming the replacement) and is
+    # bit-identical to the new path — forward AND gradients
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = sh(lambda a, b: ov.apply("ag_matmul", a, b, axis="tp",
+                                       mode="ring", out_dtype="float32"))(A, B)
+    assert any(issubclass(w.category, DeprecationWarning) and
+               "repro.ops" in str(w.message) for w in rec), \
+        [str(w.message) for w in rec]
+    assert np.array_equal(np.asarray(old), np.asarray(new)), "shim != new path"
+
+    def loss_new(a, b):
+        out = ops.ag_matmul(a, b, axis="tp", mode="ring", out_dtype=jnp.float32)
+        return lax.psum(jnp.sum(out * out), "tp")
+
+    def loss_old(a, b):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            out = ov.apply("ag_matmul", a, b, axis="tp", mode="ring",
+                           out_dtype="float32")
+        return lax.psum(jnp.sum(out * out), "tp")
+
+    gspecs = dict(in_specs=(P("tp", None), P(None, "tp")),
+                  out_specs=(P("tp", None), P(None, "tp")))
+    gn = jax.jit(jax.shard_map(jax.grad(loss_new, argnums=(0, 1)), mesh=mesh,
+                               check_vma=False, **gspecs))(A, B)
+    go = jax.jit(jax.shard_map(jax.grad(loss_old, argnums=(0, 1)), mesh=mesh,
+                               check_vma=False, **gspecs))(A, B)
+    for a, b in zip(gn, go):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), "shim grads"
+    print("OK shim")
+""")
+
+
+def test_string_keyed_apply_shim_warns_and_matches():
+    out = run_devices(SHIM, devices=4)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# OverlapPolicy resolution (single device, registry-backed)
+# ---------------------------------------------------------------------------
+
+
+def test_policy_single_resolution_point():
+    from repro import hw, ops
+
+    pol = ops.OverlapPolicy(mode="ring", backend="kernel",
+                            ag_chunks=2, rs_chunks=3)
+    r = pol.resolve("ag_matmul")
+    assert r == ops.ResolvedOverlap("ring", "kernel", 2)
+    # chunk count picked by registry kind (rs ops use the rs knob)
+    assert pol.resolve("matmul_rs").chunks == 3
+    # mode clamped by the registry: a2a_ep has no ring transport
+    assert pol.resolve("a2a_ep").mode == "one_shot"
+    # backend degraded off kernel-incapable pairs
+    assert pol.with_modes(ag_matmul="bidir").resolve("ag_matmul").backend == \
+        "graph"
+    assert pol.resolve("reduce_scatter").backend == "graph"
+    # hw-aware degrade: no ICI links -> no remote-DMA engine -> graph
+    no_ici = dataclasses.replace(hw.DEFAULT, ici_links=0)
+    assert pol.resolve("ag_matmul", hw=no_ici).backend == "graph"
+    assert pol.resolve("ag_matmul", hw=hw.DEFAULT).backend == "kernel"
+    # dict ergonomics + describe
+    pol2 = ops.OverlapPolicy(modes={"ag_matmul": "one_shot"})
+    assert pol2.mode_for("ag_matmul") == "one_shot"
+    assert pol2.describe("ag_matmul") == "one_shot/graph"
+
+
+def test_parallel_config_carries_policy():
+    from repro import ops
+    from repro.configs.base import ParallelConfig
+
+    # legacy fields fold into an equivalent policy on the fly
+    legacy = ParallelConfig(tp=4, overlap_mode="one_shot", ag_chunks=2)
+    explicit = ParallelConfig(
+        tp=4, overlap=ops.OverlapPolicy(mode="one_shot", ag_chunks=2))
+    for op in ("ag_matmul", "matmul_rs", "a2a_ep", "flash_decode"):
+        assert legacy.policy.resolve(op) == explicit.policy.resolve(op), op
+    # the explicit policy wins over legacy fields when both are set
+    both = ParallelConfig(tp=4, overlap_mode="ring",
+                          overlap=ops.OverlapPolicy(mode="one_shot"))
+    assert both.policy.resolve("ag_matmul").mode == "one_shot"
+
+
+def test_with_modes_shim_warns_and_matches_policy_path():
+    from repro.configs.base import ParallelConfig
+
+    pcfg = ParallelConfig(tp=4)
+    with pytest.warns(DeprecationWarning, match="OverlapPolicy"):
+        old = pcfg.with_modes(ag_matmul="one_shot")
+    new = dataclasses.replace(
+        pcfg, overlap=pcfg.policy.with_modes(ag_matmul="one_shot"))
+    with pytest.warns(DeprecationWarning, match="OverlapPolicy"):
+        old = old.with_backends(matmul_rs="kernel")
+    new = dataclasses.replace(
+        new, overlap=new.policy.with_backends(matmul_rs="kernel"))
+    for op in ("ag_matmul", "matmul_rs", "a2a_ep"):
+        assert old.policy.resolve(op) == new.policy.resolve(op), op
+    # with_modes on a policy-carrying config merges into the policy
+    with pytest.warns(DeprecationWarning):
+        merged = new.with_modes(matmul_rs="one_shot")
+    assert merged.overlap is not None
+    assert merged.policy.resolve("matmul_rs").mode == "one_shot"
+
+
+def test_tuner_policy_feeds_default_pcfg_without_repacking():
+    from repro import ops
+    from repro.configs import ARCHS, reduced
+    from repro.configs.shapes import SHAPES
+    from repro.launch.steps import default_pcfg
+
+    cfg = reduced(ARCHS["granite-3-2b"])
+    shape = SHAPES["train_4k"]
+    pcfg = default_pcfg(cfg, shape, multi_pod=False, overlap_mode="auto")
+    assert isinstance(pcfg.overlap, ops.OverlapPolicy)
+    # the tuner's policy resolves every registry op without error and the
+    # CPU host recommendation is the graph backend
+    r = pcfg.policy.resolve("ag_matmul")
+    assert r.backend == "graph"
+    assert r.chunks >= 1
+    # explicit per-op pairs still win over the tuner's picks
+    pcfg2 = default_pcfg(cfg, shape, multi_pod=False, overlap_mode="auto",
+                         overlap_modes=(("ag_matmul", "ring"),))
+    assert pcfg2.policy.resolve("ag_matmul").mode == "ring"

@@ -42,22 +42,27 @@ def test_analytic_candidates_come_from_registry():
     assert only_ring.mode == "ring"
 
 
-def test_recommend_overlap_modes_resolves_per_op():
-    rec = tuner.recommend_overlap_modes(4096, 8192, 8192, world=16)
-    assert set(rec) == {"ag_matmul", "matmul_rs", "ag_chunks", "rs_chunks",
-                        "backend"}
+def test_recommend_overlap_modes_returns_policy():
+    from repro import ops
     from repro.core import overlap
 
-    assert rec["ag_matmul"] in overlap.transports_for(
+    rec = tuner.recommend_overlap_modes(4096, 8192, 8192, world=16)
+    # the recommendation IS an OverlapPolicy — consumable by
+    # ParallelConfig.overlap / repro.ops calls with no dict re-packing
+    assert isinstance(rec, ops.OverlapPolicy)
+    assert rec.mode_for("ag_matmul") in overlap.transports_for(
         "ag_matmul", include_baseline=True)
-    assert rec["matmul_rs"] in overlap.transports_for(
+    assert rec.mode_for("matmul_rs") in overlap.transports_for(
         "matmul_rs", include_baseline=True)
-    assert rec["ag_chunks"] >= 1
-    assert rec["rs_chunks"] >= 1
-    assert rec["backend"] in overlap.BACKENDS
+    assert rec.resolve("ag_matmul").chunks >= 1
+    assert rec.resolve("matmul_rs").chunks >= 1
+    assert rec.backend in overlap.BACKENDS
     # CPU test host: the emulated-DMA kernel backend is a correctness
     # vehicle, not a fast path — the tuner must recommend graph here
-    assert rec["backend"] == "graph"
+    assert rec.resolve("ag_matmul").backend == "graph"
+    # latency-bound ops keep their one-shot defaults in the policy map
+    assert rec.mode_for("a2a_ep") == "one_shot"
+    assert rec.mode_for("flash_decode") == "one_shot"
 
 
 def test_recommend_backend_enumerates_registry():
