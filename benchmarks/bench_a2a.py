@@ -1,5 +1,8 @@
 """Paper Fig. 16 — expert-parallel AllToAll dispatch/combine: the one-shot
-decomposed a2a (low-latency structure) vs. XLA's monolithic all_to_all."""
+decomposed a2a (low-latency structure) vs. XLA's monolithic all_to_all,
+on both lowering backends (graph = engine pipeline; kernel = the shmem
+executor's one_shot_a2a push protocol — emulated DMA on CPU, so kernel
+rows run at the smallest shape only, as a correctness-tracking row)."""
 import functools
 
 import jax
@@ -8,8 +11,13 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import moe_overlap as mo
+from repro.core import overlap
 
 from .common import row, time_fn
+
+# kernel rows only at this shape: the emulated-DMA backend is a
+# correctness vehicle (host callbacks), not a CPU fast path
+_KERNEL_SHAPE = (16, 32, 128)
 
 
 def rows():
@@ -22,23 +30,32 @@ def rows():
             continue
         x = jnp.asarray(rng.randn(w * e_glob, cap, d), jnp.float32)
         for mode in ("xla", "one_shot"):
-            f = jax.jit(jax.shard_map(
-                functools.partial(mo.a2a_ep, axis="ep", mode=mode),
-                mesh=mesh, in_specs=P("ep", None, None),
-                out_specs=P("ep", None, None), check_vma=False))
-            us = time_fn(f, x)
-            bytes_dev = e_glob * cap * d * 4 * (w - 1) / w
-            out.append(row(f"a2a_dispatch/E{e_glob}c{cap}d{d}/{mode}", us,
-                           f"bytes_per_dev={bytes_dev:.0f}"))
-            # time the combine (inverse) path directly on a DISPATCHED
-            # tensor — a difference of two noisy medians (roundtrip -
-            # dispatch) can even go negative on loaded CPU hosts
-            y = jax.block_until_ready(f(x))
-            g = jax.jit(jax.shard_map(
-                lambda yy: mo.a2a_ep_inverse(yy, "ep", mode=mode),
-                mesh=mesh, in_specs=P("ep", None, None),
-                out_specs=P("ep", None, None), check_vma=False))
-            us2 = time_fn(g, y)
-            out.append(row(f"a2a_combine/E{e_glob}c{cap}d{d}/{mode}", us2,
-                           f"dispatch_us={us:.1f}"))
+            for backend in overlap.backends_for("a2a_ep"):
+                if overlap.resolve_backend("a2a_ep", backend, mode) != backend:
+                    continue  # no kernel lowering for this mode
+                if backend == "kernel" and (e_glob, cap, d) != _KERNEL_SHAPE:
+                    continue
+                suffix = "/kernel" if backend == "kernel" else ""
+                f = jax.jit(jax.shard_map(
+                    functools.partial(mo.a2a_ep, axis="ep", mode=mode,
+                                      backend=backend),
+                    mesh=mesh, in_specs=P("ep", None, None),
+                    out_specs=P("ep", None, None), check_vma=False))
+                us = time_fn(f, x)
+                bytes_dev = e_glob * cap * d * 4 * (w - 1) / w
+                out.append(row(f"a2a_dispatch/E{e_glob}c{cap}d{d}/{mode}{suffix}",
+                               us, f"bytes_per_dev={bytes_dev:.0f}"))
+                # time the combine (inverse) path directly on a DISPATCHED
+                # tensor — correct capacity-grouped (E_local, W*cap, d)
+                # shards; a difference of two noisy medians (roundtrip -
+                # dispatch) can even go negative on loaded CPU hosts
+                y = jax.block_until_ready(f(x))
+                g = jax.jit(jax.shard_map(
+                    lambda yy: mo.a2a_ep_inverse(yy, "ep", mode=mode,
+                                                 backend=backend),
+                    mesh=mesh, in_specs=P("ep", None, None),
+                    out_specs=P("ep", None, None), check_vma=False))
+                us2 = time_fn(g, y)
+                out.append(row(f"a2a_combine/E{e_glob}c{cap}d{d}/{mode}{suffix}",
+                               us2, f"dispatch_us={us:.1f}"))
     return out

@@ -20,11 +20,15 @@ def rows():
     b, hq, hkv, d = 1, 8, 2, 64
     out = []
 
-    def step(q, ks, vs):
+    def step(q, ks, vs, *, backend="graph"):
         ll = jnp.full((q.shape[0],), ks.shape[2], jnp.int32)
-        return fdm.distributed_flash_decode(q, ks, vs, ll, "sp", mode="one_shot")
+        return fdm.distributed_flash_decode(q, ks, vs, ll, "sp",
+                                            mode="one_shot", backend=backend)
 
-    # weak scaling: KV per shard fixed
+    # weak scaling: KV per shard fixed. The combine's backend axis rides
+    # along: kernel = the executor's one_shot_ag with the LSE-stacking
+    # tile (emulated DMA on CPU — a correctness-tracking row, not a CPU
+    # fast path; graph rows keep their historical names).
     per_shard = 2048
     for w in (1, 2, 4, 8):
         if w > wmax:
@@ -34,14 +38,22 @@ def rows():
         q = jnp.asarray(rng.randn(b, hq, d), jnp.float32)
         k = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
         v = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
-        f = jax.jit(jax.shard_map(step, mesh=mesh,
-            in_specs=(P(None,), P(None, None, "sp", None), P(None, None, "sp", None)),
-            out_specs=P(None,), check_vma=False))
-        us = time_fn(f, q, k, v)
         kv_bytes_dev = 2 * b * hkv * per_shard * d * 4
         t_hbm = kv_bytes_dev / hw.TPU_V5E.hbm_bandwidth
-        out.append(row(f"flash_decode/weak/kv{per_shard}x{w}", us,
-                       f"v5e_hbm_bound_us={t_hbm*1e6:.2f}"))
+        for backend in ("graph", "kernel"):
+            if backend == "kernel" and w != 2:
+                # one kernel row, at the smallest COMMUNICATING world —
+                # the emulated backend is a correctness-tracking row, not
+                # a CPU fast path (matches bench_a2a's _KERNEL_SHAPE rule)
+                continue
+            f = jax.jit(jax.shard_map(functools.partial(step, backend=backend),
+                mesh=mesh,
+                in_specs=(P(None,), P(None, None, "sp", None), P(None, None, "sp", None)),
+                out_specs=P(None,), check_vma=False))
+            us = time_fn(f, q, k, v)
+            suffix = "/one_shot/kernel" if backend == "kernel" else ""
+            out.append(row(f"flash_decode/weak/kv{per_shard}x{w}{suffix}", us,
+                           f"v5e_hbm_bound_us={t_hbm*1e6:.2f}"))
     # strong scaling: global KV fixed
     total = 2048 * wmax
     for w in (1, 2, 4, 8):

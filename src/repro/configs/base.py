@@ -228,6 +228,14 @@ class ParallelConfig:
     compute_dtype: str = "bfloat16"
     moment_dtype: str = "float32"  # bf16 for the 1T config
 
+    # Legacy overlap fields: with an explicit ``overlap`` policy set, any
+    # of these moved off its field default is a CONFLICT (two sources of
+    # truth) and raises instead of silently losing. Defaults are read
+    # from the dataclass fields themselves, so the check cannot drift.
+    _LEGACY_OVERLAP_FIELDS = ("overlap_mode", "overlap_modes",
+                              "overlap_backend", "overlap_backends",
+                              "ag_chunks", "rs_chunks")
+
     def __post_init__(self):
         # accept a dict for ergonomics; store a hashable sorted tuple
         if isinstance(self.overlap_modes, dict):
@@ -239,6 +247,20 @@ class ParallelConfig:
                 self, "overlap_backends",
                 tuple(sorted(self.overlap_backends.items())),
             )
+        if self.overlap is not None:
+            defaults = {f.name: f.default for f in dataclasses.fields(self)}
+            conflicts = sorted(
+                name for name in self._LEGACY_OVERLAP_FIELDS
+                if getattr(self, name) != defaults[name]
+            )
+            if conflicts:
+                raise ValueError(
+                    "ParallelConfig: both an explicit `overlap` policy and "
+                    f"conflicting legacy overlap fields ({', '.join(conflicts)}) "
+                    "were supplied; fold the legacy values into the "
+                    "OverlapPolicy (mode=/modes=/backend=/backends=/"
+                    "ag_chunks=/rs_chunks=) or drop `overlap`"
+                )
 
     @property
     def policy(self):

@@ -155,8 +155,8 @@ ov.register("ag_matmul_2level", kind="ag", transports=("two_level",),
             baseline="none", default="two_level")
 ov.register("matmul_rs_2level", kind="rs", transports=("two_level",),
             baseline="none", default="two_level")
-ov.register("reduce_scatter", kind="rs", transports=("ring",),
-            baseline="none", default="ring")
+# "reduce_scatter" is DECLARED in repro.ops.library (f32-accumulating
+# tile over the RS pipelines + push_rs/one_shot_rs kernel protocols).
 
 
 # ---------------------------------------------------------------------------
@@ -164,20 +164,15 @@ ov.register("reduce_scatter", kind="rs", transports=("ring",),
 # ---------------------------------------------------------------------------
 
 
-def reduce_scatter_chunked(x: Array, axis: str) -> Array:
-    """Ring reduce-scatter along dim 0 (accumulator in f32)."""
-    w = lax.axis_size(axis)
-    m = x.shape[0]
-    assert m % w == 0
-    m_blk = m // w
+def reduce_scatter_chunked(x: Array, axis: str, *, mode: str = "ring",
+                           backend: str = "graph") -> Array:
+    """Decomposed reduce-scatter along dim 0 (accumulator in f32); see
+    the ``reduce_scatter`` declaration in ``repro.ops.library``.
+    ``backend="kernel"`` lowers ring through the executor's Alg.-3 push
+    and one_shot through the all-partials-up-front protocol."""
+    from .. import ops
 
-    def compute(blk, s):
-        piece = lax.dynamic_slice(
-            x, (blk * m_blk,) + (0,) * (x.ndim - 1), (m_blk,) + x.shape[1:]
-        )
-        return piece.astype(jnp.float32)
-
-    return ov.rs_pipeline(compute, axis, transport="ring").astype(x.dtype)
+    return ops.reduce_scatter(x, axis=axis, mode=mode, backend=backend)
 
 
 def hierarchical_reduce_scatter(x: Array, inner_axis: str, outer_axis: str) -> Array:

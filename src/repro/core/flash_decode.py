@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..kernels import ops
 from . import overlap as ov
@@ -37,22 +36,28 @@ def distributed_flash_decode(
     axis: str,
     *,
     mode: str = "one_shot",
+    backend: str = "graph",
     force=None,
 ) -> Array:
-    """Call inside shard_map. Returns the combined (B, Hq, D) output."""
+    """Call inside shard_map. Returns the combined (B, Hq, D) output.
+
+    The combine's stacked small-message AllGather is the registered
+    "flash_decode" op (declared in ``repro.ops.library``: the
+    LSE-stacking tile over the engine gather pipelines, with a
+    ``one_shot_ag`` executor kernel lowering for ``backend="kernel"``);
+    the logsumexp merge itself stays local."""
     mode = ov.resolve_mode("flash_decode", mode)
     o_part, lse_part = local_flash_decode(q, k_shard, v_shard, length_local, force=force)
     b, h, d = o_part.shape
     # pack (o, lse) into one message so the combine needs ONE small AllGather
     packed = jnp.concatenate([o_part, lse_part[..., None]], axis=-1)  # (B,H,D+1)
-    if mode == "xla":
-        gathered = lax.all_gather(packed, axis)  # (W,B,H,D+1)
-    else:
-        gathered = ov.stack_gather_pipeline(packed, axis, transport=mode)
+    gathered = ov.dispatch("flash_decode", packed, axis=axis, mode=mode,
+                           backend=backend)  # (W,B,H,D+1)
     o_parts = gathered[..., :d]
     lse_parts = gathered[..., d]
     return ops.combine_flash_decode(o_parts, lse_parts)
 
 
-ov.register("flash_decode", kind="combine", transports=("one_shot", "ring"),
-            baseline="xla", default="one_shot")
+# The "flash_decode" registry entry is DECLARED in repro.ops.library;
+# importing it here guarantees registration for direct importers.
+from .. import ops as _repro_ops  # noqa: E402,F401

@@ -79,11 +79,15 @@ def topk_combine(out: Array, info: DispatchInfo, out_dtype=None) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# EP AllToAll — engine a2a_pipeline (one_shot low-latency / XLA baseline)
+# EP AllToAll — the declared "a2a_ep" op (repro.ops.library): graph =
+# engine a2a_pipeline (one_shot low-latency / XLA baseline), kernel =
+# the executor's one_shot_a2a push protocol. Both directions are the
+# SAME registered op; the inverse just transposes block placement.
 # ---------------------------------------------------------------------------
 
 
-def a2a_ep(x: Array, axis: str, *, mode: str = "one_shot") -> Array:
+def a2a_ep(x: Array, axis: str, *, mode: str = "one_shot",
+           backend: str = "graph") -> Array:
     """Expert-parallel AllToAll.
 
     x: (E_global, cap, d) where E_global = W * E_local; rank r keeps the
@@ -94,18 +98,21 @@ def a2a_ep(x: Array, axis: str, *, mode: str = "one_shot") -> Array:
     e_global, cap, d = x.shape
     e_local = e_global // w
     xs = x.reshape(w, e_local, cap, d)  # block t = my tokens for rank t's experts
-    y = ov.a2a_pipeline(xs, axis, transport=mode)
+    y = ov.dispatch("a2a_ep", xs, axis=axis,
+                    mode=ov.resolve_mode("a2a_ep", mode), backend=backend)
     # y[src] = rank src's tokens for my experts
     return jnp.moveaxis(y, 0, 1).reshape(e_local, w * cap, d)
 
 
-def a2a_ep_inverse(y: Array, axis: str, *, mode: str = "one_shot") -> Array:
+def a2a_ep_inverse(y: Array, axis: str, *, mode: str = "one_shot",
+                   backend: str = "graph") -> Array:
     """Inverse AllToAll: (E_local, W*cap, d) -> (E_global, cap, d)."""
     w = lax.axis_size(axis)
     e_local, wc, d = y.shape
     cap = wc // w
     ys = jnp.moveaxis(y.reshape(e_local, w, cap, d), 1, 0)  # (W, e_local, cap, d)
-    x = ov.a2a_pipeline(ys, axis, transport=mode)
+    x = ov.dispatch("a2a_ep", ys, axis=axis,
+                    mode=ov.resolve_mode("a2a_ep", mode), backend=backend)
     return x.reshape(w * e_local, cap, d)
 
 
@@ -121,19 +128,28 @@ def ag_moe(
     axis: str,
     *,
     mode: str = "ring",
+    backend: str = "graph",
 ) -> Array:
     """AllGather-MoE overlap: token chunks ride the engine transport; the
     (d_ff-sharded) expert computation runs on each chunk as it arrives;
     every rank produces the full sequence's partial outputs (to be
     reduced by rs afterwards or combined directly when expert_fn output
-    is complete).
+    is complete). ``backend="kernel"`` lowers through the shmem tile
+    executor (tokens+logits packed into one riding chunk)."""
+    return ov.dispatch("ag_moe", x_blk, logits_blk, axis=axis,
+                       mode=ov.resolve_mode("ag_moe", mode), backend=backend,
+                       expert_fn=expert_fn)
+
+
+def _ag_moe_graph(static, x_blk, logits_blk):
+    """Engine (lax.ppermute) lowering of ag_moe.
 
     Assembly avoids a dynamic_update_slice chain (whose autodiff keeps
     all W buffer versions live in the backward): chunks are collected in
     computation order and realigned with ONE static concat + ONE cyclic
     roll per direction (an O(1)-buffer transpose).
     """
-    mode = ov.resolve_mode("ag_moe", mode)
+    axis, mode, expert_fn = static["axis"], static["mode"], static["expert_fn"]
     if mode == "none":
         # monolithic baseline: gather everything, then one big expert pass
         return expert_fn(
@@ -182,12 +198,22 @@ def moe_rs(
     axis: str,
     *,
     mode: str = "ring",
+    backend: str = "graph",
 ) -> Array:
     """GroupGEMM-ReduceScatter overlap (paper MoE+RS): the expert output
     block destined for each rank is the rs_pipeline's per-block compute;
     the accumulator rides the engine transport (Alg. 3 schedule, plus
-    bidir token-halves and the one_shot low-latency variant)."""
-    mode = ov.resolve_mode("moe_rs", mode)
+    bidir token-halves and the one_shot low-latency variant).
+    ``backend="kernel"`` lowers ring through the executor's Alg.-3 push
+    and one_shot through the all-partials-up-front protocol."""
+    return ov.dispatch("moe_rs", x_full, logits_full, axis=axis,
+                       mode=ov.resolve_mode("moe_rs", mode), backend=backend,
+                       expert_fn=expert_fn)
+
+
+def _moe_rs_graph(static, x_full, logits_full):
+    """Engine (lax.ppermute) lowering of moe_rs."""
+    axis, mode, expert_fn = static["axis"], static["mode"], static["expert_fn"]
     if mode == "none":
         # monolithic baseline: full expert pass, then XLA's reduce-scatter
         partial = expert_fn(x_full, logits_full).astype(jnp.float32)
@@ -224,15 +250,82 @@ def moe_rs(
 
 
 # ---------------------------------------------------------------------------
-# Registry entries (these ops differentiate through the pipeline directly:
-# ag_moe's concat+roll assembly and moe_rs's accumulator chain are already
-# O(1)-buffer under autodiff, and expert_fn is checkpointed per chunk by
-# the caller)
+# Kernel (shmem tile executor) lowerings: tokens and logits are packed
+# into ONE riding chunk (the executor protocols move a single operand),
+# and the tile unpacks the columns before calling expert_fn. The expert
+# closure arrives per call in the static dict — these ops sit outside
+# the declarative library only because their compute is a caller-
+# supplied closure, not a declaration-time tile.
+# ---------------------------------------------------------------------------
+
+_AG_MOE_CID, _MOE_RS_CID = 24, 25
+_AG_MOE_PROTOS = {"ring": "ring_ag", "bidir": "bidir_ring_ag",
+                  "one_shot": "one_shot_ag"}
+_MOE_RS_PROTOS = {"ring": "push_rs", "one_shot": "one_shot_rs"}
+
+
+def _moe_pack(x: Array, logits: Array) -> Array:
+    # pack in the PROMOTED dtype so neither side loses precision on the
+    # wire (bf16 tokens + f32 router logits -> f32 packed; the unpack
+    # cast back to each original dtype is then exact)
+    pdt = jnp.promote_types(x.dtype, logits.dtype)
+    return jnp.concatenate([x.astype(pdt), logits.astype(pdt)], axis=1)
+
+
+def _moe_tile(expert_fn, d: int, x_dtype, logits_dtype):
+    def tile(packed):
+        return expert_fn(packed[:, :d].astype(x_dtype),
+                         packed[:, d:].astype(logits_dtype))
+
+    return tile
+
+
+def _ag_moe_kernel(static, x_blk, logits_blk):
+    from ..shmem import executor
+
+    axis = static["axis"]
+    tile = _moe_tile(static["expert_fn"], x_blk.shape[1], x_blk.dtype,
+                     logits_blk.dtype)
+    packed = _moe_pack(x_blk, logits_blk)
+    out_dtype = jax.eval_shape(tile, packed).dtype
+    return executor.run(
+        _AG_MOE_PROTOS[static["mode"]], tile, packed, axis=axis,
+        world=lax.axis_size(axis), out_dtype=out_dtype,
+        collective_id=_AG_MOE_CID)
+
+
+def _moe_rs_kernel(static, x_full, logits_full):
+    from ..shmem import executor
+
+    axis = static["axis"]
+    tile = _moe_tile(static["expert_fn"], x_full.shape[1], x_full.dtype,
+                     logits_full.dtype)
+    # out_dtype=f32: partials ride and reduce in f32, matching the graph
+    # lowering's f32 accumulator; the final cast happens here, once.
+    acc = executor.run(
+        _MOE_RS_PROTOS[static["mode"]], tile, _moe_pack(x_full, logits_full),
+        axis=axis, world=lax.axis_size(axis), out_dtype=jnp.float32,
+        collective_id=_MOE_RS_CID)
+    return acc.astype(x_full.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry entries. ag_moe / moe_rs differentiate through the pipeline
+# directly (no bwd rule): the concat+roll assembly and the accumulator
+# chain are already O(1)-buffer under autodiff, and expert_fn is
+# checkpointed per chunk by the caller. The "a2a_ep" entry is DECLARED
+# in repro.ops.library (one_shot_a2a kernel protocol + self-dual
+# backward); the trailing import below guarantees the declaration runs
+# for anyone importing this module directly.
 # ---------------------------------------------------------------------------
 
 ov.register("ag_moe", kind="ag", transports=("ring", "bidir", "one_shot"),
-            baseline="none", default="ring")
+            baseline="none", default="ring", fwd=_ag_moe_graph,
+            kernel_transports=("ring", "bidir", "one_shot"),
+            kernel_fwd=_ag_moe_kernel)
 ov.register("moe_rs", kind="rs", transports=("ring", "bidir", "one_shot"),
-            baseline="none", default="ring")
-ov.register("a2a_ep", kind="a2a", transports=("one_shot",),
-            baseline="xla", default="one_shot")
+            baseline="none", default="ring", fwd=_moe_rs_graph,
+            kernel_transports=("ring", "one_shot"),
+            kernel_fwd=_moe_rs_kernel)
+
+from .. import ops as _ops  # noqa: E402,F401  (registers a2a_ep et al.)

@@ -250,7 +250,9 @@ def recommend_overlap_modes(
     modes.update({"ag_matmul": ag.mode, "matmul_rs": rs.mode})
     return OverlapPolicy(
         mode=ag.mode,
-        backend=recommend_backend({"ag_matmul": ag.mode, "matmul_rs": rs.mode}),
+        # the latency-bound ops are kernel-capable too, so the backend
+        # recommendation enumerates the full per-op mode map
+        backend=recommend_backend(modes),
         modes=modes,
         ag_chunks=ag.chunks_per_rank,
         rs_chunks=rs.chunks_per_rank,
@@ -269,11 +271,29 @@ class TuneResult:
     all_timings: dict
 
 
+def default_reset() -> Optional[Callable[[], None]]:
+    """The platform's between-candidates signal reset.
+
+    On hosts without real TPU remote DMA, ``backend="kernel"``
+    candidates run on the emulated shmem backend, whose symmetric heaps
+    and counting signal slots survive an aborted/partial timed run —
+    stale state then skews (or deadlocks) the NEXT candidate's wait
+    accounting. ``shmem.emulated.reset`` drops that state. On real TPU
+    there is no host-side heap to clear; the caller supplies a
+    device-appropriate reset (or None).
+    """
+    if jax.default_backend() == "tpu":
+        return None
+    from ..shmem import emulated
+
+    return emulated.reset
+
+
 def tune(
     make_step: Callable[[object], Callable[[], object]],
     configs: Iterable[object],
     *,
-    reset: Optional[Callable[[], None]] = None,
+    reset="auto",
     warmup: int = 1,
     iters: int = 3,
 ) -> TuneResult:
@@ -282,11 +302,16 @@ def tune(
     ``make_step(config)`` returns a zero-arg callable executing the full
     overlapped step (comm + compute + host logic). Between candidate
     configs ``reset()`` restores signal state — the paper's requirement
-    that overlapped kernels cannot be replayed without resetting signals
-    (for ``backend="kernel"`` candidates on CPU, pass
-    ``repro.shmem.emulated.reset`` to clear the symmetric heaps and
-    signal slots an aborted candidate leaves behind).
+    that overlapped kernels cannot be replayed without resetting signals.
+    The default ``reset="auto"`` resolves via :func:`default_reset`: on
+    CPU hosts it is ``repro.shmem.emulated.reset``, clearing the
+    symmetric heaps and signal slots a kernel-backend candidate leaves
+    behind, so stale signal-slot state can never leak across timed
+    candidates. Pass an explicit callable to override, or ``None`` to
+    disable.
     """
+    if reset == "auto":
+        reset = default_reset()
     timings: dict = {}
     best_cfg, best_t = None, float("inf")
     for cfg in configs:

@@ -281,7 +281,6 @@ def default_pcfg(cfg: ModelConfig, shape: ShapeConfig, *, multi_pod: bool,
         fsdp=True,
         fsdp_pods=multi_pod,  # 1T-class states only fit when FSDP spans pods
         overlap=policy,
-        overlap_mode=policy.mode,  # legacy mirror (logs / dryrun labels)
         remat="block",
         moment_dtype=moment,
         kv_shard=kv_shard,

@@ -299,13 +299,14 @@ def moe_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
         t_c = t_loc // n_chunks
         cap = _capacity(t_c, k, cfg.num_experts, cfg.capacity_factor)
 
-        a2a_mode = pcfg.policy.resolve("a2a_ep").mode
+        a2a = pcfg.policy.resolve("a2a_ep")
 
         def ep_chunk(hc, lc):
             disp, dinfo = mo.topk_dispatch(hc, lc, k, cap)  # (E, cap, D)
-            x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a_mode)
+            x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a.mode, backend=a2a.backend)
             y_ep = _expert_ffn(cfg, x_ep, wi, wo)  # (E_loc, tp*cap, D)
-            back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode=a2a_mode)
+            back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode=a2a.mode,
+                                     backend=a2a.backend)
             return mo.topk_combine(back, dinfo, out_dtype=dt)
 
         if pcfg.remat != "none":
@@ -334,8 +335,15 @@ def moe_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
         expert_fn = jax.checkpoint(expert_fn)
 
     if tp > 1:
-        full = mo.ag_moe(h, logits, expert_fn, MODEL_AXIS, mode=pcfg.policy.resolve("ag_moe").mode)
-        out = cm.reduce_scatter_chunked(full, MODEL_AXIS)
+        # ag_moe's kernel lowering has no dual-schedule backward yet (the
+        # expert is a caller closure, not a declared tile) — the TRAIN
+        # path pins the differentiable graph lowering regardless of the
+        # policy's backend; the mode still follows the policy.
+        full = mo.ag_moe(h, logits, expert_fn, MODEL_AXIS,
+                         mode=pcfg.policy.resolve("ag_moe").mode)
+        rs = pcfg.policy.resolve("reduce_scatter")
+        out = cm.reduce_scatter_chunked(full, MODEL_AXIS, mode=rs.mode,
+                                        backend=rs.backend)
     else:
         out = expert_fn(h, logits)
     return x_sp + out.reshape(b, s_loc, d)
@@ -352,10 +360,11 @@ def moe_decode(cfg, pcfg, info, p: dict, x: Array) -> Array:
     cap = _capacity(h.shape[0], k, cfg.num_experts, cfg.capacity_factor)
     disp, dinfo = mo.topk_dispatch(h, logits, k, cap)
     if info.moe_mode == "ep" and pcfg.tp > 1:
-        a2a_mode = pcfg.policy.resolve("a2a_ep").mode
-        x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a_mode)
+        a2a = pcfg.policy.resolve("a2a_ep")
+        x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a.mode, backend=a2a.backend)
         y_ep = _expert_ffn(cfg, x_ep, wi, wo)
-        back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode=a2a_mode)
+        back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode=a2a.mode,
+                                 backend=a2a.backend)
         out = mo.topk_combine(back, dinfo, out_dtype=dt)
     else:
         y = _expert_ffn(cfg, disp, wi, wo)

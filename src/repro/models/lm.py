@@ -485,8 +485,9 @@ class LM:
         cv = jnp.where(owns, upd_v, cache["v"])
         valid = jnp.clip(cache_len + 1 - me_d * s_shard, 0, s_shard)
         lengths = jnp.full((b,), valid, jnp.int32)
+        fd = pcfg.policy.resolve("flash_decode")
         o = dfd.distributed_flash_decode(q, ck, cv, lengths, DATA_AXIS,
-                                         mode=pcfg.policy.resolve("flash_decode").mode)
+                                         mode=fd.mode, backend=fd.backend)
         o = o.astype(h.dtype).reshape(b, info.hq_loc * hd)
         out = psum_tp(local_linear(o, pp.wo), pcfg)
         return h + out.reshape(b, 1, d), ck, cv

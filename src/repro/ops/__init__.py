@@ -27,7 +27,14 @@ shims): ``overlap.apply(name, ...)`` -> ``ops.<name>(...)``;
 / ``OverlapPolicy`` on the config.
 """
 from .authoring import BoundOp, OverlapOp, declare, declared, get
-from .library import ag_matmul, all_gather, matmul_rs
+from .library import (
+    a2a_ep,
+    ag_matmul,
+    all_gather,
+    flash_decode,
+    matmul_rs,
+    reduce_scatter,
+)
 from .policy import LATENCY_OPS, OverlapPolicy, ResolvedOverlap
 
 __all__ = [
@@ -36,9 +43,12 @@ __all__ = [
     "OverlapPolicy",
     "ResolvedOverlap",
     "LATENCY_OPS",
+    "a2a_ep",
     "ag_matmul",
     "all_gather",
+    "flash_decode",
     "matmul_rs",
+    "reduce_scatter",
     "declare",
     "declared",
     "get",

@@ -133,6 +133,18 @@ class OverlapOp:
             if proto not in executor.PROTOCOLS:
                 raise ValueError(
                     f"{self.name}: unknown executor protocol {proto!r}")
+            if proto == "bidir_ring_ag" and not self.rowwise:
+                # the protocol tiles each chunk HALF; a non-rowwise tile
+                # would silently diverge from the graph lowering, which
+                # degrades non-rowwise bidir to ring
+                raise ValueError(
+                    f"{self.name}: bidir_ring_ag requires rowwise=True")
+        if self.kind == "a2a" and self.kernel_protocols and self.tile is not None:
+            # the graph lowering applies an a2a tile once, post-assembly;
+            # the executor protocol applies it per landed block — only
+            # the tile=None (pure data movement) case agrees by design
+            raise ValueError(
+                f"{self.name}: a2a kernel protocols require tile=None")
 
     def tile_fn(self) -> Callable:
         return self.tile if self.tile is not None else (lambda x: x)
@@ -323,8 +335,26 @@ def _make_kernel_fwd(op: OverlapOp, cid: int) -> Optional[Callable]:
 
 
 def _make_bwd(op: OverlapOp) -> Optional[Callable]:
-    if not op.differentiable or op.kind == "a2a":
+    if not op.differentiable:
         return None
+    if op.kind == "a2a":
+        if op.tile is not None:
+            # a post-assembly tile keeps autodiff-through-pipeline; only
+            # pure data movement gets the derived self-dual backward.
+            return None
+
+        def a2a_bwd(static, res, g):
+            # AllToAll is its own transpose as a global linear map (the
+            # (rank, block) index swap is symmetric): the cotangent rides
+            # the same decomposed a2a back.
+            (operand,) = res
+            mode = static["mode"]
+            if mode not in ("xla",) + op.transports:
+                mode = op.default
+            d = ov.a2a_pipeline(g, static["axis"], transport=mode)
+            return (d.astype(operand.dtype),)
+
+        return a2a_bwd
     tile = op.tile_fn()
 
     def tile_cast(out_dtype, chunk, *statics):

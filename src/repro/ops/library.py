@@ -55,7 +55,8 @@ ag_matmul = declare(OverlapOp(
     kind="ag",
     tile=_dot_tile,
     transports=("ring", "bidir", "one_shot"),
-    kernel_protocols=(("ring", "ring_ag"), ("one_shot", "one_shot_ag")),
+    kernel_protocols=(("ring", "ring_ag"), ("bidir", "bidir_ring_ag"),
+                      ("one_shot", "one_shot_ag")),
     transpose="matmul_rs",
     rowwise=True,
     baseline_fwd=_ag_matmul_baseline,
@@ -81,7 +82,59 @@ all_gather = declare(OverlapOp(
     kind="gather",
     tile=None,  # identity: pure decomposed data movement
     transports=("ring", "one_shot"),
-    kernel_protocols=(("one_shot", "one_shot_ag"),),
+    kernel_protocols=(("ring", "ring_ag"), ("one_shot", "one_shot_ag")),
     transpose="reduce_scatter",
     rowwise=True,
+))
+
+
+def _f32_block(block):
+    # linear "tile": cast so the ring/push accumulation runs in f32
+    return block.astype(jnp.float32)
+
+
+reduce_scatter = declare(OverlapOp(
+    name="reduce_scatter",
+    kind="rs",
+    tile=_f32_block,
+    transports=("ring", "one_shot"),
+    kernel_protocols=(("ring", "push_rs"), ("one_shot", "one_shot_rs")),
+    transpose="all_gather",
+))
+
+# EP AllToAll (paper Fig. 16): pure data movement over the leading
+# per-destination block dim. The kernel lowering is the executor's
+# one-shot a2a push protocol; the derived backward is the SAME a2a on
+# the cotangent (AllToAll is its own transpose). The inverse direction
+# (combine) reuses this op with transposed block placement — see
+# ``core.moe_overlap.a2a_ep_inverse``.
+a2a_ep = declare(OverlapOp(
+    name="a2a_ep",
+    kind="a2a",
+    tile=None,
+    transports=("one_shot",),
+    baseline="xla",
+    default="one_shot",
+    kernel_protocols=(("one_shot", "one_shot_a2a"),),
+))
+
+
+def _stack_tile(packed):
+    # the LSE-stacking tile: one rank's packed (o, lse) partial becomes a
+    # leading-dim-1 strip of the (W, ...) stacked combine input
+    return packed[None]
+
+
+# The distributed flash-decode combine (paper §4.2): a small-message
+# stacked AllGather of the packed (o, lse) partials. Binding one_shot_ag
+# with the stacking tile IS the kernel lowering; the logsumexp merge
+# stays outside (``core.flash_decode``).
+flash_decode = declare(OverlapOp(
+    name="flash_decode",
+    kind="gather",
+    tile=_stack_tile,
+    transports=("ring", "one_shot"),
+    baseline="xla",
+    default="one_shot",
+    kernel_protocols=(("one_shot", "one_shot_ag"),),
 ))

@@ -27,9 +27,10 @@ Backend selection: :func:`default_backend` returns ``"pltpu"`` on real
 TPU and ``"emulated"`` everywhere else; ``REPRO_SHMEM_BACKEND`` forces
 either. The shared **tile executor** (:mod:`executor`) consumes this —
 it implements every fused-kernel communication protocol (ring+credit,
-Alg.-3 push, one-shot puts) once, generic over a per-tile compute, on
-both backends; the fused kernels (``kernels/ag_gemm.py`` etc.) and the
-``repro.ops`` kernel lowerings are declarations over it.
+bidirectional ring, Alg.-3 push, one-shot puts, one-shot AllToAll)
+once, generic over a per-tile compute, on both backends; the fused
+kernels (``kernels/ag_gemm.py`` etc.) and the ``repro.ops`` kernel
+lowerings are declarations over it.
 
 Rank identity (``my_pe`` / ``n_pes``) is backend-independent (mesh axis
 arithmetic) and lives in :mod:`api`.

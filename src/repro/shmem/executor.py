@@ -35,6 +35,22 @@ Protocols
                computed first and the W puts issued up-front with
                distinct ring offsets — no compute/DMA interleaving
                dependency, latency-optimal for small blocks.
+  one_shot_a2a the low-latency AllToAll (EP dispatch/combine): the
+               operand's leading dim holds one block per destination PE;
+               every PE pushes all its per-destination blocks up-front
+               into the destination's slot ``me`` (signal-on-arrival),
+               waits for its W arrivals, then runs ``tile`` per landed
+               block — out[src] = tile(block PE src sent here). The
+               inverse direction is the SAME protocol with the caller
+               transposing block placement.
+  bidir_ring_ag the executor-level form of the engine's bidir schedule:
+               the chunk is split in half along dim 0; the top half
+               rides the forward ring (me -> me+1), the bottom half the
+               reverse ring (me -> me-1), each direction with its own
+               double-buffered workspace + credit flow control, so each
+               link direction carries half the bytes. Degrades to
+               ring_ag when W < 3 or the chunk has odd rows (mirroring
+               the graph lowering's degrade).
 
 Backends (``repro.shmem.default_backend``)
 ------------------------------------------
@@ -75,7 +91,8 @@ from . import emulated as em
 
 Array = jax.Array
 
-PROTOCOLS = ("ring_ag", "one_shot_ag", "push_rs", "one_shot_rs")
+PROTOCOLS = ("ring_ag", "one_shot_ag", "push_rs", "one_shot_rs",
+             "one_shot_a2a", "bidir_ring_ag")
 
 
 def _identity(x):
@@ -157,6 +174,89 @@ def _one_shot_ag_emulated(tile, chunk, statics, *, axis, world, out_dtype, cid):
         shard = ctx.read_symmetric(chunk.shape, chunk.dtype, buf="ws", slot=r)
         out = update_rows(out, tile(shard, *statics).astype(out_dtype),
                           r * tile_m)
+    ctx.barrier_all()
+    return out
+
+
+def _bidir_ring_ag_emulated(tile, chunk, statics, *, axis, world, out_dtype,
+                            cid):
+    """Bidirectional ring + credit protocol: two independent ring_ag
+    instances (disjoint buffers/signals/credits in ONE context), the top
+    chunk half riding me -> me+1 and the bottom half me -> me-1. The
+    fold of step s overlaps BOTH directions' in-flight DMAs; each link
+    direction carries half the bytes (the engine's bidir schedule,
+    executor-level)."""
+    m = chunk.shape[0]
+    if world < 3 or m % 2:
+        # mirror the graph lowering: bidir degenerates to ring
+        return _ring_ag_emulated(tile, chunk, statics, axis=axis, world=world,
+                                 out_dtype=out_dtype, cid=cid)
+    me = lax.axis_index(axis)
+    left = lax.rem(me + world - 1, world)
+    right = lax.rem(me + 1, world)
+    half = m // 2
+    cur_f, cur_b = chunk[:half], chunk[half:]
+    ts = _tile_struct(tile, cur_f, statics)
+    tile_h = ts.shape[0]
+    tile_m = 2 * tile_h
+
+    ctx = em.ShmemCtx(axis, world, cid)
+    ctx.barrier_all()
+    # one initial credit per direction: fwd receives from the left ring
+    # neighbor, bwd from the right (grant = "your next slot here is free")
+    ctx.signal_op(left, sig="cap_f")
+    ctx.signal_op(right, sig="cap_b")
+
+    out = jnp.zeros((tile_m * world,) + ts.shape[1:], out_dtype)
+    for s in range(world):
+        if s != world - 1:
+            ctx.signal_wait_until(sig="cap_f", value=1)
+            ctx.putmem_signal_nbi(cur_f, right, buf="wsf", slot=(s + 1) % 2,
+                                  sig="recv_f")
+            ctx.signal_wait_until(sig="cap_b", value=1)
+            ctx.putmem_signal_nbi(cur_b, left, buf="wsb", slot=(s + 1) % 2,
+                                  sig="recv_b")
+        # forward half: owner (me - s); backward half: owner (me + s)
+        t_f = tile(cur_f, *statics).astype(out_dtype)
+        out = update_rows(out, t_f, lax.rem(me - s + world, world) * tile_m)
+        t_b = tile(cur_b, *statics).astype(out_dtype)
+        out = update_rows(out, t_b,
+                          lax.rem(me + s, world) * tile_m + tile_h)
+        if s != world - 1:
+            cur_f = ctx.wait_read(cur_f.shape, chunk.dtype, buf="wsf",
+                                  slot=(s + 1) % 2, sig="recv_f")
+            cur_b = ctx.wait_read(cur_b.shape, chunk.dtype, buf="wsb",
+                                  slot=(s + 1) % 2, sig="recv_b")
+            if s < world - 2:
+                ctx.signal_op(left, sig="cap_f")
+                ctx.signal_op(right, sig="cap_b")
+    ctx.barrier_all()
+    return out
+
+
+def _one_shot_a2a_emulated(tile, xs, statics, *, axis, world, out_dtype, cid):
+    """Low-latency AllToAll: all W per-destination blocks pushed up-front
+    (self included, so every slot lands symmetrically) into slot ``me``
+    of each destination, one signal_wait for the W arrivals, then tile
+    each landed block into out[src]."""
+    assert xs.shape[0] == world, (xs.shape, world)
+    me = lax.axis_index(axis)
+    blk_struct = jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype)
+    ts = _tile_struct(tile, blk_struct, statics)
+
+    ctx = em.ShmemCtx(axis, world, cid)
+    ctx.barrier_all()
+    for off in range(world):  # all puts up-front, no waits between
+        tgt = lax.rem(me + off, world)
+        block = lax.dynamic_index_in_dim(xs, tgt, 0, keepdims=False)
+        ctx.putmem_signal_nbi(block, tgt, buf="ws", slot=me, sig="recv")
+    ctx.signal_wait_until(sig="recv", value=world)
+    out = jnp.zeros((world,) + ts.shape, out_dtype)
+    for src in range(world):
+        block = ctx.read_symmetric(xs.shape[1:], xs.dtype, buf="ws", slot=src)
+        t = tile(block, *statics).astype(out_dtype)
+        out = lax.dynamic_update_slice(out, t[None],
+                                       (src,) + (0,) * len(ts.shape))
     ctx.barrier_all()
     return out
 
@@ -482,6 +582,185 @@ def _rs_pltpu(tile, operand, statics, *, axis, world, out_dtype, cid,
     return outs[0]
 
 
+def _bidir_ring_ag_body(*refs, tile, axis, world, n_static, half_rows, tile_h,
+                        out_dtype):
+    (chunk_ref, *rest) = refs
+    static_refs = rest[:n_static]
+    o_ref, wsf_ref, wsb_ref = rest[n_static:n_static + 3]
+    half_vmem = rest[n_static + 3]
+    static_vmems = rest[n_static + 4:2 * n_static + 4]
+    o_vmem = rest[2 * n_static + 4]
+    (local_sem, send_f, recv_f, send_b, recv_b,
+     cap_f, cap_b) = rest[2 * n_static + 5:]
+
+    me = lax.axis_index(axis)
+    left = lax.rem(me + world - 1, world)
+    right = lax.rem(me + 1, world)
+    tile_m = 2 * tile_h
+
+    tpu_backend.barrier_all(axis, world)
+
+    # Stage statics once; copy my chunk halves into each ring's slot 0.
+    _stage((chunk_ref.at[pl.ds(0, half_rows)],
+            chunk_ref.at[pl.ds(half_rows, half_rows)]) + tuple(static_refs),
+           (wsf_ref.at[0], wsb_ref.at[0]) + tuple(static_vmems), local_sem)
+
+    # One initial credit per direction (fwd: I receive from left; bwd:
+    # from right) — the neighbor's slot 1 starts free.
+    tpu_backend.signal_op(cap_f, left, axis=axis)
+    tpu_backend.signal_op(cap_b, right, axis=axis)
+
+    for s in range(world):
+        slot = s % 2
+        sends = ()
+        if s != world - 1:
+            tpu_backend.signal_wait_until(cap_f, 1)
+            sf = tpu_backend.putmem_signal_nbi(
+                wsf_ref.at[slot], wsf_ref.at[(s + 1) % 2],
+                send_f, recv_f, right, axis=axis)
+            tpu_backend.signal_wait_until(cap_b, 1)
+            sb = tpu_backend.putmem_signal_nbi(
+                wsb_ref.at[slot], wsb_ref.at[(s + 1) % 2],
+                send_b, recv_b, left, axis=axis)
+            sends = (sf, sb)
+
+        # both directions' tiles overlap the two in-flight remote DMAs;
+        # arrivals of slot s were ordered by the previous step's waits.
+        for direction, ws_ref, owner in (
+                (0, wsf_ref, lax.rem(me - s + world, world)),
+                (1, wsb_ref, lax.rem(me + s, world))):
+            _stage((ws_ref.at[slot],), (half_vmem,), local_sem)
+            o_vmem[...] = tile(
+                half_vmem[...], *[v[...] for v in static_vmems]
+            ).astype(out_dtype)
+            _stage((o_vmem,),
+                   (o_ref.at[pl.ds(owner * tile_m + direction * tile_h,
+                                   tile_h)],),
+                   local_sem)
+
+        for send in sends:
+            # send drained + my incoming half landed (SPMD symmetry)
+            send.wait()
+        if s < world - 2:
+            # both slots fully consumed — the neighbors may overwrite
+            tpu_backend.signal_op(cap_f, left, axis=axis)
+            tpu_backend.signal_op(cap_b, right, axis=axis)
+
+
+def _bidir_ring_ag_pltpu(tile, chunk, statics, *, axis, world, out_dtype, cid):
+    m = chunk.shape[0]
+    if world < 3 or m % 2:
+        # mirror the graph lowering: bidir degenerates to ring
+        return _ring_ag_pltpu(tile, chunk, statics, axis=axis, world=world,
+                              out_dtype=out_dtype, cid=cid)
+    half_rows = m // 2
+    half_struct = jax.ShapeDtypeStruct((half_rows,) + chunk.shape[1:],
+                                       chunk.dtype)
+    ts = _tile_struct(tile, half_struct, statics)
+    tile_h = ts.shape[0]
+    body = functools.partial(
+        _bidir_ring_ag_body, tile=tile, axis=axis, world=world,
+        n_static=len(statics), half_rows=half_rows, tile_h=tile_h,
+        out_dtype=out_dtype)
+    out, _wsf, _wsb = pl.pallas_call(
+        body,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + len(statics)),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((2 * tile_h * world,) + ts.shape[1:],
+                                 out_dtype),
+            jax.ShapeDtypeStruct((2,) + half_struct.shape, chunk.dtype),
+            jax.ShapeDtypeStruct((2,) + half_struct.shape, chunk.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM(half_struct.shape, chunk.dtype)]
+        + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
+        + [pltpu.VMEM(ts.shape, out_dtype),
+           pltpu.SemaphoreType.DMA,   # local staging
+           pltpu.SemaphoreType.DMA,   # fwd send
+           pltpu.SemaphoreType.DMA,   # fwd recv
+           pltpu.SemaphoreType.DMA,   # bwd send
+           pltpu.SemaphoreType.DMA,   # bwd recv
+           pltpu.SemaphoreType.REGULAR,   # fwd credits
+           pltpu.SemaphoreType.REGULAR],  # bwd credits
+        compiler_params=pltpu.CompilerParams(collective_id=cid),
+    )(chunk, *statics)
+    return out
+
+
+def _one_shot_a2a_body(*refs, tile, axis, world, n_static, out_dtype,
+                       a2a_direct):
+    (xs_ref, *rest) = refs
+    static_refs = rest[:n_static]
+    if a2a_direct:
+        o_ref = rest[n_static]
+        local_sem, send_sem, recv_sem = rest[n_static + 1:]
+    else:
+        o_ref, ws_ref = rest[n_static], rest[n_static + 1]
+        blk_vmem = rest[n_static + 2]
+        static_vmems = rest[n_static + 3:2 * n_static + 3]
+        o_vmem = rest[2 * n_static + 3]
+        local_sem, send_sem, recv_sem = rest[2 * n_static + 4:]
+
+    me = lax.axis_index(axis)
+    tpu_backend.barrier_all(axis, world)
+
+    # landing site: the output itself (pure a2a data movement) or the
+    # symmetric workspace (a tile compute consumes the blocks). Slot =
+    # sender id: my block for PE t lands in t's row ``me``.
+    dst = o_ref if a2a_direct else ws_ref
+    lc = pltpu.make_async_copy(xs_ref.at[me], dst.at[me], local_sem)
+    lc.start()
+
+    # One-shot: all W-1 puts issued before any wait — no serial chain.
+    sends = []
+    for off in range(1, world):
+        tgt = lax.rem(me + off, world)
+        sends.append(tpu_backend.putmem_signal_nbi(
+            xs_ref.at[tgt], dst.at[me], send_sem, recv_sem, tgt, axis=axis))
+    lc.wait()
+    # SPMD symmetry: waiting my own descriptors consumes exactly my send
+    # drains + my W-1 arrivals.
+    tpu_backend.quiet(*sends)
+
+    if not a2a_direct:
+        if n_static:
+            _stage(tuple(static_refs), tuple(static_vmems), local_sem)
+        for src in range(world):
+            _stage((ws_ref.at[src],), (blk_vmem,), local_sem)
+            o_vmem[...] = tile(
+                blk_vmem[...], *[v[...] for v in static_vmems]
+            ).astype(out_dtype)
+            _stage((o_vmem,), (o_ref.at[src],), local_sem)
+
+
+def _one_shot_a2a_pltpu(tile, xs, statics, *, axis, world, out_dtype, cid):
+    assert xs.shape[0] == world, (xs.shape, world)
+    blk_struct = jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype)
+    ts = _tile_struct(tile, blk_struct, statics)
+    a2a_direct = (tile is _identity and not statics
+                  and jnp.dtype(out_dtype) == xs.dtype)
+    body = functools.partial(
+        _one_shot_a2a_body, tile=tile, axis=axis, world=world,
+        n_static=len(statics), out_dtype=out_dtype, a2a_direct=a2a_direct)
+    out_shape = [jax.ShapeDtypeStruct((world,) + ts.shape, out_dtype)]
+    scratch = [pltpu.SemaphoreType.DMA] * 3
+    if not a2a_direct:
+        out_shape.append(  # symmetric landing workspace
+            jax.ShapeDtypeStruct((world,) + xs.shape[1:], xs.dtype))
+        scratch = ([pltpu.VMEM(xs.shape[1:], xs.dtype)]
+                   + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
+                   + [pltpu.VMEM(ts.shape, out_dtype)] + scratch)
+    outs = pl.pallas_call(
+        body,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + len(statics)),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * len(out_shape),
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(collective_id=cid),
+    )(xs, *statics)
+    return outs[0] if isinstance(outs, (tuple, list)) else outs
+
+
 # ---------------------------------------------------------------------------
 # Dispatch
 # ---------------------------------------------------------------------------
@@ -491,6 +770,8 @@ _EMULATED = {
     "one_shot_ag": _one_shot_ag_emulated,
     "push_rs": _push_rs_emulated,
     "one_shot_rs": _one_shot_rs_emulated,
+    "one_shot_a2a": _one_shot_a2a_emulated,
+    "bidir_ring_ag": _bidir_ring_ag_emulated,
 }
 
 _PLTPU = {
@@ -498,6 +779,8 @@ _PLTPU = {
     "one_shot_ag": _one_shot_ag_pltpu,
     "push_rs": functools.partial(_rs_pltpu, one_shot=False),
     "one_shot_rs": functools.partial(_rs_pltpu, one_shot=True),
+    "one_shot_a2a": _one_shot_a2a_pltpu,
+    "bidir_ring_ag": _bidir_ring_ag_pltpu,
 }
 
 
@@ -517,7 +800,9 @@ def run(
 
     ``operand`` is the tensor that moves (AG protocols: the chunk that
     rides/broadcasts; RS protocols: the local tensor whose dim-0 blocks
-    produce the pushed partials). ``statics`` stay rank-resident.
+    produce the pushed partials; one_shot_a2a: a ``(world, ...)`` tensor
+    whose block ``t`` is destined for PE ``t``). ``statics`` stay
+    rank-resident.
     ``tile=None`` is the identity (pure data movement). ``backend`` is a
     shmem backend name ("pltpu" | "emulated"); default picks per
     platform (``shmem.default_backend``).

@@ -1,0 +1,54 @@
+"""Benchmark-harness regression tests (subprocess: the benches need >1
+virtual device).
+
+The key guard: ``bench_a2a``'s ``a2a_combine`` rows must time the
+inverse path on a *dispatched* tensor — the capacity-grouped
+(E_global, W*cap, d) shape — not on the raw dispatch input (the PR-3
+fix; a regression would silently re-time the forward path)."""
+import textwrap
+
+import pytest
+
+from conftest import run_devices
+
+A2A_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    import jax
+    from benchmarks import bench_a2a
+
+    w = min(8, jax.device_count())
+    calls = []
+
+    def fake_time_fn(fn, *args, **kw):
+        calls.append(tuple(np.asarray(a).shape for a in args))
+        jax.block_until_ready(fn(*args))  # still execute once: shapes real
+        return 1.0
+
+    bench_a2a.time_fn = fake_time_fn
+    names = [line.split(",")[0] for line in bench_a2a.rows()]
+    assert len(calls) == len(names), (len(calls), len(names))
+    n_combine = 0
+    for name, shapes in zip(names, calls):
+        shape_tag = name.split("/")[1]            # e.g. "E16c32d128"
+        e_glob, rest = shape_tag[1:].split("c")
+        cap, d = rest.split("d")
+        e_glob, cap, d = int(e_glob), int(cap), int(d)
+        if name.startswith("a2a_dispatch"):
+            assert shapes[0] == (w * e_glob, cap, d), (name, shapes)
+        else:
+            assert name.startswith("a2a_combine"), name
+            # the inverse is timed on the DISPATCHED tensor: the
+            # capacity-grouped (E_global, W*cap, d) global shape
+            assert shapes[0] == (e_glob, w * cap, d), (name, shapes)
+            n_combine += 1
+    assert n_combine >= 3, names
+    # the backend axis is present: at least one kernel-lowered row pair
+    assert any(n.endswith("/kernel") for n in names), names
+    print("OK bench_a2a", n_combine)
+""")
+
+
+@pytest.mark.parametrize("devices", [4])
+def test_bench_a2a_combine_times_dispatched_tensor(devices):
+    out = run_devices(A2A_SCRIPT, devices=devices, timeout=900)
+    assert "OK bench_a2a" in out

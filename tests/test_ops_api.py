@@ -40,7 +40,8 @@ TOY = textwrap.dedent("""
     toy_ag = ops.declare(ops.OverlapOp(
         name="toy_ag", kind="ag", tile=toy_tile,
         transports=("ring", "bidir", "one_shot"),
-        kernel_protocols=(("ring", "ring_ag"), ("one_shot", "one_shot_ag")),
+        kernel_protocols=(("ring", "ring_ag"), ("bidir", "bidir_ring_ag"),
+                          ("one_shot", "one_shot_ag")),
         transpose="matmul_rs", rowwise=True))
     toy_rs = ops.declare(ops.OverlapOp(
         name="toy_rs", kind="rs", tile=toy_tile,
@@ -51,7 +52,7 @@ TOY = textwrap.dedent("""
     # auto-registration: spec with derived fwd/bwd/kernel_fwd appears
     spec = ov.get("toy_ag")
     assert spec.kind == "ag"
-    assert spec.kernel_transports == ("ring", "one_shot")
+    assert spec.kernel_transports == ("ring", "bidir", "one_shot")
     assert spec.fwd is not None and spec.bwd is not None
     assert spec.kernel_fwd is not None
     # ...and is immediately visible to tuner candidate enumeration and
@@ -86,7 +87,7 @@ TOY = textwrap.dedent("""
                                  out_dtype=jnp.float32), *specs)
         return np.asarray(f(*xs))
 
-    for mode in ("ring", "one_shot"):
+    for mode in ("ring", "bidir", "one_shot"):
         k = run(toy_ag, AG_SPECS, mode, "kernel", A, Wt)
         g = run(toy_ag, AG_SPECS, mode, "graph", A, Wt)
         assert np.abs(k - g).max() < 2e-4, ("toy_ag kernel", mode)
@@ -106,9 +107,9 @@ TOY = textwrap.dedent("""
     # grads round-trip the SHARED custom_vjp bit-identically across
     # backends (kernel fwd keeps the graph dual as its backward), and
     # match autodiff of the unfused oracle
-    def make_grad(backend):
+    def make_grad(backend, mode="ring"):
         def f(a, w):
-            out = toy_ag(a, w, axis="tp", mode="ring", backend=backend,
+            out = toy_ag(a, w, axis="tp", mode=mode, backend=backend,
                          out_dtype=jnp.float32)
             return lax.psum(jnp.sum(out * out), "tp")
         return sh(jax.grad(f, argnums=(0, 1)),
@@ -119,6 +120,10 @@ TOY = textwrap.dedent("""
     gk = [np.asarray(t) for t in make_grad("kernel")(A, Wt)]
     for a, b in zip(gg, gk):
         assert np.array_equal(a, b), "toy_ag grads differ across backends"
+    for a, b in zip(make_grad("graph", "bidir")(A, Wt),
+                    make_grad("kernel", "bidir")(A, Wt)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "toy_ag bidir grads differ across backends"
 
     def oracle(a, w):
         out = jnp.dot(lax.all_gather(a, "tp", tiled=True), jnp.tanh(w),
@@ -218,10 +223,13 @@ def test_policy_single_resolution_point():
     assert pol.resolve("matmul_rs").chunks == 3
     # mode clamped by the registry: a2a_ep has no ring transport
     assert pol.resolve("a2a_ep").mode == "one_shot"
-    # backend degraded off kernel-incapable pairs
+    # backend degraded off kernel-incapable pairs (bidir ag_matmul is
+    # kernel-capable since the bidir_ring_ag protocol; moe_rs/bidir and
+    # the engine-internal ring_attention still degrade)
     assert pol.with_modes(ag_matmul="bidir").resolve("ag_matmul").backend == \
-        "graph"
-    assert pol.resolve("reduce_scatter").backend == "graph"
+        "kernel"
+    assert pol.with_modes(moe_rs="bidir").resolve("moe_rs").backend == "graph"
+    assert pol.resolve("ring_attention").backend == "graph"
     # hw-aware degrade: no ICI links -> no remote-DMA engine -> graph
     no_ici = dataclasses.replace(hw.DEFAULT, ici_links=0)
     assert pol.resolve("ag_matmul", hw=no_ici).backend == "graph"
@@ -242,10 +250,82 @@ def test_parallel_config_carries_policy():
         tp=4, overlap=ops.OverlapPolicy(mode="one_shot", ag_chunks=2))
     for op in ("ag_matmul", "matmul_rs", "a2a_ep", "flash_decode"):
         assert legacy.policy.resolve(op) == explicit.policy.resolve(op), op
-    # the explicit policy wins over legacy fields when both are set
+    # legacy fields AT their defaults are indistinguishable from unset:
+    # the explicit policy simply wins
     both = ParallelConfig(tp=4, overlap_mode="ring",
                           overlap=ops.OverlapPolicy(mode="one_shot"))
     assert both.policy.resolve("ag_matmul").mode == "one_shot"
+
+
+def test_declaration_validation_guards():
+    """Declaration-time guards for backend-divergence hazards: a
+    bidir_ring_ag binding needs a rowwise tile (the protocol tiles chunk
+    HALVES), and a2a kernel protocols need tile=None (graph applies an
+    a2a tile post-assembly, the protocol per landed block)."""
+    from repro import ops
+
+    with pytest.raises(ValueError, match="rowwise"):
+        ops.OverlapOp(name="bad_bidir", kind="ag", tile=None,
+                      transports=("ring", "bidir"),
+                      kernel_protocols=(("bidir", "bidir_ring_ag"),))
+    with pytest.raises(ValueError, match="tile=None"):
+        ops.OverlapOp(name="bad_a2a", kind="a2a", tile=lambda x: 2 * x,
+                      transports=("one_shot",), baseline="xla",
+                      default="one_shot",
+                      kernel_protocols=(("one_shot", "one_shot_a2a"),))
+
+
+def test_conflicting_policy_and_legacy_fields_raise():
+    """An explicit ``overlap`` policy plus NON-default legacy overlap
+    fields is two sources of truth — a clear ValueError, not a silent
+    preference (both argument orders)."""
+    from repro import ops
+    from repro.configs.base import ParallelConfig
+
+    pol = ops.OverlapPolicy(mode="one_shot")
+    with pytest.raises(ValueError, match="overlap_mode"):
+        ParallelConfig(tp=4, overlap=pol, overlap_mode="bidir")
+    with pytest.raises(ValueError, match="overlap_mode"):
+        ParallelConfig(tp=4, overlap_mode="bidir", overlap=pol)
+    # every legacy knob participates in the conflict check
+    with pytest.raises(ValueError, match="ag_chunks"):
+        ParallelConfig(tp=4, overlap=pol, ag_chunks=2)
+    with pytest.raises(ValueError, match="overlap_backend"):
+        ParallelConfig(tp=4, overlap_backend="kernel", overlap=pol)
+    with pytest.raises(ValueError, match="overlap_modes"):
+        ParallelConfig(tp=4, overlap=pol,
+                       overlap_modes={"ag_matmul": "one_shot"})
+    # non-overlap fields never conflict; policy-only configs are fine
+    ParallelConfig(tp=4, overlap=pol, remat="none", moe_chunks=2)
+
+
+def test_shim_warnings_point_at_the_caller():
+    """The DeprecationWarning shims carry the right ``stacklevel``: the
+    reported filename is THIS test file, not the shim's module."""
+    import warnings
+
+    import jax.numpy as jnp
+
+    from repro.configs.base import ParallelConfig
+    from repro.core import overlap as ov
+
+    pcfg = ParallelConfig(tp=4)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        pcfg.with_modes(ag_matmul="one_shot")
+        pcfg.with_backends(matmul_rs="kernel")
+        try:
+            # outside shard_map the dispatch fails on the missing mesh
+            # axis — AFTER the shim has already warned
+            ov.apply("ag_matmul", jnp.zeros((2, 2)), jnp.zeros((2, 2)),
+                     axis="tp", mode="ring", out_dtype="float32")
+        except Exception:
+            pass
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)
+            and "deprecated" in str(w.message)]
+    assert len(deps) == 3, [str(w.message) for w in rec]
+    for w in deps:
+        assert w.filename == __file__, (w.filename, str(w.message))
 
 
 def test_with_modes_shim_warns_and_matches_policy_path():

@@ -115,6 +115,71 @@ def test_emulated_primitives_parity(world):
     assert "OK" in out
 
 
+EXECUTOR_SCRIPT = textwrap.dedent("""
+    import functools
+    import jax, jax.numpy as jnp, numpy as np
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro.shmem import executor
+
+    W = __WORLD__
+    mesh = jax.make_mesh((W,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+
+    def sh(fn, in_specs, out_specs):
+        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_vma=False))
+
+    # ---- one_shot_a2a: out[src] = tile(block src sent here) ----
+    xs = jnp.arange(W * W * 4, dtype=jnp.float32).reshape(W * W, 4)
+
+    def a2a(xb):
+        blocks = xb.reshape(W, xb.shape[0] // W, xb.shape[1])
+        out = executor.run("one_shot_a2a", lambda b: 2.0 * b, blocks,
+                           axis="x", world=W, collective_id=201)
+        return out.reshape(xb.shape)
+
+    got = np.asarray(sh(a2a, P("x", None), P("x", None))(xs))
+    want = 2.0 * np.asarray(
+        jax.jit(jax.shard_map(
+            lambda xb: lax.all_to_all(
+                xb.reshape(W, xb.shape[0] // W, xb.shape[1]),
+                "x", split_axis=0, concat_axis=0, tiled=False
+            ).reshape(xb.shape),
+            mesh=mesh, in_specs=P("x", None), out_specs=P("x", None),
+            check_vma=False))(xs))
+    assert np.abs(got - want).max() == 0, (got, want)
+
+    # ---- bidir_ring_ag: halves ride opposite rings; dot tile ----
+    m_loc, K, N = 4, 8, 8
+    A = jnp.asarray(rng.randn(W * m_loc, K), jnp.float32)
+    B = jnp.asarray(rng.randn(K, N), jnp.float32)
+
+    def bidir(a_blk, b):
+        return executor.run(
+            "bidir_ring_ag",
+            lambda c, w: jnp.dot(c, w, preferred_element_type=jnp.float32),
+            a_blk, (b,), axis="x", world=W, out_dtype=jnp.float32,
+            collective_id=202)
+
+    got = np.asarray(sh(bidir, (P("x", None), P(None, None)),
+                        P(None, None))(A, B))
+    want = np.asarray(A) @ np.asarray(B)
+    assert np.abs(got - want).max() < 2e-4, np.abs(got - want).max()
+    print("OK executor", W)
+""")
+
+
+@pytest.mark.parametrize("world", [2, 4, 8])
+def test_executor_new_protocols(world):
+    """The two PR-4 executor protocols, exercised directly (below the
+    ops layer): one_shot_a2a vs lax.all_to_all, and bidir_ring_ag vs the
+    plain gathered matmul (incl. the W=2 ring degrade)."""
+    out = run_devices(EXECUTOR_SCRIPT.replace("__WORLD__", str(world)),
+                      devices=world)
+    assert "OK executor" in out
+
+
 def test_rank_identity_linearization():
     """my_pe / n_pes over compound axes (graph-level, any backend)."""
     out = run_devices(textwrap.dedent("""

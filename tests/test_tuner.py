@@ -72,8 +72,11 @@ def test_recommend_backend_enumerates_registry():
     assert overlap.backends_for("ag_matmul") == ("graph", "kernel")
     assert overlap.backends_for("matmul_rs") == ("graph", "kernel")
     assert overlap.backends_for("all_gather") == ("graph", "kernel")
-    # ops without one only enumerate graph
-    assert overlap.backends_for("reduce_scatter") == ("graph",)
+    assert overlap.backends_for("reduce_scatter") == ("graph", "kernel")
+    assert overlap.backends_for("a2a_ep") == ("graph", "kernel")
+    assert overlap.backends_for("flash_decode") == ("graph", "kernel")
+    # engine-internal entries (no dispatch fwd) only enumerate graph
+    assert overlap.backends_for("ring_attention") == ("graph",)
 
 
 def test_analytic_rs_enumerates_sub_chunks():
@@ -116,3 +119,28 @@ def test_empirical_tuner_whole_step_protocol():
     # reset after every execution (warmup + iters per config)
     assert calls["reset"] == 3 * (1 + 2)
     assert set(res.all_timings) == {"1", "2", "3"}
+
+
+def test_tune_default_reset_clears_emulated_shmem_state():
+    """On CPU the tuner's default reset is ``shmem.emulated.reset``:
+    stale symmetric-heap / signal-slot state left by a kernel-backend
+    candidate cannot leak into (skew or deadlock) the next timed one."""
+    from repro.shmem import emulated as em
+
+    assert tuner.default_reset() is em.reset  # CPU test host
+
+    def make_step(cfg):
+        return lambda: jnp.zeros(())
+
+    # simulate an aborted kernel candidate's leftover world state
+    em._worlds[(999, 12345)] = em._World()
+    tuner.tune(make_step, [1, 2], warmup=0, iters=1)  # reset="auto"
+    assert (999, 12345) not in em._worlds, "default reset did not run"
+
+    # an explicit reset=None disables the between-candidates cleanup
+    em._worlds[(998, 12345)] = em._World()
+    try:
+        tuner.tune(make_step, [1], reset=None, warmup=0, iters=1)
+        assert (998, 12345) in em._worlds
+    finally:
+        em.reset()
