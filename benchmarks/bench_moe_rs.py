@@ -1,5 +1,4 @@
 """Paper Table 5 — MoE GroupGEMM + ReduceScatter (ring accumulator)."""
-import functools
 
 import jax
 import jax.numpy as jnp

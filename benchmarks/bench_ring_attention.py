@@ -1,0 +1,59 @@
+"""Ring attention (context parallelism) — graph vs kernel backends.
+
+The carry-passing overlap applied to attention itself: K/V chunks ride
+the transport while the blockwise online softmax folds them into the
+resident (m, l, acc) state. Kernel rows run the executor's ``ring_fold``
+protocol (ring) / low-latency gather + host replay (one_shot) on the
+emulated DMA engine — a correctness vehicle, benched at the smallest
+sequence only. Row names are NEW in this PR (the ``--check`` gate
+compares by exact name; existing rows never change names).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collective_matmul as cm
+from repro.core import overlap
+from repro.core.ring_attention import ring_attention
+
+from .common import row, time_fn
+
+
+def rows():
+    w = min(8, jax.device_count())
+    mesh = jax.make_mesh((w,), ("cp",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    out = []
+    b, h, hkv, d = 2, 4, 2, 16
+    for s_loc in (8, 32):
+        s = s_loc * w
+        q = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+        k = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+        v = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+        base_us = None
+        for mode in overlap.transports_for("ring_attention",
+                                           include_baseline=True):
+            for backend in overlap.backends_for("ring_attention"):
+                if overlap.resolve_backend("ring_attention", backend,
+                                           mode) != backend:
+                    continue  # no kernel lowering for this mode
+                if backend == "kernel" and s_loc > 8:
+                    continue  # emulated host callbacks: smallest shape only
+                f = cm.make_sharded(
+                    functools.partial(ring_attention, axis="cp", causal=True,
+                                      mode=mode, backend=backend),
+                    mesh, (P(None, None, "cp", None),) * 3,
+                    P(None, None, "cp", None))
+                us = time_fn(f, q, k, v)
+                if mode == "none" and backend == "graph":
+                    base_us = us
+                derived = (f"speedup={base_us / us:.2f}x"
+                           if base_us else "")
+                suffix = "/kernel" if backend == "kernel" else ""
+                out.append(row(
+                    f"ring_attn/{b}x{h}x{s}x{d}/{mode}{suffix}", us, derived))
+    return out

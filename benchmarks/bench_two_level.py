@@ -1,0 +1,67 @@
+"""Paper Fig. 10 — hierarchical (2-level) collective matmuls on a
+compound (pod x ring-in-pod) mesh, graph vs kernel backends.
+
+The kernel rows run the executor's two-axis protocols (``two_level_ag``
+/ ``two_level_rs``: pod-local one_shot exchange concurrent with the
+inter-pod ring) on the emulated DMA engine — a correctness vehicle,
+benched at the smallest shape only. Row names are NEW in this PR (the
+``--check`` gate compares by exact name; existing rows never change
+names).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collective_matmul as cm
+from repro.core import overlap
+
+from .common import row, time_fn
+
+
+def rows():
+    w = min(8, jax.device_count())
+    wo, wi = 2, max(1, w // 2)
+    mesh2 = jax.make_mesh((wo, wi), ("pod", "tp"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.RandomState(0)
+    out = []
+    for m, k, n in [(256, 128, 128), (1024, 256, 512)]:
+        a = jnp.asarray(rng.randn(m, k), jnp.float32)
+        b = jnp.asarray(rng.randn(k, n), jnp.float32)
+        a2 = jnp.asarray(rng.randn(m, 4 * w), jnp.float32)
+        b2 = jnp.asarray(rng.randn(4 * w, n), jnp.float32)
+        for op, fn, args, specs in (
+            ("ag_gemm_2level", cm.ag_matmul_2level, (a, b),
+             ((P(("pod", "tp"), None), P(None, ("pod", "tp"))),
+              P(None, ("pod", "tp")))),
+            ("gemm_rs_2level", cm.matmul_rs_2level, (a2, b2),
+             ((P(None, ("pod", "tp")), P(("pod", "tp"), None)),
+              P(("pod", "tp"), None))),
+        ):
+            reg = op.replace("ag_gemm", "ag_matmul").replace(
+                "gemm_rs", "matmul_rs")
+            base_us = None
+            for mode in overlap.transports_for(reg, include_baseline=True):
+                for backend in overlap.backends_for(reg):
+                    if overlap.resolve_backend(reg, backend, mode) != backend:
+                        continue
+                    if backend == "kernel" and m > 256:
+                        continue  # emulated: smallest shape only
+                    f = cm.make_sharded(
+                        functools.partial(fn, inner_axis="tp",
+                                          outer_axis="pod", mode=mode,
+                                          backend=backend,
+                                          out_dtype=jnp.float32),
+                        mesh2, *specs)
+                    us = time_fn(f, *args)
+                    if mode == "none" and backend == "graph":
+                        base_us = us
+                    derived = (f"speedup={base_us / us:.2f}x"
+                               if base_us else "")
+                    suffix = "/kernel" if backend == "kernel" else ""
+                    out.append(row(f"{op}/{m}x{k}x{n}/{mode}{suffix}", us,
+                                   derived))
+    return out

@@ -15,6 +15,8 @@ scoped to that subprocess, never set globally).
   Fig. 15     bench_flash_decode   distributed flash decoding scaling
   Fig. 16     bench_a2a            EP AllToAll dispatch/combine
   Fig. 19     bench_ll_allgather   low-latency AllGather
+  Fig. 10     bench_two_level      hierarchical (2-level) collective matmuls
+  (long ctx)  bench_ring_attention ring attention (context parallelism)
   (kernels)   bench_kernels        single-device kernel throughput
 
 Regression gate (CI): ``--check`` reruns the suite into a scratch file
@@ -97,6 +99,8 @@ def _inner() -> None:
         bench_kernels,
         bench_ll_allgather,
         bench_moe_rs,
+        bench_ring_attention,
+        bench_two_level,
     )
 
     world = min(8, jax.device_count())  # the mesh size multi-device benches use
@@ -110,6 +114,8 @@ def _inner() -> None:
         ("fig15", bench_flash_decode, world),
         ("fig16", bench_a2a, world),
         ("fig19", bench_ll_allgather, world),
+        ("fig10", bench_two_level, world),  # hierarchical (2-level) matmuls
+        ("long_ctx", bench_ring_attention, world),  # context parallelism
         ("kernels", bench_kernels, 1),  # single-device kernel throughput
     ]
     records = []

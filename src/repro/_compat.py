@@ -97,7 +97,10 @@ def _install_pallas_tpu() -> None:
     if not hasattr(pltpu, "InterpretParams"):
         # Older jax has no TPU-interpret parameter object; plain
         # interpret=True is the closest equivalent for pallas_call.
-        pltpu.InterpretParams = lambda **kwargs: True
+        def _interpret_params(**kwargs):
+            return True
+
+        pltpu.InterpretParams = _interpret_params
 
 
 def install() -> None:

@@ -25,17 +25,10 @@ autodiff of an unrolled ring):
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
 from . import overlap as ov
 
 Array = jax.Array
-
-
-def _owner_update(out: Array, partial: Array, owner, m_chunk: int, row_off: int = 0) -> Array:
-    start = (owner * m_chunk + row_off,) + (0,) * (out.ndim - 1)
-    return lax.dynamic_update_slice(out, partial, start)
 
 
 # ---------------------------------------------------------------------------
@@ -109,22 +102,23 @@ def ag_matmul_2level(
     inner_axis: str,
     outer_axis: str,
     *,
+    mode: str = "two_level",
     out_dtype=None,
+    backend: str = "graph",
 ) -> Array:
     """AG+GEMM over a compound (outer=pod, inner=ring-in-pod) axis — the
-    AG dual of ``matmul_rs_2level``. Own pod's inner ring runs first
-    while peer-pod chunks travel the slow links (Fig. 10's shifted
-    start). a_blk: (m_loc, k); returns (m_loc * Wo * Wi, n_loc)."""
-    out_dtype = out_dtype or a_blk.dtype
-    total = lax.axis_size(outer_axis) * lax.axis_size(inner_axis)
-    m_loc = a_blk.shape[0]
-    out0 = jnp.zeros((m_loc * total, b_loc.shape[1]), out_dtype)
+    AG dual of ``matmul_rs_2level`` (see the ``ag_matmul_2level``
+    declaration in ``repro.ops.library``). Own pod's inner ring runs
+    first while peer-pod chunks travel the slow links (Fig. 10's shifted
+    start). ``backend="kernel"`` lowers through the executor's two-axis
+    ``two_level_ag`` protocol (pod-local one_shot exchange concurrent
+    with the inter-pod ring). a_blk: (m_loc, k); returns
+    (m_loc * Wo * Wi, n_loc)."""
+    from .. import ops
 
-    def fold(out, bufs, s, owner):
-        partial = jnp.dot(bufs[0], b_loc, preferred_element_type=jnp.float32)
-        return _owner_update(out, partial.astype(out_dtype), owner, m_loc)
-
-    return ov.two_level_ag_pipeline((a_blk,), fold, out0, inner_axis, outer_axis)
+    return ops.ag_matmul_2level(a_blk, b_loc, axis=(inner_axis, outer_axis),
+                                mode=mode, out_dtype=out_dtype,
+                                backend=backend)
 
 
 def matmul_rs_2level(
@@ -133,30 +127,25 @@ def matmul_rs_2level(
     inner_axis: str,
     outer_axis: str,
     *,
+    mode: str = "two_level",
     out_dtype=None,
+    backend: str = "graph",
 ) -> Array:
     """GEMM+RS over a compound (outer=pod, inner=ring-in-pod) axis
-    (Fig. 10 / Alg. 5). a_loc: (m, k_loc) with K sharded over
-    outer*inner; returns (m / (Wo*Wi), n)."""
-    out_dtype = out_dtype or a_loc.dtype
-    total = lax.axis_size(outer_axis) * lax.axis_size(inner_axis)
-    m = a_loc.shape[0]
-    assert m % total == 0, (m, total)
-    m_blk = m // total
+    (Fig. 10 / Alg. 5; the ``matmul_rs_2level`` declaration in
+    ``repro.ops.library``). ``backend="kernel"`` lowers through the
+    executor's ``two_level_rs`` protocol. a_loc: (m, k_loc) with K
+    sharded over outer*inner; returns (m / (Wo*Wi), n)."""
+    from .. import ops
 
-    def compute(blk, s):
-        a_b = lax.dynamic_slice(a_loc, (blk * m_blk, 0), (m_blk, a_loc.shape[1]))
-        return jnp.dot(a_b, b_loc, preferred_element_type=jnp.float32)
-
-    return ov.two_level_rs_pipeline(compute, inner_axis, outer_axis).astype(out_dtype)
+    return ops.matmul_rs_2level(a_loc, b_loc, axis=(inner_axis, outer_axis),
+                                mode=mode, out_dtype=out_dtype,
+                                backend=backend)
 
 
-ov.register("ag_matmul_2level", kind="ag", transports=("two_level",),
-            baseline="none", default="two_level")
-ov.register("matmul_rs_2level", kind="rs", transports=("two_level",),
-            baseline="none", default="two_level")
-# "reduce_scatter" is DECLARED in repro.ops.library (f32-accumulating
-# tile over the RS pipelines + push_rs/one_shot_rs kernel protocols).
+# The 2-level ops and "reduce_scatter" are DECLARED in repro.ops.library
+# (two_level_ag/two_level_rs executor protocols; f32-accumulating tile
+# over the RS pipelines + push_rs/one_shot_rs kernel protocols).
 
 
 # ---------------------------------------------------------------------------

@@ -310,21 +310,94 @@ def _moe_rs_kernel(static, x_full, logits_full):
 
 
 # ---------------------------------------------------------------------------
-# Registry entries. ag_moe / moe_rs differentiate through the pipeline
-# directly (no bwd rule): the concat+roll assembly and the accumulator
-# chain are already O(1)-buffer under autodiff, and expert_fn is
-# checkpointed per chunk by the caller. The "a2a_ep" entry is DECLARED
-# in repro.ops.library (one_shot_a2a kernel protocol + self-dual
-# backward); the trailing import below guarantees the declaration runs
-# for anyone importing this module directly.
+# Derived backwards: jax.vjp OF THE EXPERT CLOSURE. The expert is a
+# caller closure with no declared tile (it may be nonlinear AND
+# rank-dependent), so the authoring API's linear-tile duals do not
+# apply; instead each rank differentiates ITS OWN closure at the true
+# primal chunks and the cotangents ride the dual schedules. Routing
+# through the shared custom_vjp is what lets the TRAIN path use the
+# KERNEL lowering: the kernel forward keeps this graph-schedule dual as
+# its backward (autodiff cannot go through the io_callback kernel fwd).
+# ---------------------------------------------------------------------------
+
+
+def _ag_moe_bwd(static, res, g):
+    """d(ag_moe): stack-gather the packed token|logit chunks once (ONE
+    residual ring — the same packed riding chunk the kernel forward
+    uses), vjp the local expert at every owner's chunk against that
+    owner's output-row cotangents, then reduce the packed
+    (d_tokens | d_logits) partials home on the dual RS ring."""
+    axis, expert_fn = static["axis"], static["expert_fn"]
+    x_blk, l_blk = res
+    t_loc = x_blk.shape[0]
+    d = x_blk.shape[1]
+    stacked = ov.stack_gather_pipeline(_moe_pack(x_blk, l_blk), axis,
+                                       transport="ring")
+
+    def contrib(blk, s):
+        del s
+        chunk = lax.dynamic_index_in_dim(stacked, blk, 0, keepdims=False)
+        xb = chunk[:, :d].astype(x_blk.dtype)  # exact unpack casts
+        lb = chunk[:, d:].astype(l_blk.dtype)
+        g_blk = lax.dynamic_slice(g, (blk * t_loc, 0), (t_loc, g.shape[1]))
+        _, vjp = jax.vjp(expert_fn, xb, lb)
+        dxb, dlb = vjp(g_blk)
+        return jnp.concatenate(
+            [dxb.astype(jnp.float32), dlb.astype(jnp.float32)], axis=1)
+
+    packed = ov.rs_pipeline(contrib, axis, transport="ring")
+    return (packed[:, :d].astype(x_blk.dtype),
+            packed[:, d:].astype(l_blk.dtype))
+
+
+def _moe_rs_bwd(static, res, g):
+    """d(moe_rs): ONE dual AG ring of the per-rank output-block
+    cotangents; each arriving g block is pushed back through this rank's
+    expert closure at the true local primal rows (f32 accumulation,
+    matching the forward's accumulator dtype)."""
+    axis, expert_fn = static["axis"], static["expert_fn"]
+    x_full, l_full = res
+    w = lax.axis_size(axis)
+    t_blk = x_full.shape[0] // w
+
+    def rows(t, start):
+        return lax.dynamic_slice(t, (start, 0), (t_blk, t.shape[1]))
+
+    def fold(carry, bufs, s, owner):
+        del s
+        dx, dl = carry
+        xb = rows(x_full, owner * t_blk)
+        lb = rows(l_full, owner * t_blk)
+        _, vjp = jax.vjp(
+            lambda a, b: expert_fn(a, b).astype(jnp.float32), xb, lb)
+        gxb, glb = vjp(bufs[0].astype(jnp.float32))
+        dx = lax.dynamic_update_slice(dx, gxb.astype(jnp.float32),
+                                      (owner * t_blk, 0))
+        dl = lax.dynamic_update_slice(dl, glb.astype(jnp.float32),
+                                      (owner * t_blk, 0))
+        return dx, dl
+
+    init = (jnp.zeros(x_full.shape, jnp.float32),
+            jnp.zeros(l_full.shape, jnp.float32))
+    dx, dl = ov.ag_pipeline((g,), fold, init, axis, transport="ring")
+    return dx.astype(x_full.dtype), dl.astype(l_full.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry entries. The "a2a_ep" entry is DECLARED in repro.ops.library
+# (one_shot_a2a kernel protocol + self-dual backward); the trailing
+# import below guarantees the declaration runs for anyone importing this
+# module directly.
 # ---------------------------------------------------------------------------
 
 ov.register("ag_moe", kind="ag", transports=("ring", "bidir", "one_shot"),
             baseline="none", default="ring", fwd=_ag_moe_graph,
+            bwd=_ag_moe_bwd,
             kernel_transports=("ring", "bidir", "one_shot"),
             kernel_fwd=_ag_moe_kernel)
 ov.register("moe_rs", kind="rs", transports=("ring", "bidir", "one_shot"),
             baseline="none", default="ring", fwd=_moe_rs_graph,
+            bwd=_moe_rs_bwd,
             kernel_transports=("ring", "one_shot"),
             kernel_fwd=_moe_rs_kernel)
 

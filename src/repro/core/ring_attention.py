@@ -11,11 +11,14 @@ sequences). Per-rank memory is O(S_loc) instead of O(S) under the ring
 transport: this is the enabler for long-context (500k+) TRAINING, which
 the paper's decode-side FlashDecode+AG does not cover.
 
-The blockwise online softmax carries (m, l, acc) in f32 as the
-pipeline's fold state; causal masking uses global offsets derived from
-the fold's ``owner``, and fully-future blocks contribute nothing
-(compute is spent for SPMD uniformity — on TPU the skipped-block
-optimization would be a per-step ``lax.cond``, noted in EXPERIMENTS).
+The op itself is now a ``repro.ops`` STATEFUL FOLD declaration
+(``ops.library``): the blockwise online softmax's (m, l, acc) carry is
+the declared FoldTile's state, from which the graph lowering (engine AG
+pipelines), the kernel lowering (the executor's carry-passing
+``ring_fold`` protocol; ``one_shot`` gathers low-latency and replays the
+fold host-side) and the jax.vjp-through-the-fold-chain backward are all
+derived. This module keeps the historical functional signature (K and V
+as separate arguments; the declaration rides them as one packed chunk).
 Registry entry: "ring_attention".
 """
 from __future__ import annotations
@@ -23,7 +26,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from . import overlap as ov
 
@@ -39,61 +41,26 @@ def ring_attention(
     causal: bool = True,
     scale: float | None = None,
     mode: str = "ring",
+    backend: str = "graph",
 ) -> Array:
-    """Returns (B, H, S_loc, D): attention over the GLOBAL sequence."""
+    """Returns (B, H, S_loc, D): attention over the GLOBAL sequence.
+
+    ``backend="kernel"`` lowers ring through the executor's carry-passing
+    ``ring_fold`` protocol (one_shot through the low-latency gather with
+    a host-side fold replay); gradients are bit-identical across
+    backends — the kernel forward keeps the graph dual as its backward
+    through the ONE shared custom_vjp.
+    """
+    from .. import ops
+
     mode = ov.resolve_mode("ring_attention", mode)
-    b, h, s_loc, d = q.shape
-    hkv = k.shape[1]
-    group = h // hkv
-    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
-    w = lax.axis_size(axis)
-    me = lax.axis_index(axis)
-
-    if mode == "none":
-        # monolithic baseline: gather the full K/V, one softmax pass
-        kf = jnp.repeat(
-            lax.all_gather(k, axis, axis=2, tiled=True).astype(jnp.float32),
-            group, axis=1)
-        vf = jnp.repeat(
-            lax.all_gather(v, axis, axis=2, tiled=True).astype(jnp.float32),
-            group, axis=1)
-        logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kf)
-        if causal:
-            rows_g = me * s_loc + jnp.arange(s_loc)
-            mask = rows_g[:, None] >= jnp.arange(s_loc * w)[None, :]
-            logits = jnp.where(mask[None, None], logits, -1e30)
-        p = jax.nn.softmax(logits, axis=-1)
-        return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
-
-    qf = q.astype(jnp.float32) * scale
-    rows = me * s_loc + jnp.arange(s_loc)  # global q positions
-
-    init = (
-        jnp.full((b, h, s_loc), -1e30, jnp.float32),  # running max
-        jnp.zeros((b, h, s_loc), jnp.float32),  # running sum
-        jnp.zeros((b, h, s_loc, d), jnp.float32),  # weighted-value acc
-    )
-
-    def fold(carry, bufs, s, owner):
-        m, l, acc = carry
-        buf_k, buf_v = bufs
-        kk = jnp.repeat(buf_k.astype(jnp.float32), group, axis=1)
-        vv = jnp.repeat(buf_v.astype(jnp.float32), group, axis=1)
-        logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kk)
-        if causal:
-            cols = owner * s_loc + jnp.arange(s_loc)  # global kv positions
-            mask = rows[:, None] >= cols[None, :]
-            logits = jnp.where(mask[None, None], logits, -1e30)
-        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
-        p = jnp.exp(logits - m_new[..., None])
-        alpha = jnp.exp(m - m_new)
-        l = l * alpha + jnp.sum(p, axis=-1)
-        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
-        return m_new, l, acc
-
-    _, l, acc = ov.ag_pipeline((k, v), fold, init, axis, transport=mode)
-    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(q.shape[-1]))
+    packed = jnp.concatenate([k, v], axis=-1)  # ONE riding chunk
+    return ops.ring_attention(packed, q, axis=axis, mode=mode,
+                              backend=backend, out_dtype=q.dtype,
+                              causal=bool(causal), scale=float(scale))
 
 
-ov.register("ring_attention", kind="attn", transports=("ring", "one_shot"),
-            baseline="none", default="ring")
+# Importing this module must populate the registry entry (declared in
+# repro.ops.library) for direct importers.
+from .. import ops as _ops  # noqa: E402,F401

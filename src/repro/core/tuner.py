@@ -248,6 +248,14 @@ def recommend_overlap_modes(
                             dtype_bytes=dtype_bytes, spec=spec)
     modes = dict(LATENCY_OPS)
     modes.update({"ag_matmul": ag.mode, "matmul_rs": rs.mode})
+    # the carry-passing / compound-mesh ops enumerate too (kernel-capable
+    # since the ring_fold / two_level executor protocols): ring attention
+    # follows the AG regime pick clamped to its transports — its K/V
+    # chunks ride exactly the AG data path — and the 2-level ops have a
+    # single (two_level) transport.
+    modes["ring_attention"] = overlap.resolve_mode("ring_attention", ag.mode)
+    modes["ag_matmul_2level"] = "two_level"
+    modes["matmul_rs_2level"] = "two_level"
     return OverlapPolicy(
         mode=ag.mode,
         # the latency-bound ops are kernel-capable too, so the backend

@@ -8,7 +8,6 @@ kernel-vs-ref test sweeps.
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal, Optional
 
 import jax

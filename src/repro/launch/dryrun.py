@@ -23,7 +23,6 @@ import sys
 import time
 import traceback
 
-import jax
 
 from ..configs import ARCHS, SHAPES, get_config, shape_applicable
 from . import roofline

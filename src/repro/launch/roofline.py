@@ -26,7 +26,7 @@ from __future__ import annotations
 import json
 import re
 from dataclasses import asdict, dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 from .. import hw
 

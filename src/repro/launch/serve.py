@@ -17,7 +17,7 @@ from ..configs import ARCHS, get_config, reduced
 from ..configs.base import ParallelConfig, ShapeConfig
 from ..serve.engine import Engine, Request
 from .mesh import make_mesh
-from .steps import build_decode_step, local_batch
+from .steps import build_decode_step
 
 
 def run(args):

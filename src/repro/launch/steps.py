@@ -8,7 +8,6 @@ This is the single place where logical batch placement is decided:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -19,7 +18,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ModelConfig, ParallelConfig, ShapeConfig, TrainConfig
 from ..models import build_model
 from ..train import optimizer as opt_mod
-from ..train.train_step import init_ef_state, make_train_step
+from ..train.train_step import make_train_step
 
 
 def batch_axes(pcfg: ParallelConfig):

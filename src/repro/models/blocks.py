@@ -28,7 +28,6 @@ from ..core import collective_matmul as cm
 from ..core import moe_overlap as mo
 from ..kernels import ops
 from .common import (
-    DATA_AXIS,
     MODEL_AXIS,
     activation,
     ag_linear,
@@ -95,7 +94,9 @@ class AttnParams(NamedTuple):
 
 
 def _get_attn(p: dict, dtype) -> AttnParams:
-    c = lambda n: p[n].astype(dtype) if n in p else None
+    def c(n):
+        return p[n].astype(dtype) if n in p else None
+
     return AttnParams(
         ln=c("ln"), wq=c("wq"), wkv=c("wkv"), wo=c("wo"), bq=c("bq"), bkv=c("bkv")
     )
@@ -157,6 +158,30 @@ def attention_train(
     if return_kv:
         return y, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
     return y
+
+
+def attention_cp(
+    pcfg: ParallelConfig,
+    q: Array,  # (B, H, S_loc, hd) — sequence-sharded on ``axis``
+    k: Array,  # (B, Hkv, S_loc, hd)
+    v: Array,  # (B, Hkv, S_loc, hd)
+    *,
+    axis: str,
+    causal: bool = True,
+) -> Array:
+    """Context-parallel attention: the long-context TRAIN-side attention
+    call site. Sequence is sharded on ``axis`` with heads REPLICATED
+    there (compose with TP on a different mesh axis — e.g. CP over the
+    data axis while projections stay TP-sharded on the model axis); the
+    K/V blocks ride the engine transport as ring attention, with the
+    transport AND lowering backend resolved by the overlap policy
+    (``backend="kernel"`` runs the executor's carry-passing ring_fold
+    protocol; grads stay bit-identical across backends)."""
+    from ..core.ring_attention import ring_attention
+
+    r = pcfg.policy.resolve("ring_attention")
+    return ring_attention(q, k, v, axis, causal=causal, mode=r.mode,
+                          backend=r.backend)
 
 
 def attention_decode(
@@ -335,12 +360,13 @@ def moe_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
         expert_fn = jax.checkpoint(expert_fn)
 
     if tp > 1:
-        # ag_moe's kernel lowering has no dual-schedule backward yet (the
-        # expert is a caller closure, not a declared tile) — the TRAIN
-        # path pins the differentiable graph lowering regardless of the
-        # policy's backend; the mode still follows the policy.
+        # ag_moe carries a derived vjp-of-closure backward (the kernel
+        # forward keeps the graph-schedule dual through the ONE shared
+        # custom_vjp), so the TRAIN path follows the policy's backend —
+        # the graph-only pin is gone.
+        ag = pcfg.policy.resolve("ag_moe")
         full = mo.ag_moe(h, logits, expert_fn, MODEL_AXIS,
-                         mode=pcfg.policy.resolve("ag_moe").mode)
+                         mode=ag.mode, backend=ag.backend)
         rs = pcfg.policy.resolve("reduce_scatter")
         out = cm.reduce_scatter_chunked(full, MODEL_AXIS, mode=rs.mode,
                                         backend=rs.backend)

@@ -8,7 +8,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -16,7 +15,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .. import ops
-from ..configs.base import ModelConfig, ParallelConfig
+from ..configs.base import ParallelConfig
 from ..core import collective_matmul as cm
 from .params import LeafSpec, TPInfo, unpack
 

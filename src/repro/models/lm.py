@@ -13,18 +13,15 @@ Layouts:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig, ParallelConfig
 from ..core import flash_decode as dfd
-from ..kernels import ops
 from . import blocks
 from .common import (
     DATA_AXIS,
@@ -40,7 +37,7 @@ from .common import (
     vocab_parallel_logits,
     vocab_parallel_loss,
 )
-from .params import LeafSpec, TPInfo, build_params, spec_tree_shapes, tp_info
+from .params import LeafSpec, build_params, spec_tree_shapes, tp_info
 
 Array = jax.Array
 

@@ -20,8 +20,8 @@ adds a ring all-reduce over pods (hierarchical schedule).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ output + MLP. Sinusoidal positions (no learned tables, so the mechanical
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +22,6 @@ from .common import (
     embed_lookup,
     fsdp_get,
     get_params,
-    local_linear,
     rmsnorm,
     sinusoidal_positions,
     vocab_parallel_logits,

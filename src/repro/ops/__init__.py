@@ -26,29 +26,36 @@ shims): ``overlap.apply(name, ...)`` -> ``ops.<name>(...)``;
 ``ParallelConfig.with_modes/with_backends`` -> ``pcfg.policy.with_modes``
 / ``OverlapPolicy`` on the config.
 """
-from .authoring import BoundOp, OverlapOp, declare, declared, get
+from .authoring import BoundOp, FoldTile, OverlapOp, declare, declared, get
 from .library import (
     a2a_ep,
     ag_matmul,
+    ag_matmul_2level,
     all_gather,
     flash_decode,
     matmul_rs,
+    matmul_rs_2level,
     reduce_scatter,
+    ring_attention,
 )
 from .policy import LATENCY_OPS, OverlapPolicy, ResolvedOverlap
 
 __all__ = [
     "BoundOp",
+    "FoldTile",
     "OverlapOp",
     "OverlapPolicy",
     "ResolvedOverlap",
     "LATENCY_OPS",
     "a2a_ep",
     "ag_matmul",
+    "ag_matmul_2level",
     "all_gather",
     "flash_decode",
     "matmul_rs",
+    "matmul_rs_2level",
     "reduce_scatter",
+    "ring_attention",
     "declare",
     "declared",
     "get",

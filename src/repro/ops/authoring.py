@@ -45,10 +45,34 @@ the communicated factor of a GEMM enters linearly); statics may enter
 arbitrarily. Return the f32 partial; the framework handles output-dtype
 casts. Declare ``rowwise=True`` when the tile maps rows to rows
 one-to-one (enables bidir halving and the AG sub-chunking knob).
+
+Stateful fold tiles (``fold=FoldTile(...)``)
+--------------------------------------------
+Ops whose per-chunk compute carries REDUCTION STATE across chunks (ring
+attention's online softmax, any chunk-centric running reduction) declare
+a :class:`FoldTile` instead of a pure tile — three pure functions, each
+taking a leading ``ctx`` dict (the call's non-engine static extras,
+``axis`` included):
+
+    init(ctx, chunk, *statics)           -> state pytree (f32)
+    fold(ctx, state, chunk, owner, *statics) -> state
+    finalize(ctx, state, *statics)       -> output
+
+The graph lowering folds over the engine's AG pipelines; the kernel
+lowering binds the executor's carry-passing ``ring_fold`` protocol
+(``one_shot`` gathers through ``one_shot_ag`` and replays the fold chain
+host-side); the backward is derived with ``jax.vjp`` through the fold
+chain (chunks stack-gathered once, cotangents ride the dual RS ring
+home). Fold declarations are not linear-in-chunk restricted.
+
+Two-axis (pod x ring) ops declare ``transports=("two_level",)`` and are
+called with ``axis=(inner, outer)``; graph lowers through the engine's
+``two_level_*_pipeline`` schedules, kernel through the executor's
+``two_level_ag`` / ``two_level_rs`` protocols, and the derived backward
+rides the two-level dual schedules.
 """
 from __future__ import annotations
 
-import dataclasses
 import itertools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
@@ -60,6 +84,7 @@ from jax.ad_checkpoint import checkpoint_name
 
 from ..core import overlap as ov
 from ..shmem import executor
+from ..shmem.executor import FoldTile
 from ..shmem.executor import slice_rows as _slice_rows
 from ..shmem.executor import update_rows as _update
 
@@ -67,8 +92,10 @@ Array = jax.Array
 
 # Dual kinds: an op's transpose partner must lower through the dual
 # schedule (the AG operand-gradient rides an RS ring and vice versa).
+# "attn" (fold) ops derive their backward through the fold chain and
+# have no transpose partner.
 _DUAL_KIND = {"ag": ("rs",), "gather": ("rs",), "rs": ("ag", "gather"),
-              "a2a": ("a2a",)}
+              "a2a": ("a2a",), "attn": ()}
 
 # collective_id allocation for declared kernel lowerings (the hand-tuned
 # kernels in repro.kernels keep their historical ids below 32).
@@ -80,11 +107,14 @@ class OverlapOp:
     """One overlapped op, declared at tile level.
 
     name              registry identifier (policy / tuner / test key)
-    kind              "ag" | "gather" | "rs" | "a2a" — which side of the
-                      transport the op sits on (what rides: the operand
-                      chunks, or the accumulator)
+    kind              "ag" | "gather" | "rs" | "a2a" | "attn" — which
+                      side of the transport the op sits on (what rides:
+                      the operand chunks, or the accumulator); "attn" is
+                      the stateful-fold kind (requires ``fold``)
     tile              tile compute ``tile(chunk, *statics) -> f32 tile``;
                       None = identity (pure data movement)
+    fold              stateful fold tile (:class:`FoldTile`, ctx-first
+                      signatures) — mutually exclusive with ``tile``
     transports        engine transports the graph lowering supports
     baseline          monolithic fallback mode name
     default           transport used when an unsupported mode is asked
@@ -111,6 +141,7 @@ class OverlapOp:
     name: str
     kind: str
     tile: Optional[Callable] = None
+    fold: Optional[FoldTile] = None
     transports: Tuple[str, ...] = ("ring",)
     baseline: str = "none"
     default: str = "ring"
@@ -129,6 +160,19 @@ class OverlapOp:
                                tuple(self.kernel_protocols.items()))
         if self.kind not in _DUAL_KIND:
             raise ValueError(f"{self.name}: unknown kind {self.kind!r}")
+        if (self.kind == "attn") != (self.fold is not None):
+            raise ValueError(
+                f"{self.name}: kind 'attn' and a FoldTile declaration go "
+                "together")
+        if self.fold is not None and self.tile is not None:
+            raise ValueError(f"{self.name}: declare tile OR fold, not both")
+        if self.fold is not None and self.baseline_fwd is None \
+                and self.baseline not in self.transports:
+            # a fold op's monolithic baseline cannot be derived from the
+            # chunk-centric declaration (the fold order IS the op)
+            raise ValueError(
+                f"{self.name}: fold declarations need an explicit "
+                "baseline_fwd for their monolithic baseline")
         for t, proto in self.kernel_protocols:
             if proto not in executor.PROTOCOLS:
                 raise ValueError(
@@ -139,6 +183,22 @@ class OverlapOp:
                 # degrades non-rowwise bidir to ring
                 raise ValueError(
                     f"{self.name}: bidir_ring_ag requires rowwise=True")
+            if proto == "ring_fold" and self.fold is None:
+                raise ValueError(
+                    f"{self.name}: ring_fold requires a FoldTile declaration")
+            if self.fold is not None and proto not in ("ring_fold",
+                                                       "one_shot_ag"):
+                # one_shot_ag = gather-then-replay; anything else cannot
+                # carry the fold state
+                raise ValueError(
+                    f"{self.name}: fold ops bind ring_fold or one_shot_ag, "
+                    f"not {proto!r}")
+            if proto == "two_level_ag" and self.kind not in ("ag", "gather"):
+                raise ValueError(
+                    f"{self.name}: two_level_ag is an AG-side protocol")
+            if proto == "two_level_rs" and self.kind != "rs":
+                raise ValueError(
+                    f"{self.name}: two_level_rs is an RS-side protocol")
         if self.kind == "a2a" and self.kernel_protocols and self.tile is not None:
             # the graph lowering applies an a2a tile once, post-assembly;
             # the executor protocol applies it per landed block — only
@@ -166,6 +226,51 @@ def _out_dtype(static, operand):
     return jnp.dtype(static.get("out_dtype") or operand.dtype)
 
 
+def _axis_world(axis) -> int:
+    """World size of one axis name or a compound (inner, outer) tuple."""
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= lax.axis_size(a)
+        return n
+    return lax.axis_size(axis)
+
+
+# static keys consumed by the engine itself; everything else is an op
+# extra handed to fold declarations as their ``ctx`` (``axis`` included —
+# folds key causal masks and rank offsets on it)
+_ENGINE_ONLY_KEYS = ("mode", "backend", "chunks", "out_dtype")
+
+
+def _fold_ctx(static: Mapping) -> Dict[str, Any]:
+    return {k: v for k, v in static.items() if k not in _ENGINE_ONLY_KEYS}
+
+
+def _bind_fold(ft: FoldTile, ctx: Dict[str, Any]) -> FoldTile:
+    """Close the declaration-level (ctx-first) FoldTile over one call's
+    extras, yielding the executor-level (ctx-free) FoldTile."""
+    return FoldTile(
+        init=lambda chunk, *st: ft.init(ctx, chunk, *st),
+        fold=lambda state, chunk, owner, *st: ft.fold(ctx, state, chunk,
+                                                      owner, *st),
+        finalize=lambda state, *st: ft.finalize(ctx, state, *st))
+
+
+def _dual_rs(compute_block, axis):
+    """The dual RS schedule: single-axis ring, or the two-level pipeline
+    when the op composes (inner, outer) axes."""
+    if isinstance(axis, (tuple, list)):
+        return ov.two_level_rs_pipeline(compute_block, axis[0], axis[1])
+    return ov.rs_pipeline(compute_block, axis, transport="ring")
+
+
+def _dual_ag(operands, fold, init, axis):
+    """The dual AG schedule (ring / two-level, mirroring :func:`_dual_rs`)."""
+    if isinstance(axis, (tuple, list)):
+        return ov.two_level_ag_pipeline(operands, fold, init, axis[0], axis[1])
+    return ov.ag_pipeline(operands, fold, init, axis, transport="ring")
+
+
 # ---------------------------------------------------------------------------
 # Graph lowering (ag_pipeline / rs_pipeline folds)
 # ---------------------------------------------------------------------------
@@ -176,10 +281,20 @@ def _ag_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
     mode = static["mode"]
     out_dtype = _out_dtype(static, operand)
     tile = op.tile_fn()
-    w = lax.axis_size(axis)
+    w = _axis_world(axis)
     m_loc = operand.shape[0]
     tile_m, rest = _tile_rows(op, operand, statics)
     out0 = jnp.zeros((tile_m * w,) + rest, out_dtype)
+
+    if mode == "two_level":
+        inner, outer = axis
+
+        def fold_tl(out, bufs, s, owner):
+            t = tile(bufs[0], *statics).astype(out_dtype)
+            return _update(out, t, owner * tile_m)
+
+        return ov.two_level_ag_pipeline((operand,), fold_tl, out0, inner,
+                                        outer)
 
     if mode == "bidir" and op.rowwise and m_loc % 2 == 0 and w >= 3:
         h = tile_m // 2
@@ -216,13 +331,22 @@ def _rs_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
     mode = static["mode"]
     out_dtype = _out_dtype(static, operand)
     tile = op.tile_fn()
-    w = lax.axis_size(axis)
+    w = _axis_world(axis)
     m = operand.shape[0]
     assert m % w == 0, (m, w)
     m_blk = m // w
 
     def block(blk):
         return _slice_rows(operand, blk * m_blk, m_blk)
+
+    if mode == "two_level":
+        inner, outer = axis
+
+        def compute_tl(blk, s):
+            return tile(block(blk), *statics)
+
+        return ov.two_level_rs_pipeline(
+            compute_tl, inner, outer).astype(out_dtype)
 
     if mode == "bidir" and op.static_split is not None and w >= 3:
         halves = op.static_split(statics, 2)
@@ -267,6 +391,25 @@ def _a2a_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
     return out.astype(_out_dtype(static, operand))
 
 
+def _fold_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
+    """Graph lowering of a stateful fold op: the declaration's fold is
+    the engine AG pipeline's carry (ring: one hop per step; one_shot:
+    all chunks up-front, folded in ring-distance order)."""
+    axis = static["axis"]
+    mode = static["mode"]
+    ctx = _fold_ctx(static)
+    ft = op.fold
+    out_dtype = _out_dtype(static, operand)
+    state0 = ft.init(ctx, operand, *statics)
+
+    def fold_fn(carry, bufs, s, owner):
+        del s
+        return ft.fold(ctx, carry, bufs[0], owner, *statics)
+
+    state = ov.ag_pipeline((operand,), fold_fn, state0, axis, transport=mode)
+    return ft.finalize(ctx, state, *statics).astype(out_dtype)
+
+
 def _default_baseline(op: OverlapOp):
     """Monolithic fallback derived from the tile: collective first, then
     the tile per owner chunk (AG kinds) / tile per block then the
@@ -297,7 +440,16 @@ def _default_baseline(op: OverlapOp):
 
 def _make_graph_fwd(op: OverlapOp) -> Callable:
     lower = {"ag": _ag_graph, "gather": _ag_graph, "rs": _rs_graph,
-             "a2a": _a2a_graph}[op.kind]
+             "a2a": _a2a_graph, "attn": _fold_graph}[op.kind]
+    if op.fold is not None:
+        # fold baselines need the call's extras (causal flags etc.):
+        # they receive the full static dict
+        def fwd(static, operand, *statics):
+            if static["mode"] == op.baseline:
+                return op.baseline_fwd(static, operand, *statics)
+            return lower(op, static, operand, *statics)
+
+        return fwd
     baseline = op.baseline_fwd or _default_baseline(op)
 
     def fwd(static, operand, *statics):
@@ -319,11 +471,45 @@ def _make_kernel_fwd(op: OverlapOp, cid: int) -> Optional[Callable]:
         return None
     protos = dict(op.kernel_protocols)
 
+    if op.fold is not None:
+
+        def kernel_fwd(static, operand, *statics):
+            axis = static["axis"]
+            w = lax.axis_size(axis)
+            out_dtype = _out_dtype(static, operand)
+            bound = _bind_fold(op.fold, _fold_ctx(static))
+            proto = protos[static["mode"]]
+            if proto == "ring_fold":
+                return executor.run(
+                    "ring_fold", bound, operand, statics, axis=axis, world=w,
+                    out_dtype=out_dtype, collective_id=cid)
+            # one_shot: the executor's low-latency put protocol moves the
+            # chunks (pure data movement); the fold chain replays
+            # host-side in the same ring-distance order the graph uses
+            gathered = executor.run(
+                proto, None, operand, (), axis=axis, world=w,
+                out_dtype=operand.dtype, collective_id=cid)
+            me = lax.axis_index(axis)
+            m = operand.shape[0]
+            state = bound.init(operand, *statics)
+            for s in range(w):
+                owner = lax.rem(me - s + w, w)
+                chunk = _slice_rows(gathered, owner * m, m)
+                state = bound.fold(state, chunk, owner, *statics)
+            return bound.finalize(state, *statics).astype(out_dtype)
+
+        return kernel_fwd
+
     def kernel_fwd(static, operand, *statics):
         axis = static["axis"]
+        if isinstance(axis, (tuple, list)):
+            inner, outer = axis
+            world = (lax.axis_size(inner), lax.axis_size(outer))
+        else:
+            world = lax.axis_size(axis)
         return executor.run(
             protos[static["mode"]], op.tile, operand, statics, axis=axis,
-            world=lax.axis_size(axis),
+            world=world,
             out_dtype=_out_dtype(static, operand), collective_id=cid)
 
     return kernel_fwd
@@ -355,6 +541,49 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
             return (d.astype(operand.dtype),)
 
         return a2a_bwd
+    if op.fold is not None:
+
+        def fold_bwd(static, res, g):
+            # jax.vjp THROUGH THE FOLD CHAIN: stack-gather the riding
+            # chunks once (one ring of the residuals), differentiate the
+            # local replay of init -> fold^W -> finalize, then send every
+            # owner's chunk cotangent home on the dual RS ring. Statics
+            # (e.g. the resident q) are rank-private: their cotangent is
+            # local, no reduction.
+            operand, *statics = res
+            axis = static["axis"]
+            ctx = _fold_ctx(static)
+            ft = op.fold
+            out_dtype = _out_dtype(static, operand)
+            w = lax.axis_size(axis)
+            me = lax.axis_index(axis)
+            stacked = ov.stack_gather_pipeline(operand, axis,
+                                               transport="ring")
+
+            def local_fn(stk, *st):
+                state = ft.init(ctx, lax.index_in_dim(stk, 0, 0, False), *st)
+                for s in range(w):
+                    owner = lax.rem(me - s + w, w)
+                    chunk = lax.dynamic_index_in_dim(stk, owner, 0,
+                                                     keepdims=False)
+                    state = ft.fold(ctx, state, chunk, owner, *st)
+                return ft.finalize(ctx, state, *st).astype(out_dtype)
+
+            _, vjp = jax.vjp(local_fn, stacked, *statics)
+            grads = vjp(g)
+            d_stk = grads[0]  # (W, chunk): my contribution to EVERY owner
+
+            def compute_block(blk, s):
+                del s
+                return lax.dynamic_index_in_dim(
+                    d_stk, blk, 0, keepdims=False).astype(jnp.float32)
+
+            d_chunk = ov.rs_pipeline(
+                compute_block, axis, transport="ring").astype(operand.dtype)
+            return (d_chunk,) + tuple(
+                d.astype(s.dtype) for d, s in zip(grads[1:], statics))
+
+        return fold_bwd
     tile = op.tile_fn()
 
     def tile_cast(out_dtype, chunk, *statics):
@@ -369,16 +598,16 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
             tile_m, rest = _tile_rows(op, operand, statics)
             zeros = jnp.zeros(operand.shape, operand.dtype)
 
-            # operand gradient: rides the DUAL RS ring (the transpose
-            # partner's schedule) — O(1) permute buffers.
+            # operand gradient: rides the DUAL RS schedule (the transpose
+            # partner's — ring, or two-level for compound-axis ops) —
+            # O(1) permute buffers.
             def compute_block(blk, s):
                 g_blk = _slice_rows(g, blk * tile_m, tile_m)
                 _, vjp = jax.vjp(
                     lambda xc: tile_cast(out_dtype, xc, *statics), zeros)
                 return vjp(g_blk)[0].astype(jnp.float32)
 
-            d_op = ov.rs_pipeline(
-                compute_block, axis, transport="ring").astype(operand.dtype)
+            d_op = _dual_rs(compute_block, axis).astype(operand.dtype)
             if not statics:
                 return (d_op,)
 
@@ -392,8 +621,7 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
                              for d, gi in zip(ds, vjp(g_o)))
 
             ds0 = tuple(jnp.zeros(s.shape, jnp.float32) for s in statics)
-            d_statics = ov.ag_pipeline((operand,), fold, ds0, axis,
-                                       transport="ring")
+            d_statics = _dual_ag((operand,), fold, ds0, axis)
             return (d_op,) + tuple(
                 d.astype(s.dtype) for d, s in zip(d_statics, statics))
 
@@ -403,13 +631,13 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
         operand, *statics = res
         axis = static["axis"]
         out_dtype = _out_dtype(static, operand)
-        w = lax.axis_size(axis)
+        w = _axis_world(axis)
         m_blk = operand.shape[0] // w
 
-        # ONE dual AG ring of the cotangent block: each arriving g chunk
-        # yields this rank's operand-block gradient (scattered at the
-        # owner's rows) AND its statics contribution — both vjps of the
-        # tile at the true local primal block.
+        # ONE dual AG schedule of the cotangent block: each arriving g
+        # chunk yields this rank's operand-block gradient (scattered at
+        # the owner's rows) AND its statics contribution — both vjps of
+        # the tile at the true local primal block.
         def fold(carry, bufs, s, owner):
             d_opnd, ds = carry
             blk_val = _slice_rows(operand, owner * m_blk, m_blk)
@@ -425,8 +653,7 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
 
         init = (jnp.zeros(operand.shape, jnp.float32),
                 tuple(jnp.zeros(s.shape, jnp.float32) for s in statics))
-        d_opnd, d_statics = ov.ag_pipeline((g,), fold, init, axis,
-                                           transport="ring")
+        d_opnd, d_statics = _dual_ag((g,), fold, init, axis)
         return (d_opnd.astype(operand.dtype),) + tuple(
             d.astype(s.dtype) for d, s in zip(d_statics, statics))
 
@@ -460,20 +687,26 @@ class BoundOp:
     def __repr__(self):
         return f"<ops.{self.name} kind={self.decl.kind}>"
 
-    def __call__(self, *tensors, axis: str, policy=None, mode: Optional[str] = None,
+    def __call__(self, *tensors, axis, policy=None, mode: Optional[str] = None,
                  backend: Optional[str] = None, chunks: Optional[int] = None,
-                 out_dtype=None):
+                 out_dtype=None, **extras):
+        """``axis`` is one mesh-axis name, or ``(inner, outer)`` for
+        two-level (compound-mesh) ops. ``extras`` are op-specific static
+        values (hashable — e.g. ring attention's ``causal``/``scale``),
+        handed to fold declarations as their ``ctx``."""
         if policy is not None:
             r = policy.resolve(self.name)
             mode = mode or r.mode
             backend = backend or r.backend
             chunks = r.chunks if chunks is None else chunks
+        if isinstance(axis, list):
+            axis = tuple(axis)
         mode = ov.resolve_mode(self.name, mode or self.decl.default)
         out_dtype = jnp.dtype(out_dtype or tensors[0].dtype)
         out = ov.dispatch(
             self.name, *tensors, axis=axis, mode=mode,
             chunks=max(1, chunks or 1), backend=backend or "graph",
-            out_dtype=out_dtype.name)
+            out_dtype=out_dtype.name, **extras)
         if self.decl.checkpoint_tag:
             out = checkpoint_name(out, self.decl.checkpoint_tag)
         return out

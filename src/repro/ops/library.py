@@ -13,10 +13,11 @@ cost for a new kernel lowering.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .authoring import OverlapOp, declare
+from .authoring import FoldTile, OverlapOp, declare
 
 
 def _dot_tile(chunk, w):
@@ -137,4 +138,140 @@ flash_decode = declare(OverlapOp(
     baseline="xla",
     default="one_shot",
     kernel_protocols=(("one_shot", "one_shot_ag"),),
+))
+
+
+# ---------------------------------------------------------------------------
+# Ring attention — context parallelism as a STATEFUL FOLD declaration.
+# The riding operand is the packed K/V chunk (concatenated on the last
+# axis); the resident static is q; the fold state is the blockwise
+# online-softmax carry (m, l, acc) in f32. Kernel lowerings: ring ->
+# the executor's carry-passing ring_fold protocol; one_shot -> the
+# low-latency gather with the fold chain replayed host-side. The
+# backward is jax.vjp through the fold chain (authoring derives it).
+# ``ctx`` extras: axis (rank offsets for the causal mask), causal, scale.
+# ---------------------------------------------------------------------------
+
+
+def _attn_init(ctx, packed, q):
+    del ctx, packed
+    b, h, s_loc, d = q.shape
+    return (
+        jnp.full((b, h, s_loc), -1e30, jnp.float32),  # running max
+        jnp.zeros((b, h, s_loc), jnp.float32),  # running sum
+        jnp.zeros((b, h, s_loc, d), jnp.float32),  # weighted-value acc
+    )
+
+
+def _attn_fold(ctx, state, packed, owner, q):
+    b, h, s_loc, d = q.shape
+    hkv = packed.shape[1]
+    group = h // hkv
+    qf = q.astype(jnp.float32) * ctx["scale"]
+    m, l, acc = state
+    buf_k, buf_v = packed[..., :d], packed[..., d:]
+    kk = jnp.repeat(buf_k.astype(jnp.float32), group, axis=1)
+    vv = jnp.repeat(buf_v.astype(jnp.float32), group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kk)
+    if ctx["causal"]:
+        me = lax.axis_index(ctx["axis"])
+        rows = me * s_loc + jnp.arange(s_loc)  # global q positions
+        cols = owner * packed.shape[2] + jnp.arange(packed.shape[2])
+        mask = rows[:, None] >= cols[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l = l * alpha + jnp.sum(p, axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+    return m_new, l, acc
+
+
+def _attn_finalize(ctx, state, q):
+    del ctx, q
+    _, l, acc = state
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def _attn_baseline(static, packed, q):
+    """Monolithic baseline: gather the full K/V, one softmax pass."""
+    axis = static["axis"]
+    b, h, s_loc, d = q.shape
+    group = h // packed.shape[1]
+    kvf = jnp.repeat(
+        lax.all_gather(packed, axis, axis=2, tiled=True).astype(jnp.float32),
+        group, axis=1)
+    kf, vf = kvf[..., :d], kvf[..., d:]
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32) * static["scale"], kf)
+    if static["causal"]:
+        me = lax.axis_index(axis)
+        s = kf.shape[2]
+        rows_g = me * s_loc + jnp.arange(s_loc)
+        mask = rows_g[:, None] >= jnp.arange(s)[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(jnp.dtype(static.get("out_dtype") or q.dtype))
+
+
+ring_attention = declare(OverlapOp(
+    name="ring_attention",
+    kind="attn",
+    fold=FoldTile(init=_attn_init, fold=_attn_fold, finalize=_attn_finalize),
+    transports=("ring", "one_shot"),
+    baseline="none",
+    default="ring",
+    kernel_protocols=(("ring", "ring_fold"), ("one_shot", "one_shot_ag")),
+    baseline_fwd=_attn_baseline,
+))
+
+
+# ---------------------------------------------------------------------------
+# 2-level (Fig. 10) collective matmuls — compound (pod x ring-in-pod)
+# meshes, called with axis=(inner, outer). Graph lowers through the
+# engine's two_level_*_pipeline schedules; kernel through the executor's
+# two-axis protocols (pod-local one_shot exchange concurrent with the
+# inter-pod ring). The derived backward rides the two-level duals.
+# ---------------------------------------------------------------------------
+
+
+def _ag_matmul_2level_baseline(operand, statics, axis, out_dtype):
+    """Nested XLA all_gathers (inner then outer: owner-major rows) + dot."""
+    inner, outer = axis
+    a_full = lax.all_gather(
+        lax.all_gather(operand, inner, tiled=True), outer, tiled=True)
+    return jnp.dot(a_full, statics[0],
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _matmul_rs_2level_baseline(operand, statics, axis, out_dtype):
+    """dot + nested psum_scatters (outer then inner: my linearized block)."""
+    inner, outer = axis
+    partial = jnp.dot(operand, statics[0], preferred_element_type=jnp.float32)
+    p = lax.psum_scatter(partial, outer, scatter_dimension=0, tiled=True)
+    return lax.psum_scatter(
+        p, inner, scatter_dimension=0, tiled=True).astype(out_dtype)
+
+
+ag_matmul_2level = declare(OverlapOp(
+    name="ag_matmul_2level",
+    kind="ag",
+    tile=_dot_tile,
+    transports=("two_level",),
+    default="two_level",
+    kernel_protocols=(("two_level", "two_level_ag"),),
+    transpose="matmul_rs_2level",
+    baseline_fwd=_ag_matmul_2level_baseline,
+))
+
+matmul_rs_2level = declare(OverlapOp(
+    name="matmul_rs_2level",
+    kind="rs",
+    tile=_dot_tile,
+    transports=("two_level",),
+    default="two_level",
+    kernel_protocols=(("two_level", "two_level_rs"),),
+    transpose="ag_matmul_2level",
+    baseline_fwd=_matmul_rs_2level_baseline,
 ))

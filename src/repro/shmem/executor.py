@@ -51,6 +51,27 @@ Protocols
                link direction carries half the bytes. Degrades to
                ring_ag when W < 3 or the chunk has odd rows (mirroring
                the graph lowering's degrade).
+  ring_fold    carry-passing ring: the same double-buffered workspace +
+               credit flow as ring_ag, but each arriving chunk is FOLDED
+               into resident (f32) state instead of written to an output
+               strip — the protocol behind ring attention's online
+               softmax (m, l, acc) and any chunk-centric reduction that
+               carries state across chunks. ``tile`` is a
+               :class:`FoldTile` (init / fold / finalize), not a pure
+               per-chunk function.
+  two_level_ag two-axis (pod x ring) AllGather (Fig. 10): at each outer
+               step the current region chunk is pushed over the slow
+               inter-pod ring (double-buffered + credit flow) WHILE a
+               pod-local one_shot exchange distributes it to every pod
+               peer (per-source arrival signals); ``tile`` consumes all
+               Wi chunks of the region per outer step. Takes
+               ``axis=(inner, outer)`` and ``world=(Wi, Wo)``.
+  two_level_rs two-axis GEMM+ReduceScatter (Fig. 10 / Alg. 5): per outer
+               step the Wi partials for the scheduled pod region are
+               computed and pushed up-front pod-locally (one_shot RS
+               structure), reduced in f32, then the pod-reduced
+               accumulator rides the inter-pod ring (peers' regions
+               first, own pod last). Same two-axis calling convention.
 
 Backends (``repro.shmem.default_backend``)
 ------------------------------------------
@@ -71,12 +92,20 @@ output's leading dim defines the per-owner strip written into the
 gathered output; for the RS protocols the output is the partial for one
 output block (accumulated across ranks in f32).
 
+``ring_fold`` instead takes a :class:`FoldTile` — three pure functions:
+``init(chunk, *statics) -> state`` builds the resident (f32) state
+pytree from shapes, ``fold(state, chunk, owner, *statics) -> state``
+folds one arriving chunk (``owner`` is the traced global rank whose data
+the chunk is), and ``finalize(state, *statics) -> out`` produces the
+output once all W chunks have been folded.
+
 Scale note (pltpu): refs are whole-shard (VMEM-resident per step). For
 production shapes, wrap ``tile`` in ``pltpu.emit_pipeline`` tiling; the
 signal protocols are unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, Optional, Sequence
 
@@ -92,7 +121,33 @@ from . import emulated as em
 Array = jax.Array
 
 PROTOCOLS = ("ring_ag", "one_shot_ag", "push_rs", "one_shot_rs",
-             "one_shot_a2a", "bidir_ring_ag")
+             "one_shot_a2a", "bidir_ring_ag", "ring_fold",
+             "two_level_ag", "two_level_rs")
+
+# Protocols that compose TWO mesh axes (pod x ring): axis=(inner, outer),
+# world=(Wi, Wo); the linearized PE id is outer * Wi + inner.
+TWO_LEVEL_PROTOCOLS = ("two_level_ag", "two_level_rs")
+
+
+@dataclasses.dataclass(frozen=True)
+class FoldTile:
+    """A stateful fold tile for the carry-passing protocols.
+
+    init      ``init(chunk, *statics) -> state`` — the resident (f32)
+              state pytree, built from the chunk/static shapes (the
+              chunk VALUE must not contribute: every chunk, own one
+              included, is folded through ``fold``).
+    fold      ``fold(state, chunk, owner, *statics) -> state`` — fold
+              one arriving chunk; ``owner`` is the traced global rank
+              whose data the chunk is (causal masks and swizzles key on
+              it).
+    finalize  ``finalize(state, *statics) -> out`` — the output once
+              all W chunks are folded.
+    """
+
+    init: Callable
+    fold: Callable
+    finalize: Callable
 
 
 def _identity(x):
@@ -312,6 +367,169 @@ def _one_shot_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid
     for tgt, partial in partials:  # all puts up-front, no waits between
         ctx.putmem_signal_nbi(partial, tgt, buf="ws", slot=me, sig="recv")
     return _rs_reduce(ctx, ts, world, out_dtype)
+
+
+def _ring_fold_emulated(fold, chunk, statics, *, axis, world, out_dtype, cid):
+    """Carry-passing ring: ring_ag's slot parity / 1 initial credit /
+    grant-after-consume communication, but each arriving chunk is folded
+    into resident f32 state instead of written to an output strip."""
+    assert isinstance(fold, FoldTile), fold
+    me = lax.axis_index(axis)
+    left = lax.rem(me + world - 1, world)
+    right = lax.rem(me + 1, world)
+
+    ctx = em.ShmemCtx(axis, world, cid)
+    ctx.barrier_all()
+    # Initially my right neighbor's slot 1 is free: grant 1 credit.
+    if world > 1:
+        ctx.signal_op(left, sig="cap")
+
+    cur = chunk
+    state = fold.init(chunk, *statics)
+    for s in range(world):
+        if s != world - 1:
+            # producer: wait for a free slot at the right neighbor, then
+            # putmem_signal my current chunk into their next slot.
+            ctx.signal_wait_until(sig="cap", value=1)
+            ctx.putmem_signal_nbi(cur, right, buf="ws", slot=(s + 1) % 2,
+                                  sig="recv")
+        # consumer: chunk of step s is rank (me - s)'s data — fold it
+        # into the resident state while the next chunk's DMA is in flight.
+        state = fold.fold(state, cur, lax.rem(me - s + world, world), *statics)
+        if s != world - 1:
+            cur = ctx.wait_read(chunk.shape, chunk.dtype, buf="ws",
+                                slot=(s + 1) % 2, sig="recv")
+            if s < world - 2:
+                ctx.signal_op(left, sig="cap")
+    ctx.barrier_all()
+    return fold.finalize(state, *statics).astype(out_dtype)
+
+
+def _two_level_pe(axis, world):
+    """((inner, outer), (Wi, Wo)) -> pod/ring coords + outer-ring peers
+    (linearized pe = oid * Wi + iid; the outer ring preserves iid)."""
+    inner, outer = axis
+    wi, wo = world
+    iid = lax.axis_index(inner)
+    oid = lax.axis_index(outer)
+    left = lax.rem(oid + wo - 1, wo) * wi + iid
+    right = lax.rem(oid + 1, wo) * wi + iid
+    return iid, oid, left, right
+
+
+def _two_level_ag_emulated(tile, chunk, statics, *, axis, world, out_dtype,
+                           cid):
+    """Two-axis AG (Fig. 10): the current region chunk rides the slow
+    inter-pod ring (double-buffered "ows" workspace + credit flow,
+    exactly ring_ag's protocol over pods) while a pod-local one_shot
+    exchange ("pws", per-source arrival signals, slot parity) hands it
+    to every pod peer; the tile consumes all Wi region chunks per outer
+    step. The inter-pod hop of region so+1 overlaps region so's pod
+    exchange + compute."""
+    wi, wo = world
+    w_all = wi * wo
+    iid, oid, left, right = _two_level_pe(axis, world)
+    ts = _tile_struct(tile, chunk, statics)
+    tile_m = ts.shape[0]
+
+    ctx = em.ShmemCtx((axis[1], axis[0]), w_all, cid)  # pe = oid * wi + iid
+    ctx.barrier_all()
+    # outer ring: my left-pod peer's first send may land immediately
+    if wo > 1:
+        ctx.signal_op(left, sig="cap")
+
+    cur = chunk
+    out = jnp.zeros((tile_m * w_all,) + ts.shape[1:], out_dtype)
+    for so in range(wo):
+        region = lax.rem(oid - so + wo, wo)
+        if so != wo - 1:
+            # slow-link hop of the NEXT region overlaps this region's
+            # pod-local exchange and compute (ring_ag credits over pods)
+            ctx.signal_wait_until(sig="cap", value=1)
+            ctx.putmem_signal_nbi(cur, right, buf="ows", slot=(so + 1) % 2,
+                                  sig="orecv")
+        # pod-local one_shot: all Wi puts up-front (self included, so the
+        # slots land symmetrically). The arrival signal carries the
+        # sender's ring OFFSET from the destination — a per-source
+        # signal, so a pod peer racing one step ahead can never satisfy
+        # this step's wait for a straggler's chunk (slot parity keeps
+        # the two in-flight steps' data apart).
+        for off in range(wi):
+            tgt = oid * wi + lax.rem(iid + off, wi)
+            ctx.putmem_signal_nbi(cur, tgt, buf="pws",
+                                  slot=(so % 2) * wi + iid,
+                                  sig=f"prcv{off}")
+        for d in range(wi):
+            ctx.signal_wait_until(sig=f"prcv{d}", value=1)
+            src = lax.rem(iid - d + wi, wi)
+            shard = ctx.read_symmetric(chunk.shape, chunk.dtype, buf="pws",
+                                       slot=(so % 2) * wi + src)
+            owner = region * wi + src
+            out = update_rows(out, tile(shard, *statics).astype(out_dtype),
+                              owner * tile_m)
+        if so != wo - 1:
+            cur = ctx.wait_read(chunk.shape, chunk.dtype, buf="ows",
+                                slot=(so + 1) % 2, sig="orecv")
+            if so < wo - 2:
+                ctx.signal_op(left, sig="cap")
+    ctx.barrier_all()
+    return out
+
+
+def _two_level_rs_emulated(tile, operand, statics, *, axis, world, out_dtype,
+                           cid):
+    """Two-axis RS (Fig. 10 / Alg. 5): per outer step (pod regions
+    peers-first, own pod last) the Wi partials for the region's blocks
+    are computed and pushed up-front pod-locally (one_shot RS structure,
+    per-source signals), reduced in f32, then the pod-reduced
+    accumulator rides the inter-pod ring — the slow-link transfer
+    overlaps the next region's Wi computes."""
+    wi, wo = world
+    w_all = wi * wo
+    iid, oid, left, right = _two_level_pe(axis, world)
+    m_blk = operand.shape[0] // w_all
+    ts = _tile_struct(tile, _block(operand, 0, m_blk), statics)
+
+    ctx = em.ShmemCtx((axis[1], axis[0]), w_all, cid)  # pe = oid * wi + iid
+    ctx.barrier_all()
+    if wo > 1:
+        ctx.signal_op(left, sig="cap")
+
+    acc = None
+    for so in range(wo):
+        region = lax.rem(oid - so - 1 + 2 * wo, wo)
+        # pod-local one_shot RS: all Wi partials computed and pushed
+        # up-front (own inner block included, so slots land symmetrically)
+        for off in range(wi):
+            tgt_i = lax.rem(iid + off, wi)
+            blk = region * wi + tgt_i
+            partial = tile(_block(operand, blk, m_blk),
+                           *statics).astype(jnp.float32)
+            ctx.putmem_signal_nbi(partial, oid * wi + tgt_i, buf="pws",
+                                  slot=(so % 2) * wi + iid,
+                                  sig=f"prcv{off}")
+        pod = jnp.zeros(ts.shape, jnp.float32)
+        for d in range(wi):
+            ctx.signal_wait_until(sig=f"prcv{d}", value=1)
+            src = lax.rem(iid - d + wi, wi)
+            part = ctx.read_symmetric(ts.shape, jnp.float32, buf="pws",
+                                      slot=(so % 2) * wi + src)
+            pod = pod + part
+        if so > 0:
+            # the inter-pod accumulator of this region arrives from the
+            # left pod (its step so-1 covered the same region)
+            prev = ctx.wait_read(ts.shape, jnp.float32, buf="ows",
+                                 slot=so % 2, sig="orecv")
+            pod = pod + prev
+            if so < wo - 1:
+                ctx.signal_op(left, sig="cap")
+        acc = pod
+        if so != wo - 1:
+            ctx.signal_wait_until(sig="cap", value=1)
+            ctx.putmem_signal_nbi(acc, right, buf="ows", slot=(so + 1) % 2,
+                                  sig="orecv")
+    ctx.barrier_all()
+    return acc.astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -761,6 +979,298 @@ def _one_shot_a2a_pltpu(tile, xs, statics, *, axis, world, out_dtype, cid):
     return outs[0] if isinstance(outs, (tuple, list)) else outs
 
 
+def _ring_fold_body(*refs, fold, axis, world, n_static, n_state,
+                    state_treedef, out_dtype):
+    (chunk_ref, *rest) = refs
+    static_refs = rest[:n_static]
+    o_ref, ws_ref = rest[n_static], rest[n_static + 1]
+    chunk_vmem = rest[n_static + 2]
+    static_vmems = rest[n_static + 3:2 * n_static + 3]
+    state_vmems = rest[2 * n_static + 3:2 * n_static + 3 + n_state]
+    o_vmem = rest[2 * n_static + 3 + n_state]
+    local_sem, send_sem, recv_sem, cap_sem = rest[2 * n_static + 4 + n_state:]
+
+    me = lax.axis_index(axis)
+    left = lax.rem(me + world - 1, world)
+    right = lax.rem(me + 1, world)
+
+    tpu_backend.barrier_all(axis, world)
+    _stage((chunk_ref,) + tuple(static_refs),
+           (ws_ref.at[0],) + tuple(static_vmems), local_sem)
+    # Initially my right neighbor's slot 1 is free: grant 1 credit.
+    tpu_backend.signal_op(cap_sem, left, axis=axis)
+
+    def statics():
+        return [v[...] for v in static_vmems]
+
+    def write_state(state):
+        for sv, leaf in zip(state_vmems, jax.tree_util.tree_leaves(state)):
+            sv[...] = leaf
+
+    def read_state():
+        return jax.tree_util.tree_unflatten(
+            state_treedef, [sv[...] for sv in state_vmems])
+
+    # resident f32 fold state, carried across steps in VMEM scratch
+    # (chunk_vmem holds my own chunk after this — step 0 reuses it)
+    _stage((ws_ref.at[0],), (chunk_vmem,), local_sem)
+    write_state(fold.init(chunk_vmem[...], *statics()))
+
+    for s in range(world):
+        slot = s % 2
+        send = None
+        if s != world - 1:
+            tpu_backend.signal_wait_until(cap_sem, 1)
+            send = tpu_backend.putmem_signal_nbi(
+                ws_ref.at[slot], ws_ref.at[(s + 1) % 2],
+                send_sem, recv_sem, right, axis=axis)
+        # the fold of chunk s overlaps the in-flight remote DMA of s+1;
+        # s=0's chunk is already VMEM-resident from the init staging
+        if s != 0:
+            _stage((ws_ref.at[slot],), (chunk_vmem,), local_sem)
+        owner = lax.rem(me - s + world, world)
+        write_state(fold.fold(read_state(), chunk_vmem[...], owner, *statics()))
+        if send is not None:
+            send.wait()
+        if s < world - 2:
+            tpu_backend.signal_op(cap_sem, left, axis=axis)
+
+    o_vmem[...] = fold.finalize(read_state(), *statics()).astype(out_dtype)
+    _stage((o_vmem,), (o_ref,), local_sem)
+
+
+def _ring_fold_pltpu(fold, chunk, statics, *, axis, world, out_dtype, cid):
+    assert isinstance(fold, FoldTile), fold
+    chunk_struct = jax.ShapeDtypeStruct(chunk.shape, chunk.dtype)
+    state_struct = jax.eval_shape(fold.init, chunk_struct, *statics)
+    state_leaves, state_treedef = jax.tree_util.tree_flatten(state_struct)
+    out_struct = jax.eval_shape(fold.finalize, state_struct, *statics)
+    body = functools.partial(
+        _ring_fold_body, fold=fold, axis=axis, world=world,
+        n_static=len(statics), n_state=len(state_leaves),
+        state_treedef=state_treedef, out_dtype=out_dtype)
+    out, _ws = pl.pallas_call(
+        body,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + len(statics)),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 2,
+        out_shape=[
+            jax.ShapeDtypeStruct(out_struct.shape, out_dtype),
+            jax.ShapeDtypeStruct((2,) + chunk.shape, chunk.dtype),  # ring ws
+        ],
+        scratch_shapes=[pltpu.VMEM(chunk.shape, chunk.dtype)]
+        + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
+        + [pltpu.VMEM(leaf.shape, leaf.dtype) for leaf in state_leaves]
+        + [pltpu.VMEM(out_struct.shape, out_dtype),
+           pltpu.SemaphoreType.DMA,
+           pltpu.SemaphoreType.DMA,
+           pltpu.SemaphoreType.DMA,
+           pltpu.SemaphoreType.REGULAR],
+        compiler_params=pltpu.CompilerParams(collective_id=cid),
+    )(chunk, *statics)
+    return out
+
+
+def _two_level_ag_body(*refs, tile, axes, worlds, n_static, tile_m, out_dtype):
+    # axes/worlds ordered (outer, inner), matching the 2D device ids
+    outer, inner = axes
+    wo, wi = worlds
+    (chunk_ref, *rest) = refs
+    static_refs = rest[:n_static]
+    o_ref, pws_ref, ows_ref = rest[n_static:n_static + 3]
+    chunk_vmem = rest[n_static + 3]
+    static_vmems = rest[n_static + 4:2 * n_static + 4]
+    o_vmem = rest[2 * n_static + 4]
+    (local_sem, psend, precv, osend, orecv, cap_sem) = rest[2 * n_static + 5:]
+
+    iid = lax.axis_index(inner)
+    oid = lax.axis_index(outer)
+    left = lax.rem(oid + wo - 1, wo)
+    right = lax.rem(oid + 1, wo)
+
+    tpu_backend.barrier_all_grid(axes, worlds)
+    _stage((chunk_ref,) + tuple(static_refs),
+           (ows_ref.at[0],) + tuple(static_vmems), local_sem)
+    if wo > 1:
+        tpu_backend.signal_op(cap_sem, (left, iid))
+
+    for so in range(wo):
+        slot = so % 2
+        region = lax.rem(oid - so + wo, wo)
+        send_o = None
+        if so != wo - 1:
+            # the slow-link hop of region so+1 overlaps this region's
+            # pod-local exchange + compute (ring_ag credits over pods)
+            tpu_backend.signal_wait_until(cap_sem, 1)
+            send_o = tpu_backend.putmem_signal_nbi(
+                ows_ref.at[slot], ows_ref.at[(so + 1) % 2],
+                osend, orecv, (right, iid))
+        # pod-local one_shot: local copy for self + Wi-1 puts, all issued
+        # before any wait (the emulated body's per-source signals become
+        # the SPMD-symmetric descriptor waits here)
+        lc = pltpu.make_async_copy(
+            ows_ref.at[slot], pws_ref.at[slot * wi + iid], local_sem)
+        lc.start()
+        sends = []
+        for off in range(1, wi):
+            sends.append(tpu_backend.putmem_signal_nbi(
+                ows_ref.at[slot], pws_ref.at[slot * wi + iid],
+                psend, precv, (oid, lax.rem(iid + off, wi))))
+        lc.wait()
+        tpu_backend.quiet(*sends)
+        for d in range(wi):
+            src = lax.rem(iid - d + wi, wi)
+            _stage((pws_ref.at[slot * wi + src],), (chunk_vmem,), local_sem)
+            o_vmem[...] = tile(
+                chunk_vmem[...], *[v[...] for v in static_vmems]
+            ).astype(out_dtype)
+            owner = region * wi + src
+            _stage((o_vmem,), (o_ref.at[pl.ds(owner * tile_m, tile_m)],),
+                   local_sem)
+        if send_o is not None:
+            send_o.wait()
+        if so < wo - 2:
+            tpu_backend.signal_op(cap_sem, (left, iid))
+
+
+def _two_level_ag_pltpu(tile, chunk, statics, *, axis, world, out_dtype, cid):
+    inner, outer = axis
+    wi, wo = world
+    ts = _tile_struct(tile, chunk, statics)
+    body = functools.partial(
+        _two_level_ag_body, tile=tile, axes=(outer, inner), worlds=(wo, wi),
+        n_static=len(statics), tile_m=ts.shape[0], out_dtype=out_dtype)
+    out, _pws, _ows = pl.pallas_call(
+        body,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + len(statics)),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((ts.shape[0] * wi * wo,) + ts.shape[1:],
+                                 out_dtype),
+            jax.ShapeDtypeStruct((2 * wi,) + chunk.shape, chunk.dtype),  # pod
+            jax.ShapeDtypeStruct((2,) + chunk.shape, chunk.dtype),  # outer
+        ],
+        scratch_shapes=[pltpu.VMEM(chunk.shape, chunk.dtype)]
+        + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
+        + [pltpu.VMEM(ts.shape, out_dtype),
+           pltpu.SemaphoreType.DMA,   # local staging
+           pltpu.SemaphoreType.DMA,   # pod send
+           pltpu.SemaphoreType.DMA,   # pod recv
+           pltpu.SemaphoreType.DMA,   # outer send
+           pltpu.SemaphoreType.DMA,   # outer recv
+           pltpu.SemaphoreType.REGULAR],  # outer credits
+        compiler_params=pltpu.CompilerParams(collective_id=cid),
+    )(chunk, *statics)
+    return out
+
+
+def _two_level_rs_body(*refs, tile, axes, worlds, n_static, m_blk, out_dtype):
+    outer, inner = axes
+    wo, wi = worlds
+    (a_ref, *rest) = refs
+    static_refs = rest[:n_static]
+    o_ref, pws_ref, ows_ref, stage_ref = rest[n_static:n_static + 4]
+    a_vmem = rest[n_static + 4]
+    static_vmems = rest[n_static + 5:2 * n_static + 5]
+    p_vmem = rest[2 * n_static + 5]       # f32 partial / pod landing
+    acc_vmem = rest[2 * n_static + 6]     # f32 inter-pod accumulator
+    o_vmem = rest[2 * n_static + 7]
+    (local_sem, psend, precv, osend, orecv, cap_sem) = rest[2 * n_static + 8:]
+
+    iid = lax.axis_index(inner)
+    oid = lax.axis_index(outer)
+    left = lax.rem(oid + wo - 1, wo)
+    right = lax.rem(oid + 1, wo)
+
+    tpu_backend.barrier_all_grid(axes, worlds)
+    if n_static:
+        _stage(tuple(static_refs), tuple(static_vmems), local_sem)
+    if wo > 1:
+        tpu_backend.signal_op(cap_sem, (left, iid))
+
+    for so in range(wo):
+        slot = so % 2
+        region = lax.rem(oid - so - 1 + 2 * wo, wo)
+        # pod-local one_shot RS: all Wi partials into local staging first
+        for off in range(wi):
+            blk = region * wi + lax.rem(iid + off, wi)
+            _stage((a_ref.at[pl.ds(blk * m_blk, m_blk)],), (a_vmem,),
+                   local_sem)
+            p_vmem[...] = tile(
+                a_vmem[...], *[v[...] for v in static_vmems]
+            ).astype(jnp.float32)
+            _stage((p_vmem,), (stage_ref.at[off],), local_sem)
+        lc = pltpu.make_async_copy(
+            stage_ref.at[0], pws_ref.at[slot * wi + iid], local_sem)
+        lc.start()
+        sends = []
+        for off in range(1, wi):
+            sends.append(tpu_backend.putmem_signal_nbi(
+                stage_ref.at[off], pws_ref.at[slot * wi + iid],
+                psend, precv, (oid, lax.rem(iid + off, wi))))
+        lc.wait()
+        tpu_backend.quiet(*sends)
+        acc = jnp.zeros(p_vmem.shape, jnp.float32)
+        for d in range(wi):
+            src = lax.rem(iid - d + wi, wi)
+            _stage((pws_ref.at[slot * wi + src],), (p_vmem,), local_sem)
+            acc = acc + p_vmem[...]
+        if so > 0:
+            # this region's inter-pod accumulator arrived from the left
+            # pod; its landing was ordered by the previous step's send
+            # wait (SPMD symmetry)
+            _stage((ows_ref.at[slot],), (acc_vmem,), local_sem)
+            acc = acc + acc_vmem[...]
+            if so < wo - 1:
+                tpu_backend.signal_op(cap_sem, (left, iid))
+        acc_vmem[...] = acc
+        if so != wo - 1:
+            tpu_backend.signal_wait_until(cap_sem, 1)
+            send = tpu_backend.putmem_signal_nbi(
+                acc_vmem, ows_ref.at[(so + 1) % 2], osend, orecv,
+                (right, iid))
+            send.wait()
+
+    o_vmem[...] = acc_vmem[...].astype(out_dtype)
+    _stage((o_vmem,), (o_ref,), local_sem)
+
+
+def _two_level_rs_pltpu(tile, operand, statics, *, axis, world, out_dtype,
+                        cid):
+    inner, outer = axis
+    wi, wo = world
+    m_blk = operand.shape[0] // (wi * wo)
+    blk_struct = jax.ShapeDtypeStruct((m_blk,) + operand.shape[1:],
+                                      operand.dtype)
+    ts = _tile_struct(tile, blk_struct, statics)
+    body = functools.partial(
+        _two_level_rs_body, tile=tile, axes=(outer, inner), worlds=(wo, wi),
+        n_static=len(statics), m_blk=m_blk, out_dtype=out_dtype)
+    outs = pl.pallas_call(
+        body,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + len(statics)),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct(ts.shape, out_dtype),
+            jax.ShapeDtypeStruct((2 * wi,) + ts.shape, jnp.float32),  # pod
+            jax.ShapeDtypeStruct((2,) + ts.shape, jnp.float32),  # outer
+            jax.ShapeDtypeStruct((wi,) + ts.shape, jnp.float32),  # staging
+        ],
+        scratch_shapes=[pltpu.VMEM(blk_struct.shape, operand.dtype)]
+        + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
+        + [pltpu.VMEM(ts.shape, jnp.float32),
+           pltpu.VMEM(ts.shape, jnp.float32),
+           pltpu.VMEM(ts.shape, out_dtype),
+           pltpu.SemaphoreType.DMA,   # local staging
+           pltpu.SemaphoreType.DMA,   # pod send
+           pltpu.SemaphoreType.DMA,   # pod recv
+           pltpu.SemaphoreType.DMA,   # outer send
+           pltpu.SemaphoreType.DMA,   # outer recv
+           pltpu.SemaphoreType.REGULAR],  # outer credits
+        compiler_params=pltpu.CompilerParams(collective_id=cid),
+    )(operand, *statics)
+    return outs[0]
+
+
 # ---------------------------------------------------------------------------
 # Dispatch
 # ---------------------------------------------------------------------------
@@ -772,6 +1282,9 @@ _EMULATED = {
     "one_shot_rs": _one_shot_rs_emulated,
     "one_shot_a2a": _one_shot_a2a_emulated,
     "bidir_ring_ag": _bidir_ring_ag_emulated,
+    "ring_fold": _ring_fold_emulated,
+    "two_level_ag": _two_level_ag_emulated,
+    "two_level_rs": _two_level_rs_emulated,
 }
 
 _PLTPU = {
@@ -781,6 +1294,9 @@ _PLTPU = {
     "one_shot_rs": functools.partial(_rs_pltpu, one_shot=True),
     "one_shot_a2a": _one_shot_a2a_pltpu,
     "bidir_ring_ag": _bidir_ring_ag_pltpu,
+    "ring_fold": _ring_fold_pltpu,
+    "two_level_ag": _two_level_ag_pltpu,
+    "two_level_rs": _two_level_rs_pltpu,
 }
 
 
@@ -803,13 +1319,26 @@ def run(
     produce the pushed partials; one_shot_a2a: a ``(world, ...)`` tensor
     whose block ``t`` is destined for PE ``t``). ``statics`` stay
     rank-resident.
-    ``tile=None`` is the identity (pure data movement). ``backend`` is a
-    shmem backend name ("pltpu" | "emulated"); default picks per
-    platform (``shmem.default_backend``).
+    ``tile=None`` is the identity (pure data movement); ``ring_fold``
+    takes a :class:`FoldTile` instead of a pure tile. The two-level
+    protocols compose two mesh axes: pass ``axis=(inner, outer)`` and
+    ``world=(Wi, Wo)``. ``backend`` is a shmem backend name
+    ("pltpu" | "emulated"); default picks per platform
+    (``shmem.default_backend``).
     """
     if protocol not in PROTOCOLS:
         raise ValueError(f"unknown protocol {protocol!r} (not in {PROTOCOLS})")
-    tile = tile or _identity
+    two_level = protocol in TWO_LEVEL_PROTOCOLS
+    if two_level != isinstance(axis, (tuple, list)):
+        raise ValueError(
+            f"{protocol}: axis must be {'(inner, outer)' if two_level else 'one axis name'}, got {axis!r}")
+    if two_level:
+        axis, world = tuple(axis), tuple(world)
+    if protocol == "ring_fold":
+        if not isinstance(tile, FoldTile):
+            raise ValueError("ring_fold takes a FoldTile (init/fold/finalize)")
+    else:
+        tile = tile or _identity
     backend = backend or default_backend()
     impl = (_PLTPU if backend == "pltpu" else _EMULATED)[protocol]
     return impl(tile, operand, tuple(statics), axis=axis, world=world,

@@ -24,6 +24,13 @@ from jax.experimental.pallas import tpu as pltpu
 from .. import _compat  # noqa: F401  (pltpu name backfills)
 
 
+def _device_id(peer):
+    """MESH device id: scalar peer = 1D mesh; tuple peer = one coordinate
+    per mesh axis (the two-level protocols address a (pod, ring) grid —
+    the kernel's mesh axis order must match the tuple order)."""
+    return tuple(peer) if isinstance(peer, tuple) else (peer,)
+
+
 def putmem_signal_nbi(
     src_ref,
     dst_ref,
@@ -47,7 +54,7 @@ def putmem_signal_nbi(
         dst_ref=dst_ref,
         send_sem=send_sem,
         recv_sem=recv_sem,
-        device_id=(peer,),
+        device_id=_device_id(peer),
         device_id_type=pltpu.DeviceIdType.MESH,
     )
     copy.start()
@@ -74,7 +81,7 @@ def signal_op(sem, peer, *, inc: int = 1, axis: Optional[str] = None):
     pltpu.semaphore_signal(
         sem,
         inc=inc,
-        device_id=(peer,),
+        device_id=_device_id(peer),
         device_id_type=pltpu.DeviceIdType.MESH,
     )
 
@@ -112,6 +119,29 @@ def barrier_all(axis: str, world: int):
             barrier, inc=1, device_id=(peer,), device_id_type=pltpu.DeviceIdType.MESH
         )
     pltpu.semaphore_wait(barrier, world - 1)
+
+
+def barrier_all_grid(axes, worlds):
+    """Barrier across a two-axis (outer, inner) device grid (the
+    two-level protocols' rendezvous): signal every (o, i) peer on the
+    kernel's collective barrier semaphore, wait for Wo*Wi - 1 arrivals.
+    ``axes``/``worlds`` are ordered (outer, inner), matching the 2D
+    device ids the protocols use."""
+    outer, inner = axes
+    wo, wi = worlds
+    barrier = pltpu.get_barrier_semaphore()
+    oid = lax.axis_index(outer)
+    iid = lax.axis_index(inner)
+    for o_off in range(wo):
+        for i_off in range(wi):
+            if o_off == 0 and i_off == 0:
+                continue  # self
+            peer = (lax.rem(oid + o_off, wo), lax.rem(iid + i_off, wi))
+            pltpu.semaphore_signal(
+                barrier, inc=1, device_id=peer,
+                device_id_type=pltpu.DeviceIdType.MESH,
+            )
+    pltpu.semaphore_wait(barrier, wo * wi - 1)
 
 
 def broadcast_put(src_ref, dst_ref, send_sem, recv_sem, axis: str, world: int):

@@ -17,14 +17,13 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ParallelConfig
-from ..models.params import LeafSpec, packed_width
+from ..models.params import LeafSpec
 
 
 def _flatten(tree, prefix=""):

@@ -8,7 +8,7 @@ fp32 (or bf16) moments with fp32 update arithmetic.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,9 @@ class OptState(NamedTuple):
 
 
 def init_opt_state(params, moment_dtype=jnp.float32, kind: str = "adamw") -> OptState:
-    z = lambda p: jnp.zeros(p.shape, moment_dtype)
+    def z(p):
+        return jnp.zeros(p.shape, moment_dtype)
+
     zn = (lambda p: jnp.zeros((1,), moment_dtype)) if kind == "momentum" else z
     return OptState(
         step=jnp.zeros((), jnp.int32),
@@ -33,7 +35,8 @@ def init_opt_state(params, moment_dtype=jnp.float32, kind: str = "adamw") -> Opt
 
 
 def opt_state_shapes(param_shapes, moment_dtype=jnp.float32, kind: str = "adamw") -> OptState:
-    z = lambda p: jax.ShapeDtypeStruct(p.shape, moment_dtype)
+    def z(p):
+        return jax.ShapeDtypeStruct(p.shape, moment_dtype)
     zn = (
         (lambda p: jax.ShapeDtypeStruct((1,), moment_dtype))
         if kind == "momentum"

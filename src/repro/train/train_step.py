@@ -15,8 +15,7 @@ Gradient synchronization map (per parameter leaf):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,7 @@ from ..configs.base import ParallelConfig, TrainConfig
 from ..dist import compress
 from ..models.common import DATA_AXIS, MODEL_AXIS, POD_AXIS
 from ..models.params import LeafSpec
-from .optimizer import OptState, adamw_update, global_grad_norm
+from .optimizer import OptState, adamw_update
 
 
 def _walk(tree, spec_tree):

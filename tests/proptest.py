@@ -7,8 +7,6 @@ inputs and reports the failing example.
 """
 from __future__ import annotations
 
-import functools
-import itertools
 from typing import Callable
 
 import numpy as np

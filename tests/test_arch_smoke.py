@@ -1,7 +1,8 @@
 """Per-architecture smoke tests (REQUIRED): a reduced same-family config
 runs one forward/train step on CPU (one device, (1,1) mesh), asserting
 output shapes + no NaNs. Decode smoke included."""
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.dirname(__file__))
 
 import jax

@@ -1,10 +1,10 @@
 """Pallas kernel vs. pure-jnp oracle allclose sweeps (shapes x dtypes).
 
 Single-device: kernels run in interpret mode (pl.pallas_call on CPU)."""
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.dirname(__file__))
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,8 +1,8 @@
 """MoE dispatch/combine properties (single device)."""
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.dirname(__file__))
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -224,12 +224,15 @@ def test_policy_single_resolution_point():
     # mode clamped by the registry: a2a_ep has no ring transport
     assert pol.resolve("a2a_ep").mode == "one_shot"
     # backend degraded off kernel-incapable pairs (bidir ag_matmul is
-    # kernel-capable since the bidir_ring_ag protocol; moe_rs/bidir and
-    # the engine-internal ring_attention still degrade)
+    # kernel-capable since the bidir_ring_ag protocol; moe_rs/bidir
+    # still degrades). ring_attention is kernel-capable since the
+    # carry-passing ring_fold protocol — no engine-internal degrade left.
     assert pol.with_modes(ag_matmul="bidir").resolve("ag_matmul").backend == \
         "kernel"
     assert pol.with_modes(moe_rs="bidir").resolve("moe_rs").backend == "graph"
-    assert pol.resolve("ring_attention").backend == "graph"
+    assert pol.resolve("ring_attention").backend == "kernel"
+    assert pol.resolve("ag_matmul_2level") == ops.ResolvedOverlap(
+        "two_level", "kernel", 2)
     # hw-aware degrade: no ICI links -> no remote-DMA engine -> graph
     no_ici = dataclasses.replace(hw.DEFAULT, ici_links=0)
     assert pol.resolve("ag_matmul", hw=no_ici).backend == "graph"

@@ -1,6 +1,5 @@
 """Optimizer unit tests (reference AdamW equivalence, momentum mode,
 moment dtypes, LR schedule)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

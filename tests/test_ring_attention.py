@@ -1,4 +1,13 @@
-"""Ring attention (context parallelism) vs. full-attention oracle."""
+"""Ring attention (context parallelism) vs. full-attention oracle.
+
+The op is now a ``repro.ops`` stateful-fold declaration: forward parity
+and the derived jax.vjp-through-the-fold-chain backward are checked
+against an INDEPENDENT oracle gradient path (full-softmax attention on
+gathered K/V differentiated directly, no dispatch/custom_vjp), on both
+lowering backends — ``kernel`` runs the executor's carry-passing
+``ring_fold`` protocol on the emulated DMA engine. The policy-threaded
+model call site (``blocks.attention_cp``) rides the same check.
+"""
 import textwrap
 
 from conftest import run_devices
@@ -6,9 +15,13 @@ from conftest import run_devices
 SCRIPT = textwrap.dedent("""
     import functools
     import jax, jax.numpy as jnp, numpy as np
+    from jax import lax
     from jax.sharding import PartitionSpec as P
+    from repro import ops
+    from repro.configs.base import ParallelConfig
     from repro.core.ring_attention import ring_attention
     from repro.kernels import ref
+    from repro.models import blocks
 
     W = 8
     mesh = jax.make_mesh((W,), ("cp",), axis_types=(jax.sharding.AxisType.Auto,))
@@ -17,31 +30,74 @@ SCRIPT = textwrap.dedent("""
     q = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
     k = jnp.asarray(rng.randn(B, HKV, S, D), jnp.float32)
     v = jnp.asarray(rng.randn(B, HKV, S, D), jnp.float32)
+    SPECS3 = (P(None, None, "cp", None),) * 3
+    scale = 1.0 / float(np.sqrt(D))
+
+    def sh(fn, in_specs, out_specs):
+        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_vma=False))
 
     for causal in (True, False):
-        f = jax.jit(jax.shard_map(
-            functools.partial(ring_attention, axis="cp", causal=causal),
-            mesh=mesh,
-            in_specs=(P(None, None, "cp", None),) * 3,
-            out_specs=P(None, None, "cp", None), check_vma=False))
+        f = sh(functools.partial(ring_attention, axis="cp", causal=causal),
+               SPECS3, P(None, None, "cp", None))
         got = np.asarray(f(q, k, v))
         want = np.asarray(ref.flash_attention(q, k, v, causal=causal))
         err = np.abs(got - want).max()
         assert err < 2e-5, (causal, err)
 
-    # gradients flow through the ring (long-context TRAINING enabler)
-    def loss(q, k, v):
-        return jnp.sum(jnp.square(ring_attention(q, k, v, "cp", causal=True)))
-    g = jax.jit(jax.shard_map(jax.grad(loss, argnums=(0, 1, 2)), mesh=mesh,
-        in_specs=(P(None, None, "cp", None),) * 3,
-        out_specs=(P(None, None, "cp", None),) * 3, check_vma=False))(q, k, v)
-    for gi in g:
-        arr = np.asarray(gi)
-        assert np.isfinite(arr).all() and np.abs(arr).max() > 0
+    # the policy-threaded model call site resolves transport AND backend
+    # from the overlap policy (kernel = the executor ring_fold protocol)
+    pcfg = ParallelConfig(
+        tp=1, overlap=ops.OverlapPolicy(mode="ring", backend="kernel"))
+    assert pcfg.policy.resolve("ring_attention").backend == "kernel"
+    f = sh(lambda q_, k_, v_: blocks.attention_cp(pcfg, q_, k_, v_,
+                                                  axis="cp"),
+           SPECS3, P(None, None, "cp", None))
+    err = np.abs(np.asarray(f(q, k, v))
+                 - np.asarray(ref.flash_attention(q, k, v, causal=True))).max()
+    assert err < 2e-5, ("attention_cp/kernel", err)
+
+    # gradients: the derived fold-chain backward vs an INDEPENDENT
+    # oracle path (full-softmax on gathered K/V, differentiated through
+    # — same psum'd loss, no dispatch), then bit-equality across
+    # backends (the kernel forward keeps the graph dual)
+    def oracle_local(q_, k_, v_, causal):
+        group = q_.shape[1] // k_.shape[1]
+        kf = jnp.repeat(lax.all_gather(k_, "cp", axis=2, tiled=True)
+                        .astype(jnp.float32), group, 1)
+        vf = jnp.repeat(lax.all_gather(v_, "cp", axis=2, tiled=True)
+                        .astype(jnp.float32), group, 1)
+        logits = jnp.einsum("bhqd,bhkd->bhqk",
+                            q_.astype(jnp.float32) * scale, kf)
+        if causal:
+            me = lax.axis_index("cp")
+            rows = me * q_.shape[2] + jnp.arange(q_.shape[2])
+            mask = rows[:, None] >= jnp.arange(kf.shape[2])[None, :]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q_.dtype)
+
+    def grads_of(fn):
+        def loss(q_, k_, v_):
+            out = fn(q_, k_, v_)
+            return lax.psum(jnp.sum(out * out), "cp")
+        return [np.asarray(t) for t in
+                sh(jax.grad(loss, argnums=(0, 1, 2)), SPECS3, SPECS3)(q, k, v)]
+
+    for causal in (True, False):
+        gr = grads_of(functools.partial(ring_attention, axis="cp",
+                                        causal=causal))
+        gk = grads_of(functools.partial(ring_attention, axis="cp",
+                                        causal=causal, backend="kernel"))
+        go = grads_of(functools.partial(oracle_local, causal=causal))
+        for a, b, c in zip(gr, gk, go):
+            assert np.array_equal(a, b), ("backend grads differ", causal)
+            assert np.isfinite(a).all() and np.abs(a).max() > 0
+            assert np.abs(a - c).max() < 2e-3, (causal, np.abs(a - c).max())
     print("OK")
 """)
 
 
 def test_ring_attention_matches_full():
-    out = run_devices(SCRIPT, devices=8)
+    out = run_devices(SCRIPT, devices=8, timeout=1200)
     assert "OK" in out

@@ -1,5 +1,6 @@
 """Property tests for the swizzle schedules (paper Fig. 7/8/10)."""
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.dirname(__file__))
 
 import proptest as pt

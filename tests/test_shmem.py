@@ -166,15 +166,63 @@ EXECUTOR_SCRIPT = textwrap.dedent("""
                         P(None, None))(A, B))
     want = np.asarray(A) @ np.asarray(B)
     assert np.abs(got - want).max() < 2e-4, np.abs(got - want).max()
+
+    # ---- ring_fold: owner-weighted running sum carried as state ----
+    ft = executor.FoldTile(
+        init=lambda c: jnp.zeros(c.shape, jnp.float32),
+        fold=lambda st, c, owner: st + (owner.astype(jnp.float32) + 1.0) * c,
+        finalize=lambda st: st)
+
+    def rfold(xb):
+        return executor.run("ring_fold", ft, xb, axis="x", world=W,
+                            out_dtype=jnp.float32, collective_id=203)
+
+    xs2 = jnp.asarray(rng.randn(W * m_loc, K), jnp.float32)
+    got = np.asarray(sh(rfold, P("x", None), P(None, None))(xs2))
+    want = sum((r + 1.0) * np.asarray(xs2)[r * m_loc:(r + 1) * m_loc]
+               for r in range(W))
+    assert np.abs(got - want).max() < 1e-4, np.abs(got - want).max()
+
+    # ---- two-axis protocols on a (2, W//2) pod x ring grid ----
+    wo, wi = 2, max(1, W // 2)
+    mesh2 = jax.make_mesh((wo, wi), ("pod", "x"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def sh2(fn, in_specs, out_specs):
+        return jax.jit(jax.shard_map(fn, mesh=mesh2, in_specs=in_specs,
+                                     out_specs=out_specs, check_vma=False))
+
+    def tl_ag(a_blk, b):
+        return executor.run(
+            "two_level_ag",
+            lambda c, w: jnp.dot(c, w, preferred_element_type=jnp.float32),
+            a_blk, (b,), axis=("x", "pod"), world=(wi, wo),
+            out_dtype=jnp.float32, collective_id=204)
+
+    got = np.asarray(sh2(tl_ag, (P(("pod", "x"), None), P(None, None)),
+                         P(None, None))(A, B))
+    assert np.abs(got - np.asarray(A) @ np.asarray(B)).max() < 2e-4
+
+    def tl_rs(xb):
+        # replicated operand, f32-cast tile: my linearized block, W-summed
+        return executor.run("two_level_rs", lambda b: b.astype(jnp.float32),
+                            xb, axis=("x", "pod"), world=(wi, wo),
+                            out_dtype=jnp.float32, collective_id=205)
+
+    xr = jnp.asarray(rng.randn(W * 2, K), jnp.float32)
+    got = np.asarray(sh2(tl_rs, P(None, None), P(("pod", "x"), None))(xr))
+    assert np.abs(got - W * np.asarray(xr)).max() < 1e-4
     print("OK executor", W)
 """)
 
 
 @pytest.mark.parametrize("world", [2, 4, 8])
 def test_executor_new_protocols(world):
-    """The two PR-4 executor protocols, exercised directly (below the
-    ops layer): one_shot_a2a vs lax.all_to_all, and bidir_ring_ag vs the
-    plain gathered matmul (incl. the W=2 ring degrade)."""
+    """The PR-4/PR-5 executor protocols, exercised directly (below the
+    ops layer): one_shot_a2a vs lax.all_to_all, bidir_ring_ag vs the
+    plain gathered matmul (incl. the W=2 ring degrade), the ring_fold
+    carry-passing ring (owner-dependent fold state), and the two-axis
+    two_level_ag / two_level_rs protocols on a (2, W//2) pod grid."""
     out = run_devices(EXECUTOR_SCRIPT.replace("__WORLD__", str(world)),
                       devices=world)
     assert "OK executor" in out

@@ -8,11 +8,10 @@ system tests assert:
  3. here: training on learnable synthetic data actually reduces loss, and
     the dry-run machinery produces coherent roofline reports.
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.dirname(__file__))
 
-import numpy as np
-import pytest
 
 from conftest import run_devices
 
@@ -29,7 +28,8 @@ ns = argparse.Namespace(
     dtype="float32", no_fsdp=False, fresh=True,
     ckpt_dir="/tmp/repro_sys_ckpt", ckpt_every=0, log_every=100)
 losses = run(ns)
-first = np.mean(losses[:5]); last = np.mean(losses[-5:])
+first = np.mean(losses[:5])
+last = np.mean(losses[-5:])
 assert last < first - 0.1, (first, last)
 print("OK", first, last)
 """

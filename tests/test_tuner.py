@@ -1,7 +1,6 @@
 """Autotuner tests: analytic model sanity + the paper's whole-step
 empirical protocol (§3.8)."""
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import tuner
 from repro import hw
@@ -63,20 +62,29 @@ def test_recommend_overlap_modes_returns_policy():
     # latency-bound ops keep their one-shot defaults in the policy map
     assert rec.mode_for("a2a_ep") == "one_shot"
     assert rec.mode_for("flash_decode") == "one_shot"
+    # the carry-passing / compound-mesh ops enumerate too: ring attention
+    # follows the AG regime pick (clamped to its transports) and the
+    # 2-level ops resolve to their single two_level transport
+    assert rec.mode_for("ring_attention") in overlap.transports_for(
+        "ring_attention")
+    assert rec.mode_for("ag_matmul_2level") == "two_level"
+    assert rec.mode_for("matmul_rs_2level") == "two_level"
 
 
 def test_recommend_backend_enumerates_registry():
     from repro.core import overlap
 
-    # ops with a kernel lowering expose both backends to the tuner
-    assert overlap.backends_for("ag_matmul") == ("graph", "kernel")
-    assert overlap.backends_for("matmul_rs") == ("graph", "kernel")
-    assert overlap.backends_for("all_gather") == ("graph", "kernel")
-    assert overlap.backends_for("reduce_scatter") == ("graph", "kernel")
-    assert overlap.backends_for("a2a_ep") == ("graph", "kernel")
-    assert overlap.backends_for("flash_decode") == ("graph", "kernel")
-    # engine-internal entries (no dispatch fwd) only enumerate graph
-    assert overlap.backends_for("ring_attention") == ("graph",)
+    # EVERY registry op exposes both backends to the tuner — the last
+    # fwd-less engine entries (ring attention, the 2-level compound-mesh
+    # ops) gained kernel lowerings via the carry-passing / two-axis
+    # executor protocols, so there is no graph-only tail left
+    for name in overlap.registry():
+        assert overlap.backends_for(name) == ("graph", "kernel"), name
+    # the newly kernel-capable bindings, by name
+    assert overlap.get("ring_attention").kernel_transports == (
+        "ring", "one_shot")
+    assert overlap.get("ag_matmul_2level").kernel_transports == ("two_level",)
+    assert overlap.get("matmul_rs_2level").kernel_transports == ("two_level",)
 
 
 def test_analytic_rs_enumerates_sub_chunks():
