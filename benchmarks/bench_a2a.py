@@ -58,4 +58,15 @@ def rows():
                 us2 = time_fn(g, y)
                 out.append(row(f"a2a_combine/E{e_glob}c{cap}d{d}/{mode}{suffix}",
                                us2, f"dispatch_us={us:.1f}"))
+                if mode == "one_shot" and (e_glob, cap, d) == _KERNEL_SHAPE:
+                    # wire axis: int8 token slabs at the smallest shape
+                    f8 = jax.jit(jax.shard_map(
+                        functools.partial(mo.a2a_ep, axis="ep", mode=mode,
+                                          backend=backend, wire="int8"),
+                        mesh=mesh, in_specs=P("ep", None, None),
+                        out_specs=P("ep", None, None), check_vma=False))
+                    us8 = time_fn(f8, x)
+                    out.append(row(
+                        f"a2a_dispatch/E{e_glob}c{cap}d{d}/{mode}{suffix}/int8",
+                        us8, f"vs_f32={us / us8:.2f}x"))
     return out

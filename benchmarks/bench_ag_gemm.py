@@ -53,4 +53,15 @@ def rows():
                 suffix = "/kernel" if backend == "kernel" else ""
                 out.append(row(f"ag_gemm/{m}x{k}x{n}/{mode}{suffix}", us,
                                derived))
+                if m == 512 and mode == "ring":
+                    # wire axis: int8 riding chunks at the smallest shape
+                    # (both backends), f32 row above is the reference
+                    f8 = cm.make_sharded(
+                        functools.partial(cm.ag_matmul, axis="tp", mode=mode,
+                                          backend=backend,
+                                          out_dtype=jnp.float32, wire="int8"),
+                        mesh, (P("tp", None), P(None, "tp")), P(None, "tp"))
+                    us8 = time_fn(f8, a, b)
+                    out.append(row(f"ag_gemm/{m}x{k}x{n}/{mode}{suffix}/int8",
+                                   us8, f"vs_f32={us / us8:.2f}x"))
     return out

@@ -43,6 +43,16 @@ def rows():
                 suffix = "/kernel" if backend == "kernel" else ""
                 out.append(row(f"gemm_rs/{m}x{k}x{n}/{mode}{suffix}", us,
                                derived))
+                if m == 512 and mode == "ring":
+                    # wire axis: int8 riding partials at the smallest shape
+                    f8 = cm.make_sharded(
+                        functools.partial(cm.matmul_rs, axis="tp", mode=mode,
+                                          backend=backend,
+                                          out_dtype=jnp.float32, wire="int8"),
+                        mesh, (P(None, "tp"), P("tp", None)), P("tp", None))
+                    us8 = time_fn(f8, a, b)
+                    out.append(row(f"gemm_rs/{m}x{k}x{n}/{mode}{suffix}/int8",
+                                   us8, f"vs_f32={us / us8:.2f}x"))
         # the rs_chunks sub-chunking knob (mirrors ag_chunks)
         f = cm.make_sharded(
             functools.partial(cm.matmul_rs, axis="tp", mode="ring",

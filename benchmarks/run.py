@@ -54,11 +54,11 @@ def _mode_vocabulary():
 
 
 def parse_row(tag: str, line: str, world: int, modes):
-    """'op/shape/mode[/backend],us,derived' -> a BENCH record or None.
+    """'op/shape/mode[/backend][/wire],us,derived' -> a BENCH record or None.
 
     Each record carries the row's resolved overlap ``policy`` (the
     ``repro.ops.OverlapPolicy`` resolution the row ran under — mode,
-    backend, sub-chunk count) rather than loose mode/backend strings."""
+    backend, sub-chunk count, wire dtype) rather than loose strings."""
     parts = line.split(",")
     if len(parts) < 2:
         return None
@@ -68,6 +68,10 @@ def parse_row(tag: str, line: str, world: int, modes):
     except ValueError:
         return None
     segs = name.split("/")
+    wire = "f32"
+    if segs[-1] in ("int8", "fp8"):  # trailing wire segment ("f32" is implied)
+        wire = segs[-1]
+        segs = segs[:-1]
     backend = "graph"
     if segs[-1] in ("graph", "kernel"):
         backend = segs[-1]
@@ -80,7 +84,8 @@ def parse_row(tag: str, line: str, world: int, modes):
     mode = segs[-1] if segs[-1] in modes else ""
     return {
         "op": segs[0],
-        "policy": {"mode": mode, "backend": backend, "chunks": chunks},
+        "policy": {"mode": mode, "backend": backend, "chunks": chunks,
+                   "wire": wire},
         "world": world,
         "us_per_call": us,
         "name": f"{tag}/{name}",

@@ -216,6 +216,10 @@ class ParallelConfig:
     #            repro.shmem): remote DMAs on TPU, emulated DMA on CPU.
     overlap_backend: str = "graph"
     overlap_backends: tuple = ()
+    # Wire dtype riding chunks travel as: "f32" (as-is) or "int8"/"fp8"
+    # per-row scaled 1-byte blocks (ops/wire.py); clamped per-op to the
+    # registry's wire-capable ops.
+    overlap_wire: str = "f32"
 
     remat: str = "block"  # "none" | "dots" | "block"
     grad_compression: str = "none"  # "none" | "int8"
@@ -234,7 +238,7 @@ class ParallelConfig:
     # from the dataclass fields themselves, so the check cannot drift.
     _LEGACY_OVERLAP_FIELDS = ("overlap_mode", "overlap_modes",
                               "overlap_backend", "overlap_backends",
-                              "ag_chunks", "rs_chunks")
+                              "ag_chunks", "rs_chunks", "overlap_wire")
 
     def __post_init__(self):
         # accept a dict for ergonomics; store a hashable sorted tuple
@@ -247,6 +251,12 @@ class ParallelConfig:
                 self, "overlap_backends",
                 tuple(sorted(self.overlap_backends.items())),
             )
+        from ..ops.policy import WIRE_DTYPES  # lazy: stay import-light
+
+        if self.overlap_wire not in WIRE_DTYPES:
+            raise ValueError(
+                f"unknown wire dtype {self.overlap_wire!r} "
+                f"(valid: {WIRE_DTYPES})")
         if self.overlap is not None:
             defaults = {f.name: f.default for f in dataclasses.fields(self)}
             conflicts = sorted(
@@ -259,7 +269,7 @@ class ParallelConfig:
                     f"conflicting legacy overlap fields ({', '.join(conflicts)}) "
                     "were supplied; fold the legacy values into the "
                     "OverlapPolicy (mode=/modes=/backend=/backends=/"
-                    "ag_chunks=/rs_chunks=) or drop `overlap`"
+                    "ag_chunks=/rs_chunks=/wire=) or drop `overlap`"
                 )
 
     @property
@@ -279,6 +289,7 @@ class ParallelConfig:
             backends=self.overlap_backends,
             ag_chunks=self.ag_chunks,
             rs_chunks=self.rs_chunks,
+            wire=self.overlap_wire,
         )
 
     def mode_for(self, op: str) -> str:

@@ -56,39 +56,41 @@ def matmul_rs_baseline(a_loc: Array, b_loc: Array, axis: str, *, out_dtype=None)
 
 
 def ag_matmul(a_blk, b_loc, axis, *, mode="ring", chunks_per_rank=1,
-              out_dtype=None, backend="graph"):
+              out_dtype=None, backend="graph", wire="f32"):
     """Overlapped AllGather-GEMM (see the ``ag_matmul`` declaration in
     ``repro.ops.library``). The backward pass is the dual overlapped
     GEMM+RS ring for BOTH backends — a kernel forward keeps the
-    graph-lowered dual as its backward."""
+    graph-lowered dual as its backward. ``wire`` quantizes the riding
+    A-chunks (``repro.ops.wire``)."""
     from .. import ops
 
     return ops.ag_matmul(a_blk, b_loc, axis=axis, mode=mode,
                          chunks=max(1, chunks_per_rank),
-                         out_dtype=out_dtype, backend=backend)
+                         out_dtype=out_dtype, backend=backend, wire=wire)
 
 
 def matmul_rs(a_loc, b_loc, axis, *, mode="ring", chunks_per_rank=1,
-              out_dtype=None, backend="graph"):
+              out_dtype=None, backend="graph", wire="f32"):
     """Overlapped GEMM-ReduceScatter; backward = dual AG+GEMM ring.
     ``chunks_per_rank`` (rs_chunks) sub-chunks the ring accumulator into
     column groups; ``backend="kernel"`` lowers through the shmem tile
-    executor (ring = Alg. 3 push, one_shot = all partials up-front)."""
+    executor (ring = Alg. 3 push, one_shot = all partials up-front).
+    ``wire`` quantizes the riding partial accumulators."""
     from .. import ops
 
     return ops.matmul_rs(a_loc, b_loc, axis=axis, mode=mode,
                          chunks=max(1, chunks_per_rank),
-                         out_dtype=out_dtype, backend=backend)
+                         out_dtype=out_dtype, backend=backend, wire=wire)
 
 
 def all_gather_chunked(x: Array, axis: str, *, mode: str = "ring",
-                       backend: str = "graph") -> Array:
+                       backend: str = "graph", wire: str = "f32") -> Array:
     """Decomposed AllGather; backward = ring reduce-scatter (O(1)).
     ``backend="kernel"`` lowers one_shot through the executor's
     low-latency AllGather protocol."""
     from .. import ops
 
-    return ops.all_gather(x, axis=axis, mode=mode, backend=backend)
+    return ops.all_gather(x, axis=axis, mode=mode, backend=backend, wire=wire)
 
 
 # ---------------------------------------------------------------------------
@@ -154,14 +156,16 @@ def matmul_rs_2level(
 
 
 def reduce_scatter_chunked(x: Array, axis: str, *, mode: str = "ring",
-                           backend: str = "graph") -> Array:
+                           backend: str = "graph", wire: str = "f32") -> Array:
     """Decomposed reduce-scatter along dim 0 (accumulator in f32); see
     the ``reduce_scatter`` declaration in ``repro.ops.library``.
     ``backend="kernel"`` lowers ring through the executor's Alg.-3 push
-    and one_shot through the all-partials-up-front protocol."""
+    and one_shot through the all-partials-up-front protocol. ``wire``
+    quantizes the riding partials (decoded + accumulated in f32)."""
     from .. import ops
 
-    return ops.reduce_scatter(x, axis=axis, mode=mode, backend=backend)
+    return ops.reduce_scatter(x, axis=axis, mode=mode, backend=backend,
+                              wire=wire)
 
 
 def hierarchical_reduce_scatter(x: Array, inner_axis: str, outer_axis: str) -> Array:

@@ -87,32 +87,35 @@ def topk_combine(out: Array, info: DispatchInfo, out_dtype=None) -> Array:
 
 
 def a2a_ep(x: Array, axis: str, *, mode: str = "one_shot",
-           backend: str = "graph") -> Array:
+           backend: str = "graph", wire: str = "f32") -> Array:
     """Expert-parallel AllToAll.
 
     x: (E_global, cap, d) where E_global = W * E_local; rank r keeps the
     slab for the experts it owns: returns (E_local, W * cap, d) — every
-    rank's tokens for my local experts.
+    rank's tokens for my local experts. ``wire`` quantizes the riding
+    token slabs (see ``repro.ops.wire``).
     """
     w = lax.axis_size(axis)
     e_global, cap, d = x.shape
     e_local = e_global // w
+    mode = ov.resolve_mode("a2a_ep", mode)
     xs = x.reshape(w, e_local, cap, d)  # block t = my tokens for rank t's experts
-    y = ov.dispatch("a2a_ep", xs, axis=axis,
-                    mode=ov.resolve_mode("a2a_ep", mode), backend=backend)
+    y = ov.dispatch("a2a_ep", xs, axis=axis, mode=mode, backend=backend,
+                    wire=ov.resolve_wire("a2a_ep", wire, mode))
     # y[src] = rank src's tokens for my experts
     return jnp.moveaxis(y, 0, 1).reshape(e_local, w * cap, d)
 
 
 def a2a_ep_inverse(y: Array, axis: str, *, mode: str = "one_shot",
-                   backend: str = "graph") -> Array:
+                   backend: str = "graph", wire: str = "f32") -> Array:
     """Inverse AllToAll: (E_local, W*cap, d) -> (E_global, cap, d)."""
     w = lax.axis_size(axis)
     e_local, wc, d = y.shape
     cap = wc // w
+    mode = ov.resolve_mode("a2a_ep", mode)
     ys = jnp.moveaxis(y.reshape(e_local, w, cap, d), 1, 0)  # (W, e_local, cap, d)
-    x = ov.dispatch("a2a_ep", ys, axis=axis,
-                    mode=ov.resolve_mode("a2a_ep", mode), backend=backend)
+    x = ov.dispatch("a2a_ep", ys, axis=axis, mode=mode, backend=backend,
+                    wire=ov.resolve_wire("a2a_ep", wire, mode))
     return x.reshape(w * e_local, cap, d)
 
 

@@ -222,6 +222,8 @@ def rs_pipeline(
     axis: str,
     *,
     transport: str = "ring",
+    encode: Optional[Callable] = None,
+    decode: Optional[Callable] = None,
 ) -> Array:
     """Generic ReduceScatter-style pipeline.
 
@@ -234,9 +236,22 @@ def rs_pipeline(
                the permute overlaps the next block's compute.
     one_shot:  every peer's partial issued up-front at distinct offsets
                (low-latency structure); the owner sums arrivals.
+
+    ``encode``/``decode`` are the optional wire hooks (ops.wire): a hop's
+    payload is ``encode``d to (payload, scales) before the permute and
+    ``decode``d back to f32 on arrival; accumulation stays f32. The ring
+    flavor re-encodes the riding accumulator every hop (quantization
+    error grows with ring distance); one_shot encodes each partial once.
     """
     w = lax.axis_size(axis)
     me = lax.axis_index(axis)
+
+    def _hop(x, permute):
+        if encode is None:
+            return permute(x)
+        p, s = encode(x)
+        return decode(permute(p), permute(s))
+
     if transport == "one_shot":
         acc = compute_block(me, 0)
         for off in range(1, w):
@@ -244,7 +259,9 @@ def rs_pipeline(
             # my partial for rank tgt's block travels distance `off`; the
             # arrival (from rank me - off) is that rank's partial for MY
             # block. No serial dependency between the W-1 transfers.
-            acc = acc + offset_permute(compute_block(tgt, off), axis, off)
+            acc = acc + _hop(
+                compute_block(tgt, off), lambda t: offset_permute(t, axis, off)
+            )
         return acc
     if transport != "ring":
         raise ValueError(f"rs_pipeline: unknown transport {transport!r}")
@@ -256,13 +273,16 @@ def rs_pipeline(
             acc = partial
         else:
             # the permute of the previous accumulator overlaps this compute
-            acc = partial + ring_permute(acc, axis)
+            acc = partial + _hop(acc, lambda t: ring_permute(t, axis))
     return acc
 
 
 def bidir_rs_pipeline(
     compute_block: Callable[[Array, int, int], Array],
     axis: str,
+    *,
+    encode: Optional[Callable] = None,
+    decode: Optional[Callable] = None,
 ) -> Tuple[Array, Array]:
     """Bidirectional-ring RS (schedules.bidir_rs_order): two accumulators,
     one per ring direction, each carrying half the per-block output
@@ -275,14 +295,24 @@ def bidir_rs_pipeline(
     """
     w = lax.axis_size(axis)
     me = lax.axis_index(axis)
+
+    def _hop(x, reverse):
+        if encode is None:
+            return ring_permute(x, axis, reverse=reverse)
+        p, sc = encode(x)
+        return decode(
+            ring_permute(p, axis, reverse=reverse),
+            ring_permute(sc, axis, reverse=reverse),
+        )
+
     acc_f = acc_r = None
     for s in range(w):
         blk_f = lax.rem(me - s - 1 + 2 * w, w)
         blk_r = lax.rem(me + s + 1, w)
         pf = compute_block(blk_f, s, 0)
         pr = compute_block(blk_r, s, 1)
-        acc_f = pf if acc_f is None else pf + ring_permute(acc_f, axis)
-        acc_r = pr if acc_r is None else pr + ring_permute(acc_r, axis, reverse=True)
+        acc_f = pf if acc_f is None else pf + _hop(acc_f, False)
+        acc_r = pr if acc_r is None else pr + _hop(acc_r, True)
     return acc_f, acc_r
 
 
@@ -324,14 +354,27 @@ def two_level_rs_pipeline(
 # ---------------------------------------------------------------------------
 
 
-def a2a_pipeline(xs: Array, axis: str, *, transport: str = "one_shot") -> Array:
+def a2a_pipeline(
+    xs: Array,
+    axis: str,
+    *,
+    transport: str = "one_shot",
+    encode: Optional[Callable] = None,
+    decode: Optional[Callable] = None,
+) -> Array:
     """AllToAll over the leading dim: ``xs[i]`` is this rank's block
     destined for rank i; returns ``out`` with ``out[j]`` = the block rank
     j sent to this rank.
 
     one_shot: the paper's low-latency decomposition — all W-1 one-sided
     sends issued up-front with distinct ring offsets. xla: the monolithic
-    ``lax.all_to_all`` baseline.
+    ``lax.all_to_all`` baseline (wire hooks are ignored — nothing rides
+    the engine there).
+
+    With ``encode``/``decode`` wire hooks, every per-destination block is
+    quantized exactly once — including the self block, which round-trips
+    through the codec so the graph lowering matches the kernel executor
+    (whose workspace holds all W blocks in wire format).
     """
     if transport == "xla":
         return lax.all_to_all(xs, axis, split_axis=0, concat_axis=0, tiled=False)
@@ -339,13 +382,26 @@ def a2a_pipeline(xs: Array, axis: str, *, transport: str = "one_shot") -> Array:
         raise ValueError(f"a2a_pipeline: unknown transport {transport!r}")
     w = lax.axis_size(axis)
     me = lax.axis_index(axis)
-    mine = lax.dynamic_slice_in_dim(xs, me, 1, axis=0)
+    if encode is not None:
+        payload, scales = encode(xs)
+        mine = decode(
+            lax.dynamic_slice_in_dim(payload, me, 1, axis=0),
+            lax.dynamic_slice_in_dim(scales, me, 1, axis=0),
+        ).astype(xs.dtype)
+    else:
+        mine = lax.dynamic_slice_in_dim(xs, me, 1, axis=0)
     out = jnp.zeros_like(xs)
     out = lax.dynamic_update_slice_in_dim(out, mine, me, axis=0)
     for off in range(1, w):
         tgt = lax.rem(me + off, w)
-        send = lax.dynamic_slice_in_dim(xs, tgt, 1, axis=0)
-        recv = offset_permute(send, axis, off)  # arrives from rank me - off
+        if encode is not None:
+            recv = decode(
+                offset_permute(lax.dynamic_slice_in_dim(payload, tgt, 1, axis=0), axis, off),
+                offset_permute(lax.dynamic_slice_in_dim(scales, tgt, 1, axis=0), axis, off),
+            ).astype(xs.dtype)
+        else:
+            send = lax.dynamic_slice_in_dim(xs, tgt, 1, axis=0)
+            recv = offset_permute(send, axis, off)  # arrives from rank me - off
         out = lax.dynamic_update_slice_in_dim(
             out, recv, lax.rem(me - off + w, w), axis=0
         )
@@ -420,6 +476,8 @@ class OverlapSpec:
                 kernel_fwd(static: dict, *tensors) -> out. Shares the
                 op's ``bwd`` rule (the backward of a fused kernel is
                 its dual overlapped op regardless of lowering).
+    wires       wire dtypes the op's riding chunks can travel as
+                (("f32",) = always as-is; see ops/wire.py)
     """
 
     name: str
@@ -431,6 +489,7 @@ class OverlapSpec:
     bwd: Optional[Callable] = None
     kernel_transports: Tuple[str, ...] = ()
     kernel_fwd: Optional[Callable] = None
+    wires: Tuple[str, ...] = ("f32",)
 
 
 _REGISTRY: Dict[str, OverlapSpec] = {}
@@ -447,7 +506,10 @@ def register(
     bwd: Optional[Callable] = None,
     kernel_transports: Sequence[str] = (),
     kernel_fwd: Optional[Callable] = None,
+    wires: Sequence[str] = ("f32",),
 ) -> OverlapSpec:
+    from ..ops.policy import WIRE_DTYPES  # import-light; avoids a cycle
+
     for t in transports:
         if t not in TRANSPORTS:
             raise ValueError(f"{name}: unknown transport {t!r}")
@@ -458,8 +520,12 @@ def register(
             raise ValueError(f"{name}: kernel transport {t!r} not in {transports}")
     if bool(kernel_transports) != (kernel_fwd is not None):
         raise ValueError(f"{name}: kernel_transports and kernel_fwd go together")
+    for wname in wires:
+        if wname not in WIRE_DTYPES:
+            raise ValueError(f"{name}: unknown wire {wname!r} (valid: {WIRE_DTYPES})")
+    wires = tuple(dict.fromkeys(("f32",) + tuple(wires)))  # f32 always legal
     spec = OverlapSpec(name, kind, tuple(transports), baseline, default, fwd, bwd,
-                       tuple(kernel_transports), kernel_fwd)
+                       tuple(kernel_transports), kernel_fwd, wires)
     _REGISTRY[name] = spec
     return spec
 
@@ -492,6 +558,33 @@ def resolve_mode(name: str, requested: str) -> str:
     if requested == spec.baseline or requested in spec.transports:
         return requested
     return spec.default
+
+
+def wires_for(name: str) -> Tuple[str, ...]:
+    """Wire dtypes op ``name``'s riding chunks can travel as."""
+    return _REGISTRY[name].wires
+
+
+def resolve_wire(name: str, requested: str, mode: Optional[str] = None) -> str:
+    """Clamp a requested wire dtype to what (op, transport) supports.
+
+    A low-precision wire sticks only when the op declared it in ``wires``
+    AND the (resolved) mode actually rides the engine: the baseline mode
+    (monolithic XLA path — nothing to quantize per-hop) and the
+    hierarchical two_level transport (chunks ride two axes; kept f32 for
+    cross-pod exactness) degrade to "f32". An unknown wire NAME is an
+    error — the valid set is closed, like backends."""
+    from ..ops.policy import WIRE_DTYPES  # import-light; avoids a cycle
+
+    if requested not in WIRE_DTYPES:
+        raise ValueError(
+            f"{name}: unknown wire dtype {requested!r} (valid: {WIRE_DTYPES})")
+    spec = _REGISTRY[name]
+    if requested == "f32" or requested not in spec.wires:
+        return "f32"
+    if mode is not None and (mode == spec.baseline or mode == "two_level"):
+        return "f32"
+    return requested
 
 
 def backends_for(name: str) -> Tuple[str, ...]:

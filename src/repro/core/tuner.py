@@ -25,6 +25,7 @@ from typing import Callable, Dict, Iterable, Optional, Sequence
 import jax
 
 from .. import hw
+from ..ops import wire as wirefmt
 from . import overlap
 
 
@@ -36,10 +37,21 @@ class OverlapChoice:
     t_compute: float
     t_comm: float
     t_total: float
+    wire: str = "f32"  # riding-chunk wire dtype (registry wires axis)
 
 
 def _dot_time(m: float, k: float, n: float, spec: hw.HardwareSpec, eff: float = 0.6) -> float:
     return 2.0 * m * k * n / (spec.peak_flops_bf16 * eff)
+
+
+def _codec_time(rows: int, cols: int, spec: hw.HardwareSpec) -> float:
+    """Per-chunk cost of the wire codec: one encode + one decode pass,
+    each streaming the f32 view of the chunk through HBM. This is the
+    term that keeps quantization from being a free lunch — when the op
+    is compute-bound, the extra passes make a low-precision wire
+    strictly WORSE, so the enumeration only picks int8/fp8 where the
+    ICI-bytes term actually binds."""
+    return 2.0 * rows * cols * 4 / spec.hbm_bandwidth
 
 
 def analytic_ag_matmul(
@@ -63,17 +75,20 @@ def analytic_ag_matmul(
     (m_loc * k * bytes) over one link (ring) or both directions (bidir).
     one_shot: all (W-1) chunks in flight at once across the torus links —
     bandwidth-limited by links/chip, latency-optimal for small messages.
+
+    The wire axis is enumerated jointly with mode x chunks: for every
+    non-baseline mode, each registry wire dtype for ag_matmul scales the
+    riding-chunk bytes (``ops.wire.wire_bytes`` — payload + per-row
+    scales) and charges the codec passes to the compute side.
     """
     if candidates is None:
         candidates = overlap.transports_for("ag_matmul", include_baseline=True)
-    chunk_bytes = m_loc * k * dtype_bytes
+    f32_bytes = m_loc * k * dtype_bytes
     t_dot = _dot_time(m_loc, k, n_loc, spec)
+    t_cod = _codec_time(m_loc, k, spec)
     best: Optional[OverlapChoice] = None
     for mode in candidates:
         if mode == "none":
-            t_comm = (world - 1) * chunk_bytes / spec.ici_link_bandwidth
-            t_comp = world * t_dot
-            t_total = t_comm + t_comp  # serialized: collective then GEMM
             subs = (1,)
         elif mode == "ring":
             subs = tuple(s for s in range(1, max_sub + 1) if m_loc % s == 0)
@@ -83,40 +98,47 @@ def analytic_ag_matmul(
             subs = (1,)
         else:
             continue
-        for sub in subs:
-            if mode == "none":
-                pass
-            elif mode == "ring":
-                # per-message fixed overhead is what caps useful sub-
-                # chunking: finer chunks shrink the fill bubble but pay
-                # the hop/descriptor cost world*sub times
-                t_step_comm = (chunk_bytes / sub) / spec.ici_link_bandwidth \
-                    + spec.ici_msg_overhead
-                t_step_comp = t_dot / sub
-                fill = t_step_comm  # first remote chunk latency
-                t_comm = (world - 1) * chunk_bytes / spec.ici_link_bandwidth
-                t_comp = world * t_dot
-                t_total = fill + world * sub * max(t_step_comm, t_step_comp)
-            elif mode == "bidir":
-                t_step_comm = (chunk_bytes / 2) / spec.ici_link_bandwidth
-                t_step_comp = t_dot
-                t_comm = (world - 1) * chunk_bytes / (2 * spec.ici_link_bandwidth)
-                t_comp = world * t_dot
-                t_total = t_step_comm + world * max(t_step_comm, t_step_comp)
-            else:  # one_shot
-                total_bytes = (world - 1) * chunk_bytes
-                t_comm = total_bytes / (spec.ici_link_bandwidth * spec.ici_links)
-                t_comp = world * t_dot
-                # local chunk computes during the flight of everything else
-                t_total = max(t_comm, t_dot) + (world - 1) * t_dot
-            cand = OverlapChoice(mode, sub if mode == "ring" else 1,
-                                 t_comp, t_comm, t_total)
-            if best is None or cand.t_total < best.t_total:
-                best = cand
+        wires = ("f32",) if mode == "none" else overlap.wires_for("ag_matmul")
+        for wname in wires:
+            chunk_bytes = wirefmt.wire_bytes(m_loc, k, wname, dtype_bytes)
+            cod = 0.0 if wname == "f32" else t_cod
+            t_step = t_dot + cod  # per-chunk MXU time + codec passes
+            for sub in subs:
+                if mode == "none":
+                    t_comm = (world - 1) * chunk_bytes / spec.ici_link_bandwidth
+                    t_comp = world * t_step
+                    t_total = t_comm + t_comp  # serialized: collective then GEMM
+                elif mode == "ring":
+                    # per-message fixed overhead is what caps useful sub-
+                    # chunking: finer chunks shrink the fill bubble but pay
+                    # the hop/descriptor cost world*sub times
+                    t_step_comm = (chunk_bytes / sub) / spec.ici_link_bandwidth \
+                        + spec.ici_msg_overhead
+                    t_step_comp = t_step / sub
+                    fill = t_step_comm  # first remote chunk latency
+                    t_comm = (world - 1) * chunk_bytes / spec.ici_link_bandwidth
+                    t_comp = world * t_step
+                    t_total = fill + world * sub * max(t_step_comm, t_step_comp)
+                elif mode == "bidir":
+                    t_step_comm = (chunk_bytes / 2) / spec.ici_link_bandwidth
+                    t_step_comp = t_step
+                    t_comm = (world - 1) * chunk_bytes / (2 * spec.ici_link_bandwidth)
+                    t_comp = world * t_step
+                    t_total = t_step_comm + world * max(t_step_comm, t_step_comp)
+                else:  # one_shot
+                    total_bytes = (world - 1) * chunk_bytes
+                    t_comm = total_bytes / (spec.ici_link_bandwidth * spec.ici_links)
+                    t_comp = world * t_step
+                    # local chunk computes during the flight of everything else
+                    t_total = max(t_comm, t_step) + (world - 1) * t_step
+                cand = OverlapChoice(mode, sub if mode == "ring" else 1,
+                                     t_comp, t_comm, t_total, wname)
+                if best is None or cand.t_total < best.t_total:
+                    best = cand
     if best is None:
         # every candidate was infeasible (e.g. bidir with odd m_loc):
         # mirror the engine, which degrades such requests to ring
-        t_step_comm = chunk_bytes / spec.ici_link_bandwidth
+        t_step_comm = f32_bytes / spec.ici_link_bandwidth
         best = OverlapChoice(
             "ring", 1, world * t_dot,
             (world - 1) * t_step_comm,
@@ -143,54 +165,67 @@ def analytic_matmul_rs(
     ring also enumerates ``rs_chunks`` sub-chunking (the accumulator
     split into column groups, mirroring ag_chunks): sub-chunking shrinks
     the first-message fill bubble at the cost of more, smaller permutes.
+
+    The wire axis rides the same enumeration: a low-precision wire
+    shrinks the riding f32 accumulator to payload + per-row scales but
+    pays encode+decode passes EVERY hop (the ring re-encodes the
+    accumulator each step), so it only wins where the ICI term binds.
     """
     if candidates is None:
         candidates = overlap.transports_for("matmul_rs", include_baseline=True)
     m_blk = m // world
     t_dot = _dot_time(m_blk, k_loc, n, spec)
     acc_bytes = m_blk * n * 4  # f32 accumulator rides the ring
-    t_step_comm = acc_bytes / spec.ici_link_bandwidth
+    f32_step_comm = acc_bytes / spec.ici_link_bandwidth
+    t_cod = _codec_time(m_blk, n, spec)
     t_comp = world * t_dot
-    t_comm = (world - 1) * t_step_comm
+    t_comm = (world - 1) * f32_step_comm
     best: Optional[OverlapChoice] = None
     for mode in candidates:
         if mode == "ring":
             subs = tuple(s for s in range(1, max_sub + 1) if n % s == 0)
         else:
             subs = (1,)
-        for sub in subs:
-            if mode == "none":
-                # serialized: all dots, then the monolithic reduce-scatter
-                t_total = t_comp + t_comm
-            elif mode == "ring":
-                # sub column-groups: each ring step moves acc_bytes/sub
-                # per group (fill = one sub-message flight), paying the
-                # fixed per-message cost world*sub times — the trade-off
-                # that keeps the enumeration from degenerating to max_sub
-                t_sub_comm = t_step_comm / sub + spec.ici_msg_overhead
-                t_total = t_sub_comm + world * sub * max(t_dot / sub, t_sub_comm)
-            elif mode == "bidir":
-                if world < 3:
+        wires = ("f32",) if mode == "none" else overlap.wires_for("matmul_rs")
+        for wname in wires:
+            ride_bytes = wirefmt.wire_bytes(m_blk, n, wname, 4)
+            t_step_comm = ride_bytes / spec.ici_link_bandwidth
+            cod = 0.0 if wname == "f32" else t_cod
+            t_step = t_dot + cod  # per-hop MXU time + codec passes
+            for sub in subs:
+                if mode == "none":
+                    # serialized: all dots, then the monolithic reduce-scatter
+                    t_total = t_comp + t_comm
+                elif mode == "ring":
+                    # sub column-groups: each ring step moves ride_bytes/sub
+                    # per group (fill = one sub-message flight), paying the
+                    # fixed per-message cost world*sub times — the trade-off
+                    # that keeps the enumeration from degenerating to max_sub
+                    t_sub_comm = t_step_comm / sub + spec.ici_msg_overhead
+                    t_total = t_sub_comm + world * sub * max(t_step / sub, t_sub_comm)
+                elif mode == "bidir":
+                    if world < 3:
+                        continue
+                    # half the accumulator columns per direction, both links busy
+                    t_total = t_step_comm / 2 + world * max(t_step, t_step_comm / 2)
+                elif mode == "one_shot":
+                    # W-1 full partials in flight at once across all links: latency
+                    # optimal, bandwidth hungry ((W-1)x the wire bytes of ring's
+                    # steady state per link); each partial is encoded once and
+                    # decoded once on arrival
+                    t_total = world * t_step + (world - 1) * ride_bytes / (
+                        spec.ici_link_bandwidth * spec.ici_links
+                    )
+                else:
                     continue
-                # half the accumulator columns per direction, both links busy
-                t_total = t_step_comm / 2 + world * max(t_dot, t_step_comm / 2)
-            elif mode == "one_shot":
-                # W-1 full partials in flight at once across all links: latency
-                # optimal, bandwidth hungry ((W-1)x the wire bytes of ring's
-                # steady state per link)
-                t_total = t_comp + (world - 1) * acc_bytes / (
-                    spec.ici_link_bandwidth * spec.ici_links
-                )
-            else:
-                continue
-            cand = OverlapChoice(mode, sub if mode == "ring" else 1,
-                                 t_comp, t_comm, t_total)
-            if best is None or cand.t_total < best.t_total:
-                best = cand
+                cand = OverlapChoice(mode, sub if mode == "ring" else 1,
+                                     world * t_step, t_comm, t_total, wname)
+                if best is None or cand.t_total < best.t_total:
+                    best = cand
     if best is None:
         # every candidate was infeasible (e.g. bidir with world < 3):
         # mirror the engine, which degrades such requests to ring
-        t_total = t_step_comm + world * max(t_dot, t_step_comm)
+        t_total = f32_step_comm + world * max(t_dot, f32_step_comm)
         best = OverlapChoice("ring", 1, t_comp, t_comm, t_total)
     return best
 
@@ -256,6 +291,12 @@ def recommend_overlap_modes(
     modes["ring_attention"] = overlap.resolve_mode("ring_attention", ag.mode)
     modes["ag_matmul_2level"] = "two_level"
     modes["matmul_rs_2level"] = "two_level"
+    # wire picks land as per-op entries (not the global default): the
+    # analytic model only saw the AG/RS regimes, so only those ops get a
+    # low-precision wire — everything else stays f32 under the default
+    wires = {op: ch.wire
+             for op, ch in (("ag_matmul", ag), ("matmul_rs", rs))
+             if ch.wire != "f32"}
     return OverlapPolicy(
         mode=ag.mode,
         # the latency-bound ops are kernel-capable too, so the backend
@@ -264,6 +305,7 @@ def recommend_overlap_modes(
         modes=modes,
         ag_chunks=ag.chunks_per_rank,
         rs_chunks=rs.chunks_per_rank,
+        wires=tuple(sorted(wires.items())),
     )
 
 

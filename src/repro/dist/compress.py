@@ -20,6 +20,11 @@ production recipe:
 Every pod ends with the same (approximate) sum; the approximation error
 is one quantization step per contributor, which the error feedback
 re-injects next step.
+
+The codec itself (quantize/dequantize/error feedback) is the shared wire
+format in :mod:`repro.ops.wire` — the same per-row scaled-block code the
+overlap executor's wire-dtype axis uses for riding chunks. This module
+keeps only the pod-axis reduction recipe on top of it.
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import overlap as ov
+from ..ops import wire
 
 Array = jax.Array
 
@@ -37,16 +43,13 @@ def quantize_int8(g: Array) -> Tuple[Array, Array]:
     """Per-row symmetric int8 quantization along the last axis.
 
     Returns (q int8, scale f32 with keepdims); g ≈ q * scale.
+    Alias for ``ops.wire.encode(g, "int8")`` — kept as the public name.
     """
-    gf = g.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(gf), axis=-1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)  # all-zero rows: avoid div-by-zero
-    q = jnp.clip(jnp.round(gf / scale), -127.0, 127.0).astype(jnp.int8)
-    return q, scale
+    return wire.encode(g, "int8")
 
 
 def dequantize_int8(q: Array, scale: Array) -> Array:
-    return q.astype(jnp.float32) * scale
+    return wire.decode(q, scale)
 
 
 def pod_allreduce_int8(g: Array, ef: Array, axis: str) -> Tuple[Array, Array]:
@@ -57,19 +60,17 @@ def pod_allreduce_int8(g: Array, ef: Array, axis: str) -> Tuple[Array, Array]:
     Returns (summed gradient in g.dtype, new error-feedback state).
     Call inside shard_map with ``axis`` mapped to the pod mesh axis.
     """
-    gf = g.astype(jnp.float32) + ef
-    q, scale = quantize_int8(gf)
-    new_ef = gf - dequantize_int8(q, scale)  # |new_ef| <= scale / 2
+    q, scale, new_ef = wire.ef_encode(g, ef, "int8")  # |new_ef| <= scale / 2
 
     def fold(acc, bufs, s, owner):
         del s, owner
         qq, ss = bufs
-        return acc + dequantize_int8(qq, ss)
+        return acc + wire.decode(qq, ss)
 
     # (q, scale) ride the ring together: W-1 hops of int8 payload (+ one
     # f32 scale per row), dequantize-and-add on arrival — the engine's AG
     # pipeline with an accumulator carry.
     total = ov.ag_pipeline(
-        (q, scale), fold, jnp.zeros(gf.shape, jnp.float32), axis, transport="ring"
+        (q, scale), fold, jnp.zeros(g.shape, jnp.float32), axis, transport="ring"
     )
     return total.astype(g.dtype), new_ef

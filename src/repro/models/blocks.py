@@ -328,10 +328,11 @@ def moe_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
 
         def ep_chunk(hc, lc):
             disp, dinfo = mo.topk_dispatch(hc, lc, k, cap)  # (E, cap, D)
-            x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a.mode, backend=a2a.backend)
+            x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a.mode,
+                             backend=a2a.backend, wire=a2a.wire)
             y_ep = _expert_ffn(cfg, x_ep, wi, wo)  # (E_loc, tp*cap, D)
             back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode=a2a.mode,
-                                     backend=a2a.backend)
+                                     backend=a2a.backend, wire=a2a.wire)
             return mo.topk_combine(back, dinfo, out_dtype=dt)
 
         if pcfg.remat != "none":
@@ -369,7 +370,7 @@ def moe_train(cfg, pcfg, info, p: dict, x_sp: Array) -> Array:
                          mode=ag.mode, backend=ag.backend)
         rs = pcfg.policy.resolve("reduce_scatter")
         out = cm.reduce_scatter_chunked(full, MODEL_AXIS, mode=rs.mode,
-                                        backend=rs.backend)
+                                        backend=rs.backend, wire=rs.wire)
     else:
         out = expert_fn(h, logits)
     return x_sp + out.reshape(b, s_loc, d)
@@ -387,10 +388,11 @@ def moe_decode(cfg, pcfg, info, p: dict, x: Array) -> Array:
     disp, dinfo = mo.topk_dispatch(h, logits, k, cap)
     if info.moe_mode == "ep" and pcfg.tp > 1:
         a2a = pcfg.policy.resolve("a2a_ep")
-        x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a.mode, backend=a2a.backend)
+        x_ep = mo.a2a_ep(disp, MODEL_AXIS, mode=a2a.mode,
+                         backend=a2a.backend, wire=a2a.wire)
         y_ep = _expert_ffn(cfg, x_ep, wi, wo)
         back = mo.a2a_ep_inverse(y_ep, MODEL_AXIS, mode=a2a.mode,
-                                 backend=a2a.backend)
+                                 backend=a2a.backend, wire=a2a.wire)
         out = mo.topk_combine(back, dinfo, out_dtype=dt)
     else:
         y = _expert_ffn(cfg, disp, wi, wo)

@@ -26,6 +26,7 @@ shims): ``overlap.apply(name, ...)`` -> ``ops.<name>(...)``;
 ``ParallelConfig.with_modes/with_backends`` -> ``pcfg.policy.with_modes``
 / ``OverlapPolicy`` on the config.
 """
+from . import wire
 from .authoring import BoundOp, FoldTile, OverlapOp, declare, declared, get
 from .library import (
     a2a_ep,
@@ -38,7 +39,7 @@ from .library import (
     reduce_scatter,
     ring_attention,
 )
-from .policy import LATENCY_OPS, OverlapPolicy, ResolvedOverlap
+from .policy import LATENCY_OPS, WIRE_DTYPES, OverlapPolicy, ResolvedOverlap
 
 __all__ = [
     "BoundOp",
@@ -47,6 +48,8 @@ __all__ = [
     "OverlapPolicy",
     "ResolvedOverlap",
     "LATENCY_OPS",
+    "WIRE_DTYPES",
+    "wire",
     "a2a_ep",
     "ag_matmul",
     "ag_matmul_2level",

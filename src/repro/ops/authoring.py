@@ -87,6 +87,7 @@ from ..shmem import executor
 from ..shmem.executor import FoldTile
 from ..shmem.executor import slice_rows as _slice_rows
 from ..shmem.executor import update_rows as _update
+from . import wire as wirefmt
 
 Array = jax.Array
 
@@ -136,6 +137,11 @@ class OverlapOp:
                       (derived from ``tile`` when omitted)
     checkpoint_tag    optional ``checkpoint_name`` tag on the output
                       (remat policies key on it)
+    wires             wire dtypes the riding chunks may travel as
+                      (``("f32",)`` = always as-is; add "int8"/"fp8" to
+                      let the policy/tuner pick a scaled 1-byte wire —
+                      both lowerings then quantize before every put and
+                      dequantize on arrival, accumulating in f32)
     """
 
     name: str
@@ -153,6 +159,7 @@ class OverlapOp:
     differentiable: bool = True
     baseline_fwd: Optional[Callable] = None
     checkpoint_tag: Optional[str] = None
+    wires: Tuple[str, ...] = ("f32",)
 
     def __post_init__(self):
         if isinstance(self.kernel_protocols, Mapping):
@@ -205,6 +212,11 @@ class OverlapOp:
             # the tile=None (pure data movement) case agrees by design
             raise ValueError(
                 f"{self.name}: a2a kernel protocols require tile=None")
+        if self.fold is not None and tuple(self.wires) != ("f32",):
+            # fold state is op-defined (online-softmax tuples etc.) — the
+            # per-row codec has nothing well-defined to quantize
+            raise ValueError(
+                f"{self.name}: fold declarations ride f32 only")
 
     def tile_fn(self) -> Callable:
         return self.tile if self.tile is not None else (lambda x: x)
@@ -239,7 +251,12 @@ def _axis_world(axis) -> int:
 # static keys consumed by the engine itself; everything else is an op
 # extra handed to fold declarations as their ``ctx`` (``axis`` included —
 # folds key causal masks and rank offsets on it)
-_ENGINE_ONLY_KEYS = ("mode", "backend", "chunks", "out_dtype")
+_ENGINE_ONLY_KEYS = ("mode", "backend", "chunks", "out_dtype", "wire")
+
+
+def _wire_codec(static: Mapping):
+    """The call's wire codec (None = f32, chunks ride as-is)."""
+    return wirefmt.codec(static.get("wire", "f32"))
 
 
 def _fold_ctx(static: Mapping) -> Dict[str, Any]:
@@ -256,18 +273,33 @@ def _bind_fold(ft: FoldTile, ctx: Dict[str, Any]) -> FoldTile:
         finalize=lambda state, *st: ft.finalize(ctx, state, *st))
 
 
-def _dual_rs(compute_block, axis):
+def _dual_rs(compute_block, axis, codec=None):
     """The dual RS schedule: single-axis ring, or the two-level pipeline
-    when the op composes (inner, outer) axes."""
+    when the op composes (inner, outer) axes. ``codec`` makes the riding
+    accumulator travel in the forward pass's wire dtype (two-level duals
+    stay f32, mirroring the forward clamp)."""
     if isinstance(axis, (tuple, list)):
         return ov.two_level_rs_pipeline(compute_block, axis[0], axis[1])
-    return ov.rs_pipeline(compute_block, axis, transport="ring")
+    kw = {} if codec is None else {"encode": codec.encode, "decode": codec.decode}
+    return ov.rs_pipeline(compute_block, axis, transport="ring", **kw)
 
 
-def _dual_ag(operands, fold, init, axis):
-    """The dual AG schedule (ring / two-level, mirroring :func:`_dual_rs`)."""
+def _dual_ag(operands, fold, init, axis, codec=None):
+    """The dual AG schedule (ring / two-level, mirroring :func:`_dual_rs`).
+    With a ``codec`` the single riding operand is encoded once and each
+    arrival is decoded before the fold sees it."""
     if isinstance(axis, (tuple, list)):
         return ov.two_level_ag_pipeline(operands, fold, init, axis[0], axis[1])
+    if codec is not None and len(operands) == 1:
+        ride_dtype = operands[0].dtype
+        payload, scales = codec.encode(operands[0])
+
+        def fold_w(carry, bufs, s, owner):
+            chunk = codec.decode(bufs[0], bufs[1]).astype(ride_dtype)
+            return fold(carry, (chunk,), s, owner)
+
+        return ov.ag_pipeline((payload, scales), fold_w, init, axis,
+                              transport="ring")
     return ov.ag_pipeline(operands, fold, init, axis, transport="ring")
 
 
@@ -281,29 +313,39 @@ def _ag_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
     mode = static["mode"]
     out_dtype = _out_dtype(static, operand)
     tile = op.tile_fn()
+    codec = _wire_codec(static)
     w = _axis_world(axis)
     m_loc = operand.shape[0]
     tile_m, rest = _tile_rows(op, operand, statics)
     out0 = jnp.zeros((tile_m * w,) + rest, out_dtype)
 
+    # Under a wire dtype the operand rides as (payload, scales) siblings;
+    # arrivals decode to f32 before the tile. The scales are per-row, so
+    # every row-wise split below (bidir halves, sub-chunks) stays aligned.
+    def _chunk(bufs):
+        return bufs[0] if codec is None else codec.decode(bufs[0], bufs[1])
+
+    def _riding(x):
+        return (x,) if codec is None else codec.encode(x)
+
     if mode == "two_level":
         inner, outer = axis
 
         def fold_tl(out, bufs, s, owner):
-            t = tile(bufs[0], *statics).astype(out_dtype)
+            t = tile(_chunk(bufs), *statics).astype(out_dtype)
             return _update(out, t, owner * tile_m)
 
-        return ov.two_level_ag_pipeline((operand,), fold_tl, out0, inner,
-                                        outer)
+        return ov.two_level_ag_pipeline(_riding(operand), fold_tl, out0,
+                                        inner, outer)
 
     if mode == "bidir" and op.rowwise and m_loc % 2 == 0 and w >= 3:
         h = tile_m // 2
 
         def fold2(out, bufs, s, owner, direction):
-            t = tile(bufs[0], *statics).astype(out_dtype)
+            t = tile(_chunk(bufs), *statics).astype(out_dtype)
             return _update(out, t, owner * tile_m + direction * h)
 
-        return ov.bidir_ag_pipeline((operand,), fold2, out0, axis)
+        return ov.bidir_ag_pipeline(_riding(operand), fold2, out0, axis)
     if mode == "bidir":
         mode = "ring"  # odd chunk or W < 3: bidir degenerates to ring
     if mode not in ("ring", "one_shot"):
@@ -316,14 +358,21 @@ def _ag_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
         s_sub = 1
     m_sub = m_loc // s_sub
     subs = tuple(_slice_rows(operand, j * m_sub, m_sub) for j in range(s_sub))
+    if codec is not None:
+        enc = [codec.encode(sj) for sj in subs]
+        riding = tuple(p for p, _ in enc) + tuple(sc for _, sc in enc)
+    else:
+        riding = subs
 
     def fold(out, bufs, s, owner):
-        for j, bj in enumerate(bufs):
+        for j in range(s_sub):
+            bj = bufs[j] if codec is None else codec.decode(bufs[j],
+                                                            bufs[s_sub + j])
             t = tile(bj, *statics).astype(out_dtype)
             out = _update(out, t, owner * tile_m + j * m_sub)
         return out
 
-    return ov.ag_pipeline(subs, fold, out0, axis, transport=mode)
+    return ov.ag_pipeline(riding, fold, out0, axis, transport=mode)
 
 
 def _rs_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
@@ -331,6 +380,11 @@ def _rs_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
     mode = static["mode"]
     out_dtype = _out_dtype(static, operand)
     tile = op.tile_fn()
+    codec = _wire_codec(static)
+    # wire hooks for the riding accumulator (quantize before each hop,
+    # dequantize + f32-accumulate on arrival)
+    wire_kw = ({} if codec is None
+               else {"encode": codec.encode, "decode": codec.decode})
     w = _axis_world(axis)
     m = operand.shape[0]
     assert m % w == 0, (m, w)
@@ -356,7 +410,7 @@ def _rs_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
             def compute2(blk, s, direction):
                 return tile(block(blk), *halves[direction])
 
-            acc_f, acc_r = ov.bidir_rs_pipeline(compute2, axis)
+            acc_f, acc_r = ov.bidir_rs_pipeline(compute2, axis, **wire_kw)
             return jnp.concatenate(
                 [acc_f, acc_r], axis=op.split_axis).astype(out_dtype)
     if mode == "bidir":
@@ -373,7 +427,7 @@ def _rs_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
         outs = [
             ov.rs_pipeline(
                 lambda blk, s, g=g: tile(block(blk), *g), axis,
-                transport="ring")
+                transport="ring", **wire_kw)
             for g in groups
         ]
         return jnp.concatenate(outs, axis=op.split_axis).astype(out_dtype)
@@ -381,11 +435,16 @@ def _rs_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
     def compute(blk, s):
         return tile(block(blk), *statics)
 
-    return ov.rs_pipeline(compute, axis, transport=mode).astype(out_dtype)
+    return ov.rs_pipeline(compute, axis, transport=mode,
+                          **wire_kw).astype(out_dtype)
 
 
 def _a2a_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
-    out = ov.a2a_pipeline(operand, static["axis"], transport=static["mode"])
+    codec = _wire_codec(static)
+    wire_kw = ({} if codec is None
+               else {"encode": codec.encode, "decode": codec.decode})
+    out = ov.a2a_pipeline(operand, static["axis"], transport=static["mode"],
+                          **wire_kw)
     if op.tile is not None:
         out = op.tile(out, *statics)
     return out.astype(_out_dtype(static, operand))
@@ -507,10 +566,40 @@ def _make_kernel_fwd(op: OverlapOp, cid: int) -> Optional[Callable]:
             world = (lax.axis_size(inner), lax.axis_size(outer))
         else:
             world = lax.axis_size(axis)
+        proto = protos[static["mode"]]
+        out_dtype = _out_dtype(static, operand)
+        codec = _wire_codec(static)
+        if codec is None or proto in executor.TWO_LEVEL_PROTOCOLS:
+            return executor.run(
+                proto, op.tile, operand, statics, axis=axis, world=world,
+                out_dtype=out_dtype, collective_id=cid)
+        # Wire lowering: what rides the executor's workspaces is the
+        # PACKED (payload|scales) buffer — the protocols move it
+        # unmodified, so only the tile boundary changes.
+        tile = op.tile_fn()
+        if op.kind in ("ag", "gather"):
+            # AG side: the riding chunk is packed up-front; the tile
+            # unpacks each arrival back to f32 before its compute.
+            return executor.run(
+                proto,
+                lambda buf, *st: tile(codec.unpack_decode(buf), *st),
+                codec.pack(operand), statics, axis=axis, world=world,
+                out_dtype=out_dtype, collective_id=cid)
+        if op.kind == "a2a":
+            # per-destination blocks packed along the last axis; each
+            # landed block is unpacked (tile=None on a2a declarations,
+            # so the decode IS the per-block tile)
+            return executor.run(
+                proto, lambda buf, *st: codec.unpack_decode(buf),
+                codec.pack(operand), statics, axis=axis, world=world,
+                out_dtype=out_dtype, collective_id=cid)
+        # RS side: the pushed partial is the packed encoded tile output;
+        # the executor decodes each landed partial for the f32 reduction.
         return executor.run(
-            protos[static["mode"]], op.tile, operand, statics, axis=axis,
-            world=world,
-            out_dtype=_out_dtype(static, operand), collective_id=cid)
+            proto, lambda blk, *st: codec.pack(tile(blk, *st)),
+            operand, statics, axis=axis, world=world,
+            out_dtype=out_dtype, collective_id=cid,
+            decode=codec.unpack_decode)
 
     return kernel_fwd
 
@@ -532,12 +621,15 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
         def a2a_bwd(static, res, g):
             # AllToAll is its own transpose as a global linear map (the
             # (rank, block) index swap is symmetric): the cotangent rides
-            # the same decomposed a2a back.
+            # the same decomposed a2a back, in the same wire dtype.
             (operand,) = res
             mode = static["mode"]
             if mode not in ("xla",) + op.transports:
                 mode = op.default
-            d = ov.a2a_pipeline(g, static["axis"], transport=mode)
+            codec = _wire_codec(static)
+            kw = ({} if codec is None
+                  else {"encode": codec.encode, "decode": codec.decode})
+            d = ov.a2a_pipeline(g, static["axis"], transport=mode, **kw)
             return (d.astype(operand.dtype),)
 
         return a2a_bwd
@@ -595,19 +687,20 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
             operand, *statics = res
             axis = static["axis"]
             out_dtype = _out_dtype(static, operand)
+            codec = _wire_codec(static)
             tile_m, rest = _tile_rows(op, operand, statics)
             zeros = jnp.zeros(operand.shape, operand.dtype)
 
             # operand gradient: rides the DUAL RS schedule (the transpose
             # partner's — ring, or two-level for compound-axis ops) —
-            # O(1) permute buffers.
+            # O(1) permute buffers, in the forward pass's wire dtype.
             def compute_block(blk, s):
                 g_blk = _slice_rows(g, blk * tile_m, tile_m)
                 _, vjp = jax.vjp(
                     lambda xc: tile_cast(out_dtype, xc, *statics), zeros)
                 return vjp(g_blk)[0].astype(jnp.float32)
 
-            d_op = _dual_rs(compute_block, axis).astype(operand.dtype)
+            d_op = _dual_rs(compute_block, axis, codec).astype(operand.dtype)
             if not statics:
                 return (d_op,)
 
@@ -621,7 +714,7 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
                              for d, gi in zip(ds, vjp(g_o)))
 
             ds0 = tuple(jnp.zeros(s.shape, jnp.float32) for s in statics)
-            d_statics = _dual_ag((operand,), fold, ds0, axis)
+            d_statics = _dual_ag((operand,), fold, ds0, axis, codec)
             return (d_op,) + tuple(
                 d.astype(s.dtype) for d, s in zip(d_statics, statics))
 
@@ -631,6 +724,7 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
         operand, *statics = res
         axis = static["axis"]
         out_dtype = _out_dtype(static, operand)
+        codec = _wire_codec(static)
         w = _axis_world(axis)
         m_blk = operand.shape[0] // w
 
@@ -653,7 +747,7 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
 
         init = (jnp.zeros(operand.shape, jnp.float32),
                 tuple(jnp.zeros(s.shape, jnp.float32) for s in statics))
-        d_opnd, d_statics = _dual_ag((g,), fold, init, axis)
+        d_opnd, d_statics = _dual_ag((g,), fold, init, axis, codec)
         return (d_opnd.astype(operand.dtype),) + tuple(
             d.astype(s.dtype) for d, s in zip(d_statics, statics))
 
@@ -689,7 +783,7 @@ class BoundOp:
 
     def __call__(self, *tensors, axis, policy=None, mode: Optional[str] = None,
                  backend: Optional[str] = None, chunks: Optional[int] = None,
-                 out_dtype=None, **extras):
+                 wire: Optional[str] = None, out_dtype=None, **extras):
         """``axis`` is one mesh-axis name, or ``(inner, outer)`` for
         two-level (compound-mesh) ops. ``extras`` are op-specific static
         values (hashable — e.g. ring attention's ``causal``/``scale``),
@@ -699,14 +793,16 @@ class BoundOp:
             mode = mode or r.mode
             backend = backend or r.backend
             chunks = r.chunks if chunks is None else chunks
+            wire = wire or r.wire
         if isinstance(axis, list):
             axis = tuple(axis)
         mode = ov.resolve_mode(self.name, mode or self.decl.default)
+        wire = ov.resolve_wire(self.name, wire or "f32", mode)
         out_dtype = jnp.dtype(out_dtype or tensors[0].dtype)
         out = ov.dispatch(
             self.name, *tensors, axis=axis, mode=mode,
             chunks=max(1, chunks or 1), backend=backend or "graph",
-            out_dtype=out_dtype.name, **extras)
+            wire=wire, out_dtype=out_dtype.name, **extras)
         if self.decl.checkpoint_tag:
             out = checkpoint_name(out, self.decl.checkpoint_tag)
         return out
@@ -737,6 +833,7 @@ def declare(op: OverlapOp) -> BoundOp:
         bwd=_make_bwd(op),
         kernel_transports=tuple(dict(op.kernel_protocols)),
         kernel_fwd=_make_kernel_fwd(op, cid),
+        wires=op.wires,
     )
     bound = BoundOp(op)
     _DECLARED[op.name] = bound

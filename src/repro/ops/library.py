@@ -61,6 +61,7 @@ ag_matmul = declare(OverlapOp(
     transpose="matmul_rs",
     rowwise=True,
     baseline_fwd=_ag_matmul_baseline,
+    wires=("f32", "int8", "fp8"),
     # remat policy "block_save_ag" keeps gathered activations across the
     # backward instead of re-running the gather ring
     checkpoint_tag="ag_out",
@@ -76,6 +77,7 @@ matmul_rs = declare(OverlapOp(
     static_split=_split_cols,
     split_axis=1,
     baseline_fwd=_matmul_rs_baseline,
+    wires=("f32", "int8", "fp8"),
 ))
 
 all_gather = declare(OverlapOp(
@@ -86,6 +88,7 @@ all_gather = declare(OverlapOp(
     kernel_protocols=(("ring", "ring_ag"), ("one_shot", "one_shot_ag")),
     transpose="reduce_scatter",
     rowwise=True,
+    wires=("f32", "int8", "fp8"),
 ))
 
 
@@ -101,6 +104,7 @@ reduce_scatter = declare(OverlapOp(
     transports=("ring", "one_shot"),
     kernel_protocols=(("ring", "push_rs"), ("one_shot", "one_shot_rs")),
     transpose="all_gather",
+    wires=("f32", "int8", "fp8"),
 ))
 
 # EP AllToAll (paper Fig. 16): pure data movement over the leading
@@ -117,6 +121,7 @@ a2a_ep = declare(OverlapOp(
     baseline="xla",
     default="one_shot",
     kernel_protocols=(("one_shot", "one_shot_a2a"),),
+    wires=("f32", "int8", "fp8"),
 ))
 
 

@@ -29,6 +29,10 @@ LATENCY_OPS: Tuple[Tuple[str, str], ...] = (
     ("flash_decode", "one_shot"),
 )
 
+# Wire dtypes a riding chunk can travel as: "f32" = as-is (the operand's own
+# dtype), "int8"/"fp8" = per-row scaled 1-byte blocks (see ops/wire.py).
+WIRE_DTYPES: Tuple[str, ...] = ("f32", "int8", "fp8")
+
 
 @dataclass(frozen=True)
 class ResolvedOverlap:
@@ -37,6 +41,7 @@ class ResolvedOverlap:
     mode: str
     backend: str
     chunks: int
+    wire: str = "f32"
 
 
 def _as_items(value) -> Tuple[Tuple[str, str], ...]:
@@ -57,6 +62,9 @@ class OverlapPolicy:
     backends   per-op backend overrides
     ag_chunks  sub-chunks per rank for AG-side ops (0 = 1, paper default)
     rs_chunks  accumulator column groups for RS-side ops (0 = 1)
+    wire       default wire dtype for riding chunks ("f32" = as-is,
+               "int8"/"fp8" = per-row scaled 1-byte blocks)
+    wires      per-op wire overrides
     """
 
     mode: str = "ring"
@@ -65,11 +73,20 @@ class OverlapPolicy:
     backends: tuple = ()
     ag_chunks: int = 0
     rs_chunks: int = 0
+    wire: str = "f32"
+    wires: tuple = ()
 
     def __post_init__(self):
         # accept dicts for ergonomics; store hashable sorted tuples
         object.__setattr__(self, "modes", _as_items(self.modes))
         object.__setattr__(self, "backends", _as_items(self.backends))
+        object.__setattr__(self, "wires", _as_items(self.wires))
+        # wire names are a closed set — validate eagerly so a typo fails at
+        # config construction, not deep inside a traced lowering
+        for w in (self.wire,) + tuple(v for _, v in self.wires):
+            if w not in WIRE_DTYPES:
+                raise ValueError(
+                    f"unknown wire dtype {w!r} (valid: {WIRE_DTYPES})")
 
     # -- resolution ----------------------------------------------------
     def _requested(self, table, default: str, op: str) -> str:
@@ -102,6 +119,14 @@ class OverlapPolicy:
         kind = overlap.get(op).kind
         return max(1, self.rs_chunks if kind == "rs" else self.ag_chunks)
 
+    def wire_for(self, op: str) -> str:
+        """Effective wire dtype for ``op``, clamped to the registry's
+        wire-capable ops and transports (baselines ride f32)."""
+        from ..core import overlap
+
+        return overlap.resolve_wire(
+            op, self._requested(self.wires, self.wire, op), self.mode_for(op))
+
     def resolve(self, op: str, hw=None) -> ResolvedOverlap:
         """The op's effective (mode, backend, chunks).
 
@@ -113,7 +138,9 @@ class OverlapPolicy:
         backend = self.backend_for(op)
         if hw is not None and getattr(hw, "ici_links", 0) == 0:
             backend = "graph"
-        return ResolvedOverlap(self.mode_for(op), backend, self.chunks_for(op))
+        return ResolvedOverlap(
+            self.mode_for(op), backend, self.chunks_for(op),
+            self.wire_for(op))
 
     # -- functional updates -------------------------------------------
     def with_modes(self, **per_op: str) -> "OverlapPolicy":
@@ -128,8 +155,15 @@ class OverlapPolicy:
         merged.update(per_op)
         return dataclasses.replace(self, backends=tuple(sorted(merged.items())))
 
+    def with_wires(self, **per_op: str) -> "OverlapPolicy":
+        """A copy with per-op wire-dtype overrides merged in."""
+        merged = dict(self.wires)
+        merged.update(per_op)
+        return dataclasses.replace(self, wires=tuple(sorted(merged.items())))
+
     def describe(self, op: str) -> str:
-        """Compact 'mode/backend[/xN]' string (benchmark + log rows)."""
+        """Compact 'mode/backend[/xN][/wire]' string (benchmark + log rows)."""
         r = self.resolve(op)
         sub = f"/x{r.chunks}" if r.chunks > 1 else ""
-        return f"{r.mode}/{r.backend}{sub}"
+        wire = f"/{r.wire}" if r.wire != "f32" else ""
+        return f"{r.mode}/{r.backend}{sub}{wire}"

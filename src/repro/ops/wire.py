@@ -1,0 +1,139 @@
+"""Wire codecs: scaled low-precision block formats for riding chunks.
+
+A *wire dtype* controls how a chunk travels between ranks inside an overlap
+schedule. ``f32`` means "as-is" (whatever dtype the operand already has).
+``int8`` / ``fp8`` quantize each row (last axis) to a 1-byte payload plus one
+f32 scale, cutting ICI bytes to roughly ``1/dtype_bytes`` of the original.
+
+Two representations are used by the lowerings:
+
+* **split** — ``(payload, scales)`` as separate arrays. The graph lowerings
+  ride both through the engine pipelines as sibling operands.
+* **packed** — a single ``uint8`` buffer of shape ``(..., k + 4)``: the
+  payload bitcast to bytes, with the row's f32 scale appended as 4 trailing
+  bytes. The kernel lowerings push packed buffers through the executor's
+  existing riding-chunk workspaces unchanged.
+
+Accumulation is always f32: ``decode`` returns f32 regardless of the payload
+dtype, and reductions add decoded blocks in f32 before the final output cast.
+``ef_encode`` implements error feedback for repeated reductions (the residual
+of this step's quantization is carried into the next step's input).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .policy import WIRE_DTYPES
+
+Array = jax.Array
+
+SCALE_BYTES = 4  # one f32 scale per row, appended to the packed payload
+
+_QMAX = {"int8": 127.0, "fp8": 448.0}  # float8_e4m3fn max finite = 448
+
+
+def _payload_dtype(wire: str):
+    return jnp.int8 if wire == "int8" else jnp.float8_e4m3fn
+
+
+def _check(wire: str) -> None:
+    if wire not in WIRE_DTYPES:
+        raise ValueError(f"unknown wire dtype {wire!r} (valid: {WIRE_DTYPES})")
+    if wire == "f32":
+        raise ValueError("wire 'f32' has no codec (chunks ride as-is)")
+
+
+def encode(x: Array, wire: str) -> Tuple[Array, Array]:
+    """Per-row symmetric quantization: ``x -> (payload, scales)``.
+
+    ``scales`` has shape ``x.shape[:-1] + (1,)`` in f32. The int8 path is the
+    exact formula ``dist/compress.py`` pinned before it moved here.
+    """
+    _check(wire)
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / _QMAX[wire]
+    scale = jnp.maximum(scale, 1e-12)
+    y = xf / scale
+    if wire == "int8":
+        payload = jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+    else:
+        payload = jnp.clip(y, -448.0, 448.0).astype(jnp.float8_e4m3fn)
+    return payload, scale
+
+
+def decode(payload: Array, scales: Array) -> Array:
+    """Dequantize to f32: ``payload * scales`` (accumulation dtype)."""
+    return payload.astype(jnp.float32) * scales.astype(jnp.float32)
+
+
+def ef_encode(g: Array, ef: Array, wire: str) -> Tuple[Array, Array, Array]:
+    """Error-feedback encode: returns ``(payload, scales, new_ef)``.
+
+    The carried residual ``ef`` is added before quantizing; the new residual
+    is what this step's quantization lost. Repeated reductions with the
+    residual fed back have bounded accumulated bias.
+    """
+    gf = g.astype(jnp.float32) + ef.astype(jnp.float32)
+    payload, scale = encode(gf, wire)
+    return payload, scale, gf - decode(payload, scale)
+
+
+def pack(payload: Array, scales: Array) -> Array:
+    """Pack ``(payload, scales)`` into one uint8 buffer of shape (..., k+4)."""
+    pb = lax.bitcast_convert_type(payload, jnp.uint8)
+    sb = lax.bitcast_convert_type(scales.astype(jnp.float32), jnp.uint8)
+    # scales (..., 1) -> bytes (..., 1, 4) -> (..., 4)
+    sb = sb.reshape(sb.shape[:-2] + (SCALE_BYTES,))
+    return jnp.concatenate([pb, sb], axis=-1)
+
+
+def unpack(buf: Array, wire: str) -> Tuple[Array, Array]:
+    """Invert :func:`pack`: uint8 (..., k+4) -> (payload, scales)."""
+    _check(wire)
+    k = buf.shape[-1] - SCALE_BYTES
+    payload = lax.bitcast_convert_type(buf[..., :k], _payload_dtype(wire))
+    sb = buf[..., k:].reshape(buf.shape[:-1] + (1, SCALE_BYTES))
+    scales = lax.bitcast_convert_type(sb, jnp.float32)
+    return payload, scales
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Bound helpers for one wire dtype (``codec("f32") is None``)."""
+
+    name: str
+
+    def encode(self, x: Array) -> Tuple[Array, Array]:
+        return encode(x, self.name)
+
+    def decode(self, payload: Array, scales: Array) -> Array:
+        return decode(payload, scales)
+
+    def pack(self, x: Array) -> Array:
+        return pack(*encode(x, self.name))
+
+    def unpack_decode(self, buf: Array) -> Array:
+        return decode(*unpack(buf, self.name))
+
+    def roundtrip(self, x: Array) -> Array:
+        return decode(*encode(x, self.name))
+
+
+def codec(wire: str) -> Optional[WireCodec]:
+    """Codec for ``wire``, or ``None`` for ``"f32"`` (ride as-is)."""
+    if wire == "f32":
+        return None
+    _check(wire)
+    return WireCodec(wire)
+
+
+def wire_bytes(rows: int, cols: int, wire: str, dtype_bytes: int) -> float:
+    """Bytes on the wire for a (rows, cols) chunk — the tuner's bytes term."""
+    if wire == "f32":
+        return float(rows * cols * dtype_bytes)
+    return float(rows * (cols + SCALE_BYTES))

@@ -320,21 +320,32 @@ def _block(operand, blk, m_blk):
     return slice_rows(operand, blk * m_blk, m_blk)
 
 
-def _rs_reduce(ctx, ts, world, out_dtype):
-    """signal_wait for all W partials, then the local f32 reduction."""
+def _rs_reduce(ctx, ts, world, out_dtype, decode=None):
+    """signal_wait for all W partials, then the local f32 reduction.
+
+    With a wire ``decode`` hook the landed partials are packed wire
+    buffers (``ts`` describes the packed uint8 layout); each is decoded
+    to f32 before accumulation."""
     ctx.signal_wait_until(sig="recv", value=world)
-    acc = jnp.zeros(ts.shape, jnp.float32)
+    acc_shape = ts.shape if decode is None else jax.eval_shape(decode, ts).shape
+    acc = jnp.zeros(acc_shape, jnp.float32)
     for r in range(world):
-        part = ctx.read_symmetric(ts.shape, out_dtype, buf="ws", slot=r)
-        acc = acc + part.astype(jnp.float32)
+        read_dtype = out_dtype if decode is None else ts.dtype
+        part = ctx.read_symmetric(ts.shape, read_dtype, buf="ws", slot=r)
+        acc = acc + (part.astype(jnp.float32) if decode is None else decode(part))
     ctx.barrier_all()
     return acc.astype(out_dtype)
 
 
-def _push_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid):
+def _push_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid,
+                      decode=None):
     """Alg. 3 push protocol: per-step put of the partial into the owner's
     slot ``me`` (own block pushed to self at the last step, so all W
-    slots land symmetrically), then one signal_wait + f32 reduction."""
+    slots land symmetrically), then one signal_wait + f32 reduction.
+
+    Under a wire dtype the tile already returns the packed wire buffer
+    (pushed verbatim — no out_dtype cast, which would corrupt the bytes)
+    and ``decode`` unpacks each landed partial for the f32 reduction."""
     me = lax.axis_index(axis)
     m_blk = operand.shape[0] // world
     ts = _tile_struct(tile, _block(operand, 0, m_blk), statics)
@@ -344,12 +355,15 @@ def _push_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid):
     for s in range(world):
         # Alg. 3 swizzle: peers' blocks first, own block last (blk == me)
         blk = lax.rem(me - s - 1 + 2 * world, world)
-        partial = tile(_block(operand, blk, m_blk), *statics).astype(out_dtype)
+        partial = tile(_block(operand, blk, m_blk), *statics)
+        if decode is None:
+            partial = partial.astype(out_dtype)
         ctx.putmem_signal_nbi(partial, blk, buf="ws", slot=me, sig="recv")
-    return _rs_reduce(ctx, ts, world, out_dtype)
+    return _rs_reduce(ctx, ts, world, out_dtype, decode)
 
 
-def _one_shot_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid):
+def _one_shot_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid,
+                          decode=None):
     """Low-latency RS: ALL W partials computed first, then the W puts
     issued up-front at distinct ring offsets (own block first) — no
     serial compute/DMA dependency chain."""
@@ -362,11 +376,13 @@ def _one_shot_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid
     partials = []
     for off in range(world):
         tgt = lax.rem(me + off, world)
-        partials.append(
-            (tgt, tile(_block(operand, tgt, m_blk), *statics).astype(out_dtype)))
+        partial = tile(_block(operand, tgt, m_blk), *statics)
+        if decode is None:
+            partial = partial.astype(out_dtype)
+        partials.append((tgt, partial))
     for tgt, partial in partials:  # all puts up-front, no waits between
         ctx.putmem_signal_nbi(partial, tgt, buf="ws", slot=me, sig="recv")
-    return _rs_reduce(ctx, ts, world, out_dtype)
+    return _rs_reduce(ctx, ts, world, out_dtype, decode)
 
 
 def _ring_fold_emulated(fold, chunk, statics, *, axis, world, out_dtype, cid):
@@ -701,7 +717,7 @@ def _one_shot_ag_pltpu(tile, chunk, statics, *, axis, world, out_dtype, cid):
 
 
 def _push_rs_body(*refs, tile, axis, world, n_static, m_blk, one_shot,
-                  out_dtype):
+                  out_dtype, decode=None):
     (a_ref, *rest) = refs
     static_refs = rest[:n_static]
     o_ref, ws_ref = rest[n_static], rest[n_static + 1]
@@ -710,7 +726,11 @@ def _push_rs_body(*refs, tile, axis, world, n_static, m_blk, one_shot,
     a_vmem = rest[base]
     static_vmems = rest[base + 1:base + 1 + n_static]
     p_vmem = rest[base + 1 + n_static]
-    local_sem, send_sem, recv_sem = rest[base + 2 + n_static:]
+    # under a wire dtype p_vmem holds the packed partial; the decoded f32
+    # accumulator needs its own (differently-shaped) output buffer
+    o_vmem = rest[base + 2 + n_static] if decode is not None else None
+    sem_base = base + 2 + n_static + (1 if decode is not None else 0)
+    local_sem, send_sem, recv_sem = rest[sem_base:]
 
     me = lax.axis_index(axis)
     tpu_backend.barrier_all(axis, world)
@@ -719,8 +739,10 @@ def _push_rs_body(*refs, tile, axis, world, n_static, m_blk, one_shot,
 
     def compute(blk):
         _stage((a_ref.at[pl.ds(blk * m_blk, m_blk)],), (a_vmem,), local_sem)
-        p_vmem[...] = tile(
-            a_vmem[...], *[v[...] for v in static_vmems]).astype(out_dtype)
+        partial = tile(a_vmem[...], *[v[...] for v in static_vmems])
+        # packed wire buffers are pushed verbatim (a cast would corrupt
+        # the bytes); plain partials land in out_dtype as before
+        p_vmem[...] = partial if decode is not None else partial.astype(out_dtype)
 
     sends = []
     if one_shot:
@@ -759,42 +781,51 @@ def _push_rs_body(*refs, tile, axis, world, n_static, m_blk, one_shot,
     # own descriptors consumes my peers' arrivals), then the f32 reduction
     for send in sends:
         send.wait_recv()
-    acc = jnp.zeros(p_vmem.shape, jnp.float32)
+    acc_vmem = p_vmem if decode is None else o_vmem
+    acc = jnp.zeros(acc_vmem.shape, jnp.float32)
     for r in range(world):
         _stage((ws_ref.at[r],), (p_vmem,), local_sem)
-        acc = acc + p_vmem[...].astype(jnp.float32)
-    p_vmem[...] = acc.astype(out_dtype)
-    _stage((p_vmem,), (o_ref,), local_sem)
+        acc = acc + (p_vmem[...].astype(jnp.float32) if decode is None
+                     else decode(p_vmem[...]))
+    acc_vmem[...] = acc.astype(out_dtype)
+    _stage((acc_vmem,), (o_ref,), local_sem)
 
 
 def _rs_pltpu(tile, operand, statics, *, axis, world, out_dtype, cid,
-              one_shot):
+              one_shot, decode=None):
     m_blk = operand.shape[0] // world
     blk_struct = jax.ShapeDtypeStruct((m_blk,) + operand.shape[1:],
                                       operand.dtype)
     ts = _tile_struct(tile, blk_struct, statics)
+    # under a wire dtype the riding partial is the packed buffer (ts) and
+    # the output block is its decoded shape
+    ws_dtype = out_dtype if decode is None else ts.dtype
+    out_struct = ts if decode is None else jax.eval_shape(decode, ts)
     body = functools.partial(
         _push_rs_body, tile=tile, axis=axis, world=world,
         n_static=len(statics), m_blk=m_blk, one_shot=one_shot,
-        out_dtype=out_dtype)
+        out_dtype=out_dtype, decode=decode)
     out_shape = [
-        jax.ShapeDtypeStruct(ts.shape, out_dtype),
-        jax.ShapeDtypeStruct((world,) + ts.shape, out_dtype),  # landing ws
+        jax.ShapeDtypeStruct(out_struct.shape, out_dtype),
+        jax.ShapeDtypeStruct((world,) + ts.shape, ws_dtype),  # landing ws
     ]
     if one_shot:
         out_shape.append(  # local staging for the up-front puts
-            jax.ShapeDtypeStruct((world,) + ts.shape, out_dtype))
+            jax.ShapeDtypeStruct((world,) + ts.shape, ws_dtype))
+    scratch = ([pltpu.VMEM(blk_struct.shape, operand.dtype)]
+               + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
+               + [pltpu.VMEM(ts.shape, ws_dtype)])
+    if decode is not None:
+        scratch.append(pltpu.VMEM(out_struct.shape, out_dtype))
+    scratch += [pltpu.SemaphoreType.DMA,
+                pltpu.SemaphoreType.DMA,
+                pltpu.SemaphoreType.DMA]
     outs = pl.pallas_call(
         body,
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + len(statics)),
         out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * len(out_shape),
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM(blk_struct.shape, operand.dtype)]
-        + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
-        + [pltpu.VMEM(ts.shape, out_dtype),
-           pltpu.SemaphoreType.DMA,
-           pltpu.SemaphoreType.DMA,
-           pltpu.SemaphoreType.DMA],
+        scratch_shapes=scratch,
         compiler_params=pltpu.CompilerParams(collective_id=cid),
     )(operand, *statics)
     return outs[0]
@@ -1311,6 +1342,7 @@ def run(
     out_dtype=None,
     collective_id: int = 0,
     backend: Optional[str] = None,
+    decode: Optional[Callable] = None,
 ) -> Array:
     """Execute ``tile`` under a shmem communication protocol.
 
@@ -1325,6 +1357,13 @@ def run(
     ``world=(Wi, Wo)``. ``backend`` is a shmem backend name
     ("pltpu" | "emulated"); default picks per platform
     (``shmem.default_backend``).
+
+    ``decode`` is the RS-side wire hook (push_rs / one_shot_rs only):
+    when set, ``tile`` returns a PACKED wire buffer (ops.wire.pack) that
+    is pushed verbatim, and ``decode(packed) -> f32`` unpacks each landed
+    partial before the owner's reduction. The AG/a2a protocols need no
+    hook — the caller packs the riding operand and unpacks inside
+    ``tile``, since their payloads pass through workspaces unmodified.
     """
     if protocol not in PROTOCOLS:
         raise ValueError(f"unknown protocol {protocol!r} (not in {PROTOCOLS})")
@@ -1332,6 +1371,9 @@ def run(
     if two_level != isinstance(axis, (tuple, list)):
         raise ValueError(
             f"{protocol}: axis must be {'(inner, outer)' if two_level else 'one axis name'}, got {axis!r}")
+    if decode is not None and protocol not in ("push_rs", "one_shot_rs"):
+        raise ValueError(
+            f"{protocol}: decode is only supported for push_rs/one_shot_rs")
     if two_level:
         axis, world = tuple(axis), tuple(world)
     if protocol == "ring_fold":
@@ -1341,5 +1383,7 @@ def run(
         tile = tile or _identity
     backend = backend or default_backend()
     impl = (_PLTPU if backend == "pltpu" else _EMULATED)[protocol]
+    kwargs = {} if decode is None else {"decode": decode}
     return impl(tile, operand, tuple(statics), axis=axis, world=world,
-                out_dtype=out_dtype or operand.dtype, cid=collective_id)
+                out_dtype=out_dtype or operand.dtype, cid=collective_id,
+                **kwargs)
