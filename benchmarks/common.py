@@ -1,23 +1,60 @@
-"""Benchmark utilities: timing + the standard CSV row format."""
+"""Benchmark utilities: timing + the standard CSV row format.
+
+Under ``benchmarks/run.py --trace`` (``_REPRO_BENCH_TRACE`` set in the
+inner process) :func:`time_fn` drains the :mod:`repro.obs` event trace
+of its timed iterations into ``LAST_MEASURED`` — measured
+``overlap_eff`` / ``stall_frac`` for the row :func:`row` is about to
+format — and accumulates every event into ``TRACE_EVENTS`` for the
+run-level Chrome-trace artifact. Without the env var both hooks are
+inert and rows keep the plain ``name,us,derived`` shape.
+"""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 
+# measured fields of the most recent time_fn call (row() appends them)
+LAST_MEASURED: dict = {}
+# every traced event of the bench run (run.py saves the combined trace)
+TRACE_EVENTS: list = []
+
+
+def _tracing() -> bool:
+    return bool(os.environ.get("_REPRO_BENCH_TRACE"))
+
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time per call in microseconds."""
+    global LAST_MEASURED
+    LAST_MEASURED = {}
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
+    if _tracing():
+        from repro import obs
+
+        obs.clear()  # attribute events to the timed iterations only
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
+    if _tracing():
+        from repro import obs
+
+        events = obs.events(clear=True)
+        if events:
+            s = obs.metrics.summarize(events)
+            LAST_MEASURED = {"overlap_eff": round(s.overlap_efficiency, 4),
+                             "stall_frac": round(s.stall_frac, 4)}
+            TRACE_EVENTS.extend(events)
     times.sort()
     return times[len(times) // 2] * 1e6
 
 
 def row(name: str, us: float, derived: str) -> str:
-    return f"{name},{us:.1f},{derived}"
+    line = f"{name},{us:.1f},{derived}"
+    for k, v in LAST_MEASURED.items():
+        line += f",{k}={v}"
+    return line

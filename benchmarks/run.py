@@ -54,11 +54,14 @@ def _mode_vocabulary():
 
 
 def parse_row(tag: str, line: str, world: int, modes):
-    """'op/shape/mode[/backend][/wire],us,derived' -> a BENCH record or None.
+    """'op/shape/mode[/backend][/wire],us,derived[,k=v...]' -> a BENCH
+    record or None.
 
     Each record carries the row's resolved overlap ``policy`` (the
     ``repro.ops.OverlapPolicy`` resolution the row ran under — mode,
-    backend, sub-chunk count, wire dtype) rather than loose strings."""
+    backend, sub-chunk count, wire dtype) rather than loose strings.
+    Trailing ``k=v`` fields (the ``--trace`` run's measured
+    ``overlap_eff`` / ``stall_frac``) land under ``measured``."""
     parts = line.split(",")
     if len(parts) < 2:
         return None
@@ -67,6 +70,14 @@ def parse_row(tag: str, line: str, world: int, modes):
         us = float(parts[1])
     except ValueError:
         return None
+    measured = {}
+    for extra in parts[2:]:
+        k, sep, v = extra.partition("=")
+        if sep and k in ("overlap_eff", "stall_frac"):
+            try:
+                measured[k] = float(v)
+            except ValueError:
+                pass
     segs = name.split("/")
     wire = "f32"
     if segs[-1] in ("int8", "fp8"):  # trailing wire segment ("f32" is implied)
@@ -82,7 +93,7 @@ def parse_row(tag: str, line: str, world: int, modes):
         segs[-1] = base
         chunks = int(sub)
     mode = segs[-1] if segs[-1] in modes else ""
-    return {
+    rec = {
         "op": segs[0],
         "policy": {"mode": mode, "backend": backend, "chunks": chunks,
                    "wire": wire},
@@ -90,10 +101,20 @@ def parse_row(tag: str, line: str, world: int, modes):
         "us_per_call": us,
         "name": f"{tag}/{name}",
     }
+    if measured:
+        rec["measured"] = measured
+    return rec
 
 
 def _inner() -> None:
     import jax
+
+    trace_path = os.environ.get("_REPRO_BENCH_TRACE")
+    if trace_path:
+        # enable BEFORE any bench compiles so compute spans are traced
+        from repro import obs
+
+        obs.enable()
 
     from . import (
         bench_a2a,
@@ -138,6 +159,13 @@ def _inner() -> None:
     with open(out_path, "w") as f:
         json.dump(records, f, indent=1)
     print(f"# wrote {len(records)} records to {out_path}", file=sys.stderr)
+    if trace_path:
+        from repro import obs
+
+        from . import common
+
+        n = obs.trace.save(trace_path, common.TRACE_EVENTS + obs.events())
+        print(f"# wrote {n} trace events to {trace_path}", file=sys.stderr)
 
 
 def check_regressions(baseline_path: str, fresh_path: str,
@@ -197,17 +225,32 @@ def main() -> None:
     ap.add_argument("--tolerance", type=float, default=1.0,
                     help="allowed slowdown fraction for --check "
                          "(1.0 = fail above 2x baseline)")
+    ap.add_argument("--trace", nargs="?", const="BENCH_trace.json",
+                    default=None, metavar="PATH",
+                    help="enable repro.obs tracing: write the run's "
+                         "Chrome-trace JSON (default BENCH_trace.json) and "
+                         "add measured overlap_eff/stall_frac to rows")
     args = ap.parse_args()
+    if args.trace and args.update:
+        # instrumented timings carry host-callback overhead — they must
+        # never become the committed regression baseline
+        ap.error("--trace cannot be combined with --update")
 
     here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     baseline = os.path.join(here, "BENCH_overlap.json")
     out_json = baseline
     if args.check and not args.update:
         out_json = os.path.join(here, "BENCH_overlap.fresh.json")
+    elif args.trace:
+        # a traced run's timings are instrumented — keep them out of the
+        # committed baseline too
+        out_json = os.path.join(here, "BENCH_overlap.traced.json")
 
     env = dict(os.environ)
     env["_REPRO_BENCH_INNER"] = "1"
     env["_REPRO_BENCH_JSON"] = out_json
+    if args.trace:
+        env["_REPRO_BENCH_TRACE"] = os.path.abspath(args.trace)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(here, "src"), here, env.get("PYTHONPATH", "")]

@@ -22,6 +22,13 @@ def main():
         dtype="float32", no_fsdp=False)
     eng = serve_mod.run(ns)
     print(f"\nKV cache fill after run: {eng.cache_len}/{ns.max_len}")
+    m = eng.metrics()
+    print(f"TTFT {m.ttft_mean_s * 1e3:.1f}ms mean / "
+          f"{m.ttft_max_s * 1e3:.1f}ms max; "
+          f"TPOT {m.tpot_mean_s * 1e3:.2f}ms; "
+          f"queue depth {m.queue_depth_mean:.2f} mean "
+          f"(max {m.queue_depth_max}); "
+          f"slot occupancy {m.slot_occupancy_mean:.0%}")
 
 
 if __name__ == "__main__":

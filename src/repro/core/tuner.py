@@ -19,7 +19,7 @@ timing happens on the host driving the SPMD program).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, Optional, Sequence
 
 import jax
@@ -319,6 +319,9 @@ class TuneResult:
     config: object
     seconds: float
     all_timings: dict
+    # repr(config) -> repro.obs.metrics.Summary (tune(record_stalls=True)):
+    # the measured stall breakdown behind each candidate's timing
+    stalls: dict = field(default_factory=dict)
 
 
 def default_reset() -> Optional[Callable[[], None]]:
@@ -346,6 +349,7 @@ def tune(
     reset="auto",
     warmup: int = 1,
     iters: int = 3,
+    record_stalls: bool = False,
 ) -> TuneResult:
     """Time whole wrapped step functions, one config at a time.
 
@@ -359,28 +363,57 @@ def tune(
     behind, so stale signal-slot state can never leak across timed
     candidates. Pass an explicit callable to override, or ``None`` to
     disable.
+
+    ``record_stalls=True`` enables :mod:`repro.obs` tracing around each
+    candidate (BEFORE its first compile, so compute spans are traced)
+    and reduces the timed iterations' events into a per-candidate
+    :class:`repro.obs.metrics.Summary` in ``TuneResult.stalls`` — the
+    measured exposed-comm / overlap-efficiency breakdown behind each
+    timing. Note: tracing adds host-callback overhead, so absolute
+    ``seconds`` shift; the RELATIVE stall structure is the signal.
     """
     if reset == "auto":
         reset = default_reset()
+    obs = None
+    if record_stalls:
+        from .. import obs as _obs
+
+        obs = _obs
+        was_enabled = obs.enabled()
+        obs.enable()
     timings: dict = {}
+    stalls: dict = {}
     best_cfg, best_t = None, float("inf")
-    for cfg in configs:
-        step = make_step(cfg)
-        for _ in range(warmup):
-            out = step()
-            jax.block_until_ready(out)
-            if reset is not None:
-                reset()
-        acc = 0.0
-        for _ in range(iters):
-            t0 = time.perf_counter()
-            out = step()
-            jax.block_until_ready(out)
-            acc += time.perf_counter() - t0
-            if reset is not None:
-                reset()
-        t = acc / iters
-        timings[repr(cfg)] = t
-        if t < best_t:
-            best_cfg, best_t = cfg, t
-    return TuneResult(best_cfg, best_t, timings)
+    try:
+        for cfg in configs:
+            step = make_step(cfg)
+            for _ in range(warmup):
+                out = step()
+                jax.block_until_ready(out)
+                if obs is not None:
+                    obs.clear()  # timed iterations only
+                if reset is not None:
+                    reset()
+            acc = 0.0
+            cfg_events = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                out = step()
+                jax.block_until_ready(out)
+                acc += time.perf_counter() - t0
+                if obs is not None:
+                    # drain BEFORE reset: reset drops worlds + traces
+                    cfg_events.extend(obs.events(clear=True))
+                if reset is not None:
+                    reset()
+            t = acc / iters
+            timings[repr(cfg)] = t
+            if obs is not None and cfg_events:
+                stalls[repr(cfg)] = obs.metrics.summarize(
+                    cfg_events, config=repr(cfg))
+            if t < best_t:
+                best_cfg, best_t = cfg, t
+    finally:
+        if obs is not None and not was_enabled:
+            obs.disable()
+    return TuneResult(best_cfg, best_t, timings, stalls)

@@ -51,6 +51,7 @@ def run(args):
     dt = time.time() - t0
     print(f"served {args.requests - len(leftover)}/{args.requests} requests "
           f"in {dt:.1f}s ({eng.cache_len} decode steps)")
+    print(eng.metrics())
     return eng
 
 

@@ -1,0 +1,124 @@
+"""Reduce a per-PE event trace into overlap-efficiency stats.
+
+The reduction answers the question the whole repo exists to answer: of
+the wall time a kernel took, how much communication was actually HIDDEN
+behind compute? Per PE:
+
+    stall   = sum of credit_wait + arrival_wait span durations
+    compute = sum of tile_compute span durations
+
+and across the trace:
+
+    wall               = max(t1) - min(t0)
+    exposed_comm       = mean per-PE stall
+    overlap_efficiency = 1 - exposed_comm / wall        (clamped to [0, 1])
+
+A perfectly-overlapped schedule has waits that return immediately
+(the DMA landed while the previous tile computed) — exposed_comm ~ 0,
+efficiency ~ 1. A serialized schedule spends whole chunk-flights inside
+``signal_wait_until`` — efficiency falls toward 0. Barriers (the
+open/close rendezvous) are reported separately, not counted as exposed
+comm: they measure launch skew, not schedule quality.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+from . import COMPUTE_KINDS, STALL_KINDS, TraceEvent
+
+
+@dataclasses.dataclass(frozen=True)
+class Summary:
+    """Per-(op, mode, backend, wire) overlap accounting for one trace."""
+
+    wall: float                # seconds, max(t1) - min(t0) across PEs
+    compute_busy: float        # mean per-PE tile_compute seconds
+    exposed_comm: float        # mean per-PE stall seconds (credit+arrival)
+    barrier: float             # mean per-PE barrier seconds (launch skew)
+    wire_bytes: int            # total bytes pushed over the (emulated) wire
+    overlap_efficiency: float  # 1 - exposed_comm / wall, in [0, 1]
+    stall_frac: float          # exposed_comm / wall, in [0, 1]
+    n_pes: int
+    n_events: int
+    per_pe: Dict[int, Dict[str, float]]  # pe -> {compute, stall, barrier}
+    labels: Dict[str, str]     # caller-supplied (op/mode/backend/wire/...)
+
+    def __str__(self) -> str:  # compact log line
+        lab = " ".join(f"{k}={v}" for k, v in self.labels.items())
+        return (f"Summary({lab + ' ' if lab else ''}wall={self.wall * 1e3:.2f}ms "
+                f"compute={self.compute_busy * 1e3:.2f}ms "
+                f"exposed={self.exposed_comm * 1e3:.2f}ms "
+                f"wire={self.wire_bytes}B "
+                f"overlap_eff={self.overlap_efficiency:.3f} "
+                f"pes={self.n_pes} events={self.n_events})")
+
+
+def split_by_cid(events: Iterable[TraceEvent]) -> Dict[int, List[TraceEvent]]:
+    """Group a mixed trace by collective_id (one op's kernels per cid)."""
+    out: Dict[int, List[TraceEvent]] = {}
+    for ev in events:
+        out.setdefault(ev.cid, []).append(ev)
+    return out
+
+
+def summarize(
+    events: Iterable[TraceEvent],
+    *,
+    op: Optional[str] = None,
+    mode: Optional[str] = None,
+    backend: Optional[str] = None,
+    wire: Optional[str] = None,
+    **extra_labels: str,
+) -> Summary:
+    """Reduce ``events`` to a :class:`Summary`.
+
+    The trace itself carries no op identity — pass the run's resolved
+    ``(op, mode, backend, wire)`` as labels (benchmark rows and the
+    tuner do; they ride along in the returned summary). Raises
+    ``ValueError`` on an empty trace.
+    """
+    events = list(events)
+    if not events:
+        raise ValueError(
+            "obs.metrics.summarize: empty trace — was obs.enable() called "
+            "before the program was first compiled and run?")
+    t_lo = min(ev.t0 for ev in events)
+    t_hi = max(ev.t1 for ev in events)
+    wall = max(t_hi - t_lo, 1e-12)
+    per_pe: Dict[int, Dict[str, float]] = {}
+    wire_bytes = 0
+    for ev in events:
+        acc = per_pe.setdefault(ev.pe, {"compute": 0.0, "stall": 0.0,
+                                        "barrier": 0.0})
+        dur = max(0.0, ev.t1 - ev.t0)
+        if ev.kind in COMPUTE_KINDS:
+            acc["compute"] += dur
+        elif ev.kind in STALL_KINDS:
+            acc["stall"] += dur
+        elif ev.kind == "barrier":
+            acc["barrier"] += dur
+        if ev.kind == "put":
+            wire_bytes += ev.bytes
+    n = len(per_pe)
+    compute = sum(a["compute"] for a in per_pe.values()) / n
+    exposed = sum(a["stall"] for a in per_pe.values()) / n
+    barrier = sum(a["barrier"] for a in per_pe.values()) / n
+    stall_frac = min(1.0, exposed / wall)
+    labels = {k: v for k, v in (("op", op), ("mode", mode),
+                                ("backend", backend), ("wire", wire))
+              if v is not None}
+    labels.update(extra_labels)
+    return Summary(
+        wall=wall,
+        compute_busy=compute,
+        exposed_comm=exposed,
+        barrier=barrier,
+        wire_bytes=wire_bytes,
+        overlap_efficiency=max(0.0, 1.0 - stall_frac),
+        stall_frac=stall_frac,
+        n_pes=n,
+        n_events=len(events),
+        per_pe=per_pe,
+        labels=labels,
+    )

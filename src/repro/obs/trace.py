@@ -1,0 +1,64 @@
+"""Export a per-PE event trace as Chrome-trace / Perfetto JSON.
+
+Open the written file in ``ui.perfetto.dev`` (or ``chrome://tracing``).
+The layout mirrors how you read an overlap schedule: one *process* per
+collective_id (one overlapped kernel), one *thread track* per PE, so a
+4-PE ring shows four stacked timelines whose ``tile_compute`` spans
+interleave with ``credit_wait`` / ``arrival_wait`` stalls — exposed
+communication is literally visible as gaps the compute failed to cover.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, List, Optional
+
+from . import TraceEvent
+
+
+def chrome_trace(events: Iterable[TraceEvent]) -> dict:
+    """Build the Chrome-trace dict (``traceEvents`` list of complete
+    "X" events, microsecond timestamps normalized to the trace start)."""
+    events = list(events)
+    t0 = min((ev.t0 for ev in events), default=0.0)
+    rows: List[dict] = []
+    seen_pids = set()
+    seen_tracks = set()
+    for ev in events:
+        pid, tid = ev.cid, ev.pe
+        if pid not in seen_pids:
+            seen_pids.add(pid)
+            rows.append({"ph": "M", "name": "process_name", "pid": pid,
+                         "args": {"name": f"shmem cid {pid}"}})
+        if (pid, tid) not in seen_tracks:
+            seen_tracks.add((pid, tid))
+            rows.append({"ph": "M", "name": "thread_name", "pid": pid,
+                         "tid": tid, "args": {"name": f"PE {tid}"}})
+        args = {"cid": ev.cid}
+        if ev.bytes:
+            args["bytes"] = ev.bytes
+        rows.append({
+            "ph": "X",
+            "name": f"{ev.kind}:{ev.name}" if ev.name else ev.kind,
+            "cat": ev.kind,
+            "pid": pid,
+            "tid": tid,
+            "ts": (ev.t0 - t0) * 1e6,
+            # sub-us durations still render as slivers instead of vanishing
+            "dur": max((ev.t1 - ev.t0) * 1e6, 0.05),
+            "args": args,
+        })
+    return {"traceEvents": rows, "displayTimeUnit": "ms"}
+
+
+def save(path: str, events: Optional[Iterable[TraceEvent]] = None) -> int:
+    """Write the Chrome-trace JSON for ``events`` (default: drain the
+    live ring buffers via :func:`repro.obs.events`). Returns the number
+    of events written."""
+    if events is None:
+        from . import events as _drain
+
+        events = _drain()
+    events = list(events)
+    with open(path, "w") as f:
+        json.dump(chrome_trace(events), f)
+    return len(events)

@@ -577,29 +577,39 @@ def _make_kernel_fwd(op: OverlapOp, cid: int) -> Optional[Callable]:
         # PACKED (payload|scales) buffer — the protocols move it
         # unmodified, so only the tile boundary changes.
         tile = op.tile_fn()
+        from .. import obs
+
+        def _pack(x):
+            with obs.phase("pack"):
+                return codec.pack(x)
+
+        def _unpack(buf):
+            with obs.phase("decode"):
+                return codec.unpack_decode(buf)
+
         if op.kind in ("ag", "gather"):
             # AG side: the riding chunk is packed up-front; the tile
             # unpacks each arrival back to f32 before its compute.
             return executor.run(
                 proto,
-                lambda buf, *st: tile(codec.unpack_decode(buf), *st),
-                codec.pack(operand), statics, axis=axis, world=world,
+                lambda buf, *st: tile(_unpack(buf), *st),
+                _pack(operand), statics, axis=axis, world=world,
                 out_dtype=out_dtype, collective_id=cid)
         if op.kind == "a2a":
             # per-destination blocks packed along the last axis; each
             # landed block is unpacked (tile=None on a2a declarations,
             # so the decode IS the per-block tile)
             return executor.run(
-                proto, lambda buf, *st: codec.unpack_decode(buf),
-                codec.pack(operand), statics, axis=axis, world=world,
+                proto, lambda buf, *st: _unpack(buf),
+                _pack(operand), statics, axis=axis, world=world,
                 out_dtype=out_dtype, collective_id=cid)
         # RS side: the pushed partial is the packed encoded tile output;
         # the executor decodes each landed partial for the f32 reduction.
         return executor.run(
-            proto, lambda blk, *st: codec.pack(tile(blk, *st)),
+            proto, lambda blk, *st: _pack(tile(blk, *st)),
             operand, statics, axis=axis, world=world,
             out_dtype=out_dtype, collective_id=cid,
-            decode=codec.unpack_decode)
+            decode=_unpack)
 
     return kernel_fwd
 

@@ -5,10 +5,18 @@ Production notes: the decode step is ONE compiled SPMD program for the
 whole batch (slot occupancy handled by masking); prompt ingestion reuses
 the decode program token-by-token (a dedicated chunked-prefill program is
 the documented fast path — the dry-run's prefill_32k cell lowers it).
+
+Serving metrics: the engine keeps the standard latency/occupancy
+counters as it runs — TTFT (arrival -> first generated token), TPOT
+(mean seconds per output token after the first), queue depth and slot
+occupancy sampled per decode step — and reduces them into a
+:class:`Metrics` snapshot via :meth:`Engine.metrics` (surfaced by
+``examples/serve_lm.py`` and the launcher's serve path).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, List, Optional
 
 import jax.numpy as jnp
@@ -22,6 +30,35 @@ class Request:
     temperature: float = 0.0
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # serving-metrics timestamps (time.perf_counter seconds)
+    t_arrive: float = 0.0   # stamped by Engine.add
+    t_first: float = 0.0    # first generated (non-prompt) token
+    t_done: float = 0.0     # request completion
+
+
+@dataclasses.dataclass(frozen=True)
+class Metrics:
+    """Aggregate serving metrics for one engine run."""
+
+    requests_completed: int
+    tokens_generated: int       # output tokens across completed + live
+    steps: int                  # decode steps executed
+    ttft_mean_s: float          # arrival -> first token, mean (completed)
+    ttft_max_s: float
+    tpot_mean_s: float          # per-output-token seconds after the first
+    queue_depth_mean: float     # pending requests, sampled per step
+    queue_depth_max: int
+    slot_occupancy_mean: float  # occupied batch slots / batch, per step
+
+    def __str__(self) -> str:
+        return (f"Metrics(completed={self.requests_completed} "
+                f"tokens={self.tokens_generated} steps={self.steps} "
+                f"ttft={self.ttft_mean_s * 1e3:.1f}ms "
+                f"(max {self.ttft_max_s * 1e3:.1f}ms) "
+                f"tpot={self.tpot_mean_s * 1e3:.2f}ms "
+                f"queue={self.queue_depth_mean:.2f} "
+                f"(max {self.queue_depth_max}) "
+                f"occupancy={self.slot_occupancy_mean:.2f})")
 
 
 class Engine:
@@ -54,17 +91,54 @@ class Engine:
         self.cache_len = 0
         self.rng = np.random.RandomState(seed)
         self._prompt_cursor = [0] * batch
+        # metrics accumulators
+        self._steps = 0
+        self._completed = 0
+        self._tokens_completed = 0
+        self._ttfts: List[float] = []
+        self._tpots: List[float] = []
+        self._queue_samples: List[int] = []
+        self._occ_samples: List[float] = []
 
     def overlap_modes(self) -> dict:
         """Effective per-op overlap lowering of the compiled decode step
-        ('mode/backend', resolved through the policy + engine registry);
-        {} when no pcfg given."""
+        ('mode/backend[/xN]/wire', resolved through the policy + engine
+        registry — the wire dtype is always explicit, so the PR-6 wire
+        axis shows up in serve provenance); {} when no pcfg given."""
         if self.pcfg is None:
             return {}
-        return {op: self.pcfg.policy.describe(op) for op in self.OVERLAP_OPS}
+        out = {}
+        for op in self.OVERLAP_OPS:
+            r = self.pcfg.policy.resolve(op)
+            desc = f"{r.mode}/{r.backend}"
+            if r.chunks > 1:
+                desc += f"/x{r.chunks}"
+            out[op] = desc + f"/{r.wire}"
+        return out
+
+    def metrics(self) -> Metrics:
+        """Snapshot of the run's serving metrics."""
+        n_steps = max(1, self._steps)
+        tokens = sum(len(r.out_tokens) for r in self.requests if r)
+        tokens += sum(len(r.out_tokens) for r in self.pending)
+        tokens += self._tokens_completed
+        return Metrics(
+            requests_completed=self._completed,
+            tokens_generated=tokens,
+            steps=self._steps,
+            ttft_mean_s=(sum(self._ttfts) / len(self._ttfts)
+                         if self._ttfts else 0.0),
+            ttft_max_s=max(self._ttfts, default=0.0),
+            tpot_mean_s=(sum(self._tpots) / len(self._tpots)
+                         if self._tpots else 0.0),
+            queue_depth_mean=sum(self._queue_samples) / n_steps,
+            queue_depth_max=max(self._queue_samples, default=0),
+            slot_occupancy_mean=sum(self._occ_samples) / n_steps,
+        )
 
     # ------------------------------------------------------------------
     def add(self, req: Request):
+        req.t_arrive = time.perf_counter()
         self.pending.append(req)
 
     def _admit(self):
@@ -100,6 +174,17 @@ class Engine:
                 out[i] = int(self.rng.choice(len(row), p=p))
         return out
 
+    def _finish(self, req: Request, now: float) -> None:
+        req.done = True
+        req.t_done = now
+        self._completed += 1
+        self._tokens_completed += len(req.out_tokens)
+        if req.t_first:
+            self._ttfts.append(req.t_first - req.t_arrive)
+            if len(req.out_tokens) > 1:
+                self._tpots.append((req.t_done - req.t_first)
+                                   / (len(req.out_tokens) - 1))
+
     # ------------------------------------------------------------------
     def run(self, max_steps: int = 256):
         """Drive all requests to completion (or max_steps)."""
@@ -108,24 +193,31 @@ class Engine:
         for _ in range(max_steps):
             if all(r is None for r in self.requests) and not self.pending:
                 break
+            self._queue_samples.append(len(self.pending))
+            self._occ_samples.append(
+                sum(r is not None for r in self.requests) / self.batch)
             toks = self._next_tokens(last)
             logits, self.caches = self.step_fn(
                 self.params, self.caches, jnp.int32(self.cache_len),
                 jnp.asarray(toks),
             )
             self.cache_len += 1
+            self._steps += 1
             logits = np.asarray(logits)
+            now = time.perf_counter()
             last = self._sample(logits)
             for i, req in enumerate(self.requests):
                 if req is None:
                     continue
                 if self._prompt_cursor[i] >= len(req.prompt):
+                    if not req.out_tokens:
+                        req.t_first = now
                     req.out_tokens.append(int(last[i]))
                     if (
                         len(req.out_tokens) >= req.max_new_tokens
                         or last[i] == self.eos_id
                     ):
-                        req.done = True
+                        self._finish(req, now)
                         self.requests[i] = None
             if self.cache_len >= self.max_len - 1:
                 break

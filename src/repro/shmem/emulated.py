@@ -52,16 +52,29 @@ putmem_signal semantics); reads mirror this. Payloads per callback stay
 small enough for the synchronous transfer path regardless of transfer
 size.
 
-All waits time out (``REPRO_SHMEM_TIMEOUT`` seconds, default 60) and
-raise with a dump of the live signal state instead of deadlocking the
-test harness.
+All waits time out (``REPRO_SHMEM_TIMEOUT`` seconds, default 60 —
+resolved at WAIT time, so tests and the tuner can tighten or relax it
+per run without reimporting) and raise the **stall watchdog report**: a
+per-PE waiter table (who waits on which signal at what value, against
+the live semaphore counts) plus each PE's last trace events, instead of
+deadlocking the test harness with a one-line message.
+
+Observability: when :mod:`repro.obs` tracing is enabled, every host op
+appends a timestamped per-PE :class:`repro.obs.TraceEvent` into this
+world's bounded ring buffer (``_World.trace``), and
+:meth:`ShmemCtx.span` lets the tile executor bracket traced computes
+with begin/end marks (data-dependency ordered through the token chain).
+Disabled, the only cost is one boolean check per callback — the traced
+program is unchanged, so outputs are bit-identical.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import itertools
 import os
 import threading
+import time
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -69,9 +82,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import io_callback
 
+from .. import obs
 from .api import my_pe
 
-_TIMEOUT = float(os.environ.get("REPRO_SHMEM_TIMEOUT", "60"))
+
+def _timeout() -> float:
+    """Wait timeout in seconds — resolved per wait, not at import."""
+    return float(os.environ.get("REPRO_SHMEM_TIMEOUT", "60"))
 
 # Max bytes per callback operand/result: keep under XLA CPU's ~100KB
 # synchronous host-transfer cutoff (larger transfers take an async path
@@ -80,7 +97,10 @@ _PACKET_BYTES = int(os.environ.get("REPRO_SHMEM_PACKET_BYTES", str(64 * 1024)))
 
 
 class _World:
-    """Shared state for one kernel instance: heap + signals + barrier."""
+    """Shared state for one kernel instance: heap + signals + barrier,
+    plus the observability side — a bounded trace ring buffer, pending
+    span-begin timestamps, and the live waiter table the stall watchdog
+    dumps on timeout."""
 
     def __init__(self) -> None:
         self.cond = threading.Condition()
@@ -88,6 +108,13 @@ class _World:
         self.sems: Dict[Tuple[str, int], int] = {}
         self.bar_count = 0
         self.bar_gen = 0
+        # trace ring (repro.obs events; appended only while tracing is on)
+        self.trace: collections.deque = collections.deque(
+            maxlen=obs.capacity())
+        # (pe, kind, name) -> t0 of an open ShmemCtx.span
+        self.pending: Dict[Tuple[int, str, str], float] = {}
+        # pe -> (kind, sig, want) while that PE blocks in a wait/barrier
+        self.waiters: Dict[int, Tuple[str, str, int]] = {}
 
 
 # State is keyed by (collective_id, trace-time instance number): every
@@ -114,18 +141,30 @@ def _world(key: Tuple[int, int]) -> _World:
 
 def reset(cid: Optional[int] = None) -> None:
     """Drop heap + signal state (every instance of one collective_id, or
-    everything).
+    everything). Trace ring buffers die with their worlds — drain
+    ``repro.obs.events()`` first if you want the timeline.
 
     Only call between executions (the empirical tuner's ``reset``
-    callback after an aborted/partial candidate) — never while an SPMD
-    program using the state is in flight.
+    callback after an aborted/partial candidate). If a wait is still in
+    flight — a PE blocked inside ``signal_wait_until`` / ``barrier_all``
+    — resetting would silently drop the signal state that PE is waiting
+    on, so this raises with the live waiter table instead.
     """
     with _worlds_lock:
-        if cid is None:
-            _worlds.clear()
-        else:
-            for key in [k for k in _worlds if k[0] == cid]:
-                _worlds.pop(key, None)
+        keys = [k for k in _worlds if cid is None or k[0] == cid]
+        reports = []
+        for key in keys:
+            w = _worlds[key]
+            with w.cond:
+                if w.waiters:
+                    reports.append(_watchdog_report(w, key))
+        if reports:
+            raise RuntimeError(
+                "shmem.emulated.reset(): wait in flight — resetting now "
+                "would drop signal state under a blocked PE. Let the "
+                "program drain (or time out) first.\n" + "\n".join(reports))
+        for key in keys:
+            _worlds.pop(key, None)
 
 
 def _signal_state(w: _World) -> str:
@@ -133,14 +172,59 @@ def _signal_state(w: _World) -> str:
     return f"live signals: {live or '{}'}; heap keys: {len(w.heap)}"
 
 
+def _watchdog_report(w: _World, key: Tuple[int, int], last: int = 8) -> str:
+    """The stall watchdog's dump: per-PE waiter table + live signal state
+    + each PE's last ``last`` trace events. Call with ``w.cond`` held."""
+    lines = [f"--- shmem watchdog (cid={key[0]}, instance={key[1]}) ---"]
+    if w.waiters:
+        lines.append("waiter table:")
+        for pe in sorted(w.waiters):
+            kind, sig, want = w.waiters[pe]
+            if kind == "barrier":
+                have = w.bar_count
+            else:
+                have = w.sems.get((sig, pe), 0)
+            lines.append(f"  pe {pe}: {kind} on {sig!r} "
+                         f"want={want} have={have}")
+    else:
+        lines.append("waiter table: (no PE currently blocked)")
+    lines.append(_signal_state(w))
+    by_pe: Dict[int, list] = {}
+    for ev in w.trace:
+        by_pe.setdefault(ev.pe, []).append(ev)
+    if by_pe:
+        t_base = min(ev.t0 for evs in by_pe.values() for ev in evs)
+        lines.append(f"last {last} trace events per PE "
+                     f"(+seconds since trace start):")
+        for pe in sorted(by_pe):
+            for ev in by_pe[pe][-last:]:
+                size = f" {ev.bytes}B" if ev.bytes else ""
+                lines.append(
+                    f"  pe {pe}: +{ev.t0 - t_base:.6f}s "
+                    f"{ev.kind}:{ev.name}{size} "
+                    f"dur={(ev.t1 - ev.t0) * 1e6:.0f}us")
+    else:
+        lines.append("no trace events recorded — enable repro.obs tracing "
+                     "before the run for per-PE timelines")
+    return "\n".join(lines)
+
+
+def _trace(w: _World, key: Tuple[int, int], pe: int, kind: str, name: str,
+           nbytes: int, t0: float, t1: float) -> None:
+    """Append one obs event (tracing gate checked by the caller)."""
+    w.trace.append(obs.TraceEvent(pe, key[0], kind, name, nbytes, t0, t1))
+
+
 # ---------------------------------------------------------------------------
 # Host side (runs on each virtual device's execution thread)
 # ---------------------------------------------------------------------------
 
 
-def _host_put_packet(cid, buf, sig, total, dtype, off, last, tok, peer, slot, pkt):
+def _host_put_packet(cid, buf, sig, total, dtype, off, last, tok, peer, slot,
+                     me, pkt):
     """One DMA packet of a put: copy into [off, off+len) of the (flat)
     destination buffer; the LAST packet raises the arrival signal."""
+    t0 = time.perf_counter()
     w = _world(cid)
     pkt = np.asarray(pkt)
     with w.cond:
@@ -153,37 +237,58 @@ def _host_put_packet(cid, buf, sig, total, dtype, off, last, tok, peer, slot, pk
             skey = (sig, int(peer))
             w.sems[skey] = w.sems.get(skey, 0) + 1
             w.cond.notify_all()
+        if last and obs.enabled():
+            # one event per logical put (not per packet): bytes = payload
+            _trace(w, cid, int(me), "put", f"{buf}->pe{int(peer)}",
+                   int(total) * np.dtype(dtype).itemsize,
+                   t0, time.perf_counter())
     return np.int32(tok) + 1
 
 
-def _host_signal(cid, sig, tok, peer, inc):
+def _host_signal(cid, sig, tok, peer, inc, me):
+    t0 = time.perf_counter()
     w = _world(cid)
     with w.cond:
         key = (sig, int(peer))
         w.sems[key] = w.sems.get(key, 0) + int(inc)
         w.cond.notify_all()
+        if obs.enabled():
+            _trace(w, cid, int(me), "signal", f"{sig}->pe{int(peer)}", 0,
+                   t0, time.perf_counter())
     return np.int32(tok) + 1
 
 
 def _host_wait(cid, sig, tok, me, value):
+    t0 = time.perf_counter()
     w = _world(cid)
-    key = (sig, int(me))
+    pe = int(me)
+    key = (sig, pe)
+    # Credit waits (cap* signals: flow control — waiting to SEND) vs
+    # arrival waits (recv-style signals: data deps — waiting to RECEIVE).
+    kind = "credit_wait" if sig.startswith("cap") else "arrival_wait"
     with w.cond:
-        ok = w.cond.wait_for(
-            lambda: w.sems.get(key, 0) >= int(value), timeout=_TIMEOUT
-        )
-        if not ok:
-            raise RuntimeError(
-                f"shmem.emulated: signal_wait_until timed out (cid={cid}, "
-                f"sig={sig!r}, pe={int(me)}, want={int(value)}, "
-                f"have={w.sems.get(key, 0)}); {_signal_state(w)}"
+        w.waiters[pe] = ("wait", sig, int(value))
+        try:
+            ok = w.cond.wait_for(
+                lambda: w.sems.get(key, 0) >= int(value), timeout=_timeout()
             )
+            if not ok:
+                raise RuntimeError(
+                    f"shmem.emulated: signal_wait_until timed out (cid={cid}, "
+                    f"sig={sig!r}, pe={pe}, want={int(value)}, "
+                    f"have={w.sems.get(key, 0)})\n" + _watchdog_report(w, cid)
+                )
+        finally:
+            w.waiters.pop(pe, None)
         w.sems[key] -= int(value)
+        if obs.enabled():
+            _trace(w, cid, pe, kind, sig, 0, t0, time.perf_counter())
     return np.int32(tok) + 1
 
 
 def _host_read_packet(cid, buf, off, n, tok, me, slot):
     """One DMA packet of a read: [off, off+n) of the (flat) local buffer."""
+    t0 = time.perf_counter()
     w = _world(cid)
     with w.cond:
         key = (buf, int(me), int(slot))
@@ -192,23 +297,34 @@ def _host_read_packet(cid, buf, off, n, tok, me, slot):
                 f"shmem.emulated: read of unwritten symmetric buffer "
                 f"{key} (cid={cid}); {_signal_state(w)}"
             )
-        return w.heap[key][off:off + n].copy(), np.int32(tok) + 1
+        out = w.heap[key][off:off + n].copy()
+        if obs.enabled():
+            _trace(w, cid, int(me), "read", buf, out.nbytes,
+                   t0, time.perf_counter())
+        return out, np.int32(tok) + 1
 
 
 def _host_alloc(cid, buf, world, total, dtype, tok, me):
     # Symmetric allocation: the same named buffer exists on every PE.
     # First caller materializes all PE copies; idempotent thereafter.
+    t0 = time.perf_counter()
     w = _world(cid)
     with w.cond:
         for pe in range(int(world)):
             key = (buf, pe, 0)
             if key not in w.heap:
                 w.heap[key] = np.zeros(total, dtype)
+        if obs.enabled():
+            _trace(w, cid, int(me), "alloc", buf,
+                   int(total) * np.dtype(dtype).itemsize,
+                   t0, time.perf_counter())
     return np.int32(tok) + 1
 
 
 def _host_barrier(cid, world, tok, me):
+    t0 = time.perf_counter()
     w = _world(cid)
+    pe = int(me)
     with w.cond:
         gen = w.bar_gen
         w.bar_count += 1
@@ -217,13 +333,38 @@ def _host_barrier(cid, world, tok, me):
             w.bar_gen += 1
             w.cond.notify_all()
         else:
-            ok = w.cond.wait_for(lambda: w.bar_gen != gen, timeout=_TIMEOUT)
-            if not ok:
-                raise RuntimeError(
-                    f"shmem.emulated: barrier_all timed out (cid={cid}, "
-                    f"pe={int(me)}, arrived={w.bar_count}/{int(world)}); "
-                    f"{_signal_state(w)}"
-                )
+            w.waiters[pe] = ("barrier", "barrier_all", int(world))
+            try:
+                ok = w.cond.wait_for(lambda: w.bar_gen != gen,
+                                     timeout=_timeout())
+                if not ok:
+                    raise RuntimeError(
+                        f"shmem.emulated: barrier_all timed out (cid={cid}, "
+                        f"pe={pe}, arrived={w.bar_count}/{int(world)})\n"
+                        + _watchdog_report(w, cid)
+                    )
+            finally:
+                w.waiters.pop(pe, None)
+        if obs.enabled():
+            _trace(w, cid, pe, "barrier", "barrier_all", 0,
+                   t0, time.perf_counter())
+    return np.int32(tok) + 1
+
+
+def _host_span(cid, kind, name, end, tok, me):
+    """Begin/end mark of a traced-compute span (:meth:`ShmemCtx.span`).
+    The begin mark parks t0 in ``_World.pending``; the end mark pops it
+    and records the completed event."""
+    t = time.perf_counter()
+    w = _world(cid)
+    pe = int(me)
+    with w.cond:
+        if not end:
+            w.pending[(pe, kind, name)] = t
+        else:
+            t0 = w.pending.pop((pe, kind, name), t)
+            if obs.enabled():
+                _trace(w, cid, pe, kind, name, 0, t0, t)
     return np.int32(tok) + 1
 
 
@@ -304,7 +445,7 @@ class ShmemCtx:
             self._tok = self._io(
                 functools.partial(_host_put_packet, self._key, buf,
                                   sig if last else "", total, dtype, off, last),
-                _TOKEN, peer, slot, pkt,
+                _TOKEN, peer, slot, self._me, pkt,
             )
 
     putmem_signal = putmem_signal_nbi  # emulated sends complete synchronously
@@ -316,6 +457,7 @@ class ShmemCtx:
             _TOKEN,
             jnp.asarray(peer, jnp.int32),
             jnp.asarray(inc, jnp.int32),
+            self._me,
         )
 
     notify = signal_op
@@ -366,6 +508,45 @@ class ShmemCtx:
             _TOKEN,
             self._me,
         )
+
+    def span(self, kind: str, fn, *args, name: str = ""):
+        """Run ``fn(*args)`` bracketed by begin/end trace marks so the
+        host timeline carries a ``kind`` span (``tile_compute``,
+        ``decode``, ...) for this PE.
+
+        With tracing disabled this IS ``fn(*args)`` — the traced program
+        is unchanged, so outputs stay bit-identical. Enabled, the marks
+        are host callbacks data-dependency-ordered around the compute:
+        the begin token is tied into ``fn``'s inputs and the outputs are
+        tied into the end callback's token via ``optimization_barrier``,
+        so the host timestamps bracket the real compute, not a reordered
+        schedule. Decided at TRACE time — enable tracing before the
+        first jit-compilation of the program you want span-annotated.
+        """
+        if not obs.enabled():
+            return fn(*args)
+        with obs.phase(kind, name):
+            self._tok = self._io(
+                functools.partial(_host_span, self._key, kind, name, False),
+                _TOKEN, self._me,
+            )
+            if args:
+                flat, treedef = jax.tree_util.tree_flatten(tuple(args))
+                tied = jax.lax.optimization_barrier(tuple(flat) + (self._tok,))
+                args = jax.tree_util.tree_unflatten(treedef, tied[:-1])
+                self._tok = tied[-1]
+            out = fn(*args)
+            leaves, treedef = jax.tree_util.tree_flatten(out)
+            if leaves:
+                tied = jax.lax.optimization_barrier(
+                    tuple(leaves) + (self._tok,))
+                self._tok = tied[-1]
+                out = jax.tree_util.tree_unflatten(treedef, list(tied[:-1]))
+            self._tok = self._io(
+                functools.partial(_host_span, self._key, kind, name, True),
+                _TOKEN, self._me,
+            )
+            return out
 
     def broadcast_put(self, x, *, buf: str = "ws", sig: str = "recv"):
         """multimem_st analogue: put ``x`` into every peer's ``(buf, my_pe)``

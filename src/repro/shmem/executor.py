@@ -199,7 +199,8 @@ def _ring_ag_emulated(tile, chunk, statics, *, axis, world, out_dtype, cid):
             ctx.putmem_signal_nbi(cur, right, buf="ws", slot=(s + 1) % 2,
                                   sig="recv")
         # consumer: chunk of step s is rank (me - s)'s data.
-        t = tile(cur, *statics).astype(out_dtype)
+        t = ctx.span("tile_compute", lambda c: tile(c, *statics), cur,
+                     name=f"s{s}").astype(out_dtype)
         owner = lax.rem(me - s + world, world)
         out = update_rows(out, t, owner * tile_m)
         if s != world - 1:
@@ -227,8 +228,9 @@ def _one_shot_ag_emulated(tile, chunk, statics, *, axis, world, out_dtype, cid):
     out = jnp.zeros((tile_m * world,) + ts.shape[1:], out_dtype)
     for r in range(world):
         shard = ctx.read_symmetric(chunk.shape, chunk.dtype, buf="ws", slot=r)
-        out = update_rows(out, tile(shard, *statics).astype(out_dtype),
-                          r * tile_m)
+        t = ctx.span("tile_compute", lambda c: tile(c, *statics), shard,
+                     name=f"r{r}").astype(out_dtype)
+        out = update_rows(out, t, r * tile_m)
     ctx.barrier_all()
     return out
 
@@ -272,9 +274,11 @@ def _bidir_ring_ag_emulated(tile, chunk, statics, *, axis, world, out_dtype,
             ctx.putmem_signal_nbi(cur_b, left, buf="wsb", slot=(s + 1) % 2,
                                   sig="recv_b")
         # forward half: owner (me - s); backward half: owner (me + s)
-        t_f = tile(cur_f, *statics).astype(out_dtype)
+        t_f = ctx.span("tile_compute", lambda c: tile(c, *statics), cur_f,
+                       name=f"s{s}f").astype(out_dtype)
         out = update_rows(out, t_f, lax.rem(me - s + world, world) * tile_m)
-        t_b = tile(cur_b, *statics).astype(out_dtype)
+        t_b = ctx.span("tile_compute", lambda c: tile(c, *statics), cur_b,
+                       name=f"s{s}b").astype(out_dtype)
         out = update_rows(out, t_b,
                           lax.rem(me + s, world) * tile_m + tile_h)
         if s != world - 1:
@@ -309,7 +313,8 @@ def _one_shot_a2a_emulated(tile, xs, statics, *, axis, world, out_dtype, cid):
     out = jnp.zeros((world,) + ts.shape, out_dtype)
     for src in range(world):
         block = ctx.read_symmetric(xs.shape[1:], xs.dtype, buf="ws", slot=src)
-        t = tile(block, *statics).astype(out_dtype)
+        t = ctx.span("tile_compute", lambda b: tile(b, *statics), block,
+                     name=f"src{src}").astype(out_dtype)
         out = lax.dynamic_update_slice(out, t[None],
                                        (src,) + (0,) * len(ts.shape))
     ctx.barrier_all()
@@ -332,7 +337,10 @@ def _rs_reduce(ctx, ts, world, out_dtype, decode=None):
     for r in range(world):
         read_dtype = out_dtype if decode is None else ts.dtype
         part = ctx.read_symmetric(ts.shape, read_dtype, buf="ws", slot=r)
-        acc = acc + (part.astype(jnp.float32) if decode is None else decode(part))
+        if decode is None:
+            acc = acc + part.astype(jnp.float32)
+        else:
+            acc = acc + ctx.span("decode", decode, part, name=f"r{r}")
     ctx.barrier_all()
     return acc.astype(out_dtype)
 
@@ -355,7 +363,8 @@ def _push_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid,
     for s in range(world):
         # Alg. 3 swizzle: peers' blocks first, own block last (blk == me)
         blk = lax.rem(me - s - 1 + 2 * world, world)
-        partial = tile(_block(operand, blk, m_blk), *statics)
+        partial = ctx.span("tile_compute", lambda b: tile(b, *statics),
+                           _block(operand, blk, m_blk), name=f"s{s}")
         if decode is None:
             partial = partial.astype(out_dtype)
         ctx.putmem_signal_nbi(partial, blk, buf="ws", slot=me, sig="recv")
@@ -376,7 +385,8 @@ def _one_shot_rs_emulated(tile, operand, statics, *, axis, world, out_dtype, cid
     partials = []
     for off in range(world):
         tgt = lax.rem(me + off, world)
-        partial = tile(_block(operand, tgt, m_blk), *statics)
+        partial = ctx.span("tile_compute", lambda b: tile(b, *statics),
+                           _block(operand, tgt, m_blk), name=f"off{off}")
         if decode is None:
             partial = partial.astype(out_dtype)
         partials.append((tgt, partial))
@@ -411,14 +421,19 @@ def _ring_fold_emulated(fold, chunk, statics, *, axis, world, out_dtype, cid):
                                   sig="recv")
         # consumer: chunk of step s is rank (me - s)'s data — fold it
         # into the resident state while the next chunk's DMA is in flight.
-        state = fold.fold(state, cur, lax.rem(me - s + world, world), *statics)
+        owner = lax.rem(me - s + world, world)
+        state = ctx.span(
+            "tile_compute", lambda st, c: fold.fold(st, c, owner, *statics),
+            state, cur, name=f"s{s}")
         if s != world - 1:
             cur = ctx.wait_read(chunk.shape, chunk.dtype, buf="ws",
                                 slot=(s + 1) % 2, sig="recv")
             if s < world - 2:
                 ctx.signal_op(left, sig="cap")
     ctx.barrier_all()
-    return fold.finalize(state, *statics).astype(out_dtype)
+    return ctx.span("tile_compute",
+                    lambda st: fold.finalize(st, *statics),
+                    state, name="finalize").astype(out_dtype)
 
 
 def _two_level_pe(axis, world):
@@ -481,8 +496,9 @@ def _two_level_ag_emulated(tile, chunk, statics, *, axis, world, out_dtype,
             shard = ctx.read_symmetric(chunk.shape, chunk.dtype, buf="pws",
                                        slot=(so % 2) * wi + src)
             owner = region * wi + src
-            out = update_rows(out, tile(shard, *statics).astype(out_dtype),
-                              owner * tile_m)
+            t = ctx.span("tile_compute", lambda c: tile(c, *statics),
+                         shard, name=f"o{so}d{d}").astype(out_dtype)
+            out = update_rows(out, t, owner * tile_m)
         if so != wo - 1:
             cur = ctx.wait_read(chunk.shape, chunk.dtype, buf="ows",
                                 slot=(so + 1) % 2, sig="orecv")
@@ -519,8 +535,10 @@ def _two_level_rs_emulated(tile, operand, statics, *, axis, world, out_dtype,
         for off in range(wi):
             tgt_i = lax.rem(iid + off, wi)
             blk = region * wi + tgt_i
-            partial = tile(_block(operand, blk, m_blk),
-                           *statics).astype(jnp.float32)
+            partial = ctx.span(
+                "tile_compute", lambda b: tile(b, *statics),
+                _block(operand, blk, m_blk),
+                name=f"o{so}off{off}").astype(jnp.float32)
             ctx.putmem_signal_nbi(partial, oid * wi + tgt_i, buf="pws",
                                   slot=(so % 2) * wi + iid,
                                   sig=f"prcv{off}")
@@ -601,9 +619,10 @@ def _ring_ag_body(*refs, tile, axis, world, n_static, tile_m, out_dtype):
         _stage((ws_ref.at[slot],), (chunk_vmem,), local_sem)
 
         # the tile compute overlaps the in-flight remote DMA of chunk s+1
-        o_vmem[...] = tile(
-            chunk_vmem[...], *[v[...] for v in static_vmems]
-        ).astype(out_dtype)
+        with tpu_backend.annotate("tile_compute", f"s{s}"):
+            o_vmem[...] = tile(
+                chunk_vmem[...], *[v[...] for v in static_vmems]
+            ).astype(out_dtype)
         owner = lax.rem(me - s + world, world)
         _stage((o_vmem,), (o_ref.at[pl.ds(owner * tile_m, tile_m)],), local_sem)
 
@@ -684,9 +703,10 @@ def _one_shot_ag_body(*refs, tile, axis, world, n_static, tile_m, out_dtype):
             _stage(tuple(static_refs), tuple(static_vmems), local_sem)
         for r in range(world):
             _stage((ws_ref.at[r],), (chunk_vmem,), local_sem)
-            o_vmem[...] = tile(
-                chunk_vmem[...], *[v[...] for v in static_vmems]
-            ).astype(out_dtype)
+            with tpu_backend.annotate("tile_compute", f"r{r}"):
+                o_vmem[...] = tile(
+                    chunk_vmem[...], *[v[...] for v in static_vmems]
+                ).astype(out_dtype)
             _stage((o_vmem,), (o_ref.at[pl.ds(r * tile_m, tile_m)],), local_sem)
 
 
@@ -739,7 +759,8 @@ def _push_rs_body(*refs, tile, axis, world, n_static, m_blk, one_shot,
 
     def compute(blk):
         _stage((a_ref.at[pl.ds(blk * m_blk, m_blk)],), (a_vmem,), local_sem)
-        partial = tile(a_vmem[...], *[v[...] for v in static_vmems])
+        with tpu_backend.annotate("tile_compute"):
+            partial = tile(a_vmem[...], *[v[...] for v in static_vmems])
         # packed wire buffers are pushed verbatim (a cast would corrupt
         # the bytes); plain partials land in out_dtype as before
         p_vmem[...] = partial if decode is not None else partial.astype(out_dtype)
@@ -785,8 +806,11 @@ def _push_rs_body(*refs, tile, axis, world, n_static, m_blk, one_shot,
     acc = jnp.zeros(acc_vmem.shape, jnp.float32)
     for r in range(world):
         _stage((ws_ref.at[r],), (p_vmem,), local_sem)
-        acc = acc + (p_vmem[...].astype(jnp.float32) if decode is None
-                     else decode(p_vmem[...]))
+        if decode is None:
+            acc = acc + p_vmem[...].astype(jnp.float32)
+        else:
+            with tpu_backend.annotate("decode", f"r{r}"):
+                acc = acc + decode(p_vmem[...])
     acc_vmem[...] = acc.astype(out_dtype)
     _stage((acc_vmem,), (o_ref,), local_sem)
 
@@ -879,9 +903,10 @@ def _bidir_ring_ag_body(*refs, tile, axis, world, n_static, half_rows, tile_h,
                 (0, wsf_ref, lax.rem(me - s + world, world)),
                 (1, wsb_ref, lax.rem(me + s, world))):
             _stage((ws_ref.at[slot],), (half_vmem,), local_sem)
-            o_vmem[...] = tile(
-                half_vmem[...], *[v[...] for v in static_vmems]
-            ).astype(out_dtype)
+            with tpu_backend.annotate("tile_compute", f"s{s}d{direction}"):
+                o_vmem[...] = tile(
+                    half_vmem[...], *[v[...] for v in static_vmems]
+                ).astype(out_dtype)
             _stage((o_vmem,),
                    (o_ref.at[pl.ds(owner * tile_m + direction * tile_h,
                                    tile_h)],),
@@ -976,9 +1001,10 @@ def _one_shot_a2a_body(*refs, tile, axis, world, n_static, out_dtype,
             _stage(tuple(static_refs), tuple(static_vmems), local_sem)
         for src in range(world):
             _stage((ws_ref.at[src],), (blk_vmem,), local_sem)
-            o_vmem[...] = tile(
-                blk_vmem[...], *[v[...] for v in static_vmems]
-            ).astype(out_dtype)
+            with tpu_backend.annotate("tile_compute", f"src{src}"):
+                o_vmem[...] = tile(
+                    blk_vmem[...], *[v[...] for v in static_vmems]
+                ).astype(out_dtype)
             _stage((o_vmem,), (o_ref.at[src],), local_sem)
 
 
@@ -1060,13 +1086,16 @@ def _ring_fold_body(*refs, fold, axis, world, n_static, n_state,
         if s != 0:
             _stage((ws_ref.at[slot],), (chunk_vmem,), local_sem)
         owner = lax.rem(me - s + world, world)
-        write_state(fold.fold(read_state(), chunk_vmem[...], owner, *statics()))
+        with tpu_backend.annotate("tile_compute", f"s{s}"):
+            write_state(fold.fold(read_state(), chunk_vmem[...], owner,
+                                  *statics()))
         if send is not None:
             send.wait()
         if s < world - 2:
             tpu_backend.signal_op(cap_sem, left, axis=axis)
 
-    o_vmem[...] = fold.finalize(read_state(), *statics()).astype(out_dtype)
+    with tpu_backend.annotate("tile_compute", "finalize"):
+        o_vmem[...] = fold.finalize(read_state(), *statics()).astype(out_dtype)
     _stage((o_vmem,), (o_ref,), local_sem)
 
 
@@ -1151,9 +1180,10 @@ def _two_level_ag_body(*refs, tile, axes, worlds, n_static, tile_m, out_dtype):
         for d in range(wi):
             src = lax.rem(iid - d + wi, wi)
             _stage((pws_ref.at[slot * wi + src],), (chunk_vmem,), local_sem)
-            o_vmem[...] = tile(
-                chunk_vmem[...], *[v[...] for v in static_vmems]
-            ).astype(out_dtype)
+            with tpu_backend.annotate("tile_compute", f"o{so}d{d}"):
+                o_vmem[...] = tile(
+                    chunk_vmem[...], *[v[...] for v in static_vmems]
+                ).astype(out_dtype)
             owner = region * wi + src
             _stage((o_vmem,), (o_ref.at[pl.ds(owner * tile_m, tile_m)],),
                    local_sem)
@@ -1226,9 +1256,10 @@ def _two_level_rs_body(*refs, tile, axes, worlds, n_static, m_blk, out_dtype):
             blk = region * wi + lax.rem(iid + off, wi)
             _stage((a_ref.at[pl.ds(blk * m_blk, m_blk)],), (a_vmem,),
                    local_sem)
-            p_vmem[...] = tile(
-                a_vmem[...], *[v[...] for v in static_vmems]
-            ).astype(jnp.float32)
+            with tpu_backend.annotate("tile_compute", f"o{so}off{off}"):
+                p_vmem[...] = tile(
+                    a_vmem[...], *[v[...] for v in static_vmems]
+                ).astype(jnp.float32)
             _stage((p_vmem,), (stage_ref.at[off],), local_sem)
         lc = pltpu.make_async_copy(
             stage_ref.at[0], pws_ref.at[slot * wi + iid], local_sem)

@@ -24,6 +24,18 @@ from jax.experimental.pallas import tpu as pltpu
 from .. import _compat  # noqa: F401  (pltpu name backfills)
 
 
+def annotate(kind: str, name: str = ""):
+    """The pltpu mapping of :mod:`repro.obs` span labels: a
+    ``jax.named_scope`` (+ profiler TraceAnnotation) context, so a real
+    TPU profile of a pallas protocol carries the SAME
+    ``obs.tile_compute`` / ``obs.pack`` / ``obs.decode`` labels the
+    emulated backend's host timeline records. Trace-time metadata only —
+    zero runtime cost."""
+    from .. import obs
+
+    return obs.phase(kind, name)
+
+
 def _device_id(peer):
     """MESH device id: scalar peer = 1D mesh; tuple peer = one coordinate
     per mesh axis (the two-level protocols address a (pod, ring) grid —

@@ -52,3 +52,53 @@ A2A_SCRIPT = textwrap.dedent("""
 def test_bench_a2a_combine_times_dispatched_tensor(devices):
     out = run_devices(A2A_SCRIPT, devices=devices, timeout=900)
     assert "OK bench_a2a" in out
+
+
+def test_parse_row_measured_fields():
+    """Trailing k=v fields (--trace runs) land under 'measured'; plain
+    rows stay unchanged (no 'measured' key)."""
+    from benchmarks.run import _mode_vocabulary, parse_row
+
+    modes = _mode_vocabulary()
+    plain = parse_row("fig11_13", "ag_gemm/256x512x512/ring/kernel,123.4,1.0",
+                      8, modes)
+    assert plain is not None and "measured" not in plain
+    traced = parse_row(
+        "fig11_13",
+        "ag_gemm/256x512x512/ring/kernel,123.4,1.0,"
+        "overlap_eff=0.71,stall_frac=0.29",
+        8, modes)
+    assert traced["measured"] == {"overlap_eff": 0.71, "stall_frac": 0.29}
+    assert traced["us_per_call"] == 123.4
+    assert traced["policy"]["mode"] == "ring"
+    # unknown trailing fields are ignored, not crashed on
+    odd = parse_row("t", "op/1x1/ring,5.0,d,bogus=1,alsobogus", 8, modes)
+    assert odd is not None and "measured" not in odd
+
+
+def test_check_regressions_tolerates_measured_fields(tmp_path):
+    """An old baseline (no measured fields) must compare cleanly against
+    a fresh traced run whose records carry them."""
+    import json
+
+    from benchmarks.run import check_regressions
+
+    base = [{"name": "t/op/ring", "us_per_call": 1000.0}]
+    fresh = [{"name": "t/op/ring", "us_per_call": 1050.0,
+              "measured": {"overlap_eff": 0.8, "stall_frac": 0.2}}]
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(base))
+    fp.write_text(json.dumps(fresh))
+    assert check_regressions(str(bp), str(fp), tolerance=1.0) == 0
+
+
+def test_bench_row_appends_measured_fields(monkeypatch):
+    """common.row appends LAST_MEASURED as k=v; cleared when empty."""
+    from benchmarks import common
+
+    monkeypatch.setattr(common, "LAST_MEASURED",
+                        {"overlap_eff": 0.5, "stall_frac": 0.5})
+    line = common.row("op/shape/ring", 12.0, "1.23")
+    assert line == "op/shape/ring,12.0,1.23,overlap_eff=0.5,stall_frac=0.5"
+    monkeypatch.setattr(common, "LAST_MEASURED", {})
+    assert common.row("op/shape/ring", 12.0, "1.23") == "op/shape/ring,12.0,1.23"

@@ -117,3 +117,49 @@ def test_decode_matches_prefill_logits(one_device_mesh):
     for i in range(s):
         logits, caches = step(params, caches, jnp.int32(i), jnp.asarray(toks[:, i:i+1]))
     np.testing.assert_allclose(np.asarray(logits), want, atol=2e-3, rtol=2e-3)
+
+
+def test_engine_metrics_counters(one_device_mesh):
+    cfg, params, caches, step = _build(one_device_mesh)
+    eng = Engine(step, params, caches, batch=2, max_len=32)
+    for _ in range(3):  # 3 requests on 2 slots -> one queues
+        eng.add(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    leftover = eng.run(max_steps=30)
+    assert leftover == []
+    m = eng.metrics()
+    assert m.requests_completed == 3
+    assert m.tokens_generated == 12           # 3 requests x 4 tokens
+    assert m.steps > 0
+    assert m.ttft_mean_s > 0.0
+    assert m.ttft_max_s >= m.ttft_mean_s
+    assert m.tpot_mean_s > 0.0
+    assert m.queue_depth_max >= 1             # the third request queued
+    assert 0.0 < m.slot_occupancy_mean <= 1.0
+    assert "Metrics(" in str(m)
+
+
+def test_overlap_modes_report_wire_dtype(one_device_mesh):
+    """Serve provenance carries the resolved wire dtype (PR-6 wire axis):
+    always-explicit, f32 default and per-op overrides both visible."""
+    from repro.ops.policy import OverlapPolicy
+
+    cfg, params, caches, step = _build(one_device_mesh)
+    pcfg = ParallelConfig(dp=1, tp=1, fsdp=False, compute_dtype="float32",
+                          param_dtype="float32",
+                          overlap=OverlapPolicy(
+                              mode="ring", wires=(("ag_matmul", "int8"),)))
+    eng = Engine(step, params, caches, batch=2, max_len=32, pcfg=pcfg)
+    modes = eng.overlap_modes()
+    assert set(modes) == set(Engine.OVERLAP_OPS)
+    assert modes["ag_matmul"].endswith("/int8"), modes
+    for op in ("matmul_rs", "a2a_ep", "flash_decode"):
+        assert modes[op].endswith("/f32"), modes
+    # mode/backend still lead the string
+    for desc in modes.values():
+        assert len(desc.split("/")) >= 3, desc
+
+
+def test_overlap_modes_empty_without_pcfg(one_device_mesh):
+    cfg, params, caches, step = _build(one_device_mesh)
+    eng = Engine(step, params, caches, batch=2, max_len=32)
+    assert eng.overlap_modes() == {}

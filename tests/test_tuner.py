@@ -152,3 +152,43 @@ def test_tune_default_reset_clears_emulated_shmem_state():
         assert (998, 12345) in em._worlds
     finally:
         em.reset()
+
+
+def test_tune_record_stalls_attaches_summary_per_config():
+    """``tune(record_stalls=True)`` traces each candidate's timed
+    iterations and reduces them into a per-config Summary in
+    ``TuneResult.stalls`` — drained BEFORE the between-iteration reset
+    (which drops worlds AND trace buffers)."""
+    import numpy as np
+
+    from repro import obs
+    from repro.shmem import emulated as em
+
+    def make_step(cfg):
+        key = (7700 + cfg, 0)
+
+        def step():
+            # host-side shmem traffic stands in for a kernel candidate:
+            # the pre-satisfied wait records a stall span, the signal
+            # records the wire-side event
+            em._host_signal(key, "recv", np.int32(0), np.int32(0),
+                            np.int32(1), np.int32(1))
+            em._host_wait(key, "recv", np.int32(0), np.int32(0),
+                          np.int32(1))
+            return jnp.zeros(())
+
+        return step
+
+    assert not obs.enabled()
+    res = tuner.tune(make_step, [1, 2], warmup=1, iters=2,
+                     record_stalls=True)
+    assert not obs.enabled(), "tune must restore the prior tracing state"
+    assert set(res.stalls) == {"1", "2"}
+    for cfg_repr, s in res.stalls.items():
+        assert s.n_events > 0
+        assert 0.0 <= s.overlap_efficiency <= 1.0
+        assert s.labels["config"] == cfg_repr
+
+    # record_stalls off (the default): no tracing, no stalls
+    res2 = tuner.tune(make_step, [1], warmup=0, iters=1)
+    assert res2.stalls == {}
