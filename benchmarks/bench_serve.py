@@ -1,0 +1,103 @@
+"""Serving-engine benchmark — paged KV + chunked prefill vs token-by-token
+prompt ingestion, same seeded synthetic stream (Poisson arrivals, mixed
+128–2048-token prompts, batch 8, world 4: dp=2 x tp=2).
+
+Rows (us, lower is better):
+  serve/ttft/{paged,tokenwise}   mean arrival -> first-token latency
+  serve/tpot/{paged,tokenwise}   mean per-output-token latency after the 1st
+  serve/tok/{paged,tokenwise}    wall us per generated token (derived: tok/s)
+  serve/step/{paged,tokenwise}   wall us per engine step (derived: step split,
+                                 occupancy)
+
+Under ``run.py --trace`` the engine runs drain their repro.obs events
+into measured overlap_eff/stall_frac on the ``tok`` rows (inert when the
+overlap policy resolves to plain XLA collectives — no shmem events)."""
+import os
+import time
+
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ParallelConfig
+from repro.launch.mesh import make_mesh
+from repro.launch.serve import build_paged_engine, build_tokenwise_engine
+from repro.ops.policy import OverlapPolicy
+from repro.serve import LoadSpec, ServeConfig, drive, generate
+
+from . import common
+from .common import row
+
+N_REQUESTS = 64
+PROMPT_LENS = (128, 2048)
+BATCH = 8
+MAX_NEW = 8
+MAX_LEN = PROMPT_LENS[1] + MAX_NEW + 1
+
+
+def _attach_trace():
+    """--trace: summarize the engine run's obs events into the next row."""
+    common.LAST_MEASURED = {}
+    if not os.environ.get("_REPRO_BENCH_TRACE"):
+        return
+    from repro import obs
+
+    events = obs.events(clear=True)
+    if events:
+        s = obs.metrics.summarize(events)
+        common.LAST_MEASURED = {"overlap_eff": round(s.overlap_efficiency, 4),
+                                "stall_frac": round(s.stall_frac, 4)}
+        common.TRACE_EVENTS.extend(events)
+
+
+def _run(engine, arrivals):
+    t0 = time.perf_counter()
+    leftover = drive(engine, arrivals, max_steps=500_000, time_scale=0.0)
+    wall = time.perf_counter() - t0
+    assert not leftover, f"{len(leftover)} requests stranded"
+    return engine.metrics(), wall
+
+
+def rows():
+    assert jax.device_count() >= 4, "bench runs on a dp=2 x tp=2 mesh"
+    cfg = reduced(ARCHS["granite-3-2b"])
+    # dp>1 packs params data-sharded (leaf_pspec) -> fsdp gather required
+    pcfg = ParallelConfig(dp=2, tp=2, fsdp=True, param_dtype="float32",
+                          compute_dtype="float32",
+                          overlap=OverlapPolicy(mode="none"))
+    mesh = make_mesh(2, 2)
+    spec = LoadSpec(n_requests=N_REQUESTS, rate_rps=1e9,
+                    prompt_lens=PROMPT_LENS, max_new_tokens=MAX_NEW, seed=0)
+
+    out = []
+    results = {}
+    for name in ("paged", "tokenwise"):
+        if name == "paged":
+            scfg = ServeConfig(batch=BATCH, max_len=MAX_LEN, page_size=64,
+                               chunk=256, token_budget=512, queue_cap=256)
+            eng = build_paged_engine(cfg, pcfg, scfg, mesh)
+        else:
+            eng = build_tokenwise_engine(cfg, pcfg, BATCH, MAX_LEN, mesh)
+        arrivals = generate(spec, cfg.vocab_size)
+        m, wall = _run(eng, arrivals)
+        results[name] = (m, wall)
+        _attach_trace()
+        tok_us = wall * 1e6 / max(1, m.tokens_generated)
+        out.append(row(f"serve/tok/{name}", tok_us,
+                       f"tok_s={m.tokens_generated / wall:.1f}"))
+        out.append(row(f"serve/ttft/{name}", m.ttft_mean_s * 1e6,
+                       f"ttft_max_us={m.ttft_max_s * 1e6:.0f}"))
+        out.append(row(f"serve/tpot/{name}", m.tpot_mean_s * 1e6,
+                       f"completed={m.requests_completed}"))
+        out.append(row(
+            f"serve/step/{name}", wall * 1e6 / max(1, m.steps),
+            f"steps={m.steps};prefill={m.steps_prefill};"
+            f"decode={m.steps_decode};occ={m.slot_occupancy_mean:.2f};"
+            f"queue_max={m.queue_depth_max}"))
+    # the acceptance comparison, recorded in-row: paged must beat
+    # tokenwise on TTFT and match-or-beat it on token throughput
+    (mp, wp), (mt, wt) = results["paged"], results["tokenwise"]
+    ttft_x = mt.ttft_mean_s / max(1e-9, mp.ttft_mean_s)
+    tok_x = (mp.tokens_generated / wp) / max(1e-9, mt.tokens_generated / wt)
+    out.append(row("serve/speedup/paged_vs_tokenwise", 0.0,
+                   f"ttft_x={ttft_x:.2f};tok_s_x={tok_x:.2f}"))
+    return out

@@ -17,6 +17,7 @@ scoped to that subprocess, never set globally).
   Fig. 19     bench_ll_allgather   low-latency AllGather
   Fig. 10     bench_two_level      hierarchical (2-level) collective matmuls
   (long ctx)  bench_ring_attention ring attention (context parallelism)
+  (serve)     bench_serve          paged+chunked-prefill engine vs tokenwise
   (kernels)   bench_kernels        single-device kernel throughput
 
 Regression gate (CI): ``--check`` reruns the suite into a scratch file
@@ -126,6 +127,7 @@ def _inner() -> None:
         bench_ll_allgather,
         bench_moe_rs,
         bench_ring_attention,
+        bench_serve,
         bench_two_level,
     )
 
@@ -142,6 +144,7 @@ def _inner() -> None:
         ("fig19", bench_ll_allgather, world),
         ("fig10", bench_two_level, world),  # hierarchical (2-level) matmuls
         ("long_ctx", bench_ring_attention, world),  # context parallelism
+        ("serve", bench_serve, 4),  # paged+chunked-prefill engine vs tokenwise
         ("kernels", bench_kernels, 1),  # single-device kernel throughput
     ]
     records = []

@@ -13,8 +13,11 @@ TRAIN_4K = ShapeConfig(name="train_4k", seq_len=4096, global_batch=256, kind="tr
 PREFILL_32K = ShapeConfig(name="prefill_32k", seq_len=32768, global_batch=32, kind="prefill")
 DECODE_32K = ShapeConfig(name="decode_32k", seq_len=32768, global_batch=128, kind="decode")
 LONG_500K = ShapeConfig(name="long_500k", seq_len=524288, global_batch=1, kind="decode")
+# the serving engine's cell: short-context decode slots fed by the
+# chunked-prefill program against the paged KV pool (launch/serve.py)
+SERVE_2K = ShapeConfig(name="serve_2k", seq_len=2048, global_batch=8, kind="decode")
 
-SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, SERVE_2K)}
 
 # Families for which the long-context decode cell is runnable
 # (sub-quadratic sequence mixing).

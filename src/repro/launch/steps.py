@@ -238,6 +238,91 @@ def build_decode_step(
     )
 
 
+def _pool_specs(model, num_pages: int, page_size: int, dtype):
+    """Paged KV pools are replicated specs (each rank holds its own
+    heads-local replica, like the dense decode caches)."""
+    shapes = model.paged_cache_shapes(num_pages, page_size, dtype)
+    specs = jax.tree.map(lambda s: P(*([None] * len(s.shape))), shapes)
+    return shapes, specs
+
+
+def build_paged_decode_step(
+    cfg: ModelConfig, pcfg: ParallelConfig, shape: ShapeConfig, mesh,
+    *, num_pages: int, page_size: int, pages_per_slot: int,
+    cache_dtype=jnp.bfloat16,
+) -> BuiltStep:
+    """Decode step against the paged KV pools: one new token per slot at
+    per-slot positions (serve/kvcache.py block tables)."""
+    model = build_model(cfg, pcfg)
+    pdt = jnp.dtype(pcfg.param_dtype)
+    param_shapes, pspec = model.param_shapes(pdt)
+    p_shapes, p_specs = _pool_specs(model, num_pages, page_size, cache_dtype)
+    gb = shape.global_batch
+    vec_spec = batch_spec(gb, pcfg, extra_dims=0)
+
+    def fn(params, pools, table, lengths, active, token):
+        return model.decode_step_paged_local(
+            params, pools, table, lengths, active, token)
+
+    jitted = _shard(
+        mesh,
+        fn,
+        (pspec, p_specs, batch_spec(gb, pcfg), vec_spec, vec_spec,
+         batch_spec(gb, pcfg)),
+        (batch_spec(gb, pcfg), p_specs),
+        donate=(1,),  # pools update in place
+    )
+    in_shapes = (
+        param_shapes,
+        p_shapes,
+        jax.ShapeDtypeStruct((gb, pages_per_slot), jnp.int32),
+        jax.ShapeDtypeStruct((gb,), jnp.int32),
+        jax.ShapeDtypeStruct((gb,), jnp.bool_),
+        jax.ShapeDtypeStruct((gb, 1), jnp.int32),
+    )
+    return BuiltStep(jitted, in_shapes, (pspec, p_specs), model)
+
+
+def build_prefill_chunk_step(
+    cfg: ModelConfig, pcfg: ParallelConfig, mesh,
+    *, chunk: int, n_streams: int, num_pages: int, page_size: int,
+    pages_per_slot: int, cache_dtype=jnp.bfloat16,
+) -> BuiltStep:
+    """Chunked-prefill program: one C-token chunk of one request PER DATA
+    SHARD (``n_streams`` = number of concurrent prefill streams — the
+    data world when decode slots are sharded, else 1), writing K/V into
+    the paged pools and returning the last-valid-token logits per
+    stream. Prefill-phase overlap policy resolves through ``pcfg``
+    (ag_matmul / matmul_rs in the chunk projections)."""
+    model = build_model(cfg, pcfg)
+    pdt = jnp.dtype(pcfg.param_dtype)
+    param_shapes, pspec = model.param_shapes(pdt)
+    p_shapes, p_specs = _pool_specs(model, num_pages, page_size, cache_dtype)
+    bspec = batch_spec(n_streams, pcfg)
+    vec_spec = batch_spec(n_streams, pcfg, extra_dims=0)
+
+    def fn(params, pools, table_rows, starts, n_valids, tokens):
+        return model.prefill_chunk_local(
+            params, pools, table_rows, starts, n_valids, tokens)
+
+    jitted = _shard(
+        mesh,
+        fn,
+        (pspec, p_specs, bspec, vec_spec, vec_spec, bspec),
+        (bspec, p_specs),
+        donate=(1,),
+    )
+    in_shapes = (
+        param_shapes,
+        p_shapes,
+        jax.ShapeDtypeStruct((n_streams, pages_per_slot), jnp.int32),
+        jax.ShapeDtypeStruct((n_streams,), jnp.int32),
+        jax.ShapeDtypeStruct((n_streams,), jnp.int32),
+        jax.ShapeDtypeStruct((n_streams, chunk), jnp.int32),
+    )
+    return BuiltStep(jitted, in_shapes, (pspec, p_specs), model)
+
+
 def build_step(cfg, pcfg, shape, mesh, tcfg=None) -> BuiltStep:
     if shape.kind == "train":
         return build_train_step(cfg, pcfg, shape, mesh, tcfg)

@@ -192,7 +192,7 @@ def attention_decode(
     x: Array,  # (B, 1, D) replicated over tp
     cache_k: Array,  # (B, Hkv_loc, S_max, hd)
     cache_v: Array,
-    cache_len: Array,  # scalar int32
+    cache_len: Array,  # scalar OR per-slot (B,) int32
     *,
     cross_kv: Optional[Tuple[Array, Array]] = None,  # precomputed (k, v)
 ) -> Tuple[Array, Array, Array]:
@@ -205,18 +205,16 @@ def attention_decode(
     if cross_kv is None:
         kv = local_linear(h, pp.wkv, pp.bkv).reshape(b, 2, info.hkv_loc, hd)
         k_new, v_new = kv[:, 0], kv[:, 1]
+        # per-slot write positions (a scalar cache_len broadcasts: the
+        # pre-continuous-batching callers advance all slots in lockstep)
+        pos = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
         if cfg.use_rope:
-            posq = jnp.full((b, 1), cache_len, jnp.int32)
-            q = rope(q[:, None], posq, cfg.rope_theta)[:, 0]
-            k_new = rope(k_new[:, None], posq, cfg.rope_theta)[:, 0]
-        cache_k = lax.dynamic_update_slice(
-            cache_k, k_new[:, :, None, :].astype(cache_k.dtype), (0, 0, cache_len, 0)
-        )
-        cache_v = lax.dynamic_update_slice(
-            cache_v, v_new[:, :, None, :].astype(cache_v.dtype), (0, 0, cache_len, 0)
-        )
-        lengths = jnp.full((b,), cache_len + 1, jnp.int32)
-        o, _ = ops.flash_decode(q, cache_k, cache_v, lengths)
+            q = rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+            k_new = rope(k_new[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        rows = jnp.arange(b)
+        cache_k = cache_k.at[rows, :, pos, :].set(k_new.astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, :, pos, :].set(v_new.astype(cache_v.dtype))
+        o, _ = ops.flash_decode(q, cache_k, cache_v, pos + 1)
     else:
         ck, cv = cross_kv
         lengths = jnp.full((b,), ck.shape[2], jnp.int32)
@@ -225,6 +223,141 @@ def attention_decode(
     o = o.astype(x.dtype).reshape(b, info.hq_loc * hd)
     out = psum_tp(local_linear(o, pp.wo), pcfg)  # small AR (low-latency regime)
     return x + out.reshape(b, 1, d), cache_k, cache_v
+
+
+# ===========================================================================
+# Paged attention (block tables over a page pool — serve/kvcache.py)
+# ===========================================================================
+
+
+def _gather_pages(pool: Array, table: Array) -> Array:
+    """Materialize per-slot KV from the page pool.
+
+    pool (num_pages, H, page_size, hd), table (B, P) int32 ->
+    (B, H, P*page_size, hd). Unallocated table entries point at scratch
+    page 0; callers mask those positions out by length.
+    """
+    _, h, ps, hd = pool.shape
+    b, pcount = table.shape
+    g = pool[table]  # (B, P, H, ps, hd)
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, h, pcount * ps, hd)
+
+
+def attention_decode_paged(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    info: TPInfo,
+    p: dict,
+    x: Array,        # (B, 1, D) replicated over tp
+    pool_k: Array,   # (num_pages, Hkv_loc, page_size, hd)
+    pool_v: Array,
+    table: Array,    # (B, P) int32 page ids
+    lengths: Array,  # (B,) tokens already cached per slot
+    active: Array,   # (B,) bool — idle lanes write to the scratch page
+) -> Tuple[Array, Array, Array]:
+    """Decode-step attention against the paged KV pool: write this
+    token's K/V at each live slot's next position (routed through its
+    block table), then flash-decode over the slot's gathered pages."""
+    b, _, d = x.shape
+    hd = cfg.head_dim
+    ps = pool_k.shape[2]
+    pp = _get_attn(p, x.dtype)
+    h = rmsnorm(x, pp.ln, cfg.norm_eps).reshape(b, d)
+    q = local_linear(h, pp.wq, pp.bq).reshape(b, info.hq_loc, hd)
+    kv = local_linear(h, pp.wkv, pp.bkv).reshape(b, 2, info.hkv_loc, hd)
+    k_new, v_new = kv[:, 0], kv[:, 1]
+    pos = lengths.astype(jnp.int32)
+    if cfg.use_rope:
+        q = rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k_new = rope(k_new[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    rows = jnp.arange(b)
+    page = jnp.where(active, table[rows, pos // ps], 0)
+    off = pos % ps
+    pool_k = pool_k.at[page, :, off, :].set(k_new.astype(pool_k.dtype))
+    pool_v = pool_v.at[page, :, off, :].set(v_new.astype(pool_v.dtype))
+    k_all = _gather_pages(pool_k, table)
+    v_all = _gather_pages(pool_v, table)
+    eff = jnp.where(active, pos + 1, 1)
+    o, _ = ops.flash_decode(q, k_all, v_all, eff)
+    o = o.astype(x.dtype).reshape(b, info.hq_loc * hd)
+    out = psum_tp(local_linear(o, pp.wo), pcfg)
+    return x + out.reshape(b, 1, d), pool_k, pool_v
+
+
+def _chunk_attend(q: Array, k_all: Array, v_all: Array, qpos: Array,
+                  limit: Array) -> Array:
+    """Attention of chunk queries at absolute positions ``qpos`` over the
+    gathered page pool: key j visible iff j <= qpos_i and j < limit.
+    q (B, C, Hq, hd), k_all/v_all (B, Hkv, L, hd) -> (B, C, Hq, hd) f32."""
+    b, c, hq, hd = q.shape
+    hkv = k_all.shape[1]
+    kk = jnp.repeat(k_all, hq // hkv, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v_all, hq // hkv, axis=1).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bchd,bhld->bhcl", q.astype(jnp.float32), kk) * scale
+    j = jnp.arange(k_all.shape[2])
+    mask = (j[None, :] <= qpos[:, None]) & (j[None, :] < limit)  # (C, L)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    w = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("bhcl,bhld->bchd", w, vv)
+
+
+def attention_prefill_chunk(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    info: TPInfo,
+    p: dict,
+    x_sp: Array,       # (1, C_loc, D) — one request's chunk, SP over tp
+    pool_k: Array,     # (num_pages, Hkv_loc, page_size, hd)
+    pool_v: Array,
+    table_row: Array,  # (P,) int32 — the request's block table
+    start: Array,      # scalar int32: absolute position of the chunk's 1st token
+    n_valid: Array,    # scalar int32: real tokens in the chunk (rest padding)
+) -> Tuple[Array, Array, Array]:
+    """One chunked-prefill attention layer: AG+GEMM projections over the
+    chunk (resolves ag_matmul), chunk K/V written into the paged pool,
+    chunk queries attending over the pool (prefix + the chunk itself,
+    causal at absolute positions), GEMM+RS back to SP rows (resolves
+    matmul_rs). Padding lanes write to the scratch page."""
+    b, s_loc, d = x_sp.shape
+    tp = pcfg.tp
+    c = s_loc * tp
+    hd = cfg.head_dim
+    ps = pool_k.shape[2]
+    pp = _get_attn(p, x_sp.dtype)
+
+    h = rmsnorm(x_sp, pp.ln, cfg.norm_eps).reshape(b * s_loc, d)
+    wqkv = jnp.concatenate([pp.wq, pp.wkv], axis=1)
+    bqkv = jnp.concatenate([pp.bq, pp.bkv]) if pp.bq is not None else None
+    y = ag_linear(h, wqkv, pcfg, bqkv)  # (tp*B*S_loc, cols)
+    y = _sp_gathered_to_bsd(y, tp, b, s_loc)  # (1, C, cols)
+    q, kv = jnp.split(y, [info.hq_loc * hd], axis=-1)
+    k, v = jnp.split(kv, 2, axis=-1)
+    q = q.reshape(b, c, info.hq_loc, hd)
+    k = k.reshape(b, c, info.hkv_loc, hd)
+    v = v.reshape(b, c, info.hkv_loc, hd)
+    pos = start + jnp.arange(c)
+    if cfg.use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+    valid = jnp.arange(c) < n_valid
+    pages = jnp.where(valid, table_row[pos // ps], 0)
+    offs = pos % ps
+    pool_k = pool_k.at[pages, :, offs, :].set(k[0].astype(pool_k.dtype))
+    pool_v = pool_v.at[pages, :, offs, :].set(v[0].astype(pool_v.dtype))
+
+    k_all = _gather_pages(pool_k, table_row[None, :])
+    v_all = _gather_pages(pool_v, table_row[None, :])
+    # all-masked rows would NaN; an idle shard (n_valid == 0) attends one
+    # scratch position instead, and its output is discarded by the caller
+    limit = start + jnp.maximum(n_valid, 1)
+    o = _chunk_attend(q, k_all, v_all, pos, limit)
+    o = o.astype(x_sp.dtype).reshape(b, c, info.hq_loc * hd)
+    out = rs_linear(_bsd_to_sp_rows(o, tp), pp.wo, pcfg)
+    return x_sp + out.reshape(b, s_loc, d), pool_k, pool_v
 
 
 # ===========================================================================

@@ -168,6 +168,35 @@ def embed_lookup(
     return lax.psum(emb, MODEL_AXIS)
 
 
+def embed_lookup_sp(
+    ids: Array,  # (B_loc, S) int32 — FULL sequence, replicated over tp
+    table: Array,  # (V_loc, D) TP-local vocab slice
+    info: TPInfo,
+    tp: int,
+) -> Array:
+    """Vocab-parallel lookup for the sequence-parallel layout: returns
+    this rank's (B, S/tp, D) rank-major sequence window.
+
+    :func:`embed_lookup`'s mask+psum is only sound when every model rank
+    looks up the SAME ids (decode: one replicated token). Under SP each
+    rank owns a different sequence window, so psumming per-window
+    partials would add embeddings of DIFFERENT positions. Instead every
+    rank looks up the full sequence against its vocab shard and a
+    reduce-scatter over the model axis does the cross-shard sum and the
+    window split in one collective.
+    """
+    v_loc = table.shape[0]
+    me = lax.axis_index(MODEL_AXIS)
+    off = me * v_loc
+    local = ids - off
+    in_range = (local >= 0) & (local < v_loc)
+    local = jnp.clip(local, 0, v_loc - 1)
+    emb = jnp.where(in_range[..., None], table[local], 0)  # (B, S, D)
+    if tp == 1:
+        return emb
+    return lax.psum_scatter(emb, MODEL_AXIS, scatter_dimension=1, tiled=True)
+
+
 def vocab_parallel_loss(
     x: Array,  # (T_loc, D) sequence-parallel final hidden
     w_out: Array,  # (D, V_loc)

@@ -26,7 +26,9 @@ from . import blocks
 from .common import (
     DATA_AXIS,
     MODEL_AXIS,
+    POD_AXIS,
     embed_lookup,
+    embed_lookup_sp,
     fsdp_get,
     get_params,
     local_linear,
@@ -236,12 +238,11 @@ class LM:
         tp = pcfg.tp
         s_loc = s // tp
         me = lax.axis_index(MODEL_AXIS)
-        ids_sp = lax.dynamic_slice(tokens, (0, me * s_loc), (b, s_loc))
         lbl_sp = lax.dynamic_slice(labels, (0, me * s_loc), (b, s_loc))
 
         cdt = jnp.dtype(pcfg.compute_dtype)
         embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg, cdt)
-        h = embed_lookup(ids_sp, embed, info)
+        h = embed_lookup_sp(tokens, embed, info, tp)
         if not cfg.use_rope:
             pos = me * s_loc + jnp.arange(s_loc)
             h = h + sinusoidal_positions(pos, cfg.d_model)[None].astype(h.dtype)
@@ -283,10 +284,9 @@ class LM:
         tp = pcfg.tp
         s_loc = s // tp
         me = lax.axis_index(MODEL_AXIS)
-        ids_sp = lax.dynamic_slice(tokens, (0, me * s_loc), (b, s_loc))
         cdt = jnp.dtype(pcfg.compute_dtype)
         embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg, cdt)
-        h = embed_lookup(ids_sp, embed, info)
+        h = embed_lookup_sp(tokens, embed, info, tp)
         if not cfg.use_rope:
             pos = me * s_loc + jnp.arange(s_loc)
             h = h + sinusoidal_positions(pos, cfg.d_model)[None].astype(h.dtype)
@@ -301,14 +301,18 @@ class LM:
             ).reshape(vis.shape[0], vis.shape[1], cfg.d_model)
         h = self._backbone_train(params, h, cross_src)
         ln_f = fsdp_get(params["top"]["ln_f"], self.top_specs["ln_f"], pcfg, h.dtype)
-        h_last = rmsnorm(h[:, -1, :], ln_f, cfg.norm_eps)  # (B, D) per rank
+        # the TRUE last token lives on the last model rank's SP window;
+        # vocab_parallel_logits column-gathers per-rank partials, so its
+        # input must be TP-replicated — replicate that row FIRST (a
+        # post-hoc mask of the gathered logits cannot unmix the columns
+        # the other ranks contributed from their own windows)
+        keep = (me == tp - 1).astype(h.dtype)
+        h_last = lax.psum(h[:, -1, :] * keep, MODEL_AXIS)
+        h_last = rmsnorm(h_last, ln_f, cfg.norm_eps)
         un_name = "embed" if cfg.tie_embeddings else "unembed"
         w_out = fsdp_get(params["top"][un_name], self.top_specs[un_name], pcfg,
                          h.dtype).T
-        logits = vocab_parallel_logits(h_last, w_out, info, cfg.vocab_size)
-        # the TRUE last token lives on the last model rank's shard
-        keep = (me == tp - 1).astype(logits.dtype)
-        return lax.psum(logits * keep, MODEL_AXIS)
+        return vocab_parallel_logits(h_last, w_out, info, cfg.vocab_size)
 
     def prefill_with_cache_local(
         self,
@@ -328,10 +332,9 @@ class LM:
         tp = pcfg.tp
         s_loc = s // tp
         me = lax.axis_index(MODEL_AXIS)
-        ids_sp = lax.dynamic_slice(tokens, (0, me * s_loc), (b, s_loc))
         cdt = jnp.dtype(pcfg.compute_dtype)
         embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg, cdt)
-        h = embed_lookup(ids_sp, embed, info)
+        h = embed_lookup_sp(tokens, embed, info, tp)
 
         def body(carry, xs):
             pl = self._unpack_layer(xs)
@@ -349,13 +352,15 @@ class LM:
 
         h, caches = lax.scan(self._remat(body), h, params["layers"])
         ln_f = fsdp_get(params["top"]["ln_f"], self.top_specs["ln_f"], pcfg, h.dtype)
-        h_last = rmsnorm(h[:, -1, :], ln_f, cfg.norm_eps)
+        # replicate the last rank's final row over TP before the
+        # vocab-parallel projection (see prefill_logits_local)
+        keep = (me == tp - 1).astype(h.dtype)
+        h_last = lax.psum(h[:, -1, :] * keep, MODEL_AXIS)
+        h_last = rmsnorm(h_last, ln_f, cfg.norm_eps)
         un_name = "embed" if cfg.tie_embeddings else "unembed"
         w_out = fsdp_get(params["top"][un_name], self.top_specs[un_name], pcfg,
                          h.dtype).T
-        logits = vocab_parallel_logits(h_last, w_out, info, cfg.vocab_size)
-        keep = (me == tp - 1).astype(logits.dtype)
-        return lax.psum(logits * keep, MODEL_AXIS), caches
+        return vocab_parallel_logits(h_last, w_out, info, cfg.vocab_size), caches
 
     # ------------------------------------------------------------------
     # Serving
@@ -412,22 +417,153 @@ class LM:
             }
         raise ValueError(fam)
 
-    def decode_step_local(
+    def paged_cache_shapes(self, num_pages: int, page_size: int,
+                           dtype=jnp.bfloat16):
+        """ShapeDtypeStructs for the paged decode pools (dense/moe,
+        heads-sharded KV), stacked over n_super like cache_shapes."""
+        cfg, info = self.cfg, self.info
+        assert cfg.family in ("dense", "moe"), cfg.family
+        assert not self._kv_seq_sharded(), "paged KV is heads-sharded"
+        n = self.plan.n_super
+        shape = (n, num_pages, info.hkv_loc, page_size, cfg.head_dim)
+        return {"attn": {"k": jax.ShapeDtypeStruct(shape, dtype),
+                         "v": jax.ShapeDtypeStruct(shape, dtype)}}
+
+    def decode_step_paged_local(
         self,
         params: dict,
-        caches: dict,
-        cache_len: Array,  # scalar int32
-        token: Array,  # (B_loc, 1) int32
+        pools: dict,     # paged_cache_shapes tree
+        table: Array,    # (B_loc, P) int32 page ids
+        lengths: Array,  # (B_loc,) tokens already cached per slot
+        active: Array,   # (B_loc,) bool — idle lanes write to scratch
+        token: Array,    # (B_loc, 1) int32
     ) -> Tuple[Array, dict]:
-        """One decode step. Returns (logits (B_loc, vocab), new caches)."""
+        """One decode step against the paged KV pools (serve/kvcache.py).
+        Inactive lanes produce garbage logits and scratch-page writes;
+        the engine ignores both."""
         cfg, pcfg, info = self.cfg, self.pcfg, self.info
+        assert cfg.family in ("dense", "moe"), cfg.family
         b = token.shape[0]
         cdt = jnp.dtype(pcfg.compute_dtype)
         embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg, cdt)
         h = embed_lookup(token, embed, info)  # (B, 1, D)
         if not cfg.use_rope:
-            pos = cache_len + jnp.arange(1)
+            h = h + sinusoidal_positions(
+                lengths, cfg.d_model)[:, None, :].astype(h.dtype)
+
+        def body(carry, xs):
+            p_layer, pk, pv = xs
+            pl = self._unpack_layer(p_layer)
+            hh, pk, pv = blocks.attention_decode_paged(
+                cfg, pcfg, info, pl["attn"], carry, pk, pv, table, lengths,
+                active)
+            if cfg.family == "moe":
+                hh = blocks.moe_decode(cfg, pcfg, info, pl["ffn"], hh)
+            else:
+                hh = blocks.mlp_decode(cfg, pcfg, info, pl["ffn"], hh)
+            return hh, (pk, pv)
+
+        h, (pk, pv) = lax.scan(
+            body, h, (params["layers"], pools["attn"]["k"], pools["attn"]["v"]))
+        ln_f = fsdp_get(params["top"]["ln_f"], self.top_specs["ln_f"], pcfg, h.dtype)
+        h = rmsnorm(h, ln_f, cfg.norm_eps).reshape(b, cfg.d_model)
+        un_name = "embed" if cfg.tie_embeddings else "unembed"
+        w_out = fsdp_get(params["top"][un_name], self.top_specs[un_name], pcfg,
+                         h.dtype).T
+        logits = vocab_parallel_logits(h, w_out, info, cfg.vocab_size)
+        return logits, {"attn": {"k": pk, "v": pv}}
+
+    def prefill_chunk_local(
+        self,
+        params: dict,
+        pools: dict,       # paged_cache_shapes tree
+        table_row: Array,  # (1, P) int32 — ONE request's block table
+        start: Array,      # (1,) int32 absolute position of the chunk
+        n_valid: Array,    # (1,) int32 real tokens in the chunk (0 = idle)
+        tokens: Array,     # (1, C) int32 chunk tokens, right-padded
+    ) -> Tuple[Array, dict]:
+        """Chunked prefill: C prompt tokens of ONE request (per data
+        shard) in a single SP forward, K/V written into the paged pools,
+        last-valid-token logits out — the serving fast path vs
+        token-by-token decode ingestion. The leading dim is the local
+        slice of the per-data-shard request stream (always 1)."""
+        cfg, pcfg, info = self.cfg, self.pcfg, self.info
+        assert cfg.family in ("dense", "moe"), cfg.family
+        assert not self._kv_seq_sharded(), "chunked prefill is heads-sharded"
+        row = table_row[0]
+        start = start[0]
+        n_valid = n_valid[0]
+        b, s = tokens.shape  # (1, C)
+        tp = pcfg.tp
+        s_loc = s // tp
+        me = lax.axis_index(MODEL_AXIS)
+        cdt = jnp.dtype(pcfg.compute_dtype)
+        embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg, cdt)
+        h = embed_lookup_sp(tokens, embed, info, tp)
+        if not cfg.use_rope:
+            pos = start + me * s_loc + jnp.arange(s_loc)
             h = h + sinusoidal_positions(pos, cfg.d_model)[None].astype(h.dtype)
+
+        def body(carry, xs):
+            p_layer, pk, pv = xs
+            pl = self._unpack_layer(p_layer)
+            hh, pk, pv = blocks.attention_prefill_chunk(
+                cfg, pcfg, info, pl["attn"], carry, pk, pv, row, start, n_valid)
+            if cfg.family == "moe":
+                hh = blocks.moe_train(cfg, pcfg, info, pl["ffn"], hh)
+            else:
+                hh = blocks.mlp_train(cfg, pcfg, info, pl["ffn"], hh)
+            return hh, (pk, pv)
+
+        h, (pk, pv) = lax.scan(
+            self._remat(body), h,
+            (params["layers"], pools["attn"]["k"], pools["attn"]["v"]))
+        ln_f = fsdp_get(params["top"]["ln_f"], self.top_specs["ln_f"], pcfg, h.dtype)
+        # logits of the LAST VALID chunk token (the next-token logits when
+        # this is the prompt's final chunk); it lives on model rank
+        # idx // s_loc — replicate that row over TP before the
+        # vocab-parallel projection (see prefill_logits_local)
+        idx = jnp.maximum(n_valid - 1, 0)
+        local_idx = jnp.clip(idx - me * s_loc, 0, s_loc - 1)
+        h_sel = lax.dynamic_slice(h, (0, local_idx, 0), (b, 1, cfg.d_model))[:, 0]
+        keep = (me == idx // s_loc).astype(h.dtype)
+        h_last = lax.psum(h_sel * keep, MODEL_AXIS)
+        h_last = rmsnorm(h_last, ln_f, cfg.norm_eps)
+        un_name = "embed" if cfg.tie_embeddings else "unembed"
+        w_out = fsdp_get(params["top"][un_name], self.top_specs[un_name], pcfg,
+                         h.dtype).T
+        logits = vocab_parallel_logits(h_last, w_out, info, cfg.vocab_size)
+        return logits, {"attn": {"k": pk, "v": pv}}
+
+    def decode_step_local(
+        self,
+        params: dict,
+        caches: dict,
+        cache_len: Array,  # scalar int32, or per-slot (B_loc,) int32
+        token: Array,  # (B_loc, 1) int32
+    ) -> Tuple[Array, dict]:
+        """One decode step. Returns (logits (B_loc, vocab), new caches).
+
+        ``cache_len`` may be per-slot so continuously batched slots
+        advance independently (scalar = all slots in lockstep; the
+        sequence-sharded distributed-flash-decode path is scalar-only).
+        A per-slot vector arrives REPLICATED at the global batch size
+        (its in_spec is shared with the scalar form) — each data shard
+        slices its own (B_loc,) window here."""
+        cfg, pcfg, info = self.cfg, self.pcfg, self.info
+        b = token.shape[0]
+        if jnp.ndim(cache_len) == 1 and cache_len.shape[0] != b:
+            shard = lax.axis_index(DATA_AXIS)
+            if pcfg.pods > 1:
+                shard = lax.axis_index(POD_AXIS) * pcfg.dp + shard
+            cache_len = lax.dynamic_slice(
+                jnp.asarray(cache_len, jnp.int32), (shard * b,), (b,))
+        cdt = jnp.dtype(pcfg.compute_dtype)
+        embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg, cdt)
+        h = embed_lookup(token, embed, info)  # (B, 1, D)
+        if not cfg.use_rope:
+            pos = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+            h = h + sinusoidal_positions(pos, cfg.d_model)[:, None, :].astype(h.dtype)
 
         shared = self._unpack_top(params, "shared_attn", "shared_mlp")
 
@@ -456,6 +592,10 @@ class LM:
                 cross_kv=cross_kv,
             )
         # sequence-sharded KV over the data axis: distributed flash decode
+        if jnp.ndim(cache_len) != 0:
+            raise ValueError(
+                "sequence-sharded KV decode takes a scalar cache_len; "
+                "per-slot lengths need kv_shard='heads' (or the paged path)")
         b, _, d = h.shape
         hd = cfg.head_dim
         pp = blocks._get_attn(pl, h.dtype)

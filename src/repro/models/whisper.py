@@ -20,6 +20,7 @@ from .common import (
     DATA_AXIS,
     MODEL_AXIS,
     embed_lookup,
+    embed_lookup_sp,
     fsdp_get,
     get_params,
     rmsnorm,
@@ -141,11 +142,10 @@ class Whisper:
         tp = pcfg.tp
         s_loc = s // tp
         me = lax.axis_index(MODEL_AXIS)
-        ids_sp = lax.dynamic_slice(tokens, (0, me * s_loc), (b, s_loc))
         lbl_sp = lax.dynamic_slice(labels, (0, me * s_loc), (b, s_loc))
         embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg,
                          jnp.dtype(pcfg.compute_dtype))
-        h = embed_lookup(ids_sp, embed, info)
+        h = embed_lookup_sp(tokens, embed, info, tp)
         pos = me * s_loc + jnp.arange(s_loc)
         h = h + sinusoidal_positions(pos, cfg.d_model)[None].astype(h.dtype)
 
@@ -176,10 +176,9 @@ class Whisper:
         tp = pcfg.tp
         s_loc = s // tp
         me = lax.axis_index(MODEL_AXIS)
-        ids_sp = lax.dynamic_slice(tokens, (0, me * s_loc), (b, s_loc))
         embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg,
                          jnp.dtype(pcfg.compute_dtype))
-        h = embed_lookup(ids_sp, embed, info)
+        h = embed_lookup_sp(tokens, embed, info, tp)
         pos = me * s_loc + jnp.arange(s_loc)
         h = h + sinusoidal_positions(pos, cfg.d_model)[None].astype(h.dtype)
 
@@ -194,12 +193,14 @@ class Whisper:
 
         h, _ = lax.scan(self._remat(body), h, params["layers"])
         ln_f = fsdp_get(params["top"]["ln_f"], self.top_specs["ln_f"], pcfg, h.dtype)
-        h_last = rmsnorm(h[:, -1, :], ln_f, cfg.norm_eps)
+        # replicate the last rank's final row over TP before the
+        # vocab-parallel projection — its input must be TP-replicated
+        keep = (me == tp - 1).astype(h.dtype)
+        h_last = lax.psum(h[:, -1, :] * keep, MODEL_AXIS)
+        h_last = rmsnorm(h_last, ln_f, cfg.norm_eps)
         w_out = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg,
                          h.dtype).T
-        logits = vocab_parallel_logits(h_last, w_out, info, cfg.vocab_size)
-        keep = (me == tp - 1).astype(logits.dtype)
-        return lax.psum(logits * keep, MODEL_AXIS)
+        return vocab_parallel_logits(h_last, w_out, info, cfg.vocab_size)
 
     # ------------------------------------------------------------------
     def cache_shapes(self, batch_local: int, s_max: int, dtype=jnp.bfloat16):

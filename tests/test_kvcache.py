@@ -1,0 +1,87 @@
+"""PagedKVCache allocator unit tests (pure host NumPy — no jax)."""
+import numpy as np
+import pytest
+
+from repro.serve.kvcache import PagedKVCache
+
+
+def test_geometry_and_scratch_page():
+    kv = PagedKVCache(batch=4, max_len=33, page_size=8)
+    assert kv.pages_per_slot == 5          # ceil(33 / 8)
+    # dense-equivalent default: every slot can hold max_len, + scratch
+    assert kv.num_pages == 1 + 4 * 5
+    # page 0 (scratch) is never on the free list
+    assert 0 not in kv._free[0]
+    assert kv.free_pages(0) == kv.num_pages - 1
+
+
+def test_alloc_is_all_or_nothing():
+    kv = PagedKVCache(batch=2, max_len=24, page_size=8, num_pages=4)
+    # 3 usable pages; a 4-page request must fail without touching state
+    before = kv.free_pages(0)
+    assert not kv.alloc(0, 25)
+    assert kv.free_pages(0) == before
+    assert kv.alloc(0, 24)                 # 3 pages fit
+    assert kv.free_pages(0) == 0
+    # occupied slot cannot be re-allocated
+    assert not kv.can_alloc(0, 1)
+
+
+def test_free_returns_pages_and_zeros_table():
+    kv = PagedKVCache(batch=2, max_len=32, page_size=8)
+    assert kv.alloc(0, 20)                 # 3 pages
+    row = kv.table[0].copy()
+    assert row[:3].min() > 0               # real pages, never scratch
+    assert (row[3:] == 0).all()            # unallocated entries -> scratch
+    kv.lens[0] = 17
+    kv.free(0)
+    assert (kv.table[0] == 0).all()        # successor can't reach old KV
+    assert kv.lens[0] == 0
+    assert kv.free_pages(0) == kv.num_pages - 1
+
+
+def test_free_list_reuse_is_lifo():
+    kv = PagedKVCache(batch=2, max_len=32, page_size=8)
+    assert kv.alloc(0, 16)
+    first = list(kv.table[0][:2])
+    kv.free(0)
+    assert kv.alloc(1, 16)
+    # freed pages are reused first, in the same order
+    assert list(kv.table[1][:2]) == first
+
+
+def test_per_shard_free_lists_are_isolated():
+    kv = PagedKVCache(batch=4, max_len=16, page_size=8, num_pages=3,
+                      dp_shards=2)
+    # slots 0,1 -> shard 0; slots 2,3 -> shard 1; 2 usable pages each
+    assert kv.shard(1) == 0 and kv.shard(2) == 1
+    assert kv.alloc(0, 16)                 # exhausts shard 0
+    assert not kv.can_alloc(1, 8)          # shard 0 empty...
+    assert kv.can_alloc(2, 16)             # ...but shard 1 untouched
+    assert kv.alloc(2, 16)
+    assert kv.occupancy() == 1.0
+    kv.free(0)
+    assert kv.occupancy() == 0.5
+
+
+def test_pages_needed_ceil_and_min_one():
+    kv = PagedKVCache(batch=1, max_len=32, page_size=8)
+    assert kv.pages_needed(0) == 1         # even empty requests hold a page
+    assert kv.pages_needed(8) == 1
+    assert kv.pages_needed(9) == 2
+
+
+def test_pool_too_small_raises():
+    with pytest.raises(ValueError):
+        PagedKVCache(batch=1, max_len=64, page_size=8, num_pages=4)
+
+
+def test_allocated_pages_are_disjoint():
+    kv = PagedKVCache(batch=4, max_len=16, page_size=8)
+    used = []
+    for slot in range(4):
+        assert kv.alloc(slot, 16)
+        used.extend(kv.table[slot][:2])
+    assert len(set(used)) == len(used)     # no page belongs to two slots
+    assert 0 not in used
+    assert np.all(np.asarray(used) < kv.num_pages)

@@ -163,3 +163,177 @@ def test_overlap_modes_empty_without_pcfg(one_device_mesh):
     cfg, params, caches, step = _build(one_device_mesh)
     eng = Engine(step, params, caches, batch=2, max_len=32)
     assert eng.overlap_modes() == {}
+
+
+# ---------------------------------------------------------------------------
+# Metrics under contention (fake step fn + fake clock -> hand-computed)
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    """perf_counter stub: returns 0, 1, 2, ... — one tick per call."""
+
+    def __init__(self):
+        self.t = -1
+
+    def __call__(self):
+        self.t += 1
+        return float(self.t)
+
+
+def test_metrics_under_contention_hand_computed(monkeypatch):
+    """3 requests on 2 slots, prompt 3 + 2 generated each, fake clock.
+
+    Call order is deterministic: adds stamp t=0,1,2; each step stamps
+    one tick (t=3..). A request takes 4 steps — the step feeding the
+    last prompt token also yields the first generated token. Requests
+    1+2 run steps 1-4 (now=3..6), request 3 queues through step 4 and
+    runs steps 5-8 (now=7..10). Hand-computed:
+      ttft r1 = 5-0, r2 = 5-1, r3 = 9-2  (queue wait INCLUDED)
+      tpot    = 1 tick/token for all (excludes the first token)
+      queue samples  [1]*4 + [0]*4   -> mean 0.5, max 1
+      occupancy      [1.]*4 + [.5]*4 -> mean 0.75
+    """
+    import repro.serve.engine as engine_mod
+
+    monkeypatch.setattr(engine_mod.time, "perf_counter", _FakeClock())
+    step_fn = lambda p, c, n, t: (np.zeros((2, 16), np.float32), c)
+    eng = Engine(step_fn, params=None, init_caches=None, batch=2, max_len=32)
+    for _ in range(3):
+        eng.add(Request(prompt=[1, 2, 3], max_new_tokens=2))
+    assert eng.run(max_steps=50) == []
+    m = eng.metrics()
+    assert m.requests_completed == 3
+    assert m.tokens_generated == 6
+    assert m.steps == m.steps_decode == 8
+    assert m.ttft_mean_s == (5 + 4 + 7) / 3
+    assert m.ttft_max_s == 7.0            # r3's queue wait is in its TTFT
+    assert m.tpot_mean_s == 1.0           # (t_done-t_first)/(n_out-1)
+    assert m.queue_depth_mean == 0.5
+    assert m.queue_depth_max == 1
+    assert m.slot_occupancy_mean == 0.75
+
+
+def test_truncation_flag_on_capacity(monkeypatch):
+    """A request that hits max_len mid-generation finishes with an
+    explicit truncated flag (no silent stranding) and is counted."""
+    import repro.serve.engine as engine_mod
+
+    monkeypatch.setattr(engine_mod.time, "perf_counter", _FakeClock())
+    step_fn = lambda p, c, n, t: (np.zeros((1, 16), np.float32), c)
+    eng = Engine(step_fn, params=None, init_caches=None, batch=1, max_len=4)
+    req = Request(prompt=[1, 2, 3], max_new_tokens=8)
+    eng.add(req)
+    assert eng.run(max_steps=20) == []    # finishes despite the tight cache
+    assert req.done and req.truncated
+    assert len(req.out_tokens) == 2       # positions 3,4 then capacity
+    m = eng.metrics()
+    assert m.requests_truncated == 1
+    assert m.requests_completed == 1
+
+
+def test_untruncated_requests_keep_flag_clear(monkeypatch):
+    import repro.serve.engine as engine_mod
+
+    monkeypatch.setattr(engine_mod.time, "perf_counter", _FakeClock())
+    step_fn = lambda p, c, n, t: (np.zeros((1, 16), np.float32), c)
+    eng = Engine(step_fn, params=None, init_caches=None, batch=1, max_len=32)
+    req = Request(prompt=[1, 2, 3], max_new_tokens=4)
+    eng.add(req)
+    eng.run(max_steps=20)
+    assert req.done and not req.truncated
+    assert eng.metrics().requests_truncated == 0
+
+
+# ---------------------------------------------------------------------------
+# Slot-reuse isolation (the PR-8 regression): a reused slot must produce
+# bit-identical tokens to a fresh engine — stale KV fully masked out.
+# ---------------------------------------------------------------------------
+
+
+def test_slot_reuse_matches_fresh_engine_tokenwise(one_device_mesh):
+    cfg, params, caches0, step = _build(one_device_mesh)
+    probe_prompt = [11, 7, 23, 4]
+
+    reused = Engine(step, params, jax.tree.map(jnp.copy, caches0),
+                    batch=2, max_len=32)
+    for _ in range(3):  # churn: fill + free both slots first
+        reused.add(Request(prompt=[9, 8, 7, 6, 5], max_new_tokens=6))
+    assert reused.run(max_steps=60) == []
+    probe_a = Request(prompt=list(probe_prompt), max_new_tokens=5)
+    reused.add(probe_a)
+    assert reused.run(max_steps=60) == []
+
+    fresh = Engine(step, params, jax.tree.map(jnp.copy, caches0),
+                   batch=2, max_len=32)
+    probe_b = Request(prompt=list(probe_prompt), max_new_tokens=5)
+    fresh.add(probe_b)
+    assert fresh.run(max_steps=60) == []
+    assert probe_a.out_tokens == probe_b.out_tokens  # bit-identical
+
+
+def test_slot_reuse_matches_fresh_engine_paged(one_device_mesh):
+    from repro.launch.serve import build_paged_engine
+    from repro.serve import ServeConfig
+
+    cfg = reduced(ARCHS["granite-3-2b"])
+    scfg = ServeConfig(batch=2, max_len=32, page_size=8, chunk=4,
+                       token_budget=8)
+    probe_prompt = [11, 7, 23, 4, 19, 3]
+
+    def probe_tokens(engine, churn: bool):
+        if churn:
+            for _ in range(3):
+                engine.add(Request(prompt=[9, 8, 7, 6, 5], max_new_tokens=6))
+            assert engine.run() == []
+        probe = Request(prompt=list(probe_prompt), max_new_tokens=5)
+        engine.add(probe)
+        assert engine.run() == []
+        return probe.out_tokens
+
+    reused = build_paged_engine(cfg, PCFG, scfg, one_device_mesh)
+    fresh = build_paged_engine(cfg, PCFG, scfg, one_device_mesh)
+    assert probe_tokens(reused, churn=True) == probe_tokens(fresh, churn=False)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: deterministic planning + bounded-queue backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_plan_is_deterministic():
+    from repro.serve import PagedKVCache, ServeConfig
+    from repro.serve.scheduler import Scheduler
+
+    scfg = ServeConfig(batch=4, max_len=16, page_size=8, chunk=4,
+                       token_budget=6)
+    kv = PagedKVCache(batch=4, max_len=16, page_size=8, dp_shards=2)
+    sched = Scheduler(scfg, kv, dp_shards=2)
+    for _ in range(3):
+        sched.submit(Request(prompt=list(range(1, 7)), max_new_tokens=2))
+    assert sched.admit() == [0, 1, 2]
+    # one chunk per DP shard; slot 2's 4 tokens exceed the remaining
+    # budget (6-4=2) so shard 1 waits this step
+    assert sched.plan().prefill == [(0, 0, 4)]
+    assert sched.note_chunk(0, 4) is False
+    # next step: slot 0's 2-token tail + shard 1's first chunk both fit
+    assert sched.plan().prefill == [(0, 4, 2), (2, 0, 4)]
+    assert sched.note_chunk(0, 2) is True   # prompt done -> decode phase
+    plan = sched.plan()
+    assert plan.decode == [0]
+    # decode consumed 1 budget token; slot 1's chunk (4) fits the
+    # remaining 5, slot 2's tail (2) no longer does
+    assert plan.prefill == [(1, 0, 4)]
+
+
+def test_bounded_queue_backpressure():
+    from repro.serve import PagedKVCache, ServeConfig
+    from repro.serve.scheduler import Scheduler
+
+    scfg = ServeConfig(batch=1, max_len=16, page_size=8, queue_cap=2)
+    kv = PagedKVCache(batch=1, max_len=16, page_size=8)
+    sched = Scheduler(scfg, kv)
+    assert sched.submit(Request(prompt=[1]))
+    assert sched.submit(Request(prompt=[2]))
+    assert not sched.submit(Request(prompt=[3]))  # queue full
+    assert sched.queue_depth() == 2

@@ -1,0 +1,83 @@
+"""Serving engines on multi-device meshes (subprocess — the main pytest
+process keeps 1 device).
+
+Two properties per world size:
+  * slot-reuse isolation — a probe request decoded after the engine has
+    filled and freed every slot (and, paged, every page) emits tokens
+    bit-identical to the same probe on a fresh engine;
+  * paged == tokenwise — the chunked-prefill + paged-decode path agrees
+    with the legacy dense-cache token-by-token path on greedy tokens.
+
+World 4 additionally splits the overlap policy per phase (prefill
+bidir/graph, decode one_shot/graph) to exercise the two-program policy
+resolution under dp=2, tp=2, fsdp.
+"""
+import textwrap
+
+import pytest
+
+from conftest import run_devices
+
+SCRIPT = textwrap.dedent("""
+    import dataclasses
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import ParallelConfig
+    from repro.ops.policy import OverlapPolicy
+    from repro.launch.mesh import make_mesh
+    from repro.launch.serve import build_paged_engine, build_tokenwise_engine
+    from repro.serve import Request, ServeConfig
+
+    DP, TP, SPLIT = {dp}, {tp}, {split}
+    cfg = reduced(ARCHS["granite-3-2b"])
+    pcfg = ParallelConfig(dp=DP, tp=TP, fsdp=True,
+                          param_dtype="float32", compute_dtype="float32")
+    mesh = make_mesh(DP, TP)
+    scfg = ServeConfig(batch=4, max_len=32, page_size=8, chunk=8,
+                       token_budget=32)
+    PROBE = [11, 7, 23, 4, 19, 3]
+
+    def probe(engine):
+        r = Request(prompt=list(PROBE), max_new_tokens=5)
+        engine.add(r)
+        assert engine.run(max_steps=500) == []
+        return list(r.out_tokens)
+
+    def churn(engine):
+        for i in range(5):   # 5 requests on 4 slots -> forced slot reuse
+            engine.add(Request(prompt=[9, 8, 7, 6, 5, (i % 3) + 1],
+                               max_new_tokens=4))
+        assert engine.run(max_steps=500) == []
+
+    ppol = None
+    if SPLIT:  # per-phase overlap: prefill bidir, decode one_shot
+        ppol = OverlapPolicy(mode="bidir", backend="graph")
+        pcfg = dataclasses.replace(
+            pcfg, overlap=OverlapPolicy(mode="one_shot", backend="graph"))
+
+    paged = build_paged_engine(cfg, pcfg, scfg, mesh, prefill_policy=ppol)
+    a = probe(paged)           # fresh pools
+    churn(paged)               # fill + free every slot and its pages
+    b = probe(paged)           # probe rides reused slot + reused pages
+    assert a == b, ("paged slot reuse leaked", a, b)
+    assert len(a) == 5
+
+    tok = build_tokenwise_engine(cfg, pcfg, scfg.batch, scfg.max_len, mesh)
+    c = probe(tok)
+    churn(tok)
+    d = probe(tok)
+    assert c == d, ("tokenwise slot reuse leaked", c, d)
+
+    assert a == c, ("paged != tokenwise", a, c)
+    print("OK", a)
+""")
+
+
+@pytest.mark.parametrize(
+    "devices,dp,tp,split",
+    [(2, 1, 2, False), (4, 2, 2, True), (8, 4, 2, False)],
+    ids=["world2-tp2", "world4-dp2tp2-phase-split", "world8-dp4tp2"],
+)
+def test_slot_reuse_and_paged_parity(devices, dp, tp, split):
+    out = run_devices(SCRIPT.format(dp=dp, tp=tp, split=split),
+                      devices=devices, timeout=1200)
+    assert "OK" in out
