@@ -1,0 +1,98 @@
+"""Fused rs->ag boundary (CoCoNet-style): ``matmul_rs_ag_matmul`` vs
+the back-to-back unfused pair at the attention-out -> MLP-in seam.
+
+``unfused_pair`` rows time ``matmul_rs`` + seam fn + ``ag_matmul`` as
+two separate declarations — the boundary collective fully exposed
+between them. ``fused`` rows time the single chained declaration (graph:
+rs_pipeline -> ag_pipeline through the fold API; kernel: the executor's
+chained ``push_rs_ring_ag`` protocol with no barrier between the
+halves). Under ``run.py --trace`` the kernel rows carry measured
+``overlap_eff``: the chain drops the pair's two mid-chain barrier
+rendezvous — the rs exit + ag entry flush, an exact event-count fact —
+and mid-stream rendezvous count as exposed comm in the obs reduction
+(only a PE's first barrier per kernel instance is launch skew), so the
+fused row's overlap_eff reads higher than the unfused pair's at the
+same shape. Both facts are pinned by tests/test_benchmarks.py.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import ops
+from repro.core import collective_matmul as cm
+
+from .common import row, time_fn
+
+SPECS = ((P(None, "tp"), P("tp", None), P(None, "tp"), P("tp", None)),
+         P(None, "tp"))
+
+# (m, k, n, f) boundary shapes; module-level so tests can trim the sweep
+SHAPES = [(512, 256, 256, 256), (1024, 512, 512, 512)]
+
+
+def _mid(r, x):
+    """The rank-local seam: residual add + nonlinearity (rows stay rows)."""
+    return jnp.tanh(r + x)
+
+
+def _unfused(y, wo, wi, xr, backend):
+    r = ops.matmul_rs(y, wo, axis="tp", mode="ring", backend=backend,
+                      out_dtype=jnp.float32)
+    return ops.ag_matmul(_mid(r, xr), wi, axis="tp", mode="ring",
+                         backend=backend, out_dtype=jnp.float32)
+
+
+def rows():
+    w = min(8, jax.device_count())
+    mesh = jax.make_mesh((w,), ("tp",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    out = []
+    for m, k, n, f in SHAPES:
+        y = jnp.asarray(rng.randn(m, k), jnp.float32)
+        wo = jnp.asarray(rng.randn(k, n), jnp.float32)
+        wi = jnp.asarray(rng.randn(n, f), jnp.float32)
+        xr = jnp.asarray(rng.randn(m, n), jnp.float32)
+        shape = f"{m}x{k}x{n}x{f}"
+
+        # the registered "none" baseline: composed pair on XLA collectives
+        fb = cm.make_sharded(
+            functools.partial(ops.matmul_rs_ag_matmul, axis="tp",
+                              mode="none", out_dtype=jnp.float32, mid=_mid),
+            mesh, *SPECS)
+        base_us = time_fn(fb, y, wo, wi, xr)
+        out.append(row(f"boundary/{shape}/none", base_us, "xla_baseline"))
+
+        for backend in ("graph", "kernel"):
+            if backend == "kernel" and m > 512:
+                # emulated-DMA rows: smallest shape only (correctness
+                # vehicle on CPU — see bench_ag_gemm)
+                continue
+            suffix = "/kernel" if backend == "kernel" else ""
+            fu = cm.make_sharded(
+                functools.partial(_unfused, backend=backend), mesh, *SPECS)
+            us_un = time_fn(fu, y, wo, wi, xr)
+            out.append(row(f"boundary/{shape}/unfused_pair/ring{suffix}",
+                           us_un, f"cpu_speedup={base_us / us_un:.2f}x"))
+            ff = cm.make_sharded(
+                functools.partial(ops.matmul_rs_ag_matmul, axis="tp",
+                                  mode="ring", backend=backend,
+                                  out_dtype=jnp.float32, mid=_mid),
+                mesh, *SPECS)
+            us_f = time_fn(ff, y, wo, wi, xr)
+            out.append(row(f"boundary/{shape}/fused/ring{suffix}", us_f,
+                           f"vs_unfused_pair={us_un / us_f:.2f}x"))
+
+        # boundary sub-chunking (the chunks knob splits the reduced block)
+        f2 = cm.make_sharded(
+            functools.partial(ops.matmul_rs_ag_matmul, axis="tp",
+                              mode="ring", chunks=2, out_dtype=jnp.float32,
+                              mid=_mid),
+            mesh, *SPECS)
+        us2 = time_fn(f2, y, wo, wi, xr)
+        out.append(row(f"boundary/{shape}/fused/ring_sub2", us2,
+                       f"cpu_speedup={base_us / us2:.2f}x"))
+    return out

@@ -17,6 +17,7 @@ scoped to that subprocess, never set globally).
   Fig. 19     bench_ll_allgather   low-latency AllGather
   Fig. 10     bench_two_level      hierarchical (2-level) collective matmuls
   (long ctx)  bench_ring_attention ring attention (context parallelism)
+  (boundary)  bench_boundary       fused rs->ag seam vs unfused pair (CoCoNet)
   (serve)     bench_serve          paged+chunked-prefill engine vs tokenwise
   (kernels)   bench_kernels        single-device kernel throughput
 
@@ -121,6 +122,7 @@ def _inner() -> None:
         bench_a2a,
         bench_ag_gemm,
         bench_ag_moe,
+        bench_boundary,
         bench_flash_decode,
         bench_gemm_rs,
         bench_kernels,
@@ -144,6 +146,7 @@ def _inner() -> None:
         ("fig19", bench_ll_allgather, world),
         ("fig10", bench_two_level, world),  # hierarchical (2-level) matmuls
         ("long_ctx", bench_ring_attention, world),  # context parallelism
+        ("boundary", bench_boundary, world),  # fused rs->ag seam (CoCoNet)
         ("serve", bench_serve, 4),  # paged+chunked-prefill engine vs tokenwise
         ("kernels", bench_kernels, 1),  # single-device kernel throughput
     ]

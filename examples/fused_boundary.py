@@ -1,0 +1,131 @@
+"""Fuse across the op boundary: the attention-out GEMM+RS chained into
+the MLP-in AG+GEMM as ONE declaration (``ops.fuse`` ->
+``ops.matmul_rs_ag_matmul``), vs the back-to-back unfused pair.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python examples/fused_boundary.py
+
+Walks the whole PR-9 surface:
+  1. numerics — the fused op equals ``ag_matmul(mid(matmul_rs(...)))``
+     on the XLA baseline, the graph pipeline, and the emulated-kernel
+     chained ``push_rs_ring_ag`` protocol;
+  2. the traced timeline — the chain drops the pair's TWO mid-chain
+     barrier rendezvous per call (the rs-exit + ag-entry flush), with
+     the overlap summaries printed side by side;
+  3. shape-keyed search — ``tuner.search`` times the registry grid for
+     one layer shape, emits a ``with_layer`` rule, and a second search
+     over the same key does ZERO new timings; the policy JSON
+     round-trips.
+"""
+import functools
+import os
+import sys
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import obs, ops  # noqa: E402
+from repro.core import tuner  # noqa: E402
+from repro.core.collective_matmul import make_sharded  # noqa: E402
+
+SPECS = ((P(None, "tp"), P("tp", None), P(None, "tp"), P("tp", None)),
+         P(None, "tp"))
+
+
+def mid(r, x):
+    """The rank-local seam between the halves: residual + nonlinearity."""
+    return jnp.tanh(r + x)
+
+
+def main():
+    world = jax.device_count()
+    obs.enable()  # before the first jit-compile: spans are trace-gated
+    mesh = jax.make_mesh((world,), ("tp",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    m, k, n, f = 16 * world, 8 * world, 48, 8 * world
+    rng = np.random.RandomState(0)
+    y = jnp.asarray(rng.randn(m, k), jnp.float32)
+    wo = jnp.asarray(rng.randn(k, n), jnp.float32)
+    wi = jnp.asarray(rng.randn(n, f), jnp.float32)
+    xr = jnp.asarray(rng.randn(m, n), jnp.float32)
+    want = np.tanh(np.asarray(y) @ np.asarray(wo) + np.asarray(xr)) \
+        @ np.asarray(wi)
+
+    # 1. numerics: one declaration, three lowerings, one oracle
+    def fused(mode, backend="graph"):
+        return make_sharded(
+            functools.partial(ops.matmul_rs_ag_matmul, axis="tp", mode=mode,
+                              backend=backend, out_dtype=jnp.float32,
+                              mid=mid),
+            mesh, *SPECS)
+
+    def unfused(y, wo, wi, xr, backend="graph"):
+        r = ops.matmul_rs(y, wo, axis="tp", mode="ring", backend=backend,
+                          out_dtype=jnp.float32)
+        return ops.ag_matmul(mid(r, xr), wi, axis="tp", mode="ring",
+                             backend=backend, out_dtype=jnp.float32)
+
+    for name, fn in (("none (xla baseline)", fused("none")),
+                     ("ring/graph", fused("ring")),
+                     ("ring/kernel", fused("ring", "kernel"))):
+        got = np.asarray(fn(y, wo, wi, xr))
+        err = np.abs(got - want).max() / max(1.0, np.abs(want).max())
+        print(f"fused {name:20s} rel_err={err:.2e}")
+        assert err < 1e-5, (name, err)
+
+    # 2. the chained protocol drops the mid-chain barriers the pair pays
+    def run_traced(fn):
+        jax.block_until_ready(fn(y, wo, wi, xr))  # warmup
+        obs.clear()
+        jax.block_until_ready(fn(y, wo, wi, xr))
+        ev = obs.events(clear=True)
+        barriers = sum(1 for e in ev if e.kind == "barrier")
+        return barriers, obs.metrics.summarize(ev)
+
+    fk = fused("ring", "kernel")
+    fu = make_sharded(functools.partial(unfused, backend="kernel"),
+                      mesh, *SPECS)
+    nb_u, s_u = run_traced(fu)
+    nb_f, s_f = run_traced(fk)
+    print(f"unfused pair: {nb_u} barrier events  {s_u}")
+    print(f"fused chain:  {nb_f} barrier events  {s_f}")
+    assert nb_f == nb_u - 2 * world, (nb_u, nb_f)
+
+    # 3. shape-keyed search: fill a per-layer rule from the registry grid
+    def make_step(shape, resolved):
+        mm, kk, nn, ff = shape
+        step = make_sharded(
+            functools.partial(ops.matmul_rs_ag_matmul, axis="tp",
+                              mode=resolved.mode, backend=resolved.backend,
+                              chunks=resolved.chunks,
+                              out_dtype=jnp.float32, mid=mid),
+            mesh, *SPECS)
+        return lambda: step(y, wo, wi, xr)
+
+    shape = (m, k, n, f)
+    tuner.clear_search_cache()
+    pol = tuner.search(make_step, "matmul_rs_ag_matmul", [shape],
+                       world=world, chunks=(1, 2))
+    timed = tuner.SEARCH_TIMINGS
+    winner = pol.resolve("matmul_rs_ag_matmul", shape=shape)
+    print(f"search winner at {shape}: {winner} ({timed} timings)")
+    pol2 = tuner.search(make_step, "matmul_rs_ag_matmul", [shape],
+                        world=world, chunks=(1, 2), base=pol)
+    assert tuner.SEARCH_TIMINGS == timed, "cache miss on identical search"
+    assert pol2 == pol
+    assert ops.OverlapPolicy.from_json(pol.to_json()) == pol
+    print("second search: 0 new timings; policy JSON round-trips")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -300,46 +300,6 @@ class ParallelConfig:
         """Effective lowering backend for ``op`` (policy.resolve)."""
         return self.policy.backend_for(op)
 
-    def with_modes(self, **per_op: str) -> "ParallelConfig":
-        """Deprecated: use an ``OverlapPolicy`` (``pcfg.policy.with_modes``
-        on the ``overlap`` field). A copy with per-op overrides merged."""
-        import warnings
-
-        warnings.warn(
-            "ParallelConfig.with_modes is deprecated: set "
-            "ParallelConfig.overlap to an ops.OverlapPolicy "
-            "(policy.with_modes) instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        if self.overlap is not None:
-            return dataclasses.replace(
-                self, overlap=self.overlap.with_modes(**per_op))
-        merged = dict(self.overlap_modes)
-        merged.update(per_op)
-        return dataclasses.replace(self, overlap_modes=tuple(sorted(merged.items())))
-
-    def with_backends(self, **per_op: str) -> "ParallelConfig":
-        """Deprecated: use an ``OverlapPolicy`` (``pcfg.policy.with_backends``
-        on the ``overlap`` field). A copy with per-op overrides merged."""
-        import warnings
-
-        warnings.warn(
-            "ParallelConfig.with_backends is deprecated: set "
-            "ParallelConfig.overlap to an ops.OverlapPolicy "
-            "(policy.with_backends) instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        if self.overlap is not None:
-            return dataclasses.replace(
-                self, overlap=self.overlap.with_backends(**per_op))
-        merged = dict(self.overlap_backends)
-        merged.update(per_op)
-        return dataclasses.replace(
-            self, overlap_backends=tuple(sorted(merged.items()))
-        )
-
     @property
     def world(self) -> int:
         return self.dp * self.tp * self.pods

@@ -67,8 +67,8 @@ registry is the single source of truth consumed by
 
 Ops whose mathematical transpose is another overlapped op (AG+GEMM <->
 GEMM+RS) declare a ``bwd`` rule and are routed through ONE shared
-``jax.custom_vjp`` (:func:`apply`), so O(1)-buffer differentiability is
-implemented exactly once instead of per kernel.
+``jax.custom_vjp`` (:func:`dispatch`), so O(1)-buffer differentiability
+is implemented exactly once instead of per kernel.
 """
 from __future__ import annotations
 
@@ -662,18 +662,3 @@ def dispatch(name: str, *tensors, **static):
     if spec.bwd is None:
         return _run_fwd(name, static, *tensors)
     return _diff_apply(name, tuple(sorted(static.items())), *tensors)
-
-
-def apply(name: str, *tensors, **static):
-    """Deprecated string-keyed entry point: use the typed op objects in
-    ``repro.ops`` (``ops.ag_matmul(x, w, policy=...)``) or, for raw
-    engine access, :func:`dispatch`."""
-    import warnings
-
-    warnings.warn(
-        "overlap.apply is deprecated: call the declared op in repro.ops "
-        f"(ops.{name} where declared) or overlap.dispatch",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return dispatch(name, *tensors, **static)

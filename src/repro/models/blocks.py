@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import ops as oplib
 from ..configs.base import ModelConfig, ParallelConfig
 from ..core import collective_matmul as cm
 from ..core import moe_overlap as mo
@@ -102,22 +103,24 @@ def _get_attn(p: dict, dtype) -> AttnParams:
     )
 
 
-def attention_train(
+def _attn_core(
     cfg: ModelConfig,
     pcfg: ParallelConfig,
     info: TPInfo,
-    p: dict,  # logical tensors
+    pp: AttnParams,
     x_sp: Array,  # (B, S_loc, D)
     *,
     causal: bool = True,
     cross_src: Optional[Array] = None,  # (B, T_src, D) replicated over tp
-    return_kv: bool = False,  # also return (k, v) as (B, Hkv_loc, S, hd)
 ):
+    """Attention up to (excluding) the output projection: norm, fused
+    QKV AG+GEMM, rope, flash attention. Returns the context as rank-major
+    TP rows (tp*B*S_loc, Hq_loc*hd) — ready for ``rs_linear(.., wo)`` or
+    the fused boundary op — plus (k, v) in cache layout."""
     b, s_loc, d = x_sp.shape
     tp = pcfg.tp
     s = s_loc * tp
     hd = cfg.head_dim
-    pp = _get_attn(p, x_sp.dtype)
 
     h = rmsnorm(x_sp, pp.ln, cfg.norm_eps).reshape(b * s_loc, d)
     # SP -> TP: one fused AG+GEMM for q and kv (single gather of the tokens)
@@ -152,12 +155,94 @@ def attention_train(
         causal=causal and cross_src is None,
     )  # (B, Hq_loc, S, hd)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, info.hq_loc * hd)
+    return (_bsd_to_sp_rows(o, tp),
+            (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)))
+
+
+def attention_train(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    info: TPInfo,
+    p: dict,  # logical tensors
+    x_sp: Array,  # (B, S_loc, D)
+    *,
+    causal: bool = True,
+    cross_src: Optional[Array] = None,  # (B, T_src, D) replicated over tp
+    return_kv: bool = False,  # also return (k, v) as (B, Hkv_loc, S, hd)
+):
+    b, s_loc, d = x_sp.shape
+    pp = _get_attn(p, x_sp.dtype)
+    o_rows, kv = _attn_core(cfg, pcfg, info, pp, x_sp,
+                            causal=causal, cross_src=cross_src)
     # TP -> SP: GEMM + ReduceScatter
-    out = rs_linear(_bsd_to_sp_rows(o, tp), pp.wo, pcfg)
+    out = rs_linear(o_rows, pp.wo, pcfg)
     y = x_sp + out.reshape(b, s_loc, d)
     if return_kv:
-        return y, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+        return y, kv
     return y
+
+
+def boundary_mid(r: Array, x_rows: Array, ln: Array, eps: Array) -> Array:
+    """The rank-local row-wise seam of the fused attention->MLP boundary:
+    residual add + pre-MLP rmsnorm of the reduced attention output.
+    Module-level on purpose — the fused op carries ``mid`` as a STATIC,
+    so a stable function object keeps trace caches warm. ``eps`` rides
+    as a () mid tensor (row-broadcast; its grad is discarded)."""
+    return rmsnorm(x_rows + r.astype(x_rows.dtype), ln, eps)
+
+
+def boundary_fused(pcfg: ParallelConfig) -> bool:
+    """Whether the policy turns the attention->MLP seam into the fused
+    ``matmul_rs_ag_matmul`` op. Opt-in: the registered default mode is
+    "none" (see ``ops.policy.DEFAULT_MODES``), which keeps the composed
+    unfused pair — the oracle the equivalence tests pin against."""
+    return pcfg.tp > 1 and pcfg.policy.mode_for("matmul_rs_ag_matmul") != "none"
+
+
+def attn_mlp_train(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    info: TPInfo,
+    p_attn: dict,
+    p_mlp: dict,
+    x_sp: Array,  # (B, S_loc, D)
+    *,
+    causal: bool = True,
+) -> Array:
+    """One attention + MLP pair with the attention->MLP seam under policy
+    control.
+
+    Unfused (the oracle, and the default): ``attention_train`` then
+    ``mlp_train`` — three boundary collectives (attention GEMM+RS, MLP
+    AG+GEMM, MLP GEMM+RS), the first two fully exposed back to back at
+    the seam.
+
+    Fused (when the policy enables ``matmul_rs_ag_matmul``): the seam's
+    rs and ag become ONE chained pipeline with the residual+rmsnorm as
+    its rank-local ``mid``, and BOTH residual branches close through one
+    combined GEMM+RS — ``rs(o @ wo_attn + act(z) @ wo_mlp)`` equals
+    ``attn_out + mlp_out``, so the pair runs two boundary crossings
+    instead of three. The trade: the attention out-projection GEMM runs
+    twice (once inside the fused seam, once in the combined close);
+    values match the oracle to f32-accumulation rounding."""
+    if not boundary_fused(pcfg):
+        h = attention_train(cfg, pcfg, info, p_attn, x_sp, causal=causal)
+        return mlp_train(cfg, pcfg, info, p_mlp, h)
+    b, s_loc, d = x_sp.shape
+    dt = x_sp.dtype
+    pp = _get_attn(p_attn, dt)
+    o_rows, _ = _attn_core(cfg, pcfg, info, pp, x_sp, causal=causal)
+    x_rows = x_sp.reshape(b * s_loc, d)
+    ln_mlp = p_mlp["ln"].astype(dt)
+    wi, wo_mlp = p_mlp["wi"].astype(dt), p_mlp["wo"].astype(dt)
+    eps = jnp.asarray(cfg.norm_eps, jnp.float32)
+    z = oplib.matmul_rs_ag_matmul(
+        o_rows, pp.wo, wi, x_rows, ln_mlp, eps,
+        axis=MODEL_AXIS, policy=pcfg.policy, out_dtype=dt, mid=boundary_mid)
+    a = _mlp_act(cfg, z)
+    out = rs_linear(jnp.concatenate([o_rows, a], axis=-1),
+                    jnp.concatenate([pp.wo, wo_mlp], axis=0), pcfg)
+    return x_sp + out.reshape(b, s_loc, d)
 
 
 def attention_cp(

@@ -183,8 +183,16 @@ class LM:
             )
         )
         if cfg.family in ("dense", "moe"):
-            h = attn(pl["attn"], h)
-            h = moe(pl["ffn"], h) if cfg.family == "moe" else mlp(pl["ffn"], h)
+            if cfg.family == "dense" and blocks.boundary_fused(pcfg):
+                # policy turned the attention->MLP seam into the fused
+                # rs->ag boundary op — route the pair as one unit
+                pair = self._ckpt(
+                    lambda pa, pf, h_: blocks.attn_mlp_train(
+                        cfg, pcfg, info, pa, pf, h_))
+                h = pair(pl["attn"], pl["ffn"], h)
+            else:
+                h = attn(pl["attn"], h)
+                h = moe(pl["ffn"], h) if cfg.family == "moe" else mlp(pl["ffn"], h)
         elif cfg.family == "ssm":
             h = ssm(_index_params(pl["ssm"], 0), h)
         elif cfg.family == "hybrid":

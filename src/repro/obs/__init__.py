@@ -14,8 +14,10 @@ stats (:mod:`repro.obs.metrics`):
     overlap_efficiency = 1 - exposed_comm / wall
 
 where ``exposed_comm`` is the mean per-PE stall time (credit waits +
-arrival waits — the communication the schedule failed to hide behind
-compute).
+arrival waits + mid-stream barrier flushes — the communication and
+synchronization the schedule failed to hide behind compute; only a
+PE's FIRST barrier per kernel instance is launch skew, reported
+separately).
 
 Semantics
 ---------

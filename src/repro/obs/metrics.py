@@ -4,7 +4,8 @@ The reduction answers the question the whole repo exists to answer: of
 the wall time a kernel took, how much communication was actually HIDDEN
 behind compute? Per PE:
 
-    stall   = sum of credit_wait + arrival_wait span durations
+    stall   = sum of credit_wait + arrival_wait span durations, plus
+              every barrier AFTER a PE's first per kernel instance
     compute = sum of tile_compute span durations
 
 and across the trace:
@@ -16,9 +17,17 @@ and across the trace:
 A perfectly-overlapped schedule has waits that return immediately
 (the DMA landed while the previous tile computed) — exposed_comm ~ 0,
 efficiency ~ 1. A serialized schedule spends whole chunk-flights inside
-``signal_wait_until`` — efficiency falls toward 0. Barriers (the
-open/close rendezvous) are reported separately, not counted as exposed
-comm: they measure launch skew, not schedule quality.
+``signal_wait_until`` — efficiency falls toward 0.
+
+Barriers split by position: the FIRST barrier a PE executes in a
+kernel instance (per ``(pe, cid)``) is the launch rendezvous — it
+measures launch skew, not schedule quality, and lands in the separate
+``barrier`` bucket. Every LATER barrier in the same instance is a
+MID-STREAM flush — PEs idling at a rendezvous the schedule put in the
+middle of the work, e.g. the rs-exit barrier a back-to-back unfused
+rs->ag pair pays at the op boundary — and counts as exposed comm.
+Chained protocols that drop those rendezvous (``push_rs_ring_ag``)
+read better here by construction.
 """
 from __future__ import annotations
 
@@ -34,8 +43,10 @@ class Summary:
 
     wall: float                # seconds, max(t1) - min(t0) across PEs
     compute_busy: float        # mean per-PE tile_compute seconds
-    exposed_comm: float        # mean per-PE stall seconds (credit+arrival)
-    barrier: float             # mean per-PE barrier seconds (launch skew)
+    exposed_comm: float        # mean per-PE stall seconds (credit +
+    #                            arrival + mid-stream barrier flushes)
+    barrier: float             # mean per-PE launch-rendezvous seconds
+    #                            (first barrier per (pe, cid) only)
     wire_bytes: int            # total bytes pushed over the (emulated) wire
     overlap_efficiency: float  # 1 - exposed_comm / wall, in [0, 1]
     stall_frac: float          # exposed_comm / wall, in [0, 1]
@@ -88,6 +99,10 @@ def summarize(
     wall = max(t_hi - t_lo, 1e-12)
     per_pe: Dict[int, Dict[str, float]] = {}
     wire_bytes = 0
+    # (pe, cid) -> (t0, dur) of the earliest barrier seen: the launch
+    # rendezvous; any other barrier of the instance is a mid-stream
+    # flush and counts as stall (see module docstring)
+    launch: Dict[tuple, tuple] = {}
     for ev in events:
         acc = per_pe.setdefault(ev.pe, {"compute": 0.0, "stall": 0.0,
                                         "barrier": 0.0})
@@ -97,9 +112,19 @@ def summarize(
         elif ev.kind in STALL_KINDS:
             acc["stall"] += dur
         elif ev.kind == "barrier":
-            acc["barrier"] += dur
+            key = (ev.pe, ev.cid)
+            prev = launch.get(key)
+            if prev is None:
+                launch[key] = (ev.t0, dur)
+            elif ev.t0 < prev[0]:  # unsorted input: prev was mid-stream
+                acc["stall"] += prev[1]
+                launch[key] = (ev.t0, dur)
+            else:
+                acc["stall"] += dur
         if ev.kind == "put":
             wire_bytes += ev.bytes
+    for (pe, _), (_, dur) in launch.items():
+        per_pe[pe]["barrier"] += dur
     n = len(per_pe)
     compute = sum(a["compute"] for a in per_pe.values()) / n
     exposed = sum(a["stall"] for a in per_pe.values()) / n

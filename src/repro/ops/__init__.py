@@ -16,18 +16,35 @@ per-op dicts on ``ParallelConfig``:
       live registry. Lives on ``ParallelConfig.overlap`` and is produced
       whole by ``tuner.recommend_overlap_modes``.
 
+  ``ops.fuse`` / ``OverlapOp.fuse``   compose declarations ACROSS op
+      boundaries: ``fuse(matmul_rs, ag_matmul)`` derives the single
+      pipelined rs->ag declaration ``ops.matmul_rs_ag_matmul`` (graph
+      lowering chains the engine pipelines, kernel lowering binds the
+      executor's chained ``push_rs_ring_ag`` protocol, backward is the
+      members' duals composed ag->rs).
+
   ``ops.ag_matmul`` / ``ops.matmul_rs`` / ``ops.all_gather``   the
       standard library, declared in ``library`` — call them inside
       ``shard_map`` as ``ops.ag_matmul(x, w, axis="model",
       policy=pcfg.policy)``.
 
-Migration from the string-keyed surface (kept as DeprecationWarning
-shims): ``overlap.apply(name, ...)`` -> ``ops.<name>(...)``;
-``ParallelConfig.with_modes/with_backends`` -> ``pcfg.policy.with_modes``
-/ ``OverlapPolicy`` on the config.
+The pre-PR-3 string-keyed surface (``overlap.apply(name, ...)``,
+``ParallelConfig.with_modes/with_backends``) is GONE — use
+``ops.<name>(...)`` and ``OverlapPolicy.with_modes/with_backends`` (or
+the shape-keyed ``OverlapPolicy.with_layer`` / ``tuner.search``) on the
+config.
 """
 from . import wire
-from .authoring import BoundOp, FoldTile, OverlapOp, declare, declared, get
+from .authoring import (
+    BoundOp,
+    FoldTile,
+    FusedOp,
+    OverlapOp,
+    declare,
+    declared,
+    fuse,
+    get,
+)
 from .library import (
     a2a_ep,
     ag_matmul,
@@ -36,19 +53,30 @@ from .library import (
     flash_decode,
     matmul_rs,
     matmul_rs_2level,
+    matmul_rs_ag_matmul,
     reduce_scatter,
     ring_attention,
 )
-from .policy import LATENCY_OPS, WIRE_DTYPES, OverlapPolicy, ResolvedOverlap
+from .policy import (
+    DEFAULT_MODES,
+    LATENCY_OPS,
+    WIRE_DTYPES,
+    OverlapPolicy,
+    ResolvedOverlap,
+    shape_key,
+)
 
 __all__ = [
     "BoundOp",
     "FoldTile",
+    "FusedOp",
     "OverlapOp",
     "OverlapPolicy",
     "ResolvedOverlap",
+    "DEFAULT_MODES",
     "LATENCY_OPS",
     "WIRE_DTYPES",
+    "shape_key",
     "wire",
     "a2a_ep",
     "ag_matmul",
@@ -57,9 +85,11 @@ __all__ = [
     "flash_decode",
     "matmul_rs",
     "matmul_rs_2level",
+    "matmul_rs_ag_matmul",
     "reduce_scatter",
     "ring_attention",
     "declare",
     "declared",
+    "fuse",
     "get",
 ]

@@ -221,6 +221,12 @@ class OverlapOp:
     def tile_fn(self) -> Callable:
         return self.tile if self.tile is not None else (lambda x: x)
 
+    def fuse(self, other: "OverlapOp", **kwargs) -> "BoundOp":
+        """Declare the rs->ag fusion of this declaration (the producer,
+        kind "rs") with ``other`` (the consumer, kind "ag") — see the
+        module-level :func:`fuse`."""
+        return fuse(self, other, **kwargs)
+
 
 # ---------------------------------------------------------------------------
 # Shared helpers
@@ -233,8 +239,8 @@ def _tile_rows(op: OverlapOp, chunk, statics) -> Tuple[int, Tuple[int, ...]]:
 
 
 def _out_dtype(static, operand):
-    """Output dtype from the static dict (operand dtype when a caller —
-    e.g. a legacy string-keyed ``overlap.apply`` — omitted it)."""
+    """Output dtype from the static dict (operand dtype when a raw
+    ``overlap.dispatch`` caller omitted it)."""
     return jnp.dtype(static.get("out_dtype") or operand.dtype)
 
 
@@ -797,9 +803,16 @@ class BoundOp:
         """``axis`` is one mesh-axis name, or ``(inner, outer)`` for
         two-level (compound-mesh) ops. ``extras`` are op-specific static
         values (hashable — e.g. ring attention's ``causal``/``scale``),
-        handed to fold declarations as their ``ctx``."""
+        handed to fold declarations as their ``ctx``.
+
+        Policy resolution is PER SITE: the call threads the tensors'
+        shapes into ``policy.resolve``, so a shape-keyed layer rule
+        (``OverlapPolicy.with_layer`` / ``tuner.search``) can pin a
+        different mode/backend/chunks/wire for the QKV projection than
+        for the MLP matmul of the same op name."""
         if policy is not None:
-            r = policy.resolve(self.name)
+            r = policy.resolve(
+                self.name, shape=tuple(tuple(t.shape) for t in tensors))
             mode = mode or r.mode
             backend = backend or r.backend
             chunks = r.chunks if chunks is None else chunks
@@ -857,3 +870,266 @@ def declared() -> Mapping[str, BoundOp]:
 
 def get(name: str) -> BoundOp:
     return _DECLARED[name]
+
+
+# ---------------------------------------------------------------------------
+# fuse(): compose an RS declaration into an AG declaration across the
+# op boundary (CoCoNet-style rs->ag fusion as a declaration-level feature)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FusedOp:
+    """A fused rs->ag boundary declaration, derived by :func:`fuse` from
+    two member :class:`OverlapOp` declarations. Carries just enough of
+    the :class:`OverlapOp` surface (kind/transports/kernel_protocols/
+    default/checkpoint_tag) for :class:`BoundOp` to bind it.
+
+    The fused op's call contract is
+
+        fused(y, *rs_statics, *ag_statics, *mid_tensors,
+              axis=..., mid=<static callable>)
+
+    which computes ``ag_tile(mid(reduce_scatter(rs_tile(y-blocks))))``
+    all-gathered — i.e. the composition
+    ``ag_op(mid(rs_op(y, *rs_statics)), *ag_statics)`` with the boundary
+    collective pipelined instead of exposed. ``mid`` is an optional
+    rank-local ROW-WISE callable ``mid(reduced, *mid_tensors)`` (residual
+    add / norm / activation at the seam); ``mid_tensors`` are ordinary
+    differentiable call tensors. ``mid`` itself is a static: pass a
+    module-level function so retraces cache.
+    """
+
+    name: str
+    rs: OverlapOp
+    ag: OverlapOp
+    transports: Tuple[str, ...] = ("ring", "one_shot")
+    baseline: str = "none"
+    default: str = "ring"
+    kernel_protocols: Tuple[Tuple[str, str], ...] = (
+        ("ring", "push_rs_ring_ag"),)
+    n_rs_statics: int = 1
+    n_ag_statics: int = 1
+    checkpoint_tag: Optional[str] = None
+    kind: str = "rs_ag"
+    rowwise: bool = True
+    wires: Tuple[str, ...] = ("f32",)
+
+
+def _fused_split(fused: FusedOp, rest):
+    n_rs, n_ag = fused.n_rs_statics, fused.n_ag_statics
+    return (tuple(rest[:n_rs]), tuple(rest[n_rs:n_rs + n_ag]),
+            tuple(rest[n_rs + n_ag:]))
+
+
+def _fused_mid_fn(static):
+    mid = static.get("mid")
+
+    def mid_fn(reduced, *mids):
+        return mid(reduced, *mids) if mid is not None else reduced
+
+    return mid_fn
+
+
+def _fused_graph(fused: FusedOp, static, operand, *rest):
+    """Graph lowering: chain the engine's rs and ag pipelines through the
+    fold API. The boundary is sub-chunked along the reduced block's rows
+    by the resolved ``chunks`` knob: chunk c's ag hops depend only on
+    chunk c's rs ring, so the consumer's first hops ride while the
+    producer's late hops are still reducing — the boundary collective's
+    exposed latency disappears from the critical path."""
+    axis = static["axis"]
+    mode = static["mode"]
+    out_dtype = _out_dtype(static, operand)
+    rs_statics, ag_statics, mids = _fused_split(fused, rest)
+    mid_fn = _fused_mid_fn(static)
+    rs_tile = fused.rs.tile_fn()
+    ag_tile = fused.ag.tile_fn()
+    w = _axis_world(axis)
+    m = operand.shape[0]
+    assert m % w == 0, (m, w)
+    m_blk = m // w
+
+    if mode not in ("ring", "one_shot"):
+        raise ValueError(f"{fused.name}: unknown fused mode {mode!r}")
+    n_sub = max(1, static.get("chunks", 1))
+    if m_blk % n_sub != 0 or mode == "one_shot":
+        n_sub = 1
+    sub = m_blk // n_sub
+
+    def mid_args(c):
+        # row-aligned mid tensors (leading dim == the rank's block) are
+        # sliced per boundary chunk; row-broadcast ones (norm scales,
+        # scalar eps, ...) pass whole
+        if n_sub == 1:
+            return mids
+        return tuple(_slice_rows(t, c * sub, sub)
+                     if t.shape[:1] == (m_blk,) else t for t in mids)
+
+    out = None
+    for c in range(n_sub):
+        def compute(blk, s, c=c):
+            return rs_tile(_slice_rows(operand, blk * m_blk + c * sub, sub),
+                           *rs_statics)
+
+        r_c = ov.rs_pipeline(compute, axis, transport=mode).astype(out_dtype)
+        h_c = mid_fn(r_c, *mid_args(c))
+
+        def fold(o, bufs, s, owner, c=c):
+            t = ag_tile(bufs[0], *ag_statics).astype(out_dtype)
+            return _update(o, t, owner * m_blk + c * sub)
+
+        if out is None:
+            ts = jax.eval_shape(lambda hh: ag_tile(hh, *ag_statics), h_c)
+            out = jnp.zeros((ts.shape[0] * n_sub * w,) + tuple(ts.shape[1:]),
+                            out_dtype)
+        out = ov.ag_pipeline((h_c,), fold, out, axis, transport=mode)
+    return out
+
+
+def _fused_baseline(fused: FusedOp, static, operand, *rest):
+    """Monolithic oracle: the composed unfused pair on XLA collectives
+    (psum_scatter, then mid, then all_gather + consumer GEMM)."""
+    axis = static["axis"]
+    out_dtype = _out_dtype(static, operand)
+    rs_statics, ag_statics, mids = _fused_split(fused, rest)
+    mid_fn = _fused_mid_fn(static)
+    rs_tile = fused.rs.tile_fn()
+    ag_tile = fused.ag.tile_fn()
+    w = lax.axis_size(axis)
+    m_blk = operand.shape[0] // w
+    partial = jnp.concatenate(
+        [rs_tile(_slice_rows(operand, i * m_blk, m_blk), *rs_statics)
+         for i in range(w)], axis=0)
+    reduced = lax.psum_scatter(
+        partial, axis, scatter_dimension=0, tiled=True).astype(out_dtype)
+    h = mid_fn(reduced, *mids)
+    full = lax.all_gather(h, axis, tiled=True)
+    h_loc = h.shape[0]
+    return jnp.concatenate(
+        [ag_tile(_slice_rows(full, i * h_loc, h_loc),
+                 *ag_statics).astype(out_dtype) for i in range(w)], axis=0)
+
+
+def fuse(rs, ag, *, name: Optional[str] = None,
+         transports: Tuple[str, ...] = ("ring", "one_shot"),
+         kernel_protocols=(("ring", "push_rs_ring_ag"),),
+         n_rs_statics: int = 1, n_ag_statics: int = 1,
+         checkpoint_tag: Optional[str] = None) -> "BoundOp":
+    """Fuse an RS-kind declaration into an AG-kind declaration across
+    the op boundary, deriving a single pipelined declaration.
+
+    ``rs``/``ag`` are member declarations (:class:`OverlapOp` or their
+    declared :class:`BoundOp`). The derived op:
+
+    - **graph lowering** chains ``rs_pipeline`` -> ``ag_pipeline``
+      through the fold API, sub-chunking the boundary rows by the
+      resolved ``chunks`` knob so the consumer's first hops overlap the
+      producer's late reductions;
+    - **kernel lowering** binds the executor's chained
+      ``push_rs_ring_ag`` protocol (per-half workspaces/credits, no
+      barrier between the halves);
+    - **backward** is derived through the ONE shared custom_vjp as the
+      ag->rs transpose of the chain: the members' own dual-schedule
+      backwards composed back-to-front around ``jax.vjp`` of the
+      boundary ``mid`` — the recompute rides a FIXED graph path, so
+      grads are bit-identical across forward backends;
+    - **baseline** (mode "none") is the composed unfused pair on XLA
+      collectives — the oracle the fused op degrades to under policy.
+
+    Members must be differentiable tile (non-fold) declarations, the
+    producer kind "rs", the consumer kind "ag" and rowwise (strips align
+    row-wise across boundary sub-chunks).
+    """
+    rs_decl = rs.decl if isinstance(rs, BoundOp) else rs
+    ag_decl = ag.decl if isinstance(ag, BoundOp) else ag
+    if rs_decl.kind != "rs":
+        raise ValueError(f"fuse: producer must be kind 'rs', got "
+                         f"{rs_decl.name!r} ({rs_decl.kind})")
+    if ag_decl.kind != "ag":
+        raise ValueError(f"fuse: consumer must be kind 'ag', got "
+                         f"{ag_decl.name!r} ({ag_decl.kind})")
+    if not ag_decl.rowwise:
+        raise ValueError(f"fuse: consumer {ag_decl.name!r} must be rowwise "
+                         "(boundary strips split along rows)")
+    if rs_decl.tile is None or ag_decl.tile is None:
+        raise ValueError("fuse: members must declare pure tiles")
+    if not (rs_decl.differentiable and ag_decl.differentiable):
+        raise ValueError("fuse: members must be differentiable")
+    kernel_protocols = tuple(dict(kernel_protocols).items()) \
+        if isinstance(kernel_protocols, Mapping) else tuple(kernel_protocols)
+    for t, proto in kernel_protocols:
+        if proto not in executor.PROTOCOLS:
+            raise ValueError(f"fuse: unknown executor protocol {proto!r}")
+    fused = FusedOp(
+        name=name or f"{rs_decl.name}_{ag_decl.name}",
+        rs=rs_decl, ag=ag_decl, transports=tuple(transports),
+        kernel_protocols=kernel_protocols, n_rs_statics=n_rs_statics,
+        n_ag_statics=n_ag_statics, checkpoint_tag=checkpoint_tag)
+    rs_bwd = _make_bwd(rs_decl)
+    ag_bwd = _make_bwd(ag_decl)
+    protos = dict(kernel_protocols)
+    cid = next(_CIDS)
+
+    def fwd(static, operand, *rest):
+        if static["mode"] == fused.baseline:
+            return _fused_baseline(fused, static, operand, *rest)
+        return _fused_graph(fused, static, operand, *rest)
+
+    def kernel_fwd(static, operand, *rest):
+        axis = static["axis"]
+        w = lax.axis_size(axis)
+        rs_statics, ag_statics, mids = _fused_split(fused, rest)
+        chain = executor.ChainTile(
+            rs=fused.rs.tile, ag=fused.ag.tile, mid=static.get("mid"),
+            n_rs=fused.n_rs_statics, n_ag=fused.n_ag_statics)
+        return executor.run(
+            protos[static["mode"]], chain, operand,
+            rs_statics + ag_statics + mids, axis=axis, world=w,
+            out_dtype=_out_dtype(static, operand), collective_id=cid)
+
+    def bwd(static, res, g):
+        # the ag->rs transpose of the chain: consumer bwd -> mid vjp ->
+        # producer bwd, each member riding its own dual schedule. The
+        # boundary block is RECOMPUTED on the fixed ring graph path, so
+        # the backward never depends on which backend ran the forward —
+        # grads are bit-identical across backends by construction.
+        operand, *rest = res
+        rs_statics, ag_statics, mids = _fused_split(fused, rest)
+        axis = static["axis"]
+        out_dtype = _out_dtype(static, operand)
+        mid_fn = _fused_mid_fn(static)
+        rs_tile = fused.rs.tile_fn()
+        w = _axis_world(axis)
+        m_blk = operand.shape[0] // w
+
+        def compute(blk, s):
+            return rs_tile(_slice_rows(operand, blk * m_blk, m_blk),
+                           *rs_statics)
+
+        reduced = ov.rs_pipeline(compute, axis,
+                                 transport="ring").astype(out_dtype)
+        h, mid_vjp = jax.vjp(mid_fn, reduced, *mids)
+        member_static = {"axis": axis, "mode": "ring", "chunks": 1,
+                         "wire": "f32", "out_dtype": jnp.dtype(out_dtype).name}
+        d_h, *d_ag = ag_bwd(member_static, (h,) + ag_statics, g)
+        d_reduced, *d_mids = mid_vjp(d_h.astype(h.dtype))
+        d_y, *d_rs = rs_bwd(member_static, (operand,) + rs_statics,
+                            d_reduced.astype(out_dtype))
+        return (d_y,) + tuple(d_rs) + tuple(d_ag) + tuple(d_mids)
+
+    ov.register(
+        fused.name,
+        kind=fused.kind,
+        transports=fused.transports,
+        baseline=fused.baseline,
+        default=fused.default,
+        fwd=fwd,
+        bwd=bwd,
+        kernel_transports=tuple(protos),
+        kernel_fwd=kernel_fwd,
+        wires=fused.wires,
+    )
+    bound = BoundOp(fused)
+    _DECLARED[fused.name] = bound
+    return bound

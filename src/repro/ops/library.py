@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .authoring import FoldTile, OverlapOp, declare
+from .authoring import FoldTile, OverlapOp, declare, fuse
 
 
 def _dot_tile(chunk, w):
@@ -280,3 +280,20 @@ matmul_rs_2level = declare(OverlapOp(
     transpose="ag_matmul_2level",
     baseline_fwd=_matmul_rs_2level_baseline,
 ))
+
+
+# ---------------------------------------------------------------------------
+# The fused attention-out -> MLP-in boundary (CoCoNet rs->ag fusion):
+# matmul_rs chained into ag_matmul as ONE declaration. Call contract:
+#
+#   matmul_rs_ag_matmul(y, w_out, w_in, *mid_tensors,
+#                       axis=..., policy=..., mid=<rank-local row fn>)
+#
+# == ag_matmul(mid(matmul_rs(y, w_out)), w_in) with the boundary
+# reduce-scatter/all-gather pipelined away instead of exposed. Mode
+# "none" (the registered baseline, and the session default via
+# ``OverlapPolicy``'s DEFAULT_MODES) degrades to the composed unfused
+# pair on XLA collectives — the oracle the parity tests pin against.
+# ---------------------------------------------------------------------------
+
+matmul_rs_ag_matmul = fuse(matmul_rs, ag_matmul, checkpoint_tag="boundary_out")

@@ -11,6 +11,14 @@ without a kernel lowering, and the chunk count is picked by the op's
 kind (AG ops sub-chunk the riding operand, RS ops the accumulator's
 column groups).
 
+Resolution is PER SITE, not just per op name: ``layers`` holds
+shape-keyed rules (one per ``(op, layer shape)``, produced by hand via
+:meth:`OverlapPolicy.with_layer` or searched by ``tuner.search``), and
+``resolve(op, hw, shape=...)`` applies the matching rule's overrides on
+top of the per-op resolution — so the QKV projection and the MLP matmul
+of the same op name can lower differently. A searched policy serializes
+with :meth:`to_json` / :meth:`from_json` so it can be committed.
+
 The policy is a frozen, hashable dataclass: it can live on
 ``ParallelConfig``, be produced whole by ``tuner.recommend_overlap_modes``
 and recorded per benchmark row. This module imports no jax — the
@@ -19,8 +27,9 @@ registry is consulted lazily — so config modules stay import-light.
 from __future__ import annotations
 
 import dataclasses
+import json
 from dataclasses import dataclass
-from typing import Mapping, Tuple
+from typing import Mapping, Optional, Tuple
 
 # Ops whose messages are latency-bound regardless of layer shape default
 # to the paper's low-latency one-shot kernels (EP dispatch, decode combine).
@@ -32,6 +41,30 @@ LATENCY_OPS: Tuple[Tuple[str, str], ...] = (
 # Wire dtypes a riding chunk can travel as: "f32" = as-is (the operand's own
 # dtype), "int8"/"fp8" = per-row scaled 1-byte blocks (see ops/wire.py).
 WIRE_DTYPES: Tuple[str, ...] = ("f32", "int8", "fp8")
+
+# Session defaults for the per-op mode table: the latency-bound ops plus
+# the fused boundary op, which is opt-in — "none" keeps the transformer
+# block on the composed unfused pair (the oracle) until a policy or a
+# tuner.search rule turns the fusion on.
+DEFAULT_MODES: Tuple[Tuple[str, str], ...] = LATENCY_OPS + (
+    ("matmul_rs_ag_matmul", "none"),
+)
+
+# Per-layer override knobs a shape-keyed rule may carry.
+LAYER_KEYS: Tuple[str, ...] = ("mode", "backend", "chunks", "wire")
+
+
+def shape_key(shape) -> Tuple[int, ...]:
+    """Canonical layer-shape key: nested int iterables flatten to one
+    flat int tuple, so ``((m, k), (k, n))`` (a call site's operand
+    shapes) and ``(m, k, k, n)`` (a tuner search key) address the same
+    rule."""
+    if isinstance(shape, int):
+        return (shape,)
+    flat = []
+    for s in shape:
+        flat.extend(shape_key(s))
+    return tuple(flat)
 
 
 @dataclass(frozen=True)
@@ -50,6 +83,25 @@ def _as_items(value) -> Tuple[Tuple[str, str], ...]:
     return tuple(value)
 
 
+def _canon_layers(layers) -> tuple:
+    """Canonicalize shape-keyed rules: keys become ``(op, flat shape
+    tuple)``, overrides become sorted item tuples restricted to
+    ``LAYER_KEYS``; entries sort by key so equal rule sets hash equal."""
+    if isinstance(layers, Mapping):
+        layers = layers.items()
+    canon = {}
+    for key, overrides in layers:
+        op, shape = key
+        ov = dict(_as_items(overrides))
+        bad = set(ov) - set(LAYER_KEYS)
+        if bad:
+            raise ValueError(
+                f"layer rule for {op!r} has unknown keys {sorted(bad)} "
+                f"(valid: {LAYER_KEYS})")
+        canon[(op, shape_key(shape))] = tuple(sorted(ov.items()))
+    return tuple(sorted(canon.items()))
+
+
 @dataclass(frozen=True)
 class OverlapPolicy:
     """How overlapped ops lower, session-wide.
@@ -65,25 +117,33 @@ class OverlapPolicy:
     wire       default wire dtype for riding chunks ("f32" = as-is,
                "int8"/"fp8" = per-row scaled 1-byte blocks)
     wires      per-op wire overrides
+    layers     shape-keyed per-site rules: ((op, shape_key), overrides)
+               entries where overrides is a sorted item tuple over
+               ``LAYER_KEYS`` — applied by ``resolve(op, shape=...)``
+               on top of the per-op resolution
     """
 
     mode: str = "ring"
     backend: str = "graph"
-    modes: tuple = LATENCY_OPS
+    modes: tuple = DEFAULT_MODES
     backends: tuple = ()
     ag_chunks: int = 0
     rs_chunks: int = 0
     wire: str = "f32"
     wires: tuple = ()
+    layers: tuple = ()
 
     def __post_init__(self):
         # accept dicts for ergonomics; store hashable sorted tuples
         object.__setattr__(self, "modes", _as_items(self.modes))
         object.__setattr__(self, "backends", _as_items(self.backends))
         object.__setattr__(self, "wires", _as_items(self.wires))
+        object.__setattr__(self, "layers", _canon_layers(self.layers))
         # wire names are a closed set — validate eagerly so a typo fails at
         # config construction, not deep inside a traced lowering
-        for w in (self.wire,) + tuple(v for _, v in self.wires):
+        layer_wires = tuple(dict(ov).get("wire", "f32")
+                            for _, ov in self.layers)
+        for w in (self.wire,) + tuple(v for _, v in self.wires) + layer_wires:
             if w not in WIRE_DTYPES:
                 raise ValueError(
                     f"unknown wire dtype {w!r} (valid: {WIRE_DTYPES})")
@@ -127,20 +187,48 @@ class OverlapPolicy:
         return overlap.resolve_wire(
             op, self._requested(self.wires, self.wire, op), self.mode_for(op))
 
-    def resolve(self, op: str, hw=None) -> ResolvedOverlap:
-        """The op's effective (mode, backend, chunks).
+    def layer_for(self, op: str, shape) -> Optional[Mapping[str, object]]:
+        """The shape-keyed rule matching ``(op, shape)``, or None. The
+        shape canonicalizes through :func:`shape_key`, so a call site's
+        operand-shape tuple and a tuner search key address one rule."""
+        if shape is None:
+            return None
+        key = (op, shape_key(shape))
+        for k, overrides in self.layers:
+            if k == key:
+                return dict(overrides)
+        return None
+
+    def resolve(self, op: str, hw=None, shape=None) -> ResolvedOverlap:
+        """The op's effective (mode, backend, chunks, wire) at one site.
 
         ``hw`` optionally names the target platform's
         :class:`repro.hw.HardwareSpec`: on a spec without ICI links the
         kernel backend has no remote-DMA engine to drive, so it degrades
         to graph (the emulated backend stays reachable by requesting
-        ``backend="kernel"`` per call, as the parity tests do)."""
+        ``backend="kernel"`` per call, as the parity tests do).
+
+        ``shape`` optionally keys a per-site layer rule (see
+        :meth:`with_layer` / ``tuner.search``): matching overrides are
+        applied on top of the per-op resolution, then re-clamped against
+        the registry so a searched rule can never request an unsupported
+        (mode, backend, wire) triple."""
+        from ..core import overlap
+
+        mode = self.mode_for(op)
         backend = self.backend_for(op)
+        chunks = self.chunks_for(op)
+        wire = self.wire_for(op)
+        rule = self.layer_for(op, shape)
+        if rule is not None:
+            mode = overlap.resolve_mode(op, rule.get("mode", mode))
+            backend = overlap.resolve_backend(
+                op, rule.get("backend", backend), mode)
+            chunks = max(1, int(rule.get("chunks", chunks)))
+            wire = overlap.resolve_wire(op, rule.get("wire", wire), mode)
         if hw is not None and getattr(hw, "ici_links", 0) == 0:
             backend = "graph"
-        return ResolvedOverlap(
-            self.mode_for(op), backend, self.chunks_for(op),
-            self.wire_for(op))
+        return ResolvedOverlap(mode, backend, chunks, wire)
 
     # -- functional updates -------------------------------------------
     def with_modes(self, **per_op: str) -> "OverlapPolicy":
@@ -161,9 +249,59 @@ class OverlapPolicy:
         merged.update(per_op)
         return dataclasses.replace(self, wires=tuple(sorted(merged.items())))
 
-    def describe(self, op: str) -> str:
+    def with_layer(self, op: str, shape, **overrides) -> "OverlapPolicy":
+        """A copy with one shape-keyed rule merged in: ``resolve(op,
+        shape=shape)`` will apply ``overrides`` (any of ``mode``,
+        ``backend``, ``chunks``, ``wire``) at that site only."""
+        merged = dict(self.layers)
+        merged[(op, shape_key(shape))] = tuple(sorted(overrides.items()))
+        return dataclasses.replace(self, layers=tuple(merged.items()))
+
+    def describe(self, op: str, shape=None) -> str:
         """Compact 'mode/backend[/xN][/wire]' string (benchmark + log rows)."""
-        r = self.resolve(op)
+        r = self.resolve(op, shape=shape)
         sub = f"/x{r.chunks}" if r.chunks > 1 else ""
         wire = f"/{r.wire}" if r.wire != "f32" else ""
         return f"{r.mode}/{r.backend}{sub}{wire}"
+
+    # -- serialization -------------------------------------------------
+    def to_json(self) -> str:
+        """JSON text for this policy (searched policies get committed;
+        :meth:`from_json` round-trips)."""
+        data = {
+            "mode": self.mode,
+            "backend": self.backend,
+            "modes": [list(kv) for kv in self.modes],
+            "backends": [list(kv) for kv in self.backends],
+            "ag_chunks": self.ag_chunks,
+            "rs_chunks": self.rs_chunks,
+            "wire": self.wire,
+            "wires": [list(kv) for kv in self.wires],
+            "layers": [
+                {"op": op, "shape": list(shp), "overrides": dict(ov)}
+                for (op, shp), ov in self.layers
+            ],
+        }
+        return json.dumps(data, indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, data) -> "OverlapPolicy":
+        """Rebuild a policy from :meth:`to_json` output (text or the
+        parsed dict)."""
+        if isinstance(data, str):
+            data = json.loads(data)
+        layers = tuple(
+            ((e["op"], tuple(e["shape"])),
+             tuple(sorted(e.get("overrides", {}).items())))
+            for e in data.get("layers", ()))
+        return cls(
+            mode=data.get("mode", "ring"),
+            backend=data.get("backend", "graph"),
+            modes=tuple((k, v) for k, v in data.get("modes", DEFAULT_MODES)),
+            backends=tuple((k, v) for k, v in data.get("backends", ())),
+            ag_chunks=int(data.get("ag_chunks", 0)),
+            rs_chunks=int(data.get("rs_chunks", 0)),
+            wire=data.get("wire", "f32"),
+            wires=tuple((k, v) for k, v in data.get("wires", ())),
+            layers=layers,
+        )

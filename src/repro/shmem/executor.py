@@ -72,6 +72,18 @@ Protocols
                structure), reduced in f32, then the pod-reduced
                accumulator rides the inter-pod ring (peers' regions
                first, own pod last). Same two-axis calling convention.
+  push_rs_ring_ag the chained boundary protocol (CoCoNet-style rs->ag
+               fusion): an Alg. 3 push half reduces this rank's boundary
+               block, a rank-local ``mid`` transforms it, and a Fig. 4
+               ring half gathers the result — in ONE kernel with NO
+               barrier between the halves. The ag ring's initial credit
+               is granted before the rs half even starts, so a fast
+               rank's first ag hop lands while slow ranks are still
+               pushing/reducing rs partials: the boundary collective's
+               exposed latency hides behind the rs tail. Each half owns
+               its workspace/signals ("ws_rs"/"recv_rs" vs
+               "ws_ag"/"recv_ag"/"cap_ag") so the overlapping halves
+               never alias. ``tile`` is a :class:`ChainTile`.
 
 Backends (``repro.shmem.default_backend``)
 ------------------------------------------
@@ -122,7 +134,7 @@ Array = jax.Array
 
 PROTOCOLS = ("ring_ag", "one_shot_ag", "push_rs", "one_shot_rs",
              "one_shot_a2a", "bidir_ring_ag", "ring_fold",
-             "two_level_ag", "two_level_rs")
+             "two_level_ag", "two_level_rs", "push_rs_ring_ag")
 
 # Protocols that compose TWO mesh axes (pod x ring): axis=(inner, outer),
 # world=(Wi, Wo); the linearized PE id is outer * Wi + inner.
@@ -148,6 +160,32 @@ class FoldTile:
     init: Callable
     fold: Callable
     finalize: Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainTile:
+    """The compound tile of the chained boundary protocol
+    (``push_rs_ring_ag``): an RS-side tile, a rank-local boundary
+    function, and an AG-side tile. The protocol's single ``statics``
+    tuple is split positionally — ``statics[:n_rs]`` feed ``rs``,
+    ``statics[n_rs:n_rs + n_ag]`` feed ``ag``, the rest feed ``mid``.
+
+    rs    ``rs(block, *rs_statics) -> partial`` — the producer GEMM's
+          partial for one output block (reduced across ranks in f32).
+    ag    ``ag(h_chunk, *ag_statics) -> strip`` — the consumer GEMM on
+          one arriving boundary chunk; the result lands in the chunk
+          owner's output strip.
+    mid   ``mid(reduced, *mid_statics) -> h`` — rank-local ROW-WISE
+          boundary function (residual add / norm / activation) applied
+          to the owner's reduced block between the halves; ``None`` is
+          the identity.
+    """
+
+    rs: Callable
+    ag: Callable
+    mid: Optional[Callable] = None
+    n_rs: int = 0
+    n_ag: int = 0
 
 
 def _identity(x):
@@ -564,6 +602,80 @@ def _two_level_rs_emulated(tile, operand, statics, *, axis, world, out_dtype,
                                   sig="orecv")
     ctx.barrier_all()
     return acc.astype(out_dtype)
+
+
+def _push_rs_ring_ag_emulated(chain, operand, statics, *, axis, world,
+                              out_dtype, cid):
+    """Chained boundary protocol: Alg. 3 push (rs half) -> rank-local
+    ``mid`` -> Fig. 4 ring (ag half), in ONE context with NO barrier
+    between the halves. The ag ring's initial credit is granted before
+    the rs half starts, so a fast rank's first ag hop lands while slow
+    ranks are still pushing/reducing rs partials — the boundary
+    collective's exposed latency hides behind the rs tail. Per-half
+    workspaces/signals ("ws_rs"/"recv_rs" vs "ws_ag"/"recv_ag"/"cap_ag")
+    keep the overlapping halves from aliasing; span labels ``rs_s{s}`` /
+    ``mid`` / ``ag_s{s}`` keep the halves apart in traces."""
+    assert isinstance(chain, ChainTile), chain
+    n_rs, n_ag = chain.n_rs, chain.n_ag
+    rs_statics = statics[:n_rs]
+    ag_statics = statics[n_rs:n_rs + n_ag]
+    mid_statics = statics[n_rs + n_ag:]
+    me = lax.axis_index(axis)
+    left = lax.rem(me + world - 1, world)
+    right = lax.rem(me + 1, world)
+    m_blk = operand.shape[0] // world
+    rs_ts = _tile_struct(chain.rs, _block(operand, 0, m_blk), rs_statics)
+
+    ctx = em.ShmemCtx(axis, world, cid)
+    ctx.barrier_all()
+    # the ag ring's initial credit is granted BEFORE the rs half runs:
+    # nothing separates the halves, so the first boundary hop can land
+    # behind a neighbor still reducing (the fusion).
+    ctx.signal_op(left, sig="cap_ag")
+
+    # rs half — Alg. 3 push (peers' blocks first, own last), f32 partials
+    for s in range(world):
+        blk = lax.rem(me - s - 1 + 2 * world, world)
+        partial = ctx.span("tile_compute",
+                           lambda b: chain.rs(b, *rs_statics),
+                           _block(operand, blk, m_blk),
+                           name=f"rs_s{s}").astype(jnp.float32)
+        ctx.putmem_signal_nbi(partial, blk, buf="ws_rs", slot=me,
+                              sig="recv_rs")
+    ctx.signal_wait_until(sig="recv_rs", value=world)
+    acc = jnp.zeros(rs_ts.shape, jnp.float32)
+    for r in range(world):
+        acc = acc + ctx.read_symmetric(rs_ts.shape, jnp.float32,
+                                       buf="ws_rs", slot=r)
+
+    # boundary — rank-local mid on the owner's reduced block
+    def _mid(a, *ms):
+        reduced = a.astype(out_dtype)
+        return chain.mid(reduced, *ms) if chain.mid is not None else reduced
+
+    h = ctx.span("tile_compute", _mid, acc, *mid_statics, name="mid")
+
+    # ag half — Fig. 4 ring + credit over the boundary activation
+    ag_ts = _tile_struct(chain.ag, h, ag_statics)
+    tile_m = ag_ts.shape[0]
+    cur = h
+    out = jnp.zeros((tile_m * world,) + ag_ts.shape[1:], out_dtype)
+    for s in range(world):
+        if s != world - 1:
+            ctx.signal_wait_until(sig="cap_ag", value=1)
+            ctx.putmem_signal_nbi(cur, right, buf="ws_ag", slot=(s + 1) % 2,
+                                  sig="recv_ag")
+        t = ctx.span("tile_compute", lambda c: chain.ag(c, *ag_statics), cur,
+                     name=f"ag_s{s}").astype(out_dtype)
+        owner = lax.rem(me - s + world, world)
+        out = update_rows(out, t, owner * tile_m)
+        if s != world - 1:
+            cur = ctx.wait_read(h.shape, h.dtype, buf="ws_ag",
+                                slot=(s + 1) % 2, sig="recv_ag")
+            if s < world - 2:
+                ctx.signal_op(left, sig="cap_ag")
+    ctx.barrier_all()
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -1333,6 +1445,138 @@ def _two_level_rs_pltpu(tile, operand, statics, *, axis, world, out_dtype,
     return outs[0]
 
 
+def _push_rs_ring_ag_body(*refs, chain, axis, world, n_rs, n_ag, n_mid,
+                          m_blk, tile_m, out_dtype, h_dtype):
+    n_static = n_rs + n_ag + n_mid
+    (a_ref, *rest) = refs
+    static_refs = rest[:n_static]
+    o_ref, wsr_ref, wsa_ref = rest[n_static:n_static + 3]
+    a_vmem = rest[n_static + 3]
+    static_vmems = rest[n_static + 4:2 * n_static + 4]
+    p_vmem = rest[2 * n_static + 4]       # f32 rs partial / landed partial
+    h_vmem = rest[2 * n_static + 5]       # boundary activation chunk
+    o_vmem = rest[2 * n_static + 6]
+    (local_sem, rs_send, rs_recv, ag_send, ag_recv,
+     ag_cap) = rest[2 * n_static + 7:]
+
+    me = lax.axis_index(axis)
+    left = lax.rem(me + world - 1, world)
+    right = lax.rem(me + 1, world)
+
+    tpu_backend.barrier_all(axis, world)
+    if n_static:
+        _stage(tuple(static_refs), tuple(static_vmems), local_sem)
+    # the ag ring's initial credit, granted before the rs half even
+    # starts — no barrier separates the halves (the fusion)
+    tpu_backend.signal_op(ag_cap, left, axis=axis)
+
+    # --- rs half: Alg. 3 push into the rs workspace (f32 partials)
+    sends = []
+    for s in range(world):
+        blk = lax.rem(me - s - 1 + 2 * world, world)
+        _stage((a_ref.at[pl.ds(blk * m_blk, m_blk)],), (a_vmem,), local_sem)
+        with tpu_backend.annotate("tile_compute", f"rs_s{s}"):
+            p_vmem[...] = chain.rs(
+                a_vmem[...], *[v[...] for v in static_vmems[:n_rs]]
+            ).astype(jnp.float32)
+        if s == world - 1:
+            _stage((p_vmem,), (wsr_ref.at[me],), local_sem)
+        else:
+            send = tpu_backend.putmem_signal_nbi(
+                p_vmem, wsr_ref.at[me], rs_send, rs_recv, blk, axis=axis)
+            # next step's compute overlaps the DMA; drain before reusing
+            # p_vmem (single partial buffer)
+            send.wait_send()
+            sends.append(send)
+    for send in sends:
+        send.wait_recv()
+    acc = jnp.zeros(p_vmem.shape, jnp.float32)
+    for r in range(world):
+        _stage((wsr_ref.at[r],), (p_vmem,), local_sem)
+        acc = acc + p_vmem[...]
+
+    # --- boundary: rank-local mid, landed into the ag ring's slot 0
+    with tpu_backend.annotate("tile_compute", "mid"):
+        reduced = acc.astype(out_dtype)
+        if chain.mid is not None:
+            reduced = chain.mid(
+                reduced, *[v[...] for v in static_vmems[n_rs + n_ag:]])
+        h_vmem[...] = reduced.astype(h_dtype)
+    _stage((h_vmem,), (wsa_ref.at[0],), local_sem)
+
+    # --- ag half: Fig. 4 ring + credit over the boundary activation
+    for s in range(world):
+        slot = s % 2
+        send = None
+        if s != world - 1:
+            tpu_backend.signal_wait_until(ag_cap, 1)
+            send = tpu_backend.putmem_signal_nbi(
+                wsa_ref.at[slot], wsa_ref.at[(s + 1) % 2],
+                ag_send, ag_recv, right, axis=axis)
+        _stage((wsa_ref.at[slot],), (h_vmem,), local_sem)
+        with tpu_backend.annotate("tile_compute", f"ag_s{s}"):
+            o_vmem[...] = chain.ag(
+                h_vmem[...], *[v[...] for v in static_vmems[n_rs:n_rs + n_ag]]
+            ).astype(out_dtype)
+        owner = lax.rem(me - s + world, world)
+        _stage((o_vmem,), (o_ref.at[pl.ds(owner * tile_m, tile_m)],),
+               local_sem)
+        if send is not None:
+            send.wait()
+        if s < world - 2:
+            tpu_backend.signal_op(ag_cap, left, axis=axis)
+
+
+def _push_rs_ring_ag_pltpu(chain, operand, statics, *, axis, world, out_dtype,
+                           cid):
+    assert isinstance(chain, ChainTile), chain
+    n_rs, n_ag = chain.n_rs, chain.n_ag
+    rs_statics = statics[:n_rs]
+    ag_statics = statics[n_rs:n_rs + n_ag]
+    mid_statics = statics[n_rs + n_ag:]
+    m_blk = operand.shape[0] // world
+    blk_struct = jax.ShapeDtypeStruct((m_blk,) + operand.shape[1:],
+                                      operand.dtype)
+    rs_ts = _tile_struct(chain.rs, blk_struct, rs_statics)
+
+    def _boundary(acc, *ms):
+        reduced = acc.astype(out_dtype)
+        return chain.mid(reduced, *ms) if chain.mid is not None else reduced
+
+    h_struct = jax.eval_shape(
+        _boundary, jax.ShapeDtypeStruct(rs_ts.shape, jnp.float32),
+        *mid_statics)
+    ag_ts = _tile_struct(chain.ag, h_struct, ag_statics)
+    body = functools.partial(
+        _push_rs_ring_ag_body, chain=chain, axis=axis, world=world,
+        n_rs=n_rs, n_ag=n_ag, n_mid=len(mid_statics), m_blk=m_blk,
+        tile_m=ag_ts.shape[0], out_dtype=out_dtype, h_dtype=h_struct.dtype)
+    out, _wsr, _wsa = pl.pallas_call(
+        body,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + len(statics)),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((ag_ts.shape[0] * world,) + ag_ts.shape[1:],
+                                 out_dtype),
+            jax.ShapeDtypeStruct((world,) + rs_ts.shape, jnp.float32),  # rs ws
+            jax.ShapeDtypeStruct((2,) + h_struct.shape, h_struct.dtype),  # ag
+        ],
+        scratch_shapes=[pltpu.VMEM(blk_struct.shape, operand.dtype)]
+        + [pltpu.VMEM(s.shape, s.dtype) for s in statics]
+        + [pltpu.VMEM(rs_ts.shape, jnp.float32),
+           pltpu.VMEM(h_struct.shape, h_struct.dtype),
+           pltpu.VMEM(ag_ts.shape, out_dtype),
+           pltpu.SemaphoreType.DMA,   # local staging
+           pltpu.SemaphoreType.DMA,   # rs send
+           pltpu.SemaphoreType.DMA,   # rs recv
+           pltpu.SemaphoreType.DMA,   # ag send
+           pltpu.SemaphoreType.DMA,   # ag recv
+           pltpu.SemaphoreType.REGULAR],  # ag credits
+        compiler_params=pltpu.CompilerParams(collective_id=cid),
+    )(operand, *statics)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Dispatch
 # ---------------------------------------------------------------------------
@@ -1347,6 +1591,7 @@ _EMULATED = {
     "ring_fold": _ring_fold_emulated,
     "two_level_ag": _two_level_ag_emulated,
     "two_level_rs": _two_level_rs_emulated,
+    "push_rs_ring_ag": _push_rs_ring_ag_emulated,
 }
 
 _PLTPU = {
@@ -1359,6 +1604,7 @@ _PLTPU = {
     "ring_fold": _ring_fold_pltpu,
     "two_level_ag": _two_level_ag_pltpu,
     "two_level_rs": _two_level_rs_pltpu,
+    "push_rs_ring_ag": _push_rs_ring_ag_pltpu,
 }
 
 
@@ -1410,6 +1656,9 @@ def run(
     if protocol == "ring_fold":
         if not isinstance(tile, FoldTile):
             raise ValueError("ring_fold takes a FoldTile (init/fold/finalize)")
+    elif protocol == "push_rs_ring_ag":
+        if not isinstance(tile, ChainTile):
+            raise ValueError("push_rs_ring_ag takes a ChainTile (rs/ag/mid)")
     else:
         tile = tile or _identity
     backend = backend or default_backend()

@@ -4,7 +4,14 @@ virtual device).
 The key guard: ``bench_a2a``'s ``a2a_combine`` rows must time the
 inverse path on a *dispatched* tensor — the capacity-grouped
 (E_global, W*cap, d) shape — not on the raw dispatch input (the PR-3
-fix; a regression would silently re-time the forward path)."""
+fix; a regression would silently re-time the forward path).
+
+``bench_boundary`` pin: the fused rs->ag chain must (a) drop the
+back-to-back unfused pair's two mid-chain barrier rendezvous (the rs
+exit + ag entry flush) — an exact event-count fact of the
+``push_rs_ring_ag`` protocol — and
+(b) report higher measured ``overlap_eff`` on its traced kernel row
+than the pair's at the same shape."""
 import textwrap
 
 import pytest
@@ -52,6 +59,86 @@ A2A_SCRIPT = textwrap.dedent("""
 def test_bench_a2a_combine_times_dispatched_tensor(devices):
     out = run_devices(A2A_SCRIPT, devices=devices, timeout=900)
     assert "OK bench_a2a" in out
+
+
+BOUNDARY_SCRIPT = textwrap.dedent("""
+    # The fused-boundary acceptance, pinned against the real bench path:
+    #   (a) DETERMINISTIC: one kernel call of the chained push_rs_ring_ag
+    #       protocol records exactly TWO barrier rendezvous (2*world
+    #       events) fewer than the back-to-back push_rs + ring_ag pair —
+    #       the pair's rs-exit + ag-entry flush is gone from the event
+    #       stream itself (entry/exit of the one chained context remain).
+    #   (b) MEASURED: bench_boundary's traced kernel rows report higher
+    #       overlap_eff for fused than for the unfused pair at the same
+    #       shape — the dropped mid-stream rendezvous count as exposed
+    #       comm in the obs reduction (only a PE's first barrier per
+    #       kernel instance is launch skew), so the pair pays strictly
+    #       more exposed time by construction. CPU wall-clock is still
+    #       noisy, so each attempt is a full PAIRED re-measurement and
+    #       the assert allows a bounded number of retries.
+    import functools, os
+    os.environ["_REPRO_BENCH_TRACE"] = "1"  # time_fn: measured fields on
+    from repro import obs
+    obs.enable()  # BEFORE first compile: executor spans are trace-gated
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro import ops
+    from repro.core import collective_matmul as cm
+    from benchmarks import bench_boundary
+
+    w = min(8, jax.device_count())
+    mesh = jax.make_mesh((w,), ("tp",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    m, k, n, f = bench_boundary.SHAPES[0]
+    y = jnp.asarray(rng.randn(m, k), jnp.float32)
+    wo = jnp.asarray(rng.randn(k, n), jnp.float32)
+    wi = jnp.asarray(rng.randn(n, f), jnp.float32)
+    xr = jnp.asarray(rng.randn(m, n), jnp.float32)
+
+    fu = cm.make_sharded(
+        functools.partial(bench_boundary._unfused, backend="kernel"),
+        mesh, *bench_boundary.SPECS)
+    ff = cm.make_sharded(
+        functools.partial(ops.matmul_rs_ag_matmul, axis="tp", mode="ring",
+                          backend="kernel", out_dtype=jnp.float32,
+                          mid=bench_boundary._mid),
+        mesh, *bench_boundary.SPECS)
+
+    def barrier_events(fn):
+        jax.block_until_ready(fn(y, wo, wi, xr))  # warmup/compile
+        obs.clear()
+        jax.block_until_ready(fn(y, wo, wi, xr))
+        ev = obs.events(clear=True)
+        assert ev, "no trace events — kernel backend not engaged?"
+        return sum(1 for e in ev if e.kind == "barrier")
+
+    nb_u = barrier_events(fu)
+    nb_f = barrier_events(ff)
+    assert nb_f == nb_u - 2 * w, (nb_u, nb_f, w)
+
+    bench_boundary.SHAPES = bench_boundary.SHAPES[:1]  # kernel shape only
+    KU = f"boundary/{m}x{k}x{n}x{f}/unfused_pair/ring/kernel"
+    KF = f"boundary/{m}x{k}x{n}x{f}/fused/ring/kernel"
+    for attempt in range(3):
+        eff = {}
+        for line in bench_boundary.rows():
+            parts = line.split(",")
+            for p in parts[2:]:
+                key, sep, v = p.partition("=")
+                if sep and key == "overlap_eff":
+                    eff[parts[0]] = float(v)
+        assert KU in eff and KF in eff, sorted(eff)
+        if eff[KF] > eff[KU]:
+            break
+    assert eff[KF] > eff[KU], eff
+    print("OK boundary", nb_u, nb_f, eff[KU], eff[KF])
+""")
+
+
+def test_bench_boundary_fused_beats_unfused_pair_overlap_eff():
+    out = run_devices(BOUNDARY_SCRIPT, devices=8, timeout=1200)
+    assert "OK boundary" in out
 
 
 def test_parse_row_measured_fields():

@@ -129,6 +129,39 @@ def test_overlap_efficiency_synthetic():
     assert s.per_pe[1]["stall"] == pytest.approx(4.0)
 
 
+def test_mid_stream_barriers_count_as_exposed():
+    from repro import obs
+
+    # One PE, one kernel instance (cid 7): entry barrier, a mid-stream
+    # flush, an exit barrier. Only the FIRST is the launch rendezvous
+    # (the separate `barrier` bucket); the later two are rendezvous the
+    # schedule put in the middle of the work — exposed comm (this is
+    # what makes the fused rs->ag chain read better than the
+    # back-to-back pair: it drops the mid-chain flushes).
+    ev = [
+        obs.TraceEvent(0, 7, "barrier", "b", 0, 0.0, 1.0),   # launch
+        obs.TraceEvent(0, 7, "tile_compute", "s0", 0, 1.0, 5.0),
+        obs.TraceEvent(0, 7, "barrier", "b", 0, 5.0, 7.0),   # flush
+        obs.TraceEvent(0, 7, "tile_compute", "s1", 0, 7.0, 9.0),
+        obs.TraceEvent(0, 7, "barrier", "b", 0, 9.0, 10.0),  # flush
+    ]
+    s = obs.metrics.summarize(ev)
+    assert s.barrier == pytest.approx(1.0)
+    assert s.exposed_comm == pytest.approx(3.0)
+    assert s.stall_frac == pytest.approx(0.3)
+    assert s.overlap_efficiency == pytest.approx(0.7)
+    # a second kernel instance gets its own launch rendezvous
+    ev2 = ev + [obs.TraceEvent(0, 8, "barrier", "b", 0, 10.0, 12.0)]
+    s2 = obs.metrics.summarize(ev2)
+    assert s2.barrier == pytest.approx(3.0)
+    assert s2.exposed_comm == pytest.approx(3.0)
+    # unsorted input: the launch barrier is the EARLIEST, not the first
+    # in list order
+    s3 = obs.metrics.summarize(list(reversed(ev)))
+    assert s3.barrier == pytest.approx(1.0)
+    assert s3.exposed_comm == pytest.approx(3.0)
+
+
 def test_summarize_empty_trace_raises():
     from repro import obs
 

@@ -5,17 +5,16 @@
    dual-schedule backward; it passes graph-vs-kernel parity at worlds
    2/4/8 and round-trips grads bit-identically through the ONE shared
    custom_vjp (kernel forward keeps the graph dual as its backward).
-2. Back-compat shims: string-keyed ``overlap.apply`` and
-   ``ParallelConfig.with_modes/with_backends`` keep working but emit a
-   ``DeprecationWarning`` naming the replacement, and the shim path is
-   bit-identical to the new ``repro.ops`` path.
+2. ``ops.fuse``: the fused rs->ag boundary declaration
+   (``matmul_rs_ag_matmul``) matches the composed unfused pair in values
+   AND grads at worlds 2/4/8, on both backends, with grads bit-identical
+   across backends (the backward recomputes on a fixed graph path).
 3. ``OverlapPolicy``: single-point resolution (mode clamped by the
    registry, backend degraded off kernel-incapable pairs, chunk count
    picked by op kind), dict ergonomics, hw-aware degrade.
 """
 import dataclasses
 import textwrap
-import warnings
 
 import pytest
 
@@ -146,64 +145,100 @@ def test_toy_op_declaration_registry_parity_grads(world):
     assert "OK" in out
 
 
-SHIM = textwrap.dedent("""
-    import functools, warnings
+FUSED = textwrap.dedent("""
+    import functools
     import jax, jax.numpy as jnp, numpy as np
     from jax import lax
     from jax.sharding import PartitionSpec as P
     from repro import ops
-    from repro.core import overlap as ov
 
-    W = 4
+    W = __WORLD__
     mesh = jax.make_mesh((W,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
     rng = np.random.RandomState(0)
-    A = jnp.asarray(rng.randn(8 * W, 16), jnp.float32)
-    B = jnp.asarray(rng.randn(16, 4 * W), jnp.float32)
 
-    def sh(fn):
-        return jax.jit(jax.shard_map(fn, mesh=mesh,
-                                     in_specs=(P("tp", None), P(None, "tp")),
-                                     out_specs=P(None, "tp"), check_vma=False))
+    M, K, N, F = 4 * W, 2 * W, 6, 3 * W
+    Y = jnp.asarray(rng.randn(M, K), jnp.float32)
+    WO = jnp.asarray(rng.randn(K, N), jnp.float32)
+    WI = jnp.asarray(rng.randn(N, F), jnp.float32)
+    XR = jnp.asarray(rng.randn(M, N), jnp.float32)
 
-    new = sh(functools.partial(ops.ag_matmul, axis="tp", mode="ring",
-                               out_dtype=jnp.float32))(A, B)
+    def boundary(r, x):
+        # rank-local seam: residual add + nonlinearity (rows stay rows)
+        return jnp.tanh(r + x.astype(r.dtype))
 
-    # the string-keyed shim warns (naming the replacement) and is
-    # bit-identical to the new path — forward AND gradients
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        old = sh(lambda a, b: ov.apply("ag_matmul", a, b, axis="tp",
-                                       mode="ring", out_dtype="float32"))(A, B)
-    assert any(issubclass(w.category, DeprecationWarning) and
-               "repro.ops" in str(w.message) for w in rec), \
-        [str(w.message) for w in rec]
-    assert np.array_equal(np.asarray(old), np.asarray(new)), "shim != new path"
+    IN = (P(None, "tp"), P("tp", None), P(None, "tp"), P("tp", None))
+    OUT = P(None, "tp")
 
-    def loss_new(a, b):
-        out = ops.ag_matmul(a, b, axis="tp", mode="ring", out_dtype=jnp.float32)
-        return lax.psum(jnp.sum(out * out), "tp")
+    def sh(fn, in_specs=IN, out_specs=OUT):
+        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_vma=False))
 
-    def loss_old(a, b):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            out = ov.apply("ag_matmul", a, b, axis="tp", mode="ring",
-                           out_dtype="float32")
-        return lax.psum(jnp.sum(out * out), "tp")
+    def run(mode, backend="graph", chunks=1):
+        f = sh(functools.partial(
+            ops.matmul_rs_ag_matmul, axis="tp", mode=mode, backend=backend,
+            chunks=chunks, out_dtype=jnp.float32, mid=boundary))
+        return np.asarray(f(Y, WO, WI, XR))
 
-    gspecs = dict(in_specs=(P("tp", None), P(None, "tp")),
-                  out_specs=(P("tp", None), P(None, "tp")))
-    gn = jax.jit(jax.shard_map(jax.grad(loss_new, argnums=(0, 1)), mesh=mesh,
-                               check_vma=False, **gspecs))(A, B)
-    go = jax.jit(jax.shard_map(jax.grad(loss_old, argnums=(0, 1)), mesh=mesh,
-                               check_vma=False, **gspecs))(A, B)
-    for a, b in zip(gn, go):
-        assert np.array_equal(np.asarray(a), np.asarray(b)), "shim grads"
-    print("OK shim")
+    # the composed unfused pair on XLA collectives is the oracle; the
+    # documented tolerance vs every fused lowering is f32-accumulation
+    # rounding (identical FLOPs, reassociated across the seam)
+    def composed(y, wo, wi, x):
+        r = ops.matmul_rs(y, wo, axis="tp", mode="none",
+                          out_dtype=jnp.float32)
+        h = boundary(r, x)
+        return ops.ag_matmul(h, wi, axis="tp", mode="none",
+                             out_dtype=jnp.float32)
+
+    want = np.asarray(sh(composed)(Y, WO, WI, XR))
+    # mode "none" IS the registered composed-pair baseline
+    assert np.abs(run("none") - want).max() < 1e-5, "baseline vs composed"
+    for label, out in (("ring", run("ring")),
+                       ("ring-x2", run("ring", chunks=2)),
+                       ("one_shot", run("one_shot"))):
+        assert np.abs(out - want).max() < 1e-5, ("fused graph", label)
+
+    # graph-vs-kernel parity on the chained push_rs -> ring_ag protocol
+    for chunks in (1, 2):
+        k = run("ring", backend="kernel", chunks=chunks)
+        g = run("ring", backend="graph", chunks=chunks)
+        assert np.abs(k - g).max() < 1e-5, ("fused kernel parity", chunks)
+
+    # grads: fused-vs-composed close under a quadratic loss; graph-vs-
+    # kernel bit-identical under a FIXED cotangent (linear loss) — the
+    # shared custom_vjp recomputes on a fixed graph path, so the
+    # backward never depends on which backend ran the forward
+    GSPECS = dict(in_specs=IN, out_specs=IN)
+
+    def make_grad(fn, quad=True):
+        def loss(y, wo, wi, x):
+            out = fn(y, wo, wi, x)
+            return lax.psum(jnp.sum(out * out if quad else out), "tp")
+        return jax.jit(jax.shard_map(jax.grad(loss, argnums=(0, 1, 2, 3)),
+                                     mesh=mesh, check_vma=False, **GSPECS))
+
+    def fused_fn(backend):
+        return functools.partial(
+            ops.matmul_rs_ag_matmul, axis="tp", mode="ring", backend=backend,
+            out_dtype=jnp.float32, mid=boundary)
+
+    go = [np.asarray(t) for t in make_grad(composed)(Y, WO, WI, XR)]
+    gg = [np.asarray(t) for t in make_grad(fused_fn("graph"))(Y, WO, WI, XR)]
+    for a, b in zip(gg, go):
+        rel = np.abs(a - b).max() / max(1.0, np.abs(b).max())
+        assert rel < 1e-5, ("fused grads vs composed", rel)
+    lg = make_grad(fused_fn("graph"), quad=False)(Y, WO, WI, XR)
+    lk = make_grad(fused_fn("kernel"), quad=False)(Y, WO, WI, XR)
+    for a, b in zip(lg, lk):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "fused grads differ across backends"
+    print("OK fused", W)
 """)
 
 
-def test_string_keyed_apply_shim_warns_and_matches():
-    out = run_devices(SHIM, devices=4)
+@pytest.mark.parametrize("world", [2, 4, 8])
+def test_fused_boundary_matches_composed_pair_and_grads(world):
+    out = run_devices(FUSED.replace("__WORLD__", str(world)), devices=world,
+                      timeout=1200)
     assert "OK" in out
 
 
@@ -241,6 +276,32 @@ def test_policy_single_resolution_point():
     pol2 = ops.OverlapPolicy(modes={"ag_matmul": "one_shot"})
     assert pol2.mode_for("ag_matmul") == "one_shot"
     assert pol2.describe("ag_matmul") == "one_shot/graph"
+
+
+def test_policy_shape_keyed_layer_rules():
+    from repro import ops
+
+    pol = ops.OverlapPolicy(mode="ring")
+    # the fused boundary op defaults OFF (mode "none") until opted in
+    assert pol.mode_for("matmul_rs_ag_matmul") == "none"
+    shape = ((512, 1024), (1024, 4096))
+    pol = pol.with_layer("ag_matmul", shape, mode="one_shot", chunks=4)
+    # the layer rule wins at ITS shape only; base resolution elsewhere
+    r = pol.resolve("ag_matmul", shape=shape)
+    assert (r.mode, r.chunks) == ("one_shot", 4)
+    assert pol.resolve("ag_matmul", shape=((256, 1024), (1024, 4096))).mode \
+        == "ring"
+    assert pol.resolve("ag_matmul").mode == "ring"
+    # shape keys flatten: list/tuple/int spellings hit the same rule
+    assert ops.shape_key([512, 1024, 1024, 4096]) == \
+        ops.shape_key(((512, 1024), (1024, 4096)))
+    # layer overrides are re-clamped by the registry (a2a has no ring)
+    pol2 = ops.OverlapPolicy().with_layer("a2a_ep", (8,), mode="ring")
+    assert pol2.resolve("a2a_ep", shape=(8,)).mode == "one_shot"
+    # JSON round-trip preserves base knobs AND layer rules
+    back = ops.OverlapPolicy.from_json(pol.to_json())
+    assert back == pol
+    assert back.resolve("ag_matmul", shape=shape).chunks == 4
 
 
 def test_parallel_config_carries_policy():
@@ -300,56 +361,6 @@ def test_conflicting_policy_and_legacy_fields_raise():
                        overlap_modes={"ag_matmul": "one_shot"})
     # non-overlap fields never conflict; policy-only configs are fine
     ParallelConfig(tp=4, overlap=pol, remat="none", moe_chunks=2)
-
-
-def test_shim_warnings_point_at_the_caller():
-    """The DeprecationWarning shims carry the right ``stacklevel``: the
-    reported filename is THIS test file, not the shim's module."""
-    import warnings
-
-    import jax.numpy as jnp
-
-    from repro.configs.base import ParallelConfig
-    from repro.core import overlap as ov
-
-    pcfg = ParallelConfig(tp=4)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        pcfg.with_modes(ag_matmul="one_shot")
-        pcfg.with_backends(matmul_rs="kernel")
-        try:
-            # outside shard_map the dispatch fails on the missing mesh
-            # axis — AFTER the shim has already warned
-            ov.apply("ag_matmul", jnp.zeros((2, 2)), jnp.zeros((2, 2)),
-                     axis="tp", mode="ring", out_dtype="float32")
-        except Exception:
-            pass
-    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)
-            and "deprecated" in str(w.message)]
-    assert len(deps) == 3, [str(w.message) for w in rec]
-    for w in deps:
-        assert w.filename == __file__, (w.filename, str(w.message))
-
-
-def test_with_modes_shim_warns_and_matches_policy_path():
-    from repro.configs.base import ParallelConfig
-
-    pcfg = ParallelConfig(tp=4)
-    with pytest.warns(DeprecationWarning, match="OverlapPolicy"):
-        old = pcfg.with_modes(ag_matmul="one_shot")
-    new = dataclasses.replace(
-        pcfg, overlap=pcfg.policy.with_modes(ag_matmul="one_shot"))
-    with pytest.warns(DeprecationWarning, match="OverlapPolicy"):
-        old = old.with_backends(matmul_rs="kernel")
-    new = dataclasses.replace(
-        new, overlap=new.policy.with_backends(matmul_rs="kernel"))
-    for op in ("ag_matmul", "matmul_rs", "a2a_ep"):
-        assert old.policy.resolve(op) == new.policy.resolve(op), op
-    # with_modes on a policy-carrying config merges into the policy
-    with pytest.warns(DeprecationWarning):
-        merged = new.with_modes(matmul_rs="one_shot")
-    assert merged.overlap is not None
-    assert merged.policy.resolve("matmul_rs").mode == "one_shot"
 
 
 def test_tuner_policy_feeds_default_pcfg_without_repacking():

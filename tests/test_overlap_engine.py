@@ -208,6 +208,33 @@ SCRIPT = textwrap.dedent("""
         check(("flash_decode", mode), f(qd, kd, vd), np.asarray(want_dec))
     tested.add("flash_decode")
 
+    # ---------------- fused rs->ag boundary declaration --------------
+    from repro import ops as oplib
+
+    XRf = jnp.asarray(rng.randn(M, N), jnp.float32)
+    WIf = jnp.asarray(rng.randn(N, 4 * W), jnp.float32)
+
+    def seam(r, xr):
+        # rank-local row fn at the boundary (residual add + nonlinearity)
+        return jnp.tanh(r + xr)
+
+    want_f = np.tanh(np.asarray(A2) @ np.asarray(B2) + np.asarray(XRf)) \
+        @ np.asarray(WIf)
+    FUSED_SPECS = ((P(None, "tp"), P("tp", None), P(None, "tp"),
+                    P("tp", None)), P(None, "tp"))
+    for mode in ov.transports_for("matmul_rs_ag_matmul",
+                                  include_baseline=True):
+        f = sh(functools.partial(oplib.matmul_rs_ag_matmul, axis="tp",
+                                 mode=mode, out_dtype=jnp.float32, mid=seam),
+               *FUSED_SPECS)
+        check(("matmul_rs_ag_matmul", mode), f(A2, B2, WIf, XRf), want_f)
+    # sub-chunked boundary (the chunks knob splits the reduced block)
+    f = sh(functools.partial(oplib.matmul_rs_ag_matmul, axis="tp",
+                             mode="ring", chunks=2, out_dtype=jnp.float32,
+                             mid=seam), *FUSED_SPECS)
+    check(("matmul_rs_ag_matmul", "ring/sub2"), f(A2, B2, WIf, XRf), want_f)
+    tested.add("matmul_rs_ag_matmul")
+
     # ---------------- kernel backend: fused shmem kernels ------------
     # Every (op, transport) the registry declares kernel-capable must
     # match the graph backend's output (the emulated-DMA backend runs
@@ -287,12 +314,20 @@ SCRIPT = textwrap.dedent("""
                 *RS2_SPECS)
         return np.asarray(f(A2, B2))
 
+    def run_fused(mode, backend):
+        f = sh(functools.partial(oplib.matmul_rs_ag_matmul, axis="tp",
+                                 mode=mode, backend=backend,
+                                 out_dtype=jnp.float32, mid=seam),
+               *FUSED_SPECS)
+        return np.asarray(f(A2, B2, WIf, XRf))
+
     kernel_runners = {"ag_matmul": run_ag, "matmul_rs": run_rs,
                       "all_gather": run_gather, "reduce_scatter": run_rsc,
                       "a2a_ep": run_a2a, "flash_decode": run_fd,
                       "moe_rs": run_moe_rs, "ring_attention": run_rattn,
                       "ag_matmul_2level": run_ag2,
-                      "matmul_rs_2level": run_rs2}
+                      "matmul_rs_2level": run_rs2,
+                      "matmul_rs_ag_matmul": run_fused}
     kernel_pairs = [(nm, t) for nm, spec in ov.registry().items()
                     for t in spec.kernel_transports]
     assert kernel_pairs, "no kernel-capable (op, transport) pairs registered"
@@ -513,6 +548,9 @@ def test_every_registry_op_is_dispatch_routed_and_kernel_capable():
     assert ov.get("ring_attention").kernel_transports == ("ring", "one_shot")
     assert ov.get("ag_matmul_2level").kernel_transports == ("two_level",)
     assert ov.get("matmul_rs_2level").kernel_transports == ("two_level",)
+    # the fused boundary declaration is registry-routed too: its kernel
+    # transport binds the chained push_rs -> ring_ag protocol
+    assert ov.get("matmul_rs_ag_matmul").kernel_transports == ("ring",)
     # earlier PRs' bindings stay
     assert "one_shot" in ov.get("a2a_ep").kernel_transports
     assert "one_shot" in ov.get("flash_decode").kernel_transports

@@ -1,6 +1,8 @@
 """Training integration on 4 virtual devices (subprocess):
 - 2x2 mesh train step produces same loss as 1x1 (parallelism invariance)
 - overlapped modes give the same training trajectory as baseline
+- the fused attention->MLP boundary (policy opt-in) matches the unfused
+  oracle in loss and parameter grads
 - checkpoint restart reproduces the loss stream
 - gradient compression (int8 + error feedback) approximates the true sum
 """
@@ -91,6 +93,69 @@ OVERLAP_EXACT = textwrap.dedent("""
 
 def test_overlap_modes_match_baseline_exactly():
     out = run_devices(OVERLAP_EXACT, devices=4)
+    assert "OK" in out
+
+
+FUSED_BOUNDARY = textwrap.dedent("""
+    # The dense block's attention->MLP boundary routed through the fused
+    # matmul_rs_ag_matmul declaration (policy opt-in; graph backend, the
+    # model default) must match the unfused oracle in loss AND parameter
+    # grads. The residual algebra (one concatenated GEMM+RS closing both
+    # residual branches) reassociates f32 sums, so the tolerance is
+    # accumulation rounding, not exact equality.
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro import ops
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import ParallelConfig
+    from repro.models import blocks, build_model
+
+    cfg = reduced(ARCHS["granite-3-2b"])
+    tokens = jnp.asarray(
+        np.random.RandomState(0).randint(0, cfg.vocab_size, (2, 32)),
+        jnp.int32)
+    mesh = jax.make_mesh((1, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def run(policy):
+        pcfg = ParallelConfig(dp=1, tp=4, fsdp=False, overlap=policy,
+                              compute_dtype="float32", param_dtype="float32")
+        model = build_model(cfg, pcfg)
+        params, pspecs = model.init(jax.random.PRNGKey(0), jnp.float32)
+        f = jax.jit(jax.shard_map(
+            jax.value_and_grad(
+                lambda p, t, l: model.loss_local(p, t, l, None)),
+            mesh=mesh, in_specs=(pspecs, P("data", None), P("data", None)),
+            out_specs=(P(), pspecs), check_vma=False))
+        loss, grads = f(params, tokens, tokens)
+        return float(loss), jax.tree.leaves(grads)
+
+    base_pol = ops.OverlapPolicy(mode="ring")
+    fused_pol = base_pol.with_modes(matmul_rs_ag_matmul="ring")
+    # the routing gate: fused only when the policy opts the op in
+    assert blocks.boundary_fused(ParallelConfig(tp=4, overlap=fused_pol))
+    assert not blocks.boundary_fused(ParallelConfig(tp=4, overlap=base_pol))
+
+    l0, g0 = run(base_pol)
+    l1, g1 = run(fused_pol)
+    # boundary sub-chunking (the chunks knob splits the reduced block's
+    # rows) rides the same call path and stays equivalent
+    l2, g2 = run(ops.OverlapPolicy(mode="ring", ag_chunks=2).with_modes(
+        matmul_rs_ag_matmul="ring"))
+    assert np.isfinite(l0)
+    for lx in (l1, l2):
+        assert abs(lx - l0) < 5e-5, (l0, l1, l2)
+    for gx in (g1, g2):
+        for a, b in zip(g0, gx):
+            a, b = np.asarray(a), np.asarray(b)
+            rel = np.abs(a - b).max() / max(1.0, np.abs(a).max())
+            assert rel < 1e-4, rel
+    print("OK fused boundary", l0, l1, l2)
+""")
+
+
+def test_fused_boundary_block_matches_unfused_oracle():
+    out = run_devices(FUSED_BOUNDARY, devices=4, timeout=1200)
     assert "OK" in out
 
 

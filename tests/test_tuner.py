@@ -192,3 +192,82 @@ def test_tune_record_stalls_attaches_summary_per_config():
     # record_stalls off (the default): no tracing, no stalls
     res2 = tuner.tune(make_step, [1], warmup=0, iters=1)
     assert res2.stalls == {}
+
+def test_search_candidates_come_from_registry():
+    from repro.core import overlap
+
+    grid = tuner.search_candidates("ag_matmul", chunks=(1, 2))
+    modes = {m for m, _, _, _ in grid}
+    assert modes == set(overlap.transports_for("ag_matmul",
+                                               include_baseline=True))
+    # the chunk axis only where the transport pipelines; baseline and
+    # one_shot stay x1
+    assert all(n == 1 for m, _, n, _ in grid if m in ("none", "one_shot"))
+    assert any(n == 2 for m, _, n, _ in grid if m == "ring")
+    # pairs the registry would clamp away never appear
+    assert all(overlap.resolve_backend("ag_matmul", b, m) == b
+               for m, b, _, _ in grid)
+    assert all(overlap.resolve_wire("ag_matmul", w, m) == w
+               for m, _, _, w in grid)
+    # the fused boundary declaration enrolls automatically
+    fused = tuner.search_candidates("matmul_rs_ag_matmul", chunks=(1, 2))
+    assert {m for m, _, _, _ in fused} == {"none", "ring", "one_shot"}
+    assert ("ring", "kernel", 2, "f32") in fused
+
+
+def test_search_caches_per_op_shape_world_hw(tmp_path):
+    """The PR-9 acceptance contract: a second identical ``search``
+    performs ZERO new timings (``SEARCH_TIMINGS`` pinned); the cache
+    round-trips through JSON; the searched policy round-trips through
+    JSON and resolves per layer shape."""
+    from repro import ops
+    from repro.core import overlap
+
+    tuner.clear_search_cache()
+
+    def make_step(shape, resolved):
+        assert isinstance(resolved, ops.ResolvedOverlap)
+        return lambda: jnp.zeros(())
+
+    shapes = [((64, 128), (128, 256)), ((64, 256), (256, 64))]
+    n_grid = len(tuner.search_candidates("ag_matmul"))
+    t0 = tuner.SEARCH_TIMINGS
+    pol = tuner.search(make_step, "ag_matmul", shapes, world=4,
+                       reset=None, warmup=0, iters=1)
+    n_first = tuner.SEARCH_TIMINGS - t0
+    assert n_first == 2 * n_grid  # one timed iter per candidate per shape
+    assert isinstance(pol, ops.OverlapPolicy)
+    for shp in shapes:
+        r = pol.resolve("ag_matmul", shape=shp)
+        assert r.mode in overlap.transports_for("ag_matmul",
+                                                include_baseline=True)
+        assert r.chunks >= 1
+
+    # second identical search: served from cache, ZERO new timings
+    pol2 = tuner.search(make_step, "ag_matmul", shapes, world=4,
+                        reset=None, warmup=0, iters=1)
+    assert tuner.SEARCH_TIMINGS - t0 == n_first, "cache miss on identical key"
+    assert pol2 == pol
+
+    # a different world is a different site: times again
+    tuner.search(make_step, "ag_matmul", shapes[:1], world=8,
+                 reset=None, warmup=0, iters=1)
+    assert tuner.SEARCH_TIMINGS - t0 == n_first + n_grid
+
+    # cache JSON round-trip: reload, then zero new timings again
+    path = tmp_path / "search_cache.json"
+    tuner.save_search_cache(path)
+    tuner.clear_search_cache()
+    assert tuner.load_search_cache(path) == 3  # 2 shapes@w4 + 1 shape@w8
+    t1 = tuner.SEARCH_TIMINGS
+    pol3 = tuner.search(make_step, "ag_matmul", shapes, world=4,
+                        reset=None, warmup=0, iters=1)
+    assert tuner.SEARCH_TIMINGS == t1, "loaded cache did not serve"
+    assert pol3 == pol
+
+    # the searched policy itself ships as JSON and still resolves
+    back = ops.OverlapPolicy.from_json(pol.to_json())
+    assert back == pol
+    assert back.resolve("ag_matmul", shape=shapes[0]) == \
+        pol.resolve("ag_matmul", shape=shapes[0])
+    tuner.clear_search_cache()
