@@ -16,7 +16,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collective_matmul as cm
-from repro.core import overlap
+from repro.core import overlap, schedules
 from repro.core.ring_attention import ring_attention
 
 from .common import row, time_fn
@@ -56,4 +56,40 @@ def rows():
                 suffix = "/kernel" if backend == "kernel" else ""
                 out.append(row(
                     f"ring_attn/{b}x{h}x{s}x{d}/{mode}{suffix}", us, derived))
+
+    # placement axis: causal load balance at worlds 4 and 8 — zigzag
+    # (one early + one late half-chunk per rank) vs contiguous, the same
+    # ring transport. The wall-clock gap on CPU is modest (the fold
+    # skips fully-masked blocks, so contiguous ranks idle rather than
+    # slow the critical path at block granularity); the traced per-PE
+    # tile_compute spread is pinned in tests/test_placement_trace.py.
+    s_loc = 32
+    for wp in (4, 8):
+        if wp > jax.device_count():
+            continue
+        mesh_p = jax.make_mesh((wp,), ("cp",),
+                               axis_types=(jax.sharding.AxisType.Auto,))
+        s = s_loc * wp
+        q = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+        k = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+        v = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+        base_us = None
+        for placement in ("contiguous", "zigzag"):
+            imb = schedules.causal_imbalance(placement, wp, s_loc)
+            f = cm.make_sharded(
+                functools.partial(ring_attention, axis="cp", causal=True,
+                                  mode="ring", placement=placement),
+                mesh_p, (P(None, None, "cp", None),) * 3,
+                P(None, None, "cp", None))
+            us = time_fn(f, q, k, v)
+            if placement == "contiguous":
+                base_us = us
+                if wp == w:
+                    continue  # already emitted by the loop above (w8/s256)
+                out.append(row(f"ring_attn/{b}x{h}x{s}x{d}/ring", us,
+                               f"imbalance={imb:.2f}"))
+            else:
+                out.append(row(
+                    f"ring_attn/{b}x{h}x{s}x{d}/ring/{placement}", us,
+                    f"speedup={base_us / us:.2f}x;imbalance={imb:.2f}"))
     return out

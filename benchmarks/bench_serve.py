@@ -2,12 +2,14 @@
 prompt ingestion, same seeded synthetic stream (Poisson arrivals, mixed
 128–2048-token prompts, batch 8, world 4: dp=2 x tp=2).
 
-Rows (us, lower is better):
-  serve/ttft/{paged,tokenwise}   mean arrival -> first-token latency
-  serve/tpot/{paged,tokenwise}   mean per-output-token latency after the 1st
-  serve/tok/{paged,tokenwise}    wall us per generated token (derived: tok/s)
-  serve/step/{paged,tokenwise}   wall us per engine step (derived: step split,
-                                 occupancy)
+Rows (us, lower is better), for each of {paged, cp_prefill, tokenwise}
+(cp_prefill = paged with context-parallel chunked prefill: every chunk
+shards over the data axis through the zigzag-placed ring_attention op):
+  serve/ttft/<engine>   mean arrival -> first-token latency
+  serve/tpot/<engine>   mean per-output-token latency after the 1st
+  serve/tok/<engine>    wall us per generated token (derived: tok/s)
+  serve/step/<engine>   wall us per engine step (derived: step split,
+                        occupancy)
 
 Under ``run.py --trace`` the engine runs drain their repro.obs events
 into measured overlap_eff/stall_frac on the ``tok`` rows (inert when the
@@ -70,11 +72,16 @@ def rows():
 
     out = []
     results = {}
-    for name in ("paged", "tokenwise"):
+    for name in ("paged", "cp_prefill", "tokenwise"):
         if name == "paged":
             scfg = ServeConfig(batch=BATCH, max_len=MAX_LEN, page_size=64,
                                chunk=256, token_budget=512, queue_cap=256)
             eng = build_paged_engine(cfg, pcfg, scfg, mesh)
+        elif name == "cp_prefill":
+            # context-parallel chunked prefill: every chunk shards over
+            # the data axis (zigzag placement) through ring_attention —
+            # one whole-mesh stream instead of one stream per dp shard
+            eng = build_paged_engine(cfg, pcfg, scfg, mesh, prefill_cp=True)
         else:
             eng = build_tokenwise_engine(cfg, pcfg, BATCH, MAX_LEN, mesh)
         arrivals = generate(spec, cfg.vocab_size)
@@ -100,4 +107,10 @@ def rows():
     tok_x = (mp.tokens_generated / wp) / max(1e-9, mt.tokens_generated / wt)
     out.append(row("serve/speedup/paged_vs_tokenwise", 0.0,
                    f"ttft_x={ttft_x:.2f};tok_s_x={tok_x:.2f}"))
+    (mc, wc) = results["cp_prefill"]
+    cp_ttft_x = mp.ttft_mean_s / max(1e-9, mc.ttft_mean_s)
+    cp_tok_x = (mc.tokens_generated / wc) / max(1e-9,
+                                                mp.tokens_generated / wp)
+    out.append(row("serve/speedup/cp_vs_paged", 0.0,
+                   f"ttft_x={cp_ttft_x:.2f};tok_s_x={cp_tok_x:.2f}"))
     return out

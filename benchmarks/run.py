@@ -56,14 +56,14 @@ def _mode_vocabulary():
 
 
 def parse_row(tag: str, line: str, world: int, modes):
-    """'op/shape/mode[/backend][/wire],us,derived[,k=v...]' -> a BENCH
-    record or None.
+    """'op/shape/mode[/backend][/wire][/placement],us,derived[,k=v...]'
+    -> a BENCH record or None.
 
     Each record carries the row's resolved overlap ``policy`` (the
     ``repro.ops.OverlapPolicy`` resolution the row ran under — mode,
-    backend, sub-chunk count, wire dtype) rather than loose strings.
-    Trailing ``k=v`` fields (the ``--trace`` run's measured
-    ``overlap_eff`` / ``stall_frac``) land under ``measured``."""
+    backend, sub-chunk count, wire dtype, chunk placement) rather than
+    loose strings. Trailing ``k=v`` fields (the ``--trace`` run's
+    measured ``overlap_eff`` / ``stall_frac``) land under ``measured``."""
     parts = line.split(",")
     if len(parts) < 2:
         return None
@@ -81,6 +81,10 @@ def parse_row(tag: str, line: str, world: int, modes):
             except ValueError:
                 pass
     segs = name.split("/")
+    placement = "contiguous"  # implied, like "f32"; non-default rides last
+    if segs[-1] in ("zigzag", "striped"):
+        placement = segs[-1]
+        segs = segs[:-1]
     wire = "f32"
     if segs[-1] in ("int8", "fp8"):  # trailing wire segment ("f32" is implied)
         wire = segs[-1]
@@ -98,7 +102,7 @@ def parse_row(tag: str, line: str, world: int, modes):
     rec = {
         "op": segs[0],
         "policy": {"mode": mode, "backend": backend, "chunks": chunks,
-                   "wire": wire},
+                   "wire": wire, "placement": placement},
         "world": world,
         "us_per_call": us,
         "name": f"{tag}/{name}",

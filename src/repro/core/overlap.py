@@ -478,6 +478,10 @@ class OverlapSpec:
                 its dual overlapped op regardless of lowering).
     wires       wire dtypes the op's riding chunks can travel as
                 (("f32",) = always as-is; see ops/wire.py)
+    placements  chunk->rank row placements the op's schedule understands
+                (("contiguous",) = owner-major blocks only; causal ops
+                declare the balanced zigzag/striped maps from
+                core.schedules.PLACEMENTS)
     """
 
     name: str
@@ -490,6 +494,7 @@ class OverlapSpec:
     kernel_transports: Tuple[str, ...] = ()
     kernel_fwd: Optional[Callable] = None
     wires: Tuple[str, ...] = ("f32",)
+    placements: Tuple[str, ...] = ("contiguous",)
 
 
 _REGISTRY: Dict[str, OverlapSpec] = {}
@@ -507,8 +512,10 @@ def register(
     kernel_transports: Sequence[str] = (),
     kernel_fwd: Optional[Callable] = None,
     wires: Sequence[str] = ("f32",),
+    placements: Sequence[str] = ("contiguous",),
 ) -> OverlapSpec:
     from ..ops.policy import WIRE_DTYPES  # import-light; avoids a cycle
+    from .schedules import PLACEMENTS
 
     for t in transports:
         if t not in TRANSPORTS:
@@ -523,9 +530,15 @@ def register(
     for wname in wires:
         if wname not in WIRE_DTYPES:
             raise ValueError(f"{name}: unknown wire {wname!r} (valid: {WIRE_DTYPES})")
+    for p in placements:
+        if p not in PLACEMENTS:
+            raise ValueError(
+                f"{name}: unknown placement {p!r} (valid: {PLACEMENTS})")
     wires = tuple(dict.fromkeys(("f32",) + tuple(wires)))  # f32 always legal
+    # contiguous always legal — it is the identity row map
+    placements = tuple(dict.fromkeys(("contiguous",) + tuple(placements)))
     spec = OverlapSpec(name, kind, tuple(transports), baseline, default, fwd, bwd,
-                       tuple(kernel_transports), kernel_fwd, wires)
+                       tuple(kernel_transports), kernel_fwd, wires, placements)
     _REGISTRY[name] = spec
     return spec
 
@@ -584,6 +597,32 @@ def resolve_wire(name: str, requested: str, mode: Optional[str] = None) -> str:
         return "f32"
     if mode is not None and (mode == spec.baseline or mode == "two_level"):
         return "f32"
+    return requested
+
+
+def placements_for(name: str) -> Tuple[str, ...]:
+    """Chunk->rank row placements op ``name``'s schedule understands."""
+    return _REGISTRY[name].placements
+
+
+def resolve_placement(name: str, requested: str,
+                      mode: Optional[str] = None) -> str:
+    """Clamp a requested row placement to what ``name`` declared.
+
+    Placement is a property of the op's *math* (which global rows each
+    rank owns), not of the transport, so — unlike wires — it survives the
+    baseline mode: the monolithic lowering applies the same owner->row
+    map locally. An unknown placement NAME is an error (closed set, like
+    backends); an undeclared one degrades to "contiguous"."""
+    from .schedules import PLACEMENTS
+
+    del mode  # placement is transport-independent (see docstring)
+    if requested not in PLACEMENTS:
+        raise ValueError(
+            f"{name}: unknown placement {requested!r} (valid: {PLACEMENTS})")
+    spec = _REGISTRY[name]
+    if requested not in spec.placements:
+        return "contiguous"
     return requested
 
 

@@ -42,6 +42,9 @@ def ring_attention(
     scale: float | None = None,
     mode: str = "ring",
     backend: str = "graph",
+    placement: str = "contiguous",
+    wire: str = "f32",
+    with_stats: bool = False,
 ) -> Array:
     """Returns (B, H, S_loc, D): attention over the GLOBAL sequence.
 
@@ -50,15 +53,38 @@ def ring_attention(
     a host-side fold replay); gradients are bit-identical across
     backends — the kernel forward keeps the graph dual as its backward
     through the ONE shared custom_vjp.
+
+    ``placement`` names the chunk->rank owner map ("contiguous",
+    "zigzag", "striped" — ``core.schedules.placement_rows``). The caller
+    shards the sequence so each rank holds the rows that map names
+    (local order == position order under every placement); zigzag gives
+    every rank one early + one late half-chunk, equalizing per-rank
+    causal work — the fold skips fully-masked blocks, so contiguous
+    rank 0 sits idle for W-1 of W steps while zigzag never does. Zigzag
+    needs an even S_loc; odd S_loc degrades to contiguous.
+
+    ``wire`` quantizes the riding K/V chunk ("int8"/"fp8" — per-section
+    per-row scales, K and V scaled independently). ``with_stats``
+    appends the online-softmax stats (m, l) as two extra output
+    channels in f32 (out becomes (B, H, S_loc, D+2)), for merging with
+    other partial attentions (CP chunked prefill).
     """
     from .. import ops
 
     mode = ov.resolve_mode("ring_attention", mode)
     scale = scale if scale is not None else 1.0 / float(np.sqrt(q.shape[-1]))
+    if placement == "zigzag" and q.shape[2] % 2:
+        placement = "contiguous"
     packed = jnp.concatenate([k, v], axis=-1)  # ONE riding chunk
+    extras = {}
+    if with_stats:
+        extras["with_stats"] = True
+    out_dtype = jnp.float32 if with_stats else q.dtype
     return ops.ring_attention(packed, q, axis=axis, mode=mode,
-                              backend=backend, out_dtype=q.dtype,
-                              causal=bool(causal), scale=float(scale))
+                              backend=backend, wire=wire,
+                              placement=placement, out_dtype=out_dtype,
+                              causal=bool(causal), scale=float(scale),
+                              **extras)
 
 
 # Importing this module must populate the registry entry (declared in

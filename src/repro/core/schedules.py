@@ -216,6 +216,77 @@ def validate_bidir_rs(world: int) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Chunk->rank placements (causal context parallelism / ring attention)
+# ---------------------------------------------------------------------------
+#
+# A *placement* answers a different question than the schedules above: not
+# "which chunk does rank r compute at step s" but "which GLOBAL sequence
+# rows does rank r own in the first place". Under a causal mask the work
+# for global row g is proportional to g+1, so the contiguous placement
+# (rank r owns rows [r*s_loc, (r+1)*s_loc)) gives rank W-1 about 2x the
+# mean FLOPs while rank 0 idles. The balanced placements fix the row
+# *ownership* so every rank's causal triangle share is ~equal:
+#
+#   contiguous  rank r owns one block:       g = r*s_loc + j
+#   zigzag      rank r owns one early + one late half-chunk of the 2W
+#               global half-chunks {r, 2W-1-r} (requires s_loc even):
+#               g = r*h + j (j < h), (2W-1-r)*h + (j-h) otherwise
+#   striped     rank r owns every W-th row:  g = j*W + r
+#
+# Local rows stay in increasing global order under all three, so rope /
+# causal masks can be written against per-row positions uniformly.
+
+PLACEMENTS: Tuple[str, ...] = ("contiguous", "zigzag", "striped")
+
+
+def placement_rows(placement: str, world: int, rank: int, s_loc: int) -> List[int]:
+    """Global sequence positions (length ``s_loc``, strictly increasing)
+    owned by ``rank`` under ``placement`` with per-rank chunk ``s_loc``."""
+    if placement == "contiguous":
+        return [rank * s_loc + j for j in range(s_loc)]
+    if placement == "zigzag":
+        if s_loc % 2 != 0:
+            raise ValueError(f"zigzag placement needs even s_loc, got {s_loc}")
+        h = s_loc // 2
+        early = [rank * h + j for j in range(h)]
+        late = [(2 * world - 1 - rank) * h + j for j in range(h)]
+        return early + late
+    if placement == "striped":
+        return [j * world + rank for j in range(s_loc)]
+    raise ValueError(f"unknown placement {placement!r} (valid: {PLACEMENTS})")
+
+
+def validate_placement(placement: str, world: int, s_loc: int) -> bool:
+    """Every global row is owned by exactly one rank, and each rank's
+    local rows are strictly increasing global positions (so local row
+    order == position order, which rope and the causal masks rely on)."""
+    seen: List[int] = []
+    for r in range(world):
+        rows = placement_rows(placement, world, r, s_loc)
+        if len(rows) != s_loc:
+            return False
+        if any(b <= a for a, b in zip(rows, rows[1:])):
+            return False
+        seen.extend(rows)
+    return sorted(seen) == list(range(world * s_loc))
+
+
+def causal_pairs(placement: str, world: int, rank: int, s_loc: int) -> int:
+    """Number of (query, key) pairs inside the causal triangle whose query
+    row is owned by ``rank``: the rank's true causal FLOP share."""
+    return sum(g + 1 for g in placement_rows(placement, world, rank, s_loc))
+
+
+def causal_imbalance(placement: str, world: int, s_loc: int) -> float:
+    """max-rank / mean causal-pair share: the critical-path stretch a
+    placement imposes on a causal ring. Contiguous tends to (2W-1+x)/W
+    (~2 for large W); zigzag and striped stay ~1."""
+    shares = [causal_pairs(placement, world, r, s_loc) for r in range(world)]
+    mean = sum(shares) / len(shares)
+    return max(shares) / mean
+
+
+# ---------------------------------------------------------------------------
 # 2-level flat orders + validators (the engine's two_level transports)
 # ---------------------------------------------------------------------------
 

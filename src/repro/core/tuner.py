@@ -26,7 +26,7 @@ import jax
 
 from .. import hw
 from ..ops import wire as wirefmt
-from . import overlap
+from . import overlap, schedules
 
 
 @dataclass(frozen=True)
@@ -38,6 +38,7 @@ class OverlapChoice:
     t_comm: float
     t_total: float
     wire: str = "f32"  # riding-chunk wire dtype (registry wires axis)
+    placement: str = "contiguous"  # chunk->rank row placement (registry axis)
 
 
 def _dot_time(m: float, k: float, n: float, spec: hw.HardwareSpec, eff: float = 0.6) -> float:
@@ -230,6 +231,93 @@ def analytic_matmul_rs(
     return best
 
 
+def causal_flop_fraction(placement: str, world: int, s_loc: int) -> float:
+    """CRITICAL-PATH fraction of the dense blockwise-attention FLOPs a
+    causal mask leaves live, per placement: ``max_r causal_pairs(r) /
+    (s_loc * S)``. Contiguous concentrates the late (expensive) rows on
+    the last rank — its fraction approaches 1 as world grows — while
+    zigzag gives every rank one early + one late half-chunk (fraction
+    ~1/2, rank-independent) and striped interleaves rows round-robin
+    (~1/2 + 1/(2*s_loc)). The ring is lockstep, so the slowest rank IS
+    the step time: this maximum is the term the analytic model charges.
+    """
+    total = s_loc * s_loc * world
+    return max(
+        schedules.causal_pairs(placement, world, r, s_loc)
+        for r in range(world)) / float(total)
+
+
+def analytic_ring_attention(
+    s_loc: int,
+    d: int,
+    world: int,
+    *,
+    causal: bool = True,
+    heads: int = 1,
+    dtype_bytes: int = 2,
+    spec: hw.HardwareSpec = hw.DEFAULT,
+    candidates: Optional[Sequence[str]] = None,
+    placements: Optional[Sequence[str]] = None,
+) -> OverlapChoice:
+    """Pick (mode, wire, placement) for causal/non-causal ring attention.
+
+    Per ring step: compute = one blockwise-attention tile (QK^T + PV:
+    ``4 * s_loc^2 * d`` FLOPs per head); comm = ship one packed K|V
+    chunk (``s_loc * 2d * bytes`` per KV head). The causal model charges
+    the TRUE per-rank live-FLOP fraction per placement
+    (:func:`causal_flop_fraction`): under contiguous the last rank owns
+    the most-attended rows, so the lockstep critical path stays ~dense,
+    while zigzag/striped cut it toward 1/2 — the interior optimum that
+    makes the placement axis worth enumerating. Non-causal placements
+    are FLOP-identical, so the enumeration keeps contiguous (strict-<
+    selection, contiguous first).
+    """
+    if candidates is None:
+        candidates = overlap.transports_for("ring_attention",
+                                            include_baseline=False)
+    if placements is None:
+        placements = overlap.placements_for("ring_attention")
+    t_blk = 2.0 * heads * _dot_time(s_loc, d, s_loc, spec)  # QK^T + PV
+    t_cod = _codec_time(s_loc, 2 * d, spec)
+    best: Optional[OverlapChoice] = None
+    for placement in placements:
+        if placement == "zigzag" and s_loc % 2:
+            continue  # the engine degrades odd-s_loc zigzag to contiguous
+        frac = causal_flop_fraction(placement, world, s_loc) if causal \
+            else 1.0
+        t_step = t_blk * frac
+        for mode in candidates:
+            wires = overlap.wires_for("ring_attention")
+            for wname in wires:
+                chunk_bytes = wirefmt.wire_bytes(s_loc, 2 * d, wname,
+                                                 dtype_bytes)
+                cod = 0.0 if wname == "f32" else t_cod
+                if mode == "ring":
+                    t_step_comm = chunk_bytes / spec.ici_link_bandwidth \
+                        + spec.ici_msg_overhead
+                    t_total = t_step_comm + world * max(
+                        t_step_comm, t_step + cod)
+                elif mode == "one_shot":
+                    t_comm_all = (world - 1) * chunk_bytes / (
+                        spec.ici_link_bandwidth * spec.ici_links)
+                    t_total = max(t_comm_all, t_step + cod) \
+                        + (world - 1) * (t_step + cod)
+                else:
+                    continue
+                cand = OverlapChoice(
+                    mode, 1, world * (t_step + cod),
+                    (world - 1) * chunk_bytes / spec.ici_link_bandwidth,
+                    t_total, wname, placement)
+                if best is None or cand.t_total < best.t_total:
+                    best = cand
+    if best is None:
+        t_step_comm = s_loc * 2 * d * dtype_bytes / spec.ici_link_bandwidth
+        best = OverlapChoice("ring", 1, world * t_blk,
+                             (world - 1) * t_step_comm,
+                             t_step_comm + world * max(t_step_comm, t_blk))
+    return best
+
+
 def recommend_backend(modes: Optional[Dict[str, str]] = None) -> str:
     """Lowering backend for the current platform (the backend axis of the
     registry, enumerated alongside the transport candidates).
@@ -297,6 +385,12 @@ def recommend_overlap_modes(
     wires = {op: ch.wire
              for op, ch in (("ag_matmul", ag), ("matmul_rs", rs))
              if ch.wire != "f32"}
+    # placement pick: the causal critical-path fraction is dimension-
+    # independent (zigzag halves it at any world >= 2, and non-causal
+    # placements are FLOP-identical — see analytic_ring_attention), so
+    # ring attention always gets the balanced owner map. The policy
+    # clamps it off ops that never declared placements.
+    placements = {"ring_attention": "zigzag"}
     return OverlapPolicy(
         mode=ag.mode,
         # the latency-bound ops are kernel-capable too, so the backend
@@ -306,6 +400,7 @@ def recommend_overlap_modes(
         ag_chunks=ag.chunks_per_rank,
         rs_chunks=rs.chunks_per_rank,
         wires=tuple(sorted(wires.items())),
+        placements=tuple(sorted(placements.items())),
     )
 
 
@@ -517,29 +612,42 @@ def search(
             timings: Dict[str, float] = {}
             best, best_t = None, float("inf")
             for mode, backend, sub, wire in search_candidates(op, chunks):
-                resolved = ResolvedOverlap(mode, backend, sub, wire)
-                step = make_step(shape, resolved)
-                for _ in range(warmup):
-                    jax.block_until_ready(step())
-                    if reset is not None:
-                        reset()
-                acc = 0.0
-                for _ in range(iters):
-                    t0 = time.perf_counter()
-                    jax.block_until_ready(step())
-                    acc += time.perf_counter() - t0
-                    SEARCH_TIMINGS += 1
-                    if reset is not None:
-                        reset()
-                t = acc / iters
-                timings[f"{mode}/{backend}/x{sub}/{wire}"] = t
-                if t < best_t:
-                    best, best_t = resolved, t
+                # the placement axis multiplies the grid only for ops
+                # that declared non-contiguous placements (registry
+                # clamp), so ag/rs grids — and their cache entries and
+                # timing counts — are unchanged
+                for placement in overlap.placements_for(op):
+                    if overlap.resolve_placement(op, placement) != placement:
+                        continue
+                    resolved = ResolvedOverlap(mode, backend, sub, wire,
+                                               placement)
+                    step = make_step(shape, resolved)
+                    for _ in range(warmup):
+                        jax.block_until_ready(step())
+                        if reset is not None:
+                            reset()
+                    acc = 0.0
+                    for _ in range(iters):
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(step())
+                        acc += time.perf_counter() - t0
+                        SEARCH_TIMINGS += 1
+                        if reset is not None:
+                            reset()
+                    t = acc / iters
+                    tag = f"{mode}/{backend}/x{sub}/{wire}"
+                    if placement != "contiguous":
+                        tag += f"/{placement}"
+                    timings[tag] = t
+                    if t < best_t:
+                        best, best_t = resolved, t
             entry = {
                 "best": {"mode": best.mode, "backend": best.backend,
                          "chunks": best.chunks, "wire": best.wire},
                 "timings": timings,
             }
+            if best.placement != "contiguous":
+                entry["best"]["placement"] = best.placement
             _SEARCH_CACHE[key] = entry
         policy = policy.with_layer(op, shape, **entry["best"])
     return policy

@@ -45,6 +45,7 @@ from .mesh import make_mesh
 from .steps import (
     build_decode_step,
     build_paged_decode_step,
+    build_prefill_chunk_cp_step,
     build_prefill_chunk_step,
     data_world,
 )
@@ -64,15 +65,25 @@ def _with_policy(pcfg: ParallelConfig, policy) -> ParallelConfig:
 def build_paged_engine(
     cfg, pcfg: ParallelConfig, scfg: ServeConfig, mesh, *,
     cache_dtype=None, prefill_policy=None, seed: int = 0, eos_id: int = -1,
+    prefill_cp: bool = False, cp_placement: str = "zigzag",
+    cp_attend: str = "ring",
 ) -> PagedEngine:
     """Compile the two serving programs and wire up the paged engine.
 
     ``prefill_policy`` (an OverlapPolicy) gives the chunked-prefill
-    program its own overlap resolution; decode keeps ``pcfg``'s."""
+    program its own overlap resolution; decode keeps ``pcfg``'s.
+
+    ``prefill_cp`` switches prefill to the CONTEXT-PARALLEL program:
+    one stream whose chunk shards over the data axis by the balanced
+    ``cp_placement`` map, chunk-internal attention through the
+    placement-aware ring_attention op (``cp_attend="ring"``; ``"dense"``
+    is the bit-exact-vs-dense-path variant). The engine then plans at
+    most one prefill chunk per step (the whole mesh cooperates on it)
+    while decode keeps its data-parallel slot sharding."""
     cache_dtype = cache_dtype or jnp.dtype(pcfg.compute_dtype)
     assert scfg.chunk % pcfg.tp == 0, "prefill chunk must split over tp"
     dw = data_world(pcfg)
-    dp_shards = dw if scfg.batch >= dw else 1
+    dp_shards = 1 if prefill_cp else (dw if scfg.batch >= dw else 1)
     # probe the allocator for the derived pool geometry
     kv = PagedKVCache(batch=scfg.batch, max_len=scfg.max_len,
                       page_size=scfg.page_size, num_pages=scfg.num_pages,
@@ -86,17 +97,27 @@ def build_paged_engine(
         cache_dtype=cache_dtype)
     pre_pcfg = (_with_policy(pcfg, prefill_policy)
                 if prefill_policy is not None else pcfg)
-    pre = build_prefill_chunk_step(
-        cfg, pre_pcfg, mesh, chunk=scfg.chunk, n_streams=dp_shards,
-        num_pages=kv.num_pages, page_size=scfg.page_size,
-        pages_per_slot=kv.pages_per_slot, cache_dtype=cache_dtype)
+    if prefill_cp:
+        assert scfg.chunk % (data_world(pcfg) * pcfg.tp) == 0, \
+            "cp prefill chunk must split over dp*tp"
+        pre = build_prefill_chunk_cp_step(
+            cfg, pre_pcfg, mesh, chunk=scfg.chunk,
+            num_pages=kv.num_pages, page_size=scfg.page_size,
+            pages_per_slot=kv.pages_per_slot, cache_dtype=cache_dtype,
+            placement=cp_placement, cp_attend=cp_attend)
+    else:
+        pre = build_prefill_chunk_step(
+            cfg, pre_pcfg, mesh, chunk=scfg.chunk, n_streams=dp_shards,
+            num_pages=kv.num_pages, page_size=scfg.page_size,
+            pages_per_slot=kv.pages_per_slot, cache_dtype=cache_dtype)
     params, _ = dec.model.init(jax.random.PRNGKey(seed),
                                jnp.dtype(pcfg.param_dtype))
     pools = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                          dec.in_shapes[1])
     return PagedEngine(pre.fn, dec.fn, params, pools, scfg,
                        dp_shards=dp_shards, eos_id=eos_id, seed=seed,
-                       pcfg=pcfg, prefill_pcfg=pre_pcfg)
+                       pcfg=pcfg, prefill_pcfg=pre_pcfg,
+                       prefill_cp=prefill_cp, cp_placement=cp_placement)
 
 
 def build_tokenwise_engine(
@@ -147,8 +168,11 @@ def run(args):
             chunk=getattr(args, "chunk", 16),
             token_budget=getattr(args, "token_budget", 64),
         )
-        eng = build_paged_engine(cfg, pcfg, scfg, mesh,
-                                 prefill_policy=prefill_policy)
+        eng = build_paged_engine(
+            cfg, pcfg, scfg, mesh, prefill_policy=prefill_policy,
+            prefill_cp=getattr(args, "prefill_cp", False),
+            cp_placement=getattr(args, "cp_placement", "zigzag"),
+            cp_attend=getattr(args, "cp_attend", "ring"))
     print("engine:", "tokenwise" if tokenwise else "paged")
     print("overlap modes:", eng.overlap_modes())
     spec = LoadSpec(
@@ -201,6 +225,17 @@ def main():
                     help="decode-phase overlap mode")
     ap.add_argument("--prefill-overlap", default=None,
                     help="separate overlap mode for the chunked-prefill program")
+    ap.add_argument("--prefill-cp", action="store_true",
+                    help="context-parallel chunked prefill: shard each "
+                         "chunk over the data axis through the balanced "
+                         "ring-attention op (one stream, whole-mesh)")
+    ap.add_argument("--cp-placement", default="zigzag",
+                    choices=("contiguous", "zigzag", "striped"),
+                    help="chunk-row -> data-rank owner map for --prefill-cp")
+    ap.add_argument("--cp-attend", default="ring", choices=("ring", "dense"),
+                    help="--prefill-cp chunk attention: ring (balanced "
+                         "ring_attention + prefix merge) or dense "
+                         "(gathered pages; bit-exact vs the dense path)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="pool pages per DP shard (0 = dense-equivalent)")

@@ -323,6 +323,49 @@ def build_prefill_chunk_step(
     return BuiltStep(jitted, in_shapes, (pspec, p_specs), model)
 
 
+def build_prefill_chunk_cp_step(
+    cfg: ModelConfig, pcfg: ParallelConfig, mesh,
+    *, chunk: int, num_pages: int, page_size: int, pages_per_slot: int,
+    cache_dtype=jnp.bfloat16, placement: str = "zigzag",
+    cp_attend: str = "ring",
+) -> BuiltStep:
+    """Context-parallel chunked prefill: ONE stream whose C-token chunk
+    shards over the DATA axis by the balanced ``placement`` map — every
+    data shard owns C/dp position-ordered rows (zigzag: one early + one
+    late half-chunk, equalizing causal work) and the chunk-internal
+    attention runs through the balanced ring_attention op
+    (``cp_attend="ring"``; ``"dense"`` attends over the gathered pages,
+    bit-exact vs the dense path). All inputs replicated: the whole mesh
+    cooperates on one request instead of one request per data shard."""
+    model = build_model(cfg, pcfg)
+    pdt = jnp.dtype(pcfg.param_dtype)
+    param_shapes, pspec = model.param_shapes(pdt)
+    p_shapes, p_specs = _pool_specs(model, num_pages, page_size, cache_dtype)
+    rep1, rep2 = P(None), P(None, None)
+
+    def fn(params, pools, table_rows, starts, n_valids, tokens):
+        return model.prefill_chunk_cp_local(
+            params, pools, table_rows, starts, n_valids, tokens,
+            placement=placement, cp_attend=cp_attend)
+
+    jitted = _shard(
+        mesh,
+        fn,
+        (pspec, p_specs, rep2, rep1, rep1, rep2),
+        (rep2, p_specs),
+        donate=(1,),
+    )
+    in_shapes = (
+        param_shapes,
+        p_shapes,
+        jax.ShapeDtypeStruct((1, pages_per_slot), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((1, chunk), jnp.int32),
+    )
+    return BuiltStep(jitted, in_shapes, (pspec, p_specs), model)
+
+
 def build_step(cfg, pcfg, shape, mesh, tcfg=None) -> BuiltStep:
     if shape.kind == "train":
         return build_train_step(cfg, pcfg, shape, mesh, tcfg)

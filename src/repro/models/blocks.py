@@ -29,6 +29,7 @@ from ..core import collective_matmul as cm
 from ..core import moe_overlap as mo
 from ..kernels import ops
 from .common import (
+    DATA_AXIS,
     MODEL_AXIS,
     activation,
     ag_linear,
@@ -266,7 +267,8 @@ def attention_cp(
 
     r = pcfg.policy.resolve("ring_attention")
     return ring_attention(q, k, v, axis, causal=causal, mode=r.mode,
-                          backend=r.backend)
+                          backend=r.backend, placement=r.placement,
+                          wire=r.wire)
 
 
 def attention_decode(
@@ -441,6 +443,120 @@ def attention_prefill_chunk(
     limit = start + jnp.maximum(n_valid, 1)
     o = _chunk_attend(q, k_all, v_all, pos, limit)
     o = o.astype(x_sp.dtype).reshape(b, c, info.hq_loc * hd)
+    out = rs_linear(_bsd_to_sp_rows(o, tp), pp.wo, pcfg)
+    return x_sp + out.reshape(b, s_loc, d), pool_k, pool_v
+
+
+def _prefix_partial(q: Array, k_all: Array, v_all: Array, start: Array):
+    """Partial attention of chunk queries over the pool PREFIX [0, start)
+    — the positions prefilled by earlier chunks. Returns the online-
+    softmax triple (m, l, acc) with acc UN-normalized, for merging with
+    the chunk-internal ring partial. ``start == 0`` yields an exact
+    no-op partial (m = -1e30, l = 0, acc = 0)."""
+    b, c, hq, hd = q.shape
+    hkv = k_all.shape[1]
+    kk = jnp.repeat(k_all, hq // hkv, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v_all, hq // hkv, axis=1).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bchd,bhld->bhcl", q.astype(jnp.float32), kk) * scale
+    mask = jnp.arange(k_all.shape[2]) < start  # (L,)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    m = jnp.max(logits, axis=-1)  # (B, Hq, C)
+    # p must be masked explicitly: with start == 0 every logit AND m sit
+    # at -1e30, so exp(logits - m) would be exp(0) = 1, not 0
+    p = jnp.where(mask[None, None, None], jnp.exp(logits - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhcl,bhld->bhcd", p, vv)
+    return m, l, acc
+
+
+def attention_prefill_chunk_cp(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    info: TPInfo,
+    p: dict,
+    x_sp: Array,       # (1, C/(cp*tp), D) — this rank's placement rows, SP over tp
+    pool_k: Array,     # (num_pages, Hkv_loc, page_size, hd)
+    pool_v: Array,
+    table_row: Array,  # (P,) int32 — the request's block table
+    start: Array,      # scalar int32: absolute position of the chunk's 1st token
+    n_valid: Array,    # scalar int32: real tokens in the chunk (rest padding)
+    rows_own: Array,   # (C/cp,) int32 — this cp rank's global chunk-row indices
+    inv_perm: Array,   # (C,) int32 static — rank-major gather -> position order
+    *,
+    placement: str,
+    cp_attend: str,    # "ring" | "dense"
+) -> Tuple[Array, Array, Array]:
+    """Context-parallel chunked-prefill attention: ONE request's chunk is
+    sharded over the DATA axis by the balanced placement map (each cp
+    rank owns C/cp position-ordered rows — zigzag: one early + one late
+    half-chunk), with TP projections unchanged within each shard. Chunk
+    K/V is all-gathered over the context axis and EVERY rank performs
+    the identical scatter-by-table pool write, so the pool replicas stay
+    bitwise equal to the dense single-shard path. ``cp_attend="dense"``
+    attends each rank's rows over the gathered pages (bit-exact vs
+    :func:`attention_prefill_chunk`); ``"ring"`` runs the chunk-internal
+    part through the balanced ring_attention op (placement-aware causal
+    fold, policy-resolved transport/backend) and merges the pool-prefix
+    partial by online softmax."""
+    from ..core.ring_attention import ring_attention
+
+    b, s_loc, d = x_sp.shape
+    tp = pcfg.tp
+    c_own = s_loc * tp  # this cp rank's chunk rows
+    hd = cfg.head_dim
+    ps = pool_k.shape[2]
+    pp = _get_attn(p, x_sp.dtype)
+
+    h = rmsnorm(x_sp, pp.ln, cfg.norm_eps).reshape(b * s_loc, d)
+    wqkv = jnp.concatenate([pp.wq, pp.wkv], axis=1)
+    bqkv = jnp.concatenate([pp.bq, pp.bkv]) if pp.bq is not None else None
+    y = ag_linear(h, wqkv, pcfg, bqkv)
+    y = _sp_gathered_to_bsd(y, tp, b, s_loc)  # (1, C_own, cols)
+    q, kv = jnp.split(y, [info.hq_loc * hd], axis=-1)
+    k, v = jnp.split(kv, 2, axis=-1)
+    q = q.reshape(b, c_own, info.hq_loc, hd)
+    k = k.reshape(b, c_own, info.hkv_loc, hd)
+    v = v.reshape(b, c_own, info.hkv_loc, hd)
+    pos_own = start + rows_own
+    if cfg.use_rope:
+        q = rope(q, pos_own, cfg.rope_theta)
+        k = rope(k, pos_own, cfg.rope_theta)
+
+    # every cp rank reconstructs the FULL chunk K/V in position order and
+    # performs the identical pool write — replicas stay bitwise equal
+    k_ord = lax.all_gather(k[0], DATA_AXIS, axis=0, tiled=True)[inv_perm]
+    v_ord = lax.all_gather(v[0], DATA_AXIS, axis=0, tiled=True)[inv_perm]
+    c = k_ord.shape[0]
+    pos = start + jnp.arange(c)
+    valid = jnp.arange(c) < n_valid
+    pages = jnp.where(valid, table_row[pos // ps], 0)
+    offs = pos % ps
+    pool_k = pool_k.at[pages, :, offs, :].set(k_ord.astype(pool_k.dtype))
+    pool_v = pool_v.at[pages, :, offs, :].set(v_ord.astype(pool_v.dtype))
+
+    k_all = _gather_pages(pool_k, table_row[None, :])
+    v_all = _gather_pages(pool_v, table_row[None, :])
+    limit = start + jnp.maximum(n_valid, 1)
+    if cp_attend == "dense":
+        o = _chunk_attend(q, k_all, v_all, pos_own, limit)
+    else:  # "ring"
+        r = pcfg.policy.resolve("ring_attention")
+        stats = ring_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), DATA_AXIS, causal=True, mode=r.mode,
+            backend=r.backend, placement=placement, wire=r.wire,
+            with_stats=True)  # (1, Hq_loc, C_own, hd + 2)
+        out_c = stats[..., :hd]
+        m_c, l_c = stats[..., hd], stats[..., hd + 1]
+        m_p, l_p, acc_p = _prefix_partial(q, k_all, v_all, start)
+        mm = jnp.maximum(m_c, m_p)
+        a_p = jnp.exp(m_p - mm)
+        a_c = jnp.exp(m_c - mm) * l_c  # chunk acc = out_c * l_c
+        num = a_p[..., None] * acc_p + a_c[..., None] * out_c
+        den = a_p * l_p + a_c  # >= l_c > 0: causal self term always present
+        o = (num / den[..., None]).transpose(0, 2, 1, 3)  # (1, C_own, Hq, hd)
+    o = o.astype(x_sp.dtype).reshape(b, c_own, info.hq_loc * hd)
     out = rs_linear(_bsd_to_sp_rows(o, tp), pp.wo, pcfg)
     return x_sp + out.reshape(b, s_loc, d), pool_k, pool_v
 

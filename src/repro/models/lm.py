@@ -18,10 +18,12 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from ..configs.base import ModelConfig, ParallelConfig
 from ..core import flash_decode as dfd
+from ..core import schedules
 from . import blocks
 from .common import (
     DATA_AXIS,
@@ -536,6 +538,92 @@ class LM:
         h_sel = lax.dynamic_slice(h, (0, local_idx, 0), (b, 1, cfg.d_model))[:, 0]
         keep = (me == idx // s_loc).astype(h.dtype)
         h_last = lax.psum(h_sel * keep, MODEL_AXIS)
+        h_last = rmsnorm(h_last, ln_f, cfg.norm_eps)
+        un_name = "embed" if cfg.tie_embeddings else "unembed"
+        w_out = fsdp_get(params["top"][un_name], self.top_specs[un_name], pcfg,
+                         h.dtype).T
+        logits = vocab_parallel_logits(h_last, w_out, info, cfg.vocab_size)
+        return logits, {"attn": {"k": pk, "v": pv}}
+
+    def prefill_chunk_cp_local(
+        self,
+        params: dict,
+        pools: dict,       # paged_cache_shapes tree
+        table_row: Array,  # (1, P) int32 — ONE request's block table
+        start: Array,      # (1,) int32 absolute position of the chunk
+        n_valid: Array,    # (1,) int32 real tokens in the chunk (0 = idle)
+        tokens: Array,     # (1, C) int32 chunk tokens, right-padded, replicated
+        *,
+        placement: str = "zigzag",
+        cp_attend: str = "ring",
+    ) -> Tuple[Array, dict]:
+        """Context-parallel chunked prefill: ONE request's C-token chunk
+        sharded over the DATA axis by the balanced placement map — every
+        data shard owns C/dp position-ordered chunk rows (zigzag: one
+        early + one late half-chunk, equalizing causal attention work)
+        and runs the SP/TP projections on its rows only; chunk K/V
+        merges into the paged pools via the same scatter-by-table write
+        on every rank (pool replicas stay bitwise equal to the dense
+        path). All inputs are replicated (the whole mesh cooperates on
+        one stream instead of one stream per data shard)."""
+        cfg, pcfg, info = self.cfg, self.pcfg, self.info
+        assert cfg.family in ("dense", "moe"), cfg.family
+        assert not self._kv_seq_sharded(), "chunked prefill is heads-sharded"
+        assert pcfg.pods == 1, "cp prefill shards the chunk over 'data' only"
+        row = table_row[0]
+        start = start[0]
+        n_valid = n_valid[0]
+        b, c = tokens.shape  # (1, C)
+        tp = pcfg.tp
+        cp = pcfg.dp
+        assert c % (cp * tp) == 0, (c, cp, tp)
+        s_cp = c // cp
+        s_loc = s_cp // tp
+        if placement == "zigzag" and s_cp % 2:
+            placement = "contiguous"
+        # static owner maps: chunk row <-> (cp rank, local slot)
+        rows_np = np.stack([schedules.placement_rows(placement, cp, r, s_cp)
+                            for r in range(cp)])
+        table = jnp.asarray(rows_np, jnp.int32)
+        inv_perm = jnp.asarray(np.argsort(rows_np.reshape(-1), kind="stable"),
+                               jnp.int32)  # rank-major gather -> position order
+        ci = lax.axis_index(DATA_AXIS)
+        me = lax.axis_index(MODEL_AXIS)
+        rows_own = table[ci]  # (C/cp,) global chunk-row indices
+        toks_own = jnp.take(tokens, rows_own, axis=1)  # (1, C/cp)
+        cdt = jnp.dtype(pcfg.compute_dtype)
+        embed = fsdp_get(params["top"]["embed"], self.top_specs["embed"], pcfg, cdt)
+        h = embed_lookup_sp(toks_own, embed, info, tp)  # (1, C/(cp*tp), D)
+        if not cfg.use_rope:
+            pos_loc = start + lax.dynamic_slice(rows_own, (me * s_loc,), (s_loc,))
+            h = h + sinusoidal_positions(pos_loc, cfg.d_model)[None].astype(h.dtype)
+
+        def body(carry, xs):
+            p_layer, pk, pv = xs
+            pl = self._unpack_layer(p_layer)
+            hh, pk, pv = blocks.attention_prefill_chunk_cp(
+                cfg, pcfg, info, pl["attn"], carry, pk, pv, row, start,
+                n_valid, rows_own, inv_perm, placement=placement,
+                cp_attend=cp_attend)
+            if cfg.family == "moe":
+                hh = blocks.moe_train(cfg, pcfg, info, pl["ffn"], hh)
+            else:
+                hh = blocks.mlp_train(cfg, pcfg, info, pl["ffn"], hh)
+            return hh, (pk, pv)
+
+        h, (pk, pv) = lax.scan(
+            self._remat(body), h,
+            (params["layers"], pools["attn"]["k"], pools["attn"]["v"]))
+        ln_f = fsdp_get(params["top"]["ln_f"], self.top_specs["ln_f"], pcfg, h.dtype)
+        # last-valid-token logits: the row lives on exactly one (cp, tp)
+        # rank under the placement map — one-hot select, then replicate
+        # over BOTH axes (adding exact zeros keeps it bit-equal to the
+        # dense path's model-axis psum)
+        idx = jnp.maximum(n_valid - 1, 0)
+        loc_rows = lax.dynamic_slice(rows_own, (me * s_loc,), (s_loc,))
+        keep = (loc_rows == idx).astype(h.dtype)  # (s_loc,)
+        h_sel = jnp.sum(h * keep[None, :, None], axis=1)  # (1, D)
+        h_last = lax.psum(h_sel, (DATA_AXIS, MODEL_AXIS))
         h_last = rmsnorm(h_last, ln_f, cfg.norm_eps)
         un_name = "embed" if cfg.tie_embeddings else "unembed"
         w_out = fsdp_get(params["top"][un_name], self.top_specs[un_name], pcfg,

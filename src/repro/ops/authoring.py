@@ -142,6 +142,17 @@ class OverlapOp:
                       let the policy/tuner pick a scaled 1-byte wire —
                       both lowerings then quantize before every put and
                       dequantize on arrival, accumulating in f32)
+    wire_split        required for fold ops that declare low-precision
+                      wires: ``wire_split(operand, *statics) -> last-axis
+                      section sizes`` of the riding chunk (e.g. ring
+                      attention's packed K|V -> ``(d, d)``), so each
+                      section quantizes with its own per-row scale
+                      (ops.wire.MultiCodec)
+    placements        chunk->rank row placements the op's schedule
+                      understands (core.schedules.PLACEMENTS); a causal
+                      fold op declaring zigzag/striped reads the resolved
+                      name from its ``ctx["placement"]`` and maps local
+                      rows to global positions accordingly
     """
 
     name: str
@@ -160,6 +171,8 @@ class OverlapOp:
     baseline_fwd: Optional[Callable] = None
     checkpoint_tag: Optional[str] = None
     wires: Tuple[str, ...] = ("f32",)
+    wire_split: Optional[Callable] = None
+    placements: Tuple[str, ...] = ("contiguous",)
 
     def __post_init__(self):
         if isinstance(self.kernel_protocols, Mapping):
@@ -212,11 +225,17 @@ class OverlapOp:
             # the tile=None (pure data movement) case agrees by design
             raise ValueError(
                 f"{self.name}: a2a kernel protocols require tile=None")
-        if self.fold is not None and tuple(self.wires) != ("f32",):
-            # fold state is op-defined (online-softmax tuples etc.) — the
-            # per-row codec has nothing well-defined to quantize
+        if self.fold is not None and tuple(self.wires) != ("f32",) \
+                and self.wire_split is None:
+            # the fold's riding chunk packs several operands on its last
+            # axis (K|V); without a declared section split the per-row
+            # codec would share one scale across them
             raise ValueError(
-                f"{self.name}: fold declarations ride f32 only")
+                f"{self.name}: fold declarations with low-precision wires "
+                "need a wire_split (last-axis section sizes)")
+        if self.wire_split is not None and self.fold is None:
+            raise ValueError(
+                f"{self.name}: wire_split is a fold-declaration knob")
 
     def tile_fn(self) -> Callable:
         return self.tile if self.tile is not None else (lambda x: x)
@@ -265,6 +284,27 @@ def _wire_codec(static: Mapping):
     return wirefmt.codec(static.get("wire", "f32"))
 
 
+def _fold_codec(op: "OverlapOp", static: Mapping, operand, statics):
+    """The multi-section codec for a fold op's riding chunk (None = f32).
+    Sections come from the declaration's ``wire_split`` so each packed
+    operand (K and V) quantizes with its own per-row scale."""
+    wire = static.get("wire", "f32")
+    if wire == "f32" or op.wire_split is None:
+        return None
+    return wirefmt.multi_codec(wire, op.wire_split(operand, *statics))
+
+
+def _wrap_fold_packed(bound: FoldTile, codec) -> FoldTile:
+    """Executor-level FoldTile whose chunks arrive PACKED (uint8
+    payload|scales): unpack-decode to f32 before init/fold see them."""
+    return FoldTile(
+        init=lambda chunk, *st: bound.init(codec.unpack_decode(chunk), *st),
+        fold=lambda state, chunk, owner, *st: bound.fold(
+            state, codec.unpack_decode(chunk), owner, *st),
+        finalize=bound.finalize,
+        live=bound.live)
+
+
 def _fold_ctx(static: Mapping) -> Dict[str, Any]:
     return {k: v for k, v in static.items() if k not in _ENGINE_ONLY_KEYS}
 
@@ -276,7 +316,9 @@ def _bind_fold(ft: FoldTile, ctx: Dict[str, Any]) -> FoldTile:
         init=lambda chunk, *st: ft.init(ctx, chunk, *st),
         fold=lambda state, chunk, owner, *st: ft.fold(ctx, state, chunk,
                                                       owner, *st),
-        finalize=lambda state, *st: ft.finalize(ctx, state, *st))
+        finalize=lambda state, *st: ft.finalize(ctx, state, *st),
+        live=None if ft.live is None
+        else lambda owner, *st: ft.live(ctx, owner, *st))
 
 
 def _dual_rs(compute_block, axis, codec=None):
@@ -465,13 +507,31 @@ def _fold_graph(op: OverlapOp, static: Dict[str, Any], operand, *statics):
     ctx = _fold_ctx(static)
     ft = op.fold
     out_dtype = _out_dtype(static, operand)
-    state0 = ft.init(ctx, operand, *statics)
+    codec = _fold_codec(op, static, operand, statics)
+    if codec is None:
+        state0 = ft.init(ctx, operand, *statics)
 
-    def fold_fn(carry, bufs, s, owner):
-        del s
-        return ft.fold(ctx, carry, bufs[0], owner, *statics)
+        def fold_fn(carry, bufs, s, owner):
+            del s
+            return ft.fold(ctx, carry, bufs[0], owner, *statics)
 
-    state = ov.ag_pipeline((operand,), fold_fn, state0, axis, transport=mode)
+        state = ov.ag_pipeline((operand,), fold_fn, state0, axis,
+                               transport=mode)
+    else:
+        # the chunk rides as (payload, scales) siblings; every fold —
+        # including step 0's own chunk — consumes the DECODED values, so
+        # graph and kernel (packed-workspace) lowerings see identical
+        # inputs at every step
+        payload, scales = codec.encode(operand)
+        state0 = ft.init(ctx, codec.decode(payload, scales), *statics)
+
+        def fold_fn(carry, bufs, s, owner):
+            del s
+            return ft.fold(ctx, carry, codec.decode(bufs[0], bufs[1]),
+                           owner, *statics)
+
+        state = ov.ag_pipeline((payload, scales), fold_fn, state0, axis,
+                               transport=mode)
     return ft.finalize(ctx, state, *statics).astype(out_dtype)
 
 
@@ -543,20 +603,28 @@ def _make_kernel_fwd(op: OverlapOp, cid: int) -> Optional[Callable]:
             w = lax.axis_size(axis)
             out_dtype = _out_dtype(static, operand)
             bound = _bind_fold(op.fold, _fold_ctx(static))
+            codec = _fold_codec(op, static, operand, statics)
+            ride = operand
+            if codec is not None:
+                # what rides the executor's workspaces is the PACKED
+                # (payload|scales) uint8 buffer; the bound fold unpacks
+                # each arrival — including its own chunk — back to f32
+                bound = _wrap_fold_packed(bound, codec)
+                ride = codec.pack(operand)
             proto = protos[static["mode"]]
             if proto == "ring_fold":
                 return executor.run(
-                    "ring_fold", bound, operand, statics, axis=axis, world=w,
+                    "ring_fold", bound, ride, statics, axis=axis, world=w,
                     out_dtype=out_dtype, collective_id=cid)
             # one_shot: the executor's low-latency put protocol moves the
             # chunks (pure data movement); the fold chain replays
             # host-side in the same ring-distance order the graph uses
             gathered = executor.run(
-                proto, None, operand, (), axis=axis, world=w,
-                out_dtype=operand.dtype, collective_id=cid)
+                proto, None, ride, (), axis=axis, world=w,
+                out_dtype=ride.dtype, collective_id=cid)
             me = lax.axis_index(axis)
-            m = operand.shape[0]
-            state = bound.init(operand, *statics)
+            m = ride.shape[0]
+            state = bound.init(ride, *statics)
             for s in range(w):
                 owner = lax.rem(me - s + w, w)
                 chunk = _slice_rows(gathered, owner * m, m)
@@ -663,6 +731,7 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
             ctx = _fold_ctx(static)
             ft = op.fold
             out_dtype = _out_dtype(static, operand)
+            codec = _fold_codec(op, static, operand, statics)
             w = lax.axis_size(axis)
             me = lax.axis_index(axis)
             stacked = ov.stack_gather_pipeline(operand, axis,
@@ -674,6 +743,12 @@ def _make_bwd(op: OverlapOp) -> Optional[Callable]:
                     owner = lax.rem(me - s + w, w)
                     chunk = lax.dynamic_index_in_dim(stk, owner, 0,
                                                      keepdims=False)
+                    if codec is not None:
+                        # straight-through: replay the quantized forward
+                        # values, but let the cotangent pass as identity
+                        # (round() has zero gradient almost everywhere)
+                        chunk = chunk + lax.stop_gradient(
+                            codec.roundtrip(chunk) - chunk)
                     state = ft.fold(ctx, state, chunk, owner, *st)
                 return ft.finalize(ctx, state, *st).astype(out_dtype)
 
@@ -799,7 +874,8 @@ class BoundOp:
 
     def __call__(self, *tensors, axis, policy=None, mode: Optional[str] = None,
                  backend: Optional[str] = None, chunks: Optional[int] = None,
-                 wire: Optional[str] = None, out_dtype=None, **extras):
+                 wire: Optional[str] = None, placement: Optional[str] = None,
+                 out_dtype=None, **extras):
         """``axis`` is one mesh-axis name, or ``(inner, outer)`` for
         two-level (compound-mesh) ops. ``extras`` are op-specific static
         values (hashable — e.g. ring attention's ``causal``/``scale``),
@@ -808,8 +884,14 @@ class BoundOp:
         Policy resolution is PER SITE: the call threads the tensors'
         shapes into ``policy.resolve``, so a shape-keyed layer rule
         (``OverlapPolicy.with_layer`` / ``tuner.search``) can pin a
-        different mode/backend/chunks/wire for the QKV projection than
-        for the MLP matmul of the same op name."""
+        different mode/backend/chunks/wire/placement for the QKV
+        projection than for the MLP matmul of the same op name.
+
+        ``placement`` names the chunk->rank owner map (see
+        ``core.schedules.PLACEMENTS``); ops that declared non-contiguous
+        placements interpret each owner's rows through that map. The
+        default ``"contiguous"`` adds nothing to the dispatch statics,
+        so existing traces and caches are unchanged."""
         if policy is not None:
             r = policy.resolve(
                 self.name, shape=tuple(tuple(t.shape) for t in tensors))
@@ -817,10 +899,14 @@ class BoundOp:
             backend = backend or r.backend
             chunks = r.chunks if chunks is None else chunks
             wire = wire or r.wire
+            placement = placement or r.placement
         if isinstance(axis, list):
             axis = tuple(axis)
         mode = ov.resolve_mode(self.name, mode or self.decl.default)
         wire = ov.resolve_wire(self.name, wire or "f32", mode)
+        placement = ov.resolve_placement(self.name, placement or "contiguous")
+        if placement != "contiguous":
+            extras["placement"] = placement
         out_dtype = jnp.dtype(out_dtype or tensors[0].dtype)
         out = ov.dispatch(
             self.name, *tensors, axis=axis, mode=mode,
@@ -857,6 +943,7 @@ def declare(op: OverlapOp) -> BoundOp:
         kernel_transports=tuple(dict(op.kernel_protocols)),
         kernel_fwd=_make_kernel_fwd(op, cid),
         wires=op.wires,
+        placements=getattr(op, "placements", ("contiguous",)),
     )
     bound = BoundOp(op)
     _DECLARED[op.name] = bound

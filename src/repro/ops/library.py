@@ -154,8 +154,28 @@ flash_decode = declare(OverlapOp(
 # the executor's carry-passing ring_fold protocol; one_shot -> the
 # low-latency gather with the fold chain replayed host-side. The
 # backward is jax.vjp through the fold chain (authoring derives it).
-# ``ctx`` extras: axis (rank offsets for the causal mask), causal, scale.
+# ``ctx`` extras: axis (rank offsets for the causal mask), causal, scale,
+# and optionally placement (the chunk->rank owner map — zigzag/striped
+# equalize per-rank causal work, see ``core.schedules.placement_rows``)
+# and with_stats (append the softmax stats (m, l) as two extra output
+# channels, for partial-attention merges like CP chunked prefill).
 # ---------------------------------------------------------------------------
+
+
+def _global_positions(placement, world, owner, n):
+    """Global sequence positions of ``owner``'s n local rows, as traced
+    i32. The jnp twin of ``core.schedules.placement_rows`` (``owner`` may
+    be a traced rank index; ``world``/``n`` are static). All placements
+    yield strictly increasing positions, so local row order IS position
+    order (rope and masks need no per-rank permutation)."""
+    idx = jnp.arange(n)
+    if placement == "zigzag":
+        h = n // 2
+        return jnp.where(idx < h, owner * h + idx,
+                         (2 * world - 1 - owner) * h + (idx - h))
+    if placement == "striped":
+        return idx * world + owner
+    return owner * n + idx
 
 
 def _attn_init(ctx, packed, q):
@@ -173,36 +193,77 @@ def _attn_fold(ctx, state, packed, owner, q):
     hkv = packed.shape[1]
     group = h // hkv
     qf = q.astype(jnp.float32) * ctx["scale"]
-    m, l, acc = state
     buf_k, buf_v = packed[..., :d], packed[..., d:]
-    kk = jnp.repeat(buf_k.astype(jnp.float32), group, axis=1)
-    vv = jnp.repeat(buf_v.astype(jnp.float32), group, axis=1)
-    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kk)
-    if ctx["causal"]:
+    causal = ctx["causal"]
+    if causal:
+        placement = ctx.get("placement", "contiguous")
+        world = lax.axis_size(ctx["axis"])
         me = lax.axis_index(ctx["axis"])
-        rows = me * s_loc + jnp.arange(s_loc)  # global q positions
-        cols = owner * packed.shape[2] + jnp.arange(packed.shape[2])
-        mask = rows[:, None] >= cols[None, :]
-        logits = jnp.where(mask[None, None], logits, -1e30)
-    m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
-    p = jnp.exp(logits - m_new[..., None])
-    alpha = jnp.exp(m - m_new)
-    l = l * alpha + jnp.sum(p, axis=-1)
-    acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
-    return m_new, l, acc
+        rows = _global_positions(placement, world, me, s_loc)  # my q pos
+        cols = _global_positions(placement, world, owner, packed.shape[2])
+
+    def step(st):
+        m, l, acc = st
+        kk = jnp.repeat(buf_k.astype(jnp.float32), group, axis=1)
+        vv = jnp.repeat(buf_v.astype(jnp.float32), group, axis=1)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kk)
+        if causal:
+            mask = rows[:, None] >= cols[None, :]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+        return m_new, l, acc
+
+    if not causal:
+        return step(state)
+    # whole-block skip: positions are strictly increasing, so a block is
+    # fully masked iff max(rows) < min(cols). Skipping is bitwise equal
+    # to folding it (all-masked => p == 0 and alpha == 1 exactly; m is
+    # finite because the ring's step 0 is always the own block) but
+    # drops the einsums — this is where zigzag/striped turn equalized
+    # causal COVERAGE into equalized per-rank COMPUTE.
+    return lax.cond(rows[-1] >= cols[0], step, lambda st: st, state)
+
+
+def _attn_live(ctx, owner, q):
+    """The fold's whole-block-skip predicate, exposed so the executor's
+    timeline can drop the span of a fully-masked block (``None`` =
+    always live for non-causal calls)."""
+    if not ctx.get("causal"):
+        return None
+    placement = ctx.get("placement", "contiguous")
+    world = lax.axis_size(ctx["axis"])
+    me = lax.axis_index(ctx["axis"])
+    rows = _global_positions(placement, world, me, q.shape[2])
+    cols = _global_positions(placement, world, owner, q.shape[2])
+    return rows[-1] >= cols[0]
 
 
 def _attn_finalize(ctx, state, q):
-    del ctx, q
-    _, l, acc = state
-    return acc / jnp.maximum(l, 1e-30)[..., None]
+    del q
+    m, l, acc = state
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    if ctx.get("with_stats"):
+        # channel-concat the online-softmax stats: (..., d) -> (..., d+2)
+        # with m (running max) and l (sum of exp) trailing, so partial
+        # attentions merge downstream (CP prefill's pool-prefix merge).
+        # Callers pass out_dtype=f32 to keep them exact through the cast.
+        return jnp.concatenate([out, m[..., None], l[..., None]], axis=-1)
+    return out
 
 
 def _attn_baseline(static, packed, q):
-    """Monolithic baseline: gather the full K/V, one softmax pass."""
+    """Monolithic baseline: gather the full K/V, one softmax pass. The
+    same owner->row map as the fold path is applied locally, so
+    placements survive mode degradation."""
     axis = static["axis"]
     b, h, s_loc, d = q.shape
     group = h // packed.shape[1]
+    w = lax.axis_size(axis)
+    placement = static.get("placement", "contiguous")
     kvf = jnp.repeat(
         lax.all_gather(packed, axis, axis=2, tiled=True).astype(jnp.float32),
         group, axis=1)
@@ -211,24 +272,42 @@ def _attn_baseline(static, packed, q):
         "bhqd,bhkd->bhqk", q.astype(jnp.float32) * static["scale"], kf)
     if static["causal"]:
         me = lax.axis_index(axis)
-        s = kf.shape[2]
-        rows_g = me * s_loc + jnp.arange(s_loc)
-        mask = rows_g[:, None] >= jnp.arange(s)[None, :]
+        s_kv = packed.shape[2]
+        rows_g = _global_positions(placement, w, me, s_loc)
+        cols_g = jnp.concatenate(
+            [_global_positions(placement, w, o, s_kv) for o in range(w)])
+        mask = rows_g[:, None] >= cols_g[None, :]
         logits = jnp.where(mask[None, None], logits, -1e30)
-    p = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum(
+        "bhqk,bhkd->bhqd", p / jnp.maximum(l, 1e-30)[..., None], vf)
+    if static.get("with_stats"):
+        out = jnp.concatenate([out, m[..., None], l[..., None]], axis=-1)
     return out.astype(jnp.dtype(static.get("out_dtype") or q.dtype))
+
+
+def _attn_wire_split(packed, q):
+    """K and V sections of the riding packed chunk, each quantized with
+    its own per-row wire scale (K and V magnitudes differ)."""
+    d = q.shape[-1]
+    return (d, packed.shape[-1] - d)
 
 
 ring_attention = declare(OverlapOp(
     name="ring_attention",
     kind="attn",
-    fold=FoldTile(init=_attn_init, fold=_attn_fold, finalize=_attn_finalize),
+    fold=FoldTile(init=_attn_init, fold=_attn_fold, finalize=_attn_finalize,
+                  live=_attn_live),
     transports=("ring", "one_shot"),
     baseline="none",
     default="ring",
     kernel_protocols=(("ring", "ring_fold"), ("one_shot", "one_shot_ag")),
     baseline_fwd=_attn_baseline,
+    wires=("f32", "int8", "fp8"),
+    wire_split=_attn_wire_split,
+    placements=("contiguous", "zigzag", "striped"),
 ))
 
 

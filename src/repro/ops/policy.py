@@ -42,6 +42,11 @@ LATENCY_OPS: Tuple[Tuple[str, str], ...] = (
 # dtype), "int8"/"fp8" = per-row scaled 1-byte blocks (see ops/wire.py).
 WIRE_DTYPES: Tuple[str, ...] = ("f32", "int8", "fp8")
 
+# Chunk->rank row placements a causal context-parallel op can run under
+# (core.schedules.PLACEMENTS; "contiguous" = owner-major blocks). The import
+# is allowed here because core.schedules is pure Python (no jax).
+from ..core.schedules import PLACEMENTS  # noqa: E402
+
 # Session defaults for the per-op mode table: the latency-bound ops plus
 # the fused boundary op, which is opt-in — "none" keeps the transformer
 # block on the composed unfused pair (the oracle) until a policy or a
@@ -51,7 +56,7 @@ DEFAULT_MODES: Tuple[Tuple[str, str], ...] = LATENCY_OPS + (
 )
 
 # Per-layer override knobs a shape-keyed rule may carry.
-LAYER_KEYS: Tuple[str, ...] = ("mode", "backend", "chunks", "wire")
+LAYER_KEYS: Tuple[str, ...] = ("mode", "backend", "chunks", "wire", "placement")
 
 
 def shape_key(shape) -> Tuple[int, ...]:
@@ -75,6 +80,7 @@ class ResolvedOverlap:
     backend: str
     chunks: int
     wire: str = "f32"
+    placement: str = "contiguous"
 
 
 def _as_items(value) -> Tuple[Tuple[str, str], ...]:
@@ -117,6 +123,10 @@ class OverlapPolicy:
     wire       default wire dtype for riding chunks ("f32" = as-is,
                "int8"/"fp8" = per-row scaled 1-byte blocks)
     wires      per-op wire overrides
+    placement  default chunk->rank row placement for causal context-
+               parallel ops ("contiguous" = owner-major blocks; "zigzag"/
+               "striped" = the balanced causal maps, see core.schedules)
+    placements per-op placement overrides
     layers     shape-keyed per-site rules: ((op, shape_key), overrides)
                entries where overrides is a sorted item tuple over
                ``LAYER_KEYS`` — applied by ``resolve(op, shape=...)``
@@ -131,6 +141,8 @@ class OverlapPolicy:
     rs_chunks: int = 0
     wire: str = "f32"
     wires: tuple = ()
+    placement: str = "contiguous"
+    placements: tuple = ()
     layers: tuple = ()
 
     def __post_init__(self):
@@ -138,15 +150,23 @@ class OverlapPolicy:
         object.__setattr__(self, "modes", _as_items(self.modes))
         object.__setattr__(self, "backends", _as_items(self.backends))
         object.__setattr__(self, "wires", _as_items(self.wires))
+        object.__setattr__(self, "placements", _as_items(self.placements))
         object.__setattr__(self, "layers", _canon_layers(self.layers))
-        # wire names are a closed set — validate eagerly so a typo fails at
-        # config construction, not deep inside a traced lowering
+        # wire / placement names are closed sets — validate eagerly so a
+        # typo fails at config construction, not deep inside a lowering
         layer_wires = tuple(dict(ov).get("wire", "f32")
                             for _, ov in self.layers)
         for w in (self.wire,) + tuple(v for _, v in self.wires) + layer_wires:
             if w not in WIRE_DTYPES:
                 raise ValueError(
                     f"unknown wire dtype {w!r} (valid: {WIRE_DTYPES})")
+        layer_plc = tuple(dict(ov).get("placement", "contiguous")
+                          for _, ov in self.layers)
+        for p in ((self.placement,)
+                  + tuple(v for _, v in self.placements) + layer_plc):
+            if p not in PLACEMENTS:
+                raise ValueError(
+                    f"unknown placement {p!r} (valid: {PLACEMENTS})")
 
     # -- resolution ----------------------------------------------------
     def _requested(self, table, default: str, op: str) -> str:
@@ -187,6 +207,14 @@ class OverlapPolicy:
         return overlap.resolve_wire(
             op, self._requested(self.wires, self.wire, op), self.mode_for(op))
 
+    def placement_for(self, op: str) -> str:
+        """Effective row placement for ``op``, clamped to the registry's
+        placement-capable ops (everything else stays contiguous)."""
+        from ..core import overlap
+
+        return overlap.resolve_placement(
+            op, self._requested(self.placements, self.placement, op))
+
     def layer_for(self, op: str, shape) -> Optional[Mapping[str, object]]:
         """The shape-keyed rule matching ``(op, shape)``, or None. The
         shape canonicalizes through :func:`shape_key`, so a call site's
@@ -219,6 +247,7 @@ class OverlapPolicy:
         backend = self.backend_for(op)
         chunks = self.chunks_for(op)
         wire = self.wire_for(op)
+        placement = self.placement_for(op)
         rule = self.layer_for(op, shape)
         if rule is not None:
             mode = overlap.resolve_mode(op, rule.get("mode", mode))
@@ -226,9 +255,11 @@ class OverlapPolicy:
                 op, rule.get("backend", backend), mode)
             chunks = max(1, int(rule.get("chunks", chunks)))
             wire = overlap.resolve_wire(op, rule.get("wire", wire), mode)
+            placement = overlap.resolve_placement(
+                op, rule.get("placement", placement))
         if hw is not None and getattr(hw, "ici_links", 0) == 0:
             backend = "graph"
-        return ResolvedOverlap(mode, backend, chunks, wire)
+        return ResolvedOverlap(mode, backend, chunks, wire, placement)
 
     # -- functional updates -------------------------------------------
     def with_modes(self, **per_op: str) -> "OverlapPolicy":
@@ -249,6 +280,13 @@ class OverlapPolicy:
         merged.update(per_op)
         return dataclasses.replace(self, wires=tuple(sorted(merged.items())))
 
+    def with_placements(self, **per_op: str) -> "OverlapPolicy":
+        """A copy with per-op row-placement overrides merged in."""
+        merged = dict(self.placements)
+        merged.update(per_op)
+        return dataclasses.replace(
+            self, placements=tuple(sorted(merged.items())))
+
     def with_layer(self, op: str, shape, **overrides) -> "OverlapPolicy":
         """A copy with one shape-keyed rule merged in: ``resolve(op,
         shape=shape)`` will apply ``overrides`` (any of ``mode``,
@@ -258,11 +296,13 @@ class OverlapPolicy:
         return dataclasses.replace(self, layers=tuple(merged.items()))
 
     def describe(self, op: str, shape=None) -> str:
-        """Compact 'mode/backend[/xN][/wire]' string (benchmark + log rows)."""
+        """Compact 'mode/backend[/xN][/wire][/placement]' string
+        (benchmark + log rows)."""
         r = self.resolve(op, shape=shape)
         sub = f"/x{r.chunks}" if r.chunks > 1 else ""
         wire = f"/{r.wire}" if r.wire != "f32" else ""
-        return f"{r.mode}/{r.backend}{sub}{wire}"
+        plc = f"/{r.placement}" if r.placement != "contiguous" else ""
+        return f"{r.mode}/{r.backend}{sub}{wire}{plc}"
 
     # -- serialization -------------------------------------------------
     def to_json(self) -> str:
@@ -277,6 +317,8 @@ class OverlapPolicy:
             "rs_chunks": self.rs_chunks,
             "wire": self.wire,
             "wires": [list(kv) for kv in self.wires],
+            "placement": self.placement,
+            "placements": [list(kv) for kv in self.placements],
             "layers": [
                 {"op": op, "shape": list(shp), "overrides": dict(ov)}
                 for (op, shp), ov in self.layers
@@ -303,5 +345,7 @@ class OverlapPolicy:
             rs_chunks=int(data.get("rs_chunks", 0)),
             wire=data.get("wire", "f32"),
             wires=tuple((k, v) for k, v in data.get("wires", ())),
+            placement=data.get("placement", "contiguous"),
+            placements=tuple((k, v) for k, v in data.get("placements", ())),
             layers=layers,
         )

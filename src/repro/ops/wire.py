@@ -132,6 +132,77 @@ def codec(wire: str) -> Optional[WireCodec]:
     return WireCodec(wire)
 
 
+@dataclasses.dataclass(frozen=True)
+class MultiCodec:
+    """Multi-operand packed layout: one riding buffer whose last axis
+    carries several concatenated sections (e.g. ring attention's K|V
+    chunk, sections ``(d, d)``), each quantized per-row with its OWN
+    scale — a shared scale across K and V would let the larger-magnitude
+    operand swamp the other's resolution.
+
+    The split representation is ``(payload (..., sum k_i), scales
+    (..., n))``; the packed one is a single uint8 buffer of shape
+    ``(..., sum k_i + 4n)`` with the n f32 scales appended as trailing
+    bytes, so the executor's riding-chunk workspaces carry it unchanged.
+    """
+
+    name: str
+    sections: Tuple[int, ...]
+
+    def _split(self, x: Array):
+        out, off = [], 0
+        for k in self.sections:
+            out.append(x[..., off:off + k])
+            off += k
+        return out
+
+    def encode(self, x: Array) -> Tuple[Array, Array]:
+        parts = [encode(p, self.name) for p in self._split(x)]
+        payload = jnp.concatenate([p for p, _ in parts], axis=-1)
+        scales = jnp.concatenate([s for _, s in parts], axis=-1)
+        return payload, scales
+
+    def decode(self, payload: Array, scales: Array) -> Array:
+        out, off = [], 0
+        for i, k in enumerate(self.sections):
+            out.append(decode(payload[..., off:off + k],
+                              scales[..., i:i + 1]))
+            off += k
+        return jnp.concatenate(out, axis=-1)
+
+    def pack(self, x: Array) -> Array:
+        payload, scales = self.encode(x)
+        pb = lax.bitcast_convert_type(payload, jnp.uint8)
+        sb = lax.bitcast_convert_type(scales.astype(jnp.float32), jnp.uint8)
+        # scales (..., n) -> bytes (..., n, 4) -> (..., 4n)
+        sb = sb.reshape(sb.shape[:-2] + (len(self.sections) * SCALE_BYTES,))
+        return jnp.concatenate([pb, sb], axis=-1)
+
+    def unpack_decode(self, buf: Array) -> Array:
+        n = len(self.sections)
+        k = buf.shape[-1] - n * SCALE_BYTES
+        payload = lax.bitcast_convert_type(buf[..., :k],
+                                           _payload_dtype(self.name))
+        sb = buf[..., k:].reshape(buf.shape[:-1] + (n, SCALE_BYTES))
+        scales = lax.bitcast_convert_type(sb, jnp.float32)
+        return self.decode(payload, scales)
+
+    def roundtrip(self, x: Array) -> Array:
+        return self.decode(*self.encode(x))
+
+    def packed_cols(self) -> int:
+        """Packed-buffer width for one row: payload + scale bytes."""
+        return sum(self.sections) + len(self.sections) * SCALE_BYTES
+
+
+def multi_codec(wire: str, sections) -> Optional[MultiCodec]:
+    """Codec for a multi-section riding buffer, or ``None`` for "f32"."""
+    if wire == "f32":
+        return None
+    _check(wire)
+    return MultiCodec(wire, tuple(int(s) for s in sections))
+
+
 def wire_bytes(rows: int, cols: int, wire: str, dtype_bytes: int) -> float:
     """Bytes on the wire for a (rows, cols) chunk — the tuner's bytes term."""
     if wire == "f32":

@@ -310,7 +310,8 @@ class PagedEngine(_EngineBase):
     (launch/steps.py build_prefill_chunk_step / build_paged_decode_step).
     """
 
-    # ops resolved by each phase's compiled program
+    # ops resolved by each phase's compiled program (context-parallel
+    # prefill additionally resolves the placement-aware ring_attention)
     PHASE_OPS = {"prefill": ("ag_matmul", "matmul_rs"),
                  "decode": ("a2a_ep", "flash_decode")}
 
@@ -327,6 +328,8 @@ class PagedEngine(_EngineBase):
         seed: int = 0,
         pcfg=None,          # decode-phase ParallelConfig (provenance)
         prefill_pcfg=None,  # prefill-phase ParallelConfig; defaults to pcfg
+        prefill_cp: bool = False,
+        cp_placement: str = "zigzag",
     ):
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
@@ -337,6 +340,12 @@ class PagedEngine(_EngineBase):
         self.eos_id = eos_id
         self.pcfg = pcfg
         self.prefill_pcfg = prefill_pcfg if prefill_pcfg is not None else pcfg
+        self.prefill_cp = prefill_cp
+        self.cp_placement = cp_placement
+        if prefill_cp:
+            self.PHASE_OPS = dict(self.PHASE_OPS)
+            self.PHASE_OPS["prefill"] = (
+                self.PHASE_OPS["prefill"] + ("ring_attention",))
         self.kv = PagedKVCache(
             batch=scfg.batch, max_len=scfg.max_len, page_size=scfg.page_size,
             num_pages=scfg.num_pages, dp_shards=dp_shards)
@@ -358,7 +367,16 @@ class PagedEngine(_EngineBase):
         for phase, ops_ in self.PHASE_OPS.items():
             pcfg = self.prefill_pcfg if phase == "prefill" else self.pcfg
             for op in ops_:
-                out[f"{phase}:{op}"] = _describe(pcfg.policy, op)
+                row = _describe(pcfg.policy, op)
+                # the CP prefill's placement is a step-level knob (threaded
+                # straight into the placed op, not via the policy) — report
+                # it where the policy would have (contiguous stays implied)
+                if (phase == "prefill" and op == "ring_attention"
+                        and self.prefill_cp
+                        and self.cp_placement != "contiguous"
+                        and not row.endswith(("/zigzag", "/striped"))):
+                    row += f"/{self.cp_placement}"
+                out[f"{phase}:{op}"] = row
         return out
 
     def _live_requests(self) -> List[Request]:

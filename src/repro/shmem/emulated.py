@@ -351,10 +351,12 @@ def _host_barrier(cid, world, tok, me):
     return np.int32(tok) + 1
 
 
-def _host_span(cid, kind, name, end, tok, me):
+def _host_span(cid, kind, name, end, tok, me, *dep):
     """Begin/end mark of a traced-compute span (:meth:`ShmemCtx.span`).
     The begin mark parks t0 in ``_World.pending``; the end mark pops it
-    and records the completed event."""
+    and records the completed event. ``dep`` is an optional value
+    operand (``span(sync=True)``) that makes the end mark's EXECUTION
+    wait for the compute — its value is ignored."""
     t = time.perf_counter()
     w = _world(cid)
     pe = int(me)
@@ -509,43 +511,73 @@ class ShmemCtx:
             self._me,
         )
 
-    def span(self, kind: str, fn, *args, name: str = ""):
+    def _span_tok(self, tok, kind, name, sync, fn, args):
+        """Functional core of :meth:`span`: explicit token in/out, so it
+        can be traced inside ``lax.cond`` branches (``span(when=...)``)."""
+        tok = io_callback(
+            functools.partial(_host_span, self._key, kind, name, False),
+            _TOKEN, tok, self._me, ordered=False)
+        if args:
+            flat, treedef = jax.tree_util.tree_flatten(tuple(args))
+            tied = jax.lax.optimization_barrier(tuple(flat) + (tok,))
+            args = jax.tree_util.tree_unflatten(treedef, tied[:-1])
+            tok = tied[-1]
+        out = fn(*args)
+        leaves, treedef = jax.tree_util.tree_flatten(out)
+        if leaves:
+            tied = jax.lax.optimization_barrier(tuple(leaves) + (tok,))
+            tok = tied[-1]
+            out = jax.tree_util.tree_unflatten(treedef, list(tied[:-1]))
+        dep = (tuple(jnp.ravel(lf)[0] for lf in leaves)
+               if sync and leaves else ())
+        tok = io_callback(
+            functools.partial(_host_span, self._key, kind, name, True),
+            _TOKEN, tok, self._me, *dep, ordered=False)
+        return out, tok
+
+    def span(self, kind: str, fn, *args, name: str = "", sync: bool = False,
+             when=None):
         """Run ``fn(*args)`` bracketed by begin/end trace marks so the
         host timeline carries a ``kind`` span (``tile_compute``,
         ``decode``, ...) for this PE.
 
         With tracing disabled this IS ``fn(*args)`` — the traced program
         is unchanged, so outputs stay bit-identical. Enabled, the marks
-        are host callbacks data-dependency-ordered around the compute:
-        the begin token is tied into ``fn``'s inputs and the outputs are
-        tied into the end callback's token via ``optimization_barrier``,
-        so the host timestamps bracket the real compute, not a reordered
-        schedule. Decided at TRACE time — enable tracing before the
-        first jit-compilation of the program you want span-annotated.
+        are host callbacks tied around the compute via
+        ``optimization_barrier``, which pins the COMPILE-TIME schedule
+        but creates no runtime cross-element dependency: XLA's thunk
+        runtime may still retire the end mark while the compute is in
+        flight, so default spans time dispatch, not execution.
+        ``sync=True`` additionally feeds one element of each output leaf
+        to the end mark as a value operand — a true data dependency, so
+        the end timestamp waits for the compute. Use it only where the
+        PE's NEXT token-chained op already consumes the result (e.g. a
+        carry-passing fold), or the sync point serializes work the
+        schedule meant to overlap. ``when`` (a traced bool) emits the
+        marks only when true — ``fn`` ALWAYS runs; pass the predicate of
+        a compute that no-ops dynamically (e.g. a fully-masked causal
+        block) so the timeline shows its real work, not a phantom span.
+        Decided at TRACE time — enable tracing before the first
+        jit-compilation of the program you want span-annotated.
         """
         if not obs.enabled():
             return fn(*args)
         with obs.phase(kind, name):
-            self._tok = self._io(
-                functools.partial(_host_span, self._key, kind, name, False),
-                _TOKEN, self._me,
-            )
-            if args:
-                flat, treedef = jax.tree_util.tree_flatten(tuple(args))
-                tied = jax.lax.optimization_barrier(tuple(flat) + (self._tok,))
-                args = jax.tree_util.tree_unflatten(treedef, tied[:-1])
-                self._tok = tied[-1]
-            out = fn(*args)
-            leaves, treedef = jax.tree_util.tree_flatten(out)
-            if leaves:
-                tied = jax.lax.optimization_barrier(
-                    tuple(leaves) + (self._tok,))
-                self._tok = tied[-1]
-                out = jax.tree_util.tree_unflatten(treedef, list(tied[:-1]))
-            self._tok = self._io(
-                functools.partial(_host_span, self._key, kind, name, True),
-                _TOKEN, self._me,
-            )
+            if when is None:
+                out, self._tok = self._span_tok(self._tok, kind, name, sync,
+                                                fn, args)
+                return out
+            flat, treedef = jax.tree_util.tree_flatten(tuple(args))
+
+            def _marked(tok, *leaves):
+                a = jax.tree_util.tree_unflatten(treedef, leaves)
+                return self._span_tok(tok, kind, name, sync, fn, a)
+
+            def _plain(tok, *leaves):
+                return fn(*jax.tree_util.tree_unflatten(treedef, leaves)), tok
+
+            out, self._tok = jax.lax.cond(when, _marked, _plain,
+                                          self._tok, *flat)
             return out
 
     def broadcast_put(self, x, *, buf: str = "ws", sig: str = "recv"):

@@ -155,11 +155,19 @@ class FoldTile:
               it).
     finalize  ``finalize(state, *statics) -> out`` — the output once
               all W chunks are folded.
+    live      optional ``live(owner, *statics) -> traced bool`` (or
+              ``None`` for always-live): true iff folding ``owner``'s
+              chunk does real work. A fold whose predicate is false must
+              be a value no-op (the executor still calls it); protocols
+              use the predicate to suppress the ``tile_compute`` span,
+              so per-PE timelines show actual compute — the causal
+              whole-block skip is the motivating case.
     """
 
     init: Callable
     fold: Callable
     finalize: Callable
+    live: Optional[Callable] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -460,9 +468,16 @@ def _ring_fold_emulated(fold, chunk, statics, *, axis, world, out_dtype, cid):
         # consumer: chunk of step s is rank (me - s)'s data — fold it
         # into the resident state while the next chunk's DMA is in flight.
         owner = lax.rem(me - s + world, world)
+        # sync=True: the carry means step s+1 consumes this state anyway,
+        # so the true-dependency end mark costs no overlap — and per-PE
+        # tile_compute spans become honest compute time (the causal
+        # load-balance pin in tests/test_placement_trace.py reads them)
+        # when=live: a dynamically no-op fold (fully-masked causal
+        # block) leaves no span, instead of a phantom one.
+        alive = None if fold.live is None else fold.live(owner, *statics)
         state = ctx.span(
             "tile_compute", lambda st, c: fold.fold(st, c, owner, *statics),
-            state, cur, name=f"s{s}")
+            state, cur, name=f"s{s}", sync=True, when=alive)
         if s != world - 1:
             cur = ctx.wait_read(chunk.shape, chunk.dtype, buf="ws",
                                 slot=(s + 1) % 2, sig="recv")
@@ -471,7 +486,7 @@ def _ring_fold_emulated(fold, chunk, statics, *, axis, world, out_dtype, cid):
     ctx.barrier_all()
     return ctx.span("tile_compute",
                     lambda st: fold.finalize(st, *statics),
-                    state, name="finalize").astype(out_dtype)
+                    state, name="finalize", sync=True).astype(out_dtype)
 
 
 def _two_level_pe(axis, world):

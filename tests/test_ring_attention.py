@@ -10,6 +10,8 @@ model call site (``blocks.attention_cp``) rides the same check.
 """
 import textwrap
 
+import pytest
+
 from conftest import run_devices
 
 SCRIPT = textwrap.dedent("""
@@ -100,4 +102,120 @@ SCRIPT = textwrap.dedent("""
 
 def test_ring_attention_matches_full():
     out = run_devices(SCRIPT, devices=8, timeout=1200)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Placement axis: zigzag/striped owner maps vs TWO references — the
+# in-shard_map oracle (full softmax on gathered K/V with the same
+# python-level position tables) and the natural-order dense attention
+# permuted into the placement layout. Grads must be bit-identical across
+# lowering backends under the same fixed cotangent.
+# ---------------------------------------------------------------------------
+
+PLACEMENT_SCRIPT = textwrap.dedent("""
+    import functools
+    import jax, jax.numpy as jnp, numpy as np
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro.core.ring_attention import ring_attention
+    from repro.core import schedules as sched
+    from repro.kernels import ref
+
+    W = __WORLD__
+    mesh = jax.make_mesh((W,), ("cp",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    B, H, HKV, S, D = 2, 4, 2, 16 * W, 16
+    s_loc = S // W
+    q = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, HKV, S, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, HKV, S, D), jnp.float32)
+    SPECS3 = (P(None, None, "cp", None),) * 3
+    scale = 1.0 / float(np.sqrt(D))
+
+    def sh(fn, in_specs, out_specs):
+        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_vma=False))
+
+    def perm(placement):
+        out = []
+        for r in range(W):
+            out.extend(sched.placement_rows(placement, W, r, s_loc))
+        return np.array(out)  # rank-major shard layout -> global position
+
+    def oracle_local(q_, k_, v_, causal, placement):
+        group = q_.shape[1] // k_.shape[1]
+        kf = jnp.repeat(lax.all_gather(k_, "cp", axis=2, tiled=True)
+                        .astype(jnp.float32), group, 1)
+        vf = jnp.repeat(lax.all_gather(v_, "cp", axis=2, tiled=True)
+                        .astype(jnp.float32), group, 1)
+        logits = jnp.einsum("bhqd,bhkd->bhqk",
+                            q_.astype(jnp.float32) * scale, kf)
+        if causal:
+            table = jnp.asarray(np.stack(
+                [sched.placement_rows(placement, W, r, s_loc)
+                 for r in range(W)]))
+            rows = table[lax.axis_index("cp")]
+            cols = table.reshape(-1)
+            mask = rows[:, None] >= cols[None, :]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q_.dtype)
+
+    for placement in ("zigzag", "striped"):
+        pm = perm(placement)
+        qp, kp, vp = q[:, :, pm], k[:, :, pm], v[:, :, pm]
+        for causal in (True, False):
+            # natural-order dense attention, permuted into the layout
+            dense = np.asarray(
+                ref.flash_attention(q, k, v, causal=causal))[:, :, pm]
+            for backend in ("graph", "kernel"):
+                f = sh(functools.partial(ring_attention, axis="cp",
+                                         causal=causal, backend=backend,
+                                         placement=placement),
+                       SPECS3, P(None, None, "cp", None))
+                got = np.asarray(f(qp, kp, vp))
+                err = np.abs(got - dense).max()
+                assert err < 2e-5, (placement, causal, backend, err)
+            g = sh(functools.partial(oracle_local, causal=causal,
+                                     placement=placement),
+                   SPECS3, P(None, None, "cp", None))
+            err = np.abs(np.asarray(g(qp, kp, vp)) - dense).max()
+            assert err < 2e-5, ("oracle", placement, causal, err)
+
+    def grads_of(fn, qp, kp, vp):
+        def loss(q_, k_, v_):
+            out = fn(q_, k_, v_)
+            return lax.psum(jnp.sum(out * out), "cp")
+        return [np.asarray(t) for t in
+                sh(jax.grad(loss, argnums=(0, 1, 2)),
+                   SPECS3, SPECS3)(qp, kp, vp)]
+
+    for placement in ("zigzag", "striped"):
+        pm = perm(placement)
+        qp, kp, vp = q[:, :, pm], k[:, :, pm], v[:, :, pm]
+        for causal in (True, False):
+            gg = grads_of(functools.partial(
+                ring_attention, axis="cp", causal=causal,
+                placement=placement), qp, kp, vp)
+            gk = grads_of(functools.partial(
+                ring_attention, axis="cp", causal=causal,
+                placement=placement, backend="kernel"), qp, kp, vp)
+            go = grads_of(functools.partial(
+                oracle_local, causal=causal, placement=placement),
+                qp, kp, vp)
+            for a, b, c in zip(gg, gk, go):
+                assert np.array_equal(a, b), \
+                    ("backend grads differ", placement, causal)
+                assert np.isfinite(a).all() and np.abs(a).max() > 0
+                err = np.abs(a - c).max()
+                assert err < 2e-3, (placement, causal, err)
+    print("OK")
+""")
+
+
+@pytest.mark.parametrize("world", [2, 4, 8])
+def test_ring_attention_placements_match_oracle(world):
+    out = run_devices(PLACEMENT_SCRIPT.replace("__WORLD__", str(world)),
+                      devices=world, timeout=1200)
     assert "OK" in out

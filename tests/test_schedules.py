@@ -61,6 +61,39 @@ def test_hierarchical_ag_regions(no, ni, orank, irank):
     assert regions[0] == orank
 
 
+@pt.given(examples=40, world=pt.integers(1, 16),
+          s_loc=pt.sampled_from([2, 4, 8, 16]),
+          placement=pt.sampled_from(["contiguous", "zigzag", "striped"]))
+def test_placement_owner_map_valid(world, s_loc, placement):
+    assert S.validate_placement(placement, world, s_loc)
+    # every global row owned exactly once, local order == position order
+    seen = []
+    for r in range(world):
+        rows = S.placement_rows(placement, world, r, s_loc)
+        assert all(a < b for a, b in zip(rows, rows[1:]))
+        seen.extend(rows)
+    assert sorted(seen) == list(range(world * s_loc))
+    # causal coverage exact: the per-rank pair shares tile the triangle
+    s_tot = world * s_loc
+    assert sum(S.causal_pairs(placement, world, r, s_loc)
+               for r in range(world)) == s_tot * (s_tot + 1) // 2
+
+
+@pt.given(examples=20, world=pt.integers(2, 16),
+          s_loc=pt.sampled_from([4, 8, 16]))
+def test_placement_balance(world, s_loc):
+    # zigzag equalizes causal work EXACTLY (one early + one late
+    # half-chunk per rank); striped is near-balanced with an O(W/S)
+    # tail; contiguous concentrates it on the last rank (-> 2 at large
+    # world)
+    assert abs(S.causal_imbalance("zigzag", world, s_loc) - 1.0) < 1e-9
+    striped = S.causal_imbalance("striped", world, s_loc)
+    contig = S.causal_imbalance("contiguous", world, s_loc)
+    assert striped <= 1.3
+    if world >= 4:
+        assert contig > 1.5 > striped
+
+
 @pt.given(examples=15, m=pt.sampled_from([4, 8, 16]), n=pt.integers(1, 6),
           world=pt.sampled_from([2, 4]), rank=pt.integers(0, 3))
 def test_swizzled_grid_order(m, n, world, rank):

@@ -71,6 +71,38 @@ def test_recommend_overlap_modes_returns_policy():
     assert rec.mode_for("matmul_rs_2level") == "two_level"
 
 
+def test_analytic_ring_attention_placement():
+    # causal at world >= 4: the balanced owner map halves the lockstep
+    # critical path (contiguous charges the last rank ~the dense block
+    # count), so zigzag is the interior optimum — not a tie broken by
+    # enumeration order
+    for world in (4, 8):
+        ch = tuner.analytic_ring_attention(256, 64, world, causal=True)
+        assert ch.placement == "zigzag", ch
+        contig = tuner.analytic_ring_attention(
+            256, 64, world, causal=True, placements=("contiguous",))
+        assert ch.t_total < contig.t_total
+    # the charged fractions themselves: contiguous -> ~1 - 1/(2W),
+    # zigzag/striped -> ~1/2, and zigzag <= striped (no +1/(2*s_loc) tail)
+    fc = tuner.causal_flop_fraction("contiguous", 8, 256)
+    fz = tuner.causal_flop_fraction("zigzag", 8, 256)
+    fs = tuner.causal_flop_fraction("striped", 8, 256)
+    assert abs(fc - (1 - 1 / 16)) < 1e-2
+    assert abs(fz - 0.5) < 1e-2 and fz <= fs < fc
+    # non-causal: placements are FLOP-identical -> contiguous is kept
+    # (strict-< selection) and forcing zigzag changes nothing
+    nc = tuner.analytic_ring_attention(256, 64, 8, causal=False)
+    assert nc.placement == "contiguous"
+    ncz = tuner.analytic_ring_attention(256, 64, 8, causal=False,
+                                        placements=("zigzag",))
+    assert nc.t_total == ncz.t_total
+    # recommend_overlap_modes lands the pick as a policy placement entry,
+    # clamped off ops that never declared placements
+    rec = tuner.recommend_overlap_modes(4096, 8192, 8192, world=16)
+    assert rec.resolve("ring_attention").placement == "zigzag"
+    assert rec.resolve("ag_matmul").placement == "contiguous"
+
+
 def test_recommend_backend_enumerates_registry():
     from repro.core import overlap
 

@@ -133,15 +133,17 @@ def test_registry_wire_capability():
     from repro.core import overlap as ov
 
     for op in ("ag_matmul", "matmul_rs", "all_gather", "reduce_scatter",
-               "a2a_ep"):
+               "a2a_ep", "ring_attention"):
         assert ov.wires_for(op) == ("f32", "int8", "fp8"), op
-    for op in ("flash_decode", "ring_attention", "ag_matmul_2level"):
+    for op in ("flash_decode", "ag_matmul_2level"):
         assert ov.wires_for(op) == ("f32",), op
     with pytest.raises(ValueError, match="int4"):
         ov.resolve_wire("ag_matmul", "int4")
     assert ov.resolve_wire("ag_matmul", "int8", "ring") == "int8"
     assert ov.resolve_wire("ag_matmul", "int8", "none") == "f32"
     assert ov.resolve_wire("flash_decode", "int8", "one_shot") == "f32"
+    # fold ops ride a multi-section packed chunk (K|V): wire-capable too
+    assert ov.resolve_wire("ring_attention", "int8", "ring") == "int8"
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +236,27 @@ PARITY = textwrap.dedent("""
         f = sh(functools.partial(mo.a2a_ep, axis="tp", mode="one_shot",
                                  backend=backend, wire="int8"), *C)
         check(f"a2a_ep/one_shot/{backend}/int8", f(Xd), ref, "int8")
+
+    # ---- ring_attention: riding packed K|V chunk, per-section scales ----
+    B, H, HKV, D = 2, 4, 2, 16
+    S = 8 * W
+    q = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
+    kv = jnp.asarray(rng.randn(B, HKV, S, 2 * D), jnp.float32)
+    AT = ((P(None, None, "tp", None), P(None, None, "tp", None)),
+          P(None, None, "tp", None))
+    attn = functools.partial(ops.ring_attention, axis="tp", causal=True,
+                             scale=float(1.0 / np.sqrt(D)),
+                             out_dtype=jnp.float32)
+    ref = sh(functools.partial(attn, mode="ring"), *AT)(kv, q)
+    for mode in ("ring", "one_shot"):
+        for backend in ("graph", "kernel"):
+            for wire in ("int8", "fp8"):
+                if wire == "fp8" and mode != "ring":
+                    continue
+                f = sh(functools.partial(attn, mode=mode, backend=backend,
+                                         wire=wire), *AT)
+                check(f"ring_attention/{mode}/{backend}/{wire}",
+                      f(kv, q), ref, wire)
 
     print("OK")
 """)
